@@ -1,0 +1,185 @@
+//! Shared harness for the table/figure reproduction benches.
+//!
+//! Every bench is a `harness = false` binary (the offline environment has
+//! no criterion): it builds sessions through the public config API, runs
+//! the method grid with repeats, prints the paper-shaped table, and exits
+//! non-zero if the *shape* assertions fail (who wins, by roughly what
+//! factor).  `FEEDSIGN_BENCH_SCALE` (float, default 1.0) scales round
+//! budgets for quick smoke runs (e.g. 0.1) or fuller sweeps (e.g. 4.0).
+
+#![allow(dead_code)]
+
+use feedsign::config::{ExperimentConfig, ModelSpec, TaskSpec};
+use feedsign::metrics::{mean_std, MeanStd, RunResult};
+
+/// Round-budget scale from the environment.
+pub fn scale() -> f64 {
+    std::env::var("FEEDSIGN_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0)
+}
+
+pub fn scaled(rounds: u64) -> u64 {
+    ((rounds as f64 * scale()) as u64).max(10)
+}
+
+/// Repeats for mean (std) cells — the paper uses 5; we default to 3 and
+/// scale with the budget.
+pub fn repeats() -> u32 {
+    if scale() >= 2.0 {
+        5
+    } else if scale() >= 0.5 {
+        3
+    } else {
+        2
+    }
+}
+
+/// Default LM model for table benches: small enough that a 4-method x
+/// 11-task grid finishes on one core, big enough to learn the synth tasks.
+pub fn bench_lm() -> ModelSpec {
+    ModelSpec::Transformer { vocab: 48, d_model: 16, n_layers: 1, n_heads: 2, seq_len: 12 }
+}
+
+pub fn lm_task(name: &str) -> TaskSpec {
+    TaskSpec::SynthLm { name: name.into(), train: 512, test: 256 }
+}
+
+pub fn vision_task(name: &str) -> TaskSpec {
+    TaskSpec::SynthVision { name: name.into(), train: 2000, test: 500 }
+}
+
+pub fn vision_model(name: &str) -> ModelSpec {
+    ModelSpec::LinearProbe { dim: 128, classes: if name.ends_with("100") { 100 } else { 10 } }
+}
+
+/// Run one config for `n` seeds; returns per-seed best accuracies (%).
+pub fn run_repeats(cfg: &ExperimentConfig, n: u32) -> Vec<RunResult> {
+    (0..n)
+        .map(|r| {
+            let mut c = cfg.clone();
+            c.seed = cfg.seed + 1000 * r;
+            let mut session = c.build_session().expect("config builds");
+            session.run()
+        })
+        .collect()
+}
+
+pub fn best_accs(runs: &[RunResult]) -> MeanStd {
+    let v: Vec<f32> = runs.iter().map(|r| r.best_acc() * 100.0).collect();
+    mean_std(&v)
+}
+
+pub fn final_losses(runs: &[RunResult]) -> MeanStd {
+    let v: Vec<f32> = runs.iter().map(|r| r.final_loss).collect();
+    mean_std(&v)
+}
+
+/// Zero-shot metric: evaluate the initial model without any training.
+pub fn zero_shot(cfg: &ExperimentConfig) -> f32 {
+    let mut c = cfg.clone();
+    c.rounds = 1; // validation requires > 0; we evaluate without stepping
+    let mut session = c.build_session().expect("config builds");
+    let (_, acc) = session.evaluate();
+    acc * 100.0
+}
+
+/// Pretty table printing.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<String>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, name: &str, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len());
+        self.rows.push((name.to_string(), cells));
+    }
+
+    pub fn print(&self) {
+        let w0 = self
+            .rows
+            .iter()
+            .map(|(n, _)| n.len())
+            .chain(std::iter::once(8))
+            .max()
+            .unwrap();
+        let widths: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                self.rows
+                    .iter()
+                    .map(|(_, cells)| cells[i].len())
+                    .chain(std::iter::once(c.len()))
+                    .max()
+                    .unwrap()
+            })
+            .collect();
+        println!("\n=== {} ===", self.title);
+        print!("{:w0$}", "method");
+        for (c, w) in self.columns.iter().zip(&widths) {
+            print!(" | {c:>w$}");
+        }
+        println!();
+        let total: usize = w0 + widths.iter().map(|w| w + 3).sum::<usize>();
+        println!("{}", "-".repeat(total));
+        for (name, cells) in &self.rows {
+            print!("{name:w0$}");
+            for (c, w) in cells.iter().zip(&widths) {
+                print!(" | {c:>w$}");
+            }
+            println!();
+        }
+    }
+}
+
+/// Shape assertion helper: prints PASS/FAIL and tracks a global verdict.
+pub struct Verdict {
+    pub failures: Vec<String>,
+}
+
+impl Verdict {
+    pub fn new() -> Self {
+        Verdict { failures: Vec::new() }
+    }
+
+    pub fn check(&mut self, name: &str, ok: bool, detail: String) {
+        if ok {
+            println!("[shape-check] PASS {name}: {detail}");
+        } else {
+            println!("[shape-check] FAIL {name}: {detail}");
+            self.failures.push(name.to_string());
+        }
+    }
+
+    /// Exit the bench process with the verdict.
+    pub fn finish(self) -> ! {
+        if self.failures.is_empty() {
+            println!("\nall shape checks passed");
+            std::process::exit(0)
+        } else {
+            println!("\nFAILED shape checks: {:?}", self.failures);
+            std::process::exit(1)
+        }
+    }
+}
+
+/// Wall-clock helper.
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    println!("[timing] {label}: {:.1}s", t0.elapsed().as_secs_f64());
+    out
+}

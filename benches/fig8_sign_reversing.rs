@@ -1,0 +1,136 @@
+//! Figure 8/9 + Proposition E.2 reproduction: the inherent sign-reversing
+//! probability p_{t,e} of batch gradient projections.
+//!
+//! Paper setup (Appendix E.2, OPT-125M/SST-2): for seeds s = 0..39, compare
+//! the full-data projection z_s . grad L(w) against batch-resampled
+//! projections; p_{t,e} = fraction of batches whose projection sign
+//! disagrees.  We run the same protocol on the bench LM + synth-sst2 with
+//! the *exact* directional derivative (full gradient dotted with z).
+//!
+//! Shape assertions (Prop E.2): every measured p_{t,e} <= 1/2 (+MC noise);
+//! p_{t,e} shrinks as |z . grad L| grows (Fig 8's funnel shape); and the
+//! batch-projection distribution is symmetric around the full-data value
+//! (Fig 9, checked via skew of the samples).
+
+mod common;
+
+use common::*;
+use feedsign::config::{ExperimentConfig, ModelSpec, TaskSpec};
+use feedsign::simkit::nn::{Model, ModelCfg, TransformerSim};
+use feedsign::simkit::ops::dot;
+use feedsign::simkit::prng::{normals_vec, Rng};
+
+fn main() {
+    let cfg = ModelCfg::new(48, 16, 1, 2, 12);
+    let mut model = TransformerSim::new(cfg.clone());
+
+    // fine-tune a bit first so the gradient is not the random-init one
+    let exp = ExperimentConfig {
+        name: "fig8-warmup".into(),
+        model: ModelSpec::Transformer { vocab: 48, d_model: 16, n_layers: 1, n_heads: 2, seq_len: 12 },
+        task: TaskSpec::SynthLm { name: "synth-sst2".into(), train: 512, test: 128 },
+        algorithm: "mezo".into(),
+        clients: 1,
+        rounds: scaled(300),
+        eta: 1e-4,
+        mu: 1e-3,
+        batch_size: 8,
+        eval_every: 0,
+        eval_batches: 2,
+        eval_batch_size: 32,
+        dirichlet_beta: None,
+        byzantine_count: 0,
+        attack: None,
+        c_g_noise: 0.0,
+        pretrain_rounds: 0,
+        seed: 43,
+        verbose: false,
+    };
+    let mut session = exp.build_session().expect("builds");
+    for t in 0..exp.rounds {
+        session.step(t);
+    }
+    let w = session.clients[0].w.clone();
+    let (train, _) = exp.datasets().expect("data");
+
+    // full-data gradient
+    let full = train.gather(&(0..train.len().min(512)).collect::<Vec<_>>());
+    let mut grad = vec![0.0f32; w.len()];
+    model.loss_and_grad(&w, &full, &mut grad);
+
+    let n_seeds = 40u32; // paper: s = 0..39
+    let n_batches = ((200.0 * scale()) as usize).max(50);
+    let batch_size = 16;
+    let mut rng = Rng::new(0xF18, 0);
+    let mut grad_b = vec![0.0f32; w.len()];
+
+    println!("seed, full_projection, p_te, sample_skew");
+    let mut results = Vec::new();
+    for s in 0..n_seeds {
+        let z = normals_vec(s, w.len());
+        let full_proj = dot(&z, &grad);
+        let mut flips = 0usize;
+        let mut samples = Vec::with_capacity(n_batches);
+        for _ in 0..n_batches {
+            let idx: Vec<usize> = (0..batch_size).map(|_| rng.below(train.len())).collect();
+            let batch = train.gather(&idx);
+            model.loss_and_grad(&w, &batch, &mut grad_b);
+            let proj = dot(&z, &grad_b);
+            samples.push(proj);
+            if proj * full_proj < 0.0 {
+                flips += 1;
+            }
+        }
+        let p_te = flips as f32 / n_batches as f32;
+        // symmetry diagnostic: standardized skew of batch projections
+        let mean: f32 = samples.iter().sum::<f32>() / samples.len() as f32;
+        let var: f32 =
+            samples.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / samples.len() as f32;
+        let skew: f32 = samples
+            .iter()
+            .map(|v| {
+                let d = (v - mean) / var.sqrt().max(1e-9);
+                d * d * d
+            })
+            .sum::<f32>()
+            / samples.len() as f32;
+        println!("{s}, {full_proj:.5}, {p_te:.4}, {skew:.3}");
+        results.push((full_proj, p_te, skew));
+    }
+
+    let mut v = Verdict::new();
+    let max_pte = results.iter().map(|r| r.1).fold(0.0f32, f32::max);
+    // MC tolerance: 1/2 + ~3 sigma of a Bernoulli(1/2) over n_batches
+    let tol = 0.5 + 3.0 * (0.25 / n_batches as f32).sqrt();
+    v.check("p_te-below-half", max_pte <= tol, format!("max p_te {max_pte:.4} (tol {tol:.3}; paper max 0.4968)"));
+
+    // funnel shape: strong projections flip less
+    let mut strong: Vec<f32> = Vec::new();
+    let mut weak: Vec<f32> = Vec::new();
+    let med = {
+        let mut m: Vec<f32> = results.iter().map(|r| r.0.abs()).collect();
+        m.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        m[m.len() / 2]
+    };
+    for (proj, p, _) in &results {
+        if proj.abs() >= med {
+            strong.push(*p);
+        } else {
+            weak.push(*p);
+        }
+    }
+    let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len().max(1) as f32;
+    v.check(
+        "funnel-shape",
+        mean(&strong) <= mean(&weak) + 0.02,
+        format!("p_te strong {:.3} vs weak {:.3}", mean(&strong), mean(&weak)),
+    );
+    let mean_abs_skew =
+        results.iter().map(|r| r.2.abs()).sum::<f32>() / results.len() as f32;
+    v.check(
+        "batch-projection-symmetry",
+        mean_abs_skew < 1.0,
+        format!("mean |skew| {mean_abs_skew:.3} (Assumption E.1)"),
+    );
+    v.finish()
+}

@@ -1,0 +1,130 @@
+//! Hot-path microbenchmarks (the §Perf deliverable): wall-clock of every
+//! operation on a federated client's critical path, for both engines.
+//!
+//! L3 native targets (EXPERIMENTS.md §Perf): a ZO client step must cost
+//! ~2 forward passes + noise regeneration — we report the measured
+//! probe/forward ratio (theoretical floor 2.0) and the PRNG throughput.
+//! PJRT numbers are request-path latencies of the AOT artifacts.
+//!
+//! Set FEEDSIGN_PERF_PJRT=0 to skip the PJRT section (e.g. CI without
+//! artifacts).
+
+mod common;
+
+use common::*;
+use feedsign::data::{corpus, tasks, Dataset};
+use feedsign::simkit::nn::{LinearProbe, Model, ModelCfg, TransformerSim};
+use feedsign::simkit::prng;
+use feedsign::simkit::zo;
+
+fn bench<F: FnMut()>(label: &str, iters: u32, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{label:<44} {:>10.3} ms/op", per * 1e3);
+    per
+}
+
+fn main() {
+    let mut v = Verdict::new();
+    println!("== L3 native hot path ==");
+
+    // PRNG throughput (the shared-randomness substrate)
+    let n = 1 << 20;
+    let mut buf = vec![0.0f32; n];
+    let per = bench("philox normals (1M elems)", 20, || {
+        prng::normals_into(7, &mut buf);
+    });
+    let melems = n as f64 / per / 1e6;
+    println!("{:<44} {melems:>10.1} Melem/s", "  -> throughput");
+    v.check("prng-throughput", melems > 30.0, format!("{melems:.0} Melem/s"));
+
+    // fused axpy vs gen-then-add
+    let w = prng::normals_vec(1, n);
+    let mut out = vec![0.0f32; n];
+    let fused = bench("fused axpy_into (1M params)", 20, || {
+        zo::axpy_into(&w, &mut out, 3, 1e-3);
+    });
+    let unfused = bench("materialize z then axpy (1M params)", 20, || {
+        let z = prng::normals_vec(3, n);
+        for i in 0..n {
+            out[i] = w[i] + 1e-3 * z[i];
+        }
+    });
+    println!("  -> fusion speedup: {:.2}x (plus zero transient allocation)", unfused / fused);
+
+    // transformer probe vs forward: the paper's "ZO = 2 inferences" claim
+    let cfg = ModelCfg::new(64, 32, 2, 4, 16);
+    let mut model = TransformerSim::new(cfg.clone());
+    let w = model.init(0);
+    let data = corpus::generate(&corpus::GrammarSpec::default(), 64, 16, 64, 0);
+    let batch = Dataset::gather(&data, &(0..8).collect::<Vec<_>>());
+    let fwd = bench("transformer forward (28k params, B=8)", 50, || {
+        model.loss(&w, &batch);
+    });
+    let mut scratch = Vec::new();
+    let probe = bench("transformer SPSA probe", 50, || {
+        zo::spsa_probe_scratch(&mut model, &w, &mut scratch, &batch, 5, 1e-3);
+    });
+    let ratio = probe / fwd;
+    println!("  -> probe/forward ratio: {ratio:.2} (floor 2.0)");
+    // 3.0 cap: wallclock ratio is noisy on a shared single core
+    v.check("probe-near-two-forwards", ratio < 3.0, format!("{ratio:.2}x"));
+
+    let mut grad = vec![0.0f32; w.len()];
+    let bp = bench("transformer loss+grad (FO step)", 50, || {
+        model.loss_and_grad(&w, &batch, &mut grad);
+    });
+    println!("  -> backprop/forward ratio: {:.2}", bp / fwd);
+
+    // linear-probe client step (the vision bench hot path)
+    let mut probe_model = LinearProbe::new(128, 10);
+    let wp = probe_model.init(0);
+    let vdata = feedsign::data::vision::generate(&feedsign::data::vision::SYNTH_CIFAR10, 64, 0);
+    let vbatch = vdata.gather(&(0..16).collect::<Vec<_>>());
+    let mut scratch2 = Vec::new();
+    bench("linear-probe SPSA step (1290 params)", 2000, || {
+        zo::spsa_probe_scratch(&mut probe_model, &wp, &mut scratch2, &vbatch, 9, 1e-3);
+    });
+
+    // LM task generation (bench-harness overhead)
+    bench("synth task generation (512 samples)", 10, || {
+        tasks::generate(&tasks::OPT_TASKS[0], 48, 12, 512, 3);
+    });
+
+    // PJRT request path
+    if std::env::var("FEEDSIGN_PERF_PJRT").as_deref() != Ok("0")
+        && feedsign::runtime::artifacts_available()
+    {
+        println!("\n== PJRT request path (AOT artifacts, CPU) ==");
+        let model = feedsign::runtime::PjrtModel::load(&feedsign::runtime::artifacts_dir(), "tiny")
+            .expect("artifacts");
+        let w = model.init_params(0);
+        let cols = model.entry.seq_len + 1;
+        let data: Vec<u32> =
+            (0..model.entry.batch_probe * cols).map(|i| (i % model.entry.vocab) as u32).collect();
+        let batch = feedsign::data::Batch::Tokens { data, rows: model.entry.batch_probe, cols };
+        bench("pjrt spsa_probe (tiny, 0.12M)", 10, || {
+            model.spsa_probe(&w, &batch, 1, 1e-3).unwrap();
+        });
+        let mut wmut = w.clone();
+        bench("pjrt update (tiny)", 10, || {
+            model.update(&mut wmut, 1, 1e-3).unwrap();
+        });
+        let edata: Vec<u32> =
+            (0..model.entry.batch_eval * cols).map(|i| (i % model.entry.vocab) as u32).collect();
+        let ebatch = feedsign::data::Batch::Tokens { data: edata, rows: model.entry.batch_eval, cols };
+        bench("pjrt eval (tiny)", 10, || {
+            model.eval(&w, &ebatch).unwrap();
+        });
+    } else {
+        println!("\n(PJRT section skipped)");
+    }
+    v.finish()
+}

@@ -1,0 +1,130 @@
+//! Table 2 / Table 7 reproduction: main results over language tasks.
+//!
+//! Paper: OPT-13B (Table 2) / RoBERTa-large few-shot (Table 7) across the
+//! task columns, methods = zero-shot, FO(FedSGD), MeZO, ZO-FedSGD,
+//! FeedSign.  Substituted workload: the synth task suite on the bench LM
+//! (DESIGN.md §4) — absolute numbers differ, the *shape* must hold:
+//!
+//! 1. every fine-tuning method beats zero-shot on average;
+//! 2. FO is the upper bound on average;
+//! 3. FeedSign lands within a few points of ZO-FedSGD (paper: FeedSign
+//!    slightly ahead on most tasks) — we assert |gap| is small relative
+//!    to the FO−zero-shot span;
+//! 4. FeedSign uses 1/64 the uplink of ZO-FedSGD at equal steps.
+//!
+//! Usage: `cargo bench --bench table2_language_tasks` (env
+//! `FEEDSIGN_BENCH_SCALE` scales budgets, `FEEDSIGN_TABLE7=1` switches to
+//! the few-shot column set).
+
+mod common;
+
+use common::*;
+use feedsign::config::ExperimentConfig;
+use feedsign::data::tasks;
+
+fn cfg(task: &str, algorithm: &str, rounds: u64, eta: f32) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("table2-{task}-{algorithm}"),
+        model: bench_lm(),
+        task: lm_task(task),
+        algorithm: algorithm.into(),
+        clients: if algorithm == "mezo" { 1 } else { 5 },
+        rounds,
+        eta,
+        mu: 1e-3,
+        batch_size: 8,
+        eval_every: (rounds / 4).max(1),
+        eval_batches: 4,
+        eval_batch_size: 32,
+        dirichlet_beta: None,
+        byzantine_count: 0,
+        attack: None,
+        c_g_noise: 0.0,
+        pretrain_rounds: 300,
+        seed: 11,
+        verbose: false,
+    }
+}
+
+fn main() {
+    let few_shot = std::env::var("FEEDSIGN_TABLE7").is_ok();
+    let task_list: Vec<&str> = if few_shot {
+        tasks::ROBERTA_TASKS.iter().map(|t| t.name).collect()
+    } else {
+        tasks::OPT_TASKS.iter().map(|t| t.name).collect()
+    };
+    let title = if few_shot {
+        "Table 7: few-shot language tasks (synth substitute)"
+    } else {
+        "Table 2: main language-task results (synth substitute)"
+    };
+
+    // budgets: ZO methods get the full budget, FO converges in far fewer
+    // steps (the paper equalises *perturbations*, we equalise to wall-clock
+    // sanity); eta per method follows Table 11's ZO/FO split.
+    let zo_rounds = scaled(1500);
+    let fo_rounds = scaled(150);
+    let n = repeats();
+
+    let methods: [(&str, u64, f32); 4] = [
+        ("fedsgd", fo_rounds, 0.2),
+        ("mezo", zo_rounds, 3e-3),
+        ("zo-fedsgd", zo_rounds, 3e-3),
+        ("feedsign", zo_rounds, 3e-3),
+    ];
+
+    let mut table = Table::new(title, &task_list.iter().map(|t| &t[6..]).collect::<Vec<_>>());
+    let mut grid: Vec<(String, Vec<f32>)> = Vec::new();
+
+    // zero-shot row
+    let zs: Vec<f32> = task_list.iter().map(|t| zero_shot(&cfg(t, "feedsign", 10, 1e-3))).collect();
+    table.row("zero-shot", zs.iter().map(|a| format!("{a:.1}")).collect());
+    grid.push(("zero-shot".into(), zs));
+
+    let mut up_bits = std::collections::BTreeMap::new();
+    for (algo, rounds, eta) in methods {
+        let mut means = Vec::new();
+        let mut cells = Vec::new();
+        for task in &task_list {
+            let c = cfg(task, algo, rounds, eta);
+            let runs = run_repeats(&c, n);
+            let ms = best_accs(&runs);
+            up_bits.insert(algo.to_string(), runs[0].ledger.uplink_bits);
+            means.push(ms.mean);
+            cells.push(format!("{ms}"));
+        }
+        table.row(algo, cells);
+        grid.push((algo.to_string(), means));
+    }
+    table.print();
+
+    // per-method averages + gap column (paper's rightmost "Gap")
+    let avg = |name: &str| -> f32 {
+        let row = &grid.iter().find(|(n, _)| n == name).unwrap().1;
+        row.iter().sum::<f32>() / row.len() as f32
+    };
+    let (a_zs, a_fo) = (avg("zero-shot"), avg("fedsgd"));
+    let (a_mezo, a_zo, a_fs) = (avg("mezo"), avg("zo-fedsgd"), avg("feedsign"));
+    println!(
+        "\naverages: zero-shot {a_zs:.1} | FO {a_fo:.1} | MeZO {a_mezo:.1} | ZO-FedSGD {a_zo:.1} | FeedSign {a_fs:.1}"
+    );
+    println!(
+        "gap to FO: MeZO {:+.1} | ZO-FedSGD {:+.1} | FeedSign {:+.1} (paper: -3.1 / -7.6 / -6.4)",
+        a_mezo - a_fo,
+        a_zo - a_fo,
+        a_fs - a_fo
+    );
+
+    let mut v = Verdict::new();
+    v.check("ft-beats-zero-shot", a_fs > a_zs + 3.0 && a_zo > a_zs + 3.0,
+        format!("feedsign {a_fs:.1}, zo-fedsgd {a_zo:.1} vs zero-shot {a_zs:.1}"));
+    v.check("fo-upper-bound", a_fo >= a_fs - 2.0 && a_fo >= a_zo - 2.0,
+        format!("fo {a_fo:.1} vs zo methods {a_fs:.1}/{a_zo:.1}"));
+    let span = (a_fo - a_zs).max(1.0);
+    v.check("feedsign-close-to-zo-fedsgd", (a_fs - a_zo).abs() <= 0.35 * span,
+        format!("|{a_fs:.1} - {a_zo:.1}| vs span {span:.1}"));
+    let (up_fs, up_zo) = (up_bits["feedsign"], up_bits["zo-fedsgd"]);
+    v.check("comm-1-over-64", up_zo == 64 * up_fs,
+        format!("uplink zo-fedsgd {up_zo} vs feedsign {up_fs} bits"));
+    v.finish()
+}

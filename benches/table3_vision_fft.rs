@@ -1,0 +1,80 @@
+//! Table 3 reproduction: vision last-layer FFT, K = 5, iid.
+//!
+//! Paper: ViT-large classifier-layer fine-tuning on CIFAR-10/100 —
+//! FeedSign reaches 91.9 / 45.3, beating the ZO-from-scratch SOTA.
+//! Substituted workload: linear probe on the frozen-featurizer synth
+//! CIFAR analogues.  Shape assertions: FeedSign (a) far above chance on
+//! both, (b) CIFAR-10 ≫ CIFAR-100 (the paper's 91.9 vs 45.3 ordering),
+//! (c) in the same band as ZO-FedSGD under iid data.
+
+mod common;
+
+use common::*;
+use feedsign::config::ExperimentConfig;
+
+fn cfg(task: &str, algorithm: &str, rounds: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("table3-{task}-{algorithm}"),
+        model: vision_model(task),
+        task: vision_task(task),
+        algorithm: algorithm.into(),
+        clients: 5,
+        rounds,
+        // calibrated per-algorithm (FeedSign's fixed step prefers a smaller
+        // eta; ZO-FedSGD scales steps by |p| so it tolerates a larger one)
+        eta: if algorithm == "feedsign" { 1e-3 } else { 2e-3 },
+        mu: 1e-3,
+        batch_size: 16,
+        eval_every: 0,
+        eval_batches: 8,
+        eval_batch_size: 64,
+        dirichlet_beta: None,
+        byzantine_count: 0,
+        attack: None,
+        c_g_noise: 0.0,
+        pretrain_rounds: 0,
+        seed: 13,
+        verbose: false,
+    }
+}
+
+fn main() {
+    // paper budgets: 2e4 (CIFAR-10) and 6e4 (CIFAR-100) steps; we default
+    // to 1/2 scale and let FEEDSIGN_BENCH_SCALE restore the full budget
+    let r10 = scaled(10_000);
+    let r100 = scaled(20_000);
+    let n = repeats();
+
+    let mut table = Table::new(
+        "Table 3: vision last-layer FFT, K=5 (synth substitute)",
+        &["synth-cifar10", "synth-cifar100"],
+    );
+    let mut acc = std::collections::BTreeMap::new();
+    for algo in ["zo-fedsgd", "feedsign"] {
+        let mut cells = Vec::new();
+        for (task, rounds) in [("synth-cifar10", r10), ("synth-cifar100", r100)] {
+            let runs = timed(&format!("{algo}/{task}"), || run_repeats(&cfg(task, algo, rounds), n));
+            let ms = best_accs(&runs);
+            acc.insert((algo, task), ms.mean);
+            cells.push(format!("{ms}"));
+        }
+        table.row(algo, cells);
+    }
+    table.print();
+    println!("(paper: FeedSign 91.9 (5.9) on CIFAR-10, 45.3 (5.0) on CIFAR-100; ZO-SOTA 86.5 / 34.2)");
+
+    let mut v = Verdict::new();
+    let fs10 = acc[&("feedsign", "synth-cifar10")];
+    let fs100 = acc[&("feedsign", "synth-cifar100")];
+    let zo10 = acc[&("zo-fedsgd", "synth-cifar10")];
+    v.check("cifar10-above-chance", fs10 > 30.0, format!("{fs10:.1}% vs 10% chance"));
+    // 100-way ZO needs the paper's full 6e4-step budget to clear 40%; at
+    // bench scale we assert clearly-above-chance (1%) with margin
+    let floor100 = if scale() >= 1.0 { 4.0 } else { 1.5 };
+    v.check("cifar100-above-chance", fs100 > floor100, format!("{fs100:.1}% vs 1% chance"));
+    v.check("cifar10-easier", fs10 > fs100 + 10.0, format!("{fs10:.1} vs {fs100:.1}"));
+    // Appendix C.1: on vision last-layer FFT FeedSign "performs closely to
+    // ZO-FedSGD but cannot outperform" — same band, ZO may lead
+    v.check("feedsign-comparable-to-zo", (fs10 - zo10).abs() < 20.0, format!("{fs10:.1} vs {zo10:.1}"));
+    v.finish()
+}

@@ -1,0 +1,62 @@
+//! Byzantine resilience demo (Figure 3 shape): K = 25 clients, BK = 0..3
+//! sign-flipping attackers, FeedSign vs ZO-FedSGD.
+//!
+//! The paper's claim (§4.3): ZO-FedSGD degrades as attackers are added,
+//! FeedSign's majority vote holds until the Byzantine share approaches
+//! K/2.  Run with `cargo run --release --example byzantine_demo`.
+
+use feedsign::config::{ExperimentConfig, ModelSpec, TaskSpec};
+
+fn cfg(algorithm: &str, byzantine: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("byz-{algorithm}-{byzantine}"),
+        model: ModelSpec::LinearProbe { dim: 128, classes: 10 },
+        task: TaskSpec::SynthVision { name: "synth-cifar10".into(), train: 2500, test: 500 },
+        algorithm: algorithm.into(),
+        clients: 25,
+        rounds: 3000,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 16,
+        eval_every: 0,
+        eval_batches: 6,
+        eval_batch_size: 64,
+        dirichlet_beta: None,
+        byzantine_count: byzantine,
+        // ZO-FedSGD's Table 5 attacker sends a random projection; for
+        // FeedSign the same attacker degenerates to a (worst-case) flip.
+        attack: Some(if algorithm == "feedsign" { "sign-flip".into() } else { "random-projection:5.0".into() }),
+        c_g_noise: 0.0,
+        pretrain_rounds: 0,
+        seed: 5,
+        verbose: false,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("K = 25 clients, sweeping BK = 0..3 Byzantine attackers\n");
+    println!("{:>12} | {:>4} | {:>10} | {:>10}", "method", "BK", "final acc", "final loss");
+    println!("{}", "-".repeat(48));
+    let mut rows = std::collections::BTreeMap::new();
+    for algorithm in ["zo-fedsgd", "feedsign"] {
+        for bk in 0..=3usize {
+            let mut session = cfg(algorithm, bk).build_session()?;
+            let result = session.run();
+            println!(
+                "{algorithm:>12} | {bk:>4} | {:>9.1}% | {:>10.4}",
+                result.final_acc * 100.0,
+                result.final_loss
+            );
+            rows.insert((algorithm, bk), result.final_acc);
+        }
+    }
+    let fs_drop = rows[&("feedsign", 0usize)] - rows[&("feedsign", 3usize)];
+    let zo_drop = rows[&("zo-fedsgd", 0usize)] - rows[&("zo-fedsgd", 3usize)];
+    println!(
+        "\naccuracy drop with 3 attackers: FeedSign {:.1} pts vs ZO-FedSGD {:.1} pts",
+        fs_drop * 100.0,
+        zo_drop * 100.0
+    );
+    println!("(paper Fig. 3: FeedSign's convergence is not compromised until BK = 3)");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Data-heterogeneity demo (Figure 2 shape): Dirichlet(beta) label-skew
+//! sweep, FeedSign vs ZO-FedSGD.
+//!
+//! Theorem 3.11 / Remark 3.13: ZO-FedSGD's error floor scales with the
+//! heterogeneity constants (sigma_h, c_g) while FeedSign's floor is
+//! heterogeneity-independent — so as beta shrinks (more skew) and batch
+//! noise is amplified (the paper's 1 + N(0,1) projection multiplier),
+//! ZO-FedSGD loses more than FeedSign.
+//!
+//!     cargo run --release --example heterogeneity_demo
+
+use feedsign::config::{ExperimentConfig, ModelSpec, TaskSpec};
+use feedsign::data::partition::{label_skew, split, Partition};
+
+fn cfg(algorithm: &str, beta: Option<f32>, c_g: f32) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("het-{algorithm}-{beta:?}"),
+        model: ModelSpec::LinearProbe { dim: 128, classes: 10 },
+        task: TaskSpec::SynthVision { name: "synth-cifar10".into(), train: 2500, test: 500 },
+        algorithm: algorithm.into(),
+        clients: 25,
+        rounds: 3000,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 16,
+        eval_every: 0,
+        eval_batches: 6,
+        eval_batch_size: 64,
+        dirichlet_beta: beta,
+        byzantine_count: 0,
+        attack: None,
+        c_g_noise: c_g,
+        pretrain_rounds: 0,
+        seed: 9,
+        verbose: false,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("K = 25 clients, Dirichlet label-skew sweep (smaller beta = more skew)\n");
+    println!(
+        "{:>12} | {:>8} | {:>6} | {:>10} | {:>10}",
+        "method", "beta", "skew", "final acc", "final loss"
+    );
+    println!("{}", "-".repeat(60));
+    let sweeps: [(Option<f32>, f32); 3] = [(None, 0.0), (Some(1.0), 1.0), (Some(0.1), 1.0)];
+    for algorithm in ["zo-fedsgd", "feedsign"] {
+        for &(beta, c_g) in &sweeps {
+            let c = cfg(algorithm, beta, c_g);
+            // report the realized label skew of this sharding
+            let (train, _) = c.datasets()?;
+            let how = beta.map_or(Partition::Iid, |b| Partition::Dirichlet { beta: b });
+            let skew = label_skew(&train, &split(&train, c.clients, how, c.seed));
+            let mut session = c.build_session()?;
+            let result = session.run();
+            println!(
+                "{algorithm:>12} | {:>8} | {skew:>6.2} | {:>9.1}% | {:>10.4}",
+                beta.map_or("iid".to_string(), |b| format!("{b}")),
+                result.final_acc * 100.0,
+                result.final_loss
+            );
+        }
+    }
+    println!("\n(paper Fig. 2 / Table 4: FeedSign holds up better as skew + projection noise grow)");
+    Ok(())
+}

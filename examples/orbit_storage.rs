@@ -1,0 +1,52 @@
+//! Orbit-based model storage (§D.1, Figures 5/6): fine-tune, persist the
+//! orbit, replay it to a bit-identical model, and print the storage
+//! ledger a model hub would see.
+//!
+//!     cargo run --release --example orbit_storage
+
+use feedsign::config;
+use feedsign::orbit::{decode, encode, storage_report};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = config::quickstart();
+    cfg.rounds = 5000;
+    cfg.eval_every = 0;
+    println!("fine-tuning ({} rounds of FeedSign, K={})...", cfg.rounds, cfg.clients);
+    let mut session = cfg.build_session()?;
+    let result = session.run();
+    println!("final accuracy {:.1}%", result.final_acc * 100.0);
+
+    // persist
+    let bytes = encode(&session.orbit);
+    let path = std::env::temp_dir().join("feedsign_demo.orbit");
+    std::fs::write(&path, &bytes)?;
+    println!("\norbit written to {} ({} bytes)", path.display(), bytes.len());
+
+    // reload + replay from the shared checkpoint
+    let orbit = decode(&std::fs::read(&path)?)?;
+    let mut w = session.clients[0].engine.init_params(cfg.seed);
+    orbit.replay(&mut w);
+    assert_eq!(w, session.clients[0].w, "replay must be bit-exact");
+    println!("replayed {} steps -> bit-identical to the trained model", orbit.len());
+
+    // the storage ledger, at our scale and projected to the paper's
+    let n_params = session.clients[0].engine.n_params();
+    let rep = storage_report(&orbit, n_params);
+    println!(
+        "\nstorage ledger (this model): {} B orbit vs {} B checkpoint ({}x)",
+        rep.orbit_bytes, rep.checkpoint_bytes, rep.ratio as u64
+    );
+    let opt13b = storage_report(&orbit, 13_000_000_000 / 4);
+    println!(
+        "projected to OPT-13B scale (paper §D.1): {} B orbit vs {:.0} GB checkpoint ({:.1e}x)",
+        opt13b.orbit_bytes,
+        opt13b.checkpoint_bytes as f64 / 1e9,
+        opt13b.ratio
+    );
+    println!(
+        "a model hub storing 600k fine-tunes as orbits: {:.1} MB instead of {:.1} PB",
+        600_000.0 * opt13b.orbit_bytes as f64 / 1e6,
+        600_000.0 * opt13b.checkpoint_bytes as f64 / 1e15
+    );
+    Ok(())
+}

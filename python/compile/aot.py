@@ -1,0 +1,160 @@
+"""AOT export: lower every step graph for every model variant to HLO text.
+
+This is the only place python touches the production path, and it runs once
+(``make artifacts``).  Interchange format is **HLO text**, not serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs, under ``artifacts/``:
+
+* ``{variant}_{fn}.hlo.txt`` — one per (variant, step graph), lowered with
+  ``return_tuple=True`` (the rust runtime unwraps with ``to_tuple1`` /
+  element extraction).
+* ``manifest.json`` — everything the rust side needs to drive the
+  executables blindly: shapes, parameter segment layout + init stds,
+  hyperparameters, and Philox test vectors for cross-implementation parity
+  (u32 words must match bit-exactly; normals to 1e-5).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--variants tiny,small]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import philox
+from .kernels.ref import philox4x32_ref, philox_normal_ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _export_fns(cfg: M.ModelConfig):
+    """(name, fn, example_args) for each exported graph of one variant."""
+    P = cfg.padded_size
+    w = jax.ShapeDtypeStruct((P,), jnp.float32)
+    batch_p = jax.ShapeDtypeStruct((cfg.batch_probe, cfg.seq_len + 1), jnp.int32)
+    batch_e = jax.ShapeDtypeStruct((cfg.batch_eval, cfg.seq_len + 1), jnp.int32)
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    return [
+        ("spsa_probe",
+         lambda w_, b_, s_, mu_: (M.spsa_probe(cfg, w_, b_, s_, mu_),),
+         (w, batch_p, seed, scalar)),
+        ("update",
+         lambda w_, s_, st_: (M.update(cfg, w_, s_, st_),),
+         (w, seed, scalar)),
+        ("loss",
+         lambda w_, b_: (M.loss_fn(cfg, w_, b_, use_pallas=False),),
+         (w, batch_e)),
+        ("eval",
+         lambda w_, b_: M.eval_fn(cfg, w_, b_),
+         (w, batch_e)),
+        ("fo_step",
+         lambda w_, b_, lr_: M.fo_step(cfg, w_, b_, lr_),
+         (w, batch_p, scalar)),
+        ("grad_proj",
+         lambda w_, b_, s_: (M.grad_proj(cfg, w_, b_, s_),),
+         (w, batch_p, seed)),
+        ("zvec",
+         lambda s_: (M.zvec(cfg, s_),),
+         (seed,)),
+    ]
+
+
+def _philox_test_vectors() -> dict:
+    """Recorded kernel outputs the rust PRNG must reproduce."""
+    vectors = []
+    for seed in (0, 1, 42, 2**31 - 1):
+        counters = jnp.arange(4, dtype=jnp.uint32)
+        x0, x1, x2, x3 = philox4x32_ref(seed, counters)
+        normals = philox_normal_ref(seed, 16)
+        vectors.append(
+            {
+                "seed": seed,
+                "counters": [0, 1, 2, 3],
+                "words": [
+                    [int(v) for v in x0],
+                    [int(v) for v in x1],
+                    [int(v) for v in x2],
+                    [int(v) for v in x3],
+                ],
+                "normals": [float(v) for v in normals],
+            }
+        )
+    return {
+        "key1_init": philox.KEY1_INIT,
+        "rounds": 10,
+        "vectors": vectors,
+    }
+
+
+def build_manifest(variants: list[str]) -> dict:
+    out: dict = {"philox": _philox_test_vectors(), "models": {}}
+    for name in variants:
+        cfg = M.VARIANTS[name]
+        segs = [
+            {"name": n, "shape": list(shape), "init_std": std}
+            for n, shape, std in cfg.segments()
+        ]
+        out["models"][name] = {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "seq_len": cfg.seq_len,
+            "batch_probe": cfg.batch_probe,
+            "batch_eval": cfg.batch_eval,
+            "n_params": cfg.n_params,
+            "padded_size": cfg.padded_size,
+            "segments": segs,
+            "artifacts": {
+                fn: f"{name}_{fn}.hlo.txt"
+                for fn, _, _ in _export_fns(cfg)
+            },
+        }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default="tiny,small,base")
+    args = ap.parse_args()
+    variants = [v for v in args.variants.split(",") if v]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name in variants:
+        cfg = M.VARIANTS[name]
+        print(f"[aot] {name}: {cfg.n_params} params (padded {cfg.padded_size})")
+        for fn_name, fn, example in _export_fns(cfg):
+            lowered = jax.jit(fn).lower(*example)
+            text = to_hlo_text(lowered)
+            path = os.path.join(args.out_dir, f"{name}_{fn_name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"[aot]   {fn_name}: {len(text) / 1e6:.2f} MB -> {path}")
+
+    manifest = build_manifest(variants)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json written ({len(variants)} variants)")
+
+
+if __name__ == "__main__":
+    main()

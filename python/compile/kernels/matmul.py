@@ -1,0 +1,100 @@
+"""Layer-1 Pallas kernel for the transformer MLP hot-spot: tiled
+``gelu(x @ w + b)``.
+
+The SPSA probe is two inference passes, and in a decoder-only transformer
+~2/3 of the FLOPs live in the MLP block, so this is the MXU target.  The
+kernel is written the TPU way: a 3-D grid ``(M/bm, N/bn, K/bk)`` where each
+``(i, j)`` output tile accumulates partial products over the ``k`` axis in
+the (revisited) output block, and the bias + GeLU epilogue fires only on the
+last ``k`` step.  Block shapes default to 128x128x(<=128): one MXU-shaped
+f32 tile of x, w and the accumulator live in VMEM at a time
+(3 * 128*128 * 4B = 192 KiB << 16 MiB VMEM), leaving headroom for
+double-buffering the HBM streams.
+
+``interpret=True`` for CPU-PJRT execution; the pure-jnp oracle is
+``ref.linear_gelu_ref`` and hypothesis sweeps shapes in
+``python/tests/test_matmul.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def gelu_tanh(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GeLU (matches the rust simkit implementation)."""
+    x3 = x * x * x
+    return 0.5 * x * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (x + 0.044715 * x3)))
+
+
+def _linear_gelu_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...][None, :]
+        o_ref[...] = gelu_tanh(acc) if activation else acc
+
+
+def _pick_block(dim: int, cap: int) -> int:
+    """Largest divisor of ``dim`` that is <= cap, preferring powers of two."""
+    b = 1
+    while b * 2 <= cap and dim % (b * 2) == 0:
+        b *= 2
+    if b >= 8 or dim < 8:
+        return b
+    # dim has an awkward factorisation; fall back to any divisor <= cap
+    for cand in range(min(cap, dim), 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def linear_act(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    activation: bool = True,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jnp.ndarray:
+    """``gelu(x @ w + b)`` (or affine only with ``activation=False``).
+
+    x: (M, K), w: (K, N), b: (N,) -> (M, N).  Block sizes are clamped to
+    divisors of the respective dims so arbitrary model widths work.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+    bm, bn, bk = _pick_block(m, bm), _pick_block(n, bn), _pick_block(k, bk)
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_linear_gelu_kernel, nk=nk, activation=activation),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def linear_gelu(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, **kw) -> jnp.ndarray:
+    return linear_act(x, w, b, activation=True, **kw)

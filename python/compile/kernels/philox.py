@@ -1,0 +1,212 @@
+"""Layer-1 Pallas kernels for FeedSign's shared-PRNG substrate.
+
+FeedSign's core trick is that every party (PS + all clients) can regenerate
+the SPSA perturbation direction ``z ~ N(0, I_d)`` *bit-identically* from a
+32-bit step seed, so the direction itself never travels over the network.
+These kernels make that substrate explicit:
+
+* ``philox_normal(seed, n)`` — counter-based Philox-4x32-10 PRNG followed by
+  a Box-Muller transform, producing the standard-normal direction ``z``.
+  Counter-based means element ``i`` of ``z`` is a pure function of
+  ``(seed, i)``: each Pallas grid block derives its own counters with
+  ``broadcasted_iota`` and generates exactly the tile of ``z`` it needs.
+
+* ``spsa_axpy(w, seed, scale)`` — the FeedSign hot-op ``w + scale * z(seed)``
+  with the noise generation *fused* into the AXPY.  On a real TPU this is
+  the difference between inference-level memory and 2x memory: ``z`` is
+  never materialised in HBM, each VMEM tile of it is generated exactly
+  where it is consumed (BlockSpec expresses the HBM<->VMEM schedule).
+  The same op implements all three uses per federated step:
+  probe+ (``scale=+mu``), probe- (``scale=-mu``) and the model update
+  (``scale=-f*eta`` with ``f`` the 1-bit global vote).
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is pinned against the pure-jnp oracles in
+``ref.py`` by ``python/tests/test_philox.py`` (hypothesis sweeps) and the
+rust implementation in ``rust/src/simkit/prng.rs`` replays the manifest's
+test vectors bit-exactly at the u32 level.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Philox-4x32 round constants (Salmon et al., SC'11), as python ints so they
+# embed as literals inside Pallas kernel traces (closure-captured jnp arrays
+# are rejected by pallas_call).
+PHILOX_M0 = 0xD2511F53
+PHILOX_M1 = 0xCD9E8D57
+PHILOX_W0 = 0x9E3779B9  # golden ratio
+PHILOX_W1 = 0xBB67AE85  # sqrt(3) - 1
+KEY1_INIT = 0xCAFEF00D
+_MASK32 = 0xFFFFFFFF
+
+# Default block: big enough that the interpret-mode grid loop overhead is
+# negligible even for multi-million-parameter vectors.
+DEFAULT_BLOCK = 1 << 16
+
+TWO_PI = 6.283185307179586
+
+
+def _u32(x: int) -> jnp.ndarray:
+    return jnp.uint32(x & _MASK32)
+
+
+def _mulhilo_const(a: int, b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact 32x32 -> (hi, lo) multiply of a *constant* by a u32 vector.
+
+    Built from 16-bit limbs so it needs no u64 support (jax_enable_x64 stays
+    off and the lowered HLO is pure u32 arithmetic, matching the rust
+    implementation word for word).
+    """
+    alo, ahi = a & 0xFFFF, (a >> 16) & 0xFFFF
+    blo = b & _u32(0xFFFF)
+    bhi = b >> jnp.uint32(16)
+    ll = _u32(alo) * blo                     # <= (2^16-1)^2, fits u32
+    lh = _u32(alo) * bhi
+    hl = _u32(ahi) * blo
+    hh = _u32(ahi) * bhi
+    mid = lh + hl                            # may wrap: detect carry
+    mid_carry = (mid < lh).astype(jnp.uint32)
+    lo = ll + (mid << jnp.uint32(16))
+    lo_carry = (lo < ll).astype(jnp.uint32)
+    hi = hh + (mid >> jnp.uint32(16)) + (mid_carry << jnp.uint32(16)) + lo_carry
+    return hi, lo
+
+
+def philox4x32(seed_u32: jnp.ndarray, counters: jnp.ndarray, rounds: int = 10):
+    """Philox-4x32 over a vector of counter indices.
+
+    Counter block for index ``i`` is ``(i, 0, 0, 0)``; the key is
+    ``(seed, KEY1_INIT)``.  Returns four u32 vectors, one random word per
+    counter per lane.  Pure function usable both inside Pallas kernels and
+    in the jnp reference.
+    """
+    c0 = counters.astype(jnp.uint32)
+    zeros = jnp.zeros_like(c0)
+    c1, c2, c3 = zeros, zeros, zeros
+    k0 = jnp.asarray(seed_u32).astype(jnp.uint32)
+    k1_int = KEY1_INIT  # key lane 1 never depends on the seed: fold at trace time
+    for r in range(rounds):
+        hi0, lo0 = _mulhilo_const(PHILOX_M0, c0)
+        hi1, lo1 = _mulhilo_const(PHILOX_M1, c2)
+        c0, c1, c2, c3 = hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ _u32(k1_int), lo0
+        k0 = k0 + _u32(PHILOX_W0)
+        k1_int = (k1_int + PHILOX_W1) & _MASK32
+    return c0, c1, c2, c3
+
+
+def _u32_to_unit(x: jnp.ndarray) -> jnp.ndarray:
+    """Map u32 -> float32 in the open interval (0, 1).
+
+    ``(x >> 8) * 2^-24 + 2^-25``: 24 mantissa-exact bits, never 0 or 1, and
+    bit-reproducible across jnp / rust f32 (single mul + add, both exact at
+    these magnitudes' rounding behaviour).
+    """
+    return (x >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(
+        1.0 / (1 << 24)
+    ) + jnp.float32(1.0 / (1 << 25))
+
+
+def _box_muller(u1: jnp.ndarray, u2: jnp.ndarray):
+    r = jnp.sqrt(jnp.float32(-2.0) * jnp.log(u1))
+    theta = jnp.float32(TWO_PI) * u2
+    return r * jnp.cos(theta), r * jnp.sin(theta)
+
+
+def _normals_from_counters(seed_u32: jnp.ndarray, counters: jnp.ndarray) -> jnp.ndarray:
+    """4 standard normals per counter, interleaved [z0, z1, z2, z3] per lane."""
+    x0, x1, x2, x3 = philox4x32(seed_u32, counters)
+    za, zb = _box_muller(_u32_to_unit(x0), _u32_to_unit(x1))
+    zc, zd = _box_muller(_u32_to_unit(x2), _u32_to_unit(x3))
+    return jnp.stack([za, zb, zc, zd], axis=-1).reshape(-1)
+
+
+def _philox_normal_kernel(seed_ref, o_ref, *, block: int):
+    """One grid block generates ``block`` normals for its slice of z."""
+    pid = pl.program_id(0)
+    lanes = block // 4
+    base = (pid * lanes).astype(jnp.uint32)
+    counters = base + jax.lax.broadcasted_iota(jnp.uint32, (lanes,), 0)
+    o_ref[...] = _normals_from_counters(seed_ref[0].astype(jnp.uint32), counters)
+
+
+def philox_normal(seed: jnp.ndarray, n: int, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Generate ``z ~ N(0, I_n)`` from a scalar int32 seed (Pallas kernel).
+
+    ``n`` must be a multiple of 4; the grid pads to a multiple of ``block``
+    internally and slices the tail off.
+    """
+    if n % 4 != 0:
+        raise ValueError(f"n must be a multiple of 4, got {n}")
+    block = min(block, _round_up(n, 4))
+    padded = _round_up(n, block)
+    grid = padded // block
+    seed_arr = jnp.reshape(seed, (1,)).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_philox_normal_kernel, block=block),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        interpret=True,
+    )(seed_arr)
+    return out[:n]
+
+
+def _spsa_axpy_kernel(seed_ref, scale_ref, w_ref, o_ref, *, block: int):
+    """Fused noise-gen + AXPY: o = w + scale * z(seed) for this tile.
+
+    The tile of z is regenerated from (seed, tile offset) in VMEM — z never
+    exists as a full array.  ``scale`` is a runtime scalar so the same
+    compiled executable serves probe+/probe-/update.
+    """
+    pid = pl.program_id(0)
+    lanes = block // 4
+    base = (pid * lanes).astype(jnp.uint32)
+    counters = base + jax.lax.broadcasted_iota(jnp.uint32, (lanes,), 0)
+    z = _normals_from_counters(seed_ref[0].astype(jnp.uint32), counters)
+    o_ref[...] = w_ref[...] + scale_ref[0] * z
+
+
+def spsa_axpy(
+    w: jnp.ndarray, seed: jnp.ndarray, scale: jnp.ndarray, block: int = DEFAULT_BLOCK
+) -> jnp.ndarray:
+    """``w + scale * z(seed)`` with fused noise generation (Pallas kernel).
+
+    ``w.shape = (n,)`` with ``n % 4 == 0`` (flat-parameter layout pads to a
+    multiple of the block size anyway — see model.ModelConfig.padded_size).
+    """
+    (n,) = w.shape
+    if n % 4 != 0:
+        raise ValueError(f"len(w) must be a multiple of 4, got {n}")
+    block = min(block, n)
+    if n % block != 0:
+        # fall back to the largest power-of-two divisor <= block
+        b = 4
+        while b * 2 <= block and n % (b * 2) == 0:
+            b *= 2
+        block = b
+    grid = n // block
+    seed_arr = jnp.reshape(seed, (1,)).astype(jnp.int32)
+    scale_arr = jnp.reshape(scale, (1,)).astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_spsa_axpy_kernel, block=block),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(seed_arr, scale_arr, w)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

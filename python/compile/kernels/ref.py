@@ -1,0 +1,47 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here that uses
+only standard jnp ops (no Pallas).  pytest/hypothesis compare kernel output
+against these oracles:
+
+* u32 Philox words must match **bit-exactly** (pure integer pipeline);
+* normals / axpy / linear_gelu match to float32 tolerance (transcendental
+  functions may differ in the last ulp between the interpret-mode kernel
+  and the fused XLA graph).
+
+The rust simkit PRNG (``rust/src/simkit/prng.rs``) is pinned against the
+same construction via test vectors recorded into ``artifacts/manifest.json``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import philox as _ph
+from .matmul import gelu_tanh
+
+
+def philox4x32_ref(seed: int, counters: jnp.ndarray, rounds: int = 10):
+    """Reference Philox words — same pure function the kernel calls, exposed
+    for bit-level tests and manifest vector generation."""
+    return _ph.philox4x32(jnp.uint32(seed), counters.astype(jnp.uint32), rounds)
+
+
+def philox_normal_ref(seed, n: int) -> jnp.ndarray:
+    """z ~ N(0, I_n) without Pallas: whole counter range in one jnp sweep."""
+    lanes = (n + 3) // 4
+    counters = jnp.arange(lanes, dtype=jnp.uint32)
+    z = _ph._normals_from_counters(jnp.asarray(seed).astype(jnp.uint32), counters)
+    return z[:n]
+
+
+def spsa_axpy_ref(w: jnp.ndarray, seed, scale) -> jnp.ndarray:
+    return w + jnp.float32(scale) * philox_normal_ref(seed, w.shape[0])
+
+
+def linear_gelu_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return gelu_tanh(x @ w + b[None, :])
+
+
+def linear_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return x @ w + b[None, :]

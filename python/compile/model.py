@@ -1,0 +1,288 @@
+"""Layer-2 JAX model: a decoder-only transformer LM over a **flat parameter
+vector**, plus the FeedSign step graphs built on it.
+
+MeZO-style ZO optimization lives in flat parameter space — perturbation,
+update and orbit replay all treat the model as one f32 vector — so the model
+here is a pure function ``loss(w_flat, batch)``.  This also collapses the
+PJRT ABI to a single buffer: the rust coordinator never learns the model's
+internal structure (the paper's "PS can be small and task agnostic"
+property, §D.2).
+
+Exported step graphs (see ``aot.py``):
+
+* ``spsa_probe(w, batch, seed, mu) -> p`` — the client step: regenerate the
+  step direction ``z(seed)`` via the fused Pallas ``spsa_axpy`` kernel,
+  evaluate the loss at ``w ± mu z`` (two forward passes, zero backprop) and
+  return the scalar SPSA projection of Definition 3.1 (n = 1).
+* ``update(w, seed, step) -> w'`` — apply ``w - step * z(seed)``; the rust
+  PS folds the 1-bit vote into ``step = f * eta``.
+* ``loss / eval`` — evaluation graphs (mean CE; last-position accuracy).
+* ``fo_step(w, batch, lr) -> (w', loss)`` — the first-order FedSGD baseline
+  (jax.grad; uses the jnp reference path since backprop is exactly what ZO
+  avoids, and Pallas interpret kernels carry no VJP rule).
+* ``grad_proj(w, batch, seed) -> z . grad L`` — the *true* directional
+  derivative via forward-mode jvp, used by the Appendix-E sign-reversing
+  probability study (Fig. 8/9).
+
+The flat vector is padded to a multiple of 1024 so the Philox/AXPY kernels
+tile evenly; the dead tail is perturbed like everything else (harmless: no
+segment reads it) which keeps orbit replay bit-exact.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import philox
+from .kernels.matmul import gelu_tanh, linear_act
+
+PAD_MULTIPLE = 1024
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters for one exported model variant."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch_probe: int = 8
+    batch_eval: int = 32
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def segments(self) -> list[tuple[str, tuple[int, ...], float]]:
+        """(name, shape, init_std) for every parameter segment, in flat order.
+
+        The rust side reads this layout from the manifest to build the
+        initial parameter vector with its own Philox stream; init_std == 0.0
+        means zeros, == 1.0 on *_gain means ones (layernorm gains).
+        """
+        d, f, v, t = self.d_model, self.d_ff, self.vocab, self.seq_len
+        w_std = 0.02
+        segs: list[tuple[str, tuple[int, ...], float]] = [
+            ("embed", (v, d), w_std),
+            ("pos", (t, d), w_std),
+        ]
+        for l in range(self.n_layers):
+            p = f"layer{l}."
+            segs += [
+                (p + "ln1_gain", (d,), 1.0),
+                (p + "ln1_bias", (d,), 0.0),
+                (p + "w_qkv", (d, 3 * d), w_std),
+                (p + "b_qkv", (3 * d,), 0.0),
+                (p + "w_attn_out", (d, d), w_std),
+                (p + "b_attn_out", (d,), 0.0),
+                (p + "ln2_gain", (d,), 1.0),
+                (p + "ln2_bias", (d,), 0.0),
+                (p + "w_mlp_in", (d, f), w_std),
+                (p + "b_mlp_in", (f,), 0.0),
+                (p + "w_mlp_out", (f, d), w_std),
+                (p + "b_mlp_out", (d,), 0.0),
+            ]
+        segs += [("lnf_gain", (d,), 1.0), ("lnf_bias", (d,), 0.0)]
+        return segs
+
+    @property
+    def n_params(self) -> int:
+        total = 0
+        for _, shape, _ in self.segments():
+            n = 1
+            for s in shape:
+                n *= s
+            total += n
+        return total
+
+    @property
+    def padded_size(self) -> int:
+        n = self.n_params
+        return ((n + PAD_MULTIPLE - 1) // PAD_MULTIPLE) * PAD_MULTIPLE
+
+
+# The exported variants.  `base` sits at the ~11M low end of the paper's
+# 11M-13B model range; smaller variants keep tests and the interpret-mode
+# e2e driver fast.
+VARIANTS: dict[str, ModelConfig] = {
+    cfg.name: cfg
+    for cfg in [
+        ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=4, seq_len=32,
+                    batch_probe=4, batch_eval=16),
+        ModelConfig("small", vocab=256, d_model=128, n_layers=4, n_heads=8, seq_len=64,
+                    batch_probe=8, batch_eval=32),
+        ModelConfig("base", vocab=512, d_model=320, n_layers=10, n_heads=8, seq_len=128,
+                    batch_probe=8, batch_eval=32),
+    ]
+}
+
+
+def unflatten(cfg: ModelConfig, w: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    """Slice the flat vector into named parameter arrays (static offsets)."""
+    params: dict[str, jnp.ndarray] = {}
+    off = 0
+    for name, shape, _ in cfg.segments():
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = w[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def _layernorm(x: jnp.ndarray, gain: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * gain + bias
+
+
+def _attention(cfg: ModelConfig, x: jnp.ndarray, p: dict, prefix: str) -> jnp.ndarray:
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qkv = x @ p[prefix + "w_qkv"] + p[prefix + "b_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), dtype=jnp.bool_))
+    scores = jnp.where(mask[None, None], scores, jnp.float32(-1e30))
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = (attn @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ p[prefix + "w_attn_out"] + p[prefix + "b_attn_out"]
+
+
+def _mlp(cfg: ModelConfig, x: jnp.ndarray, p: dict, prefix: str, use_pallas: bool):
+    b, t, d = x.shape
+    if use_pallas:
+        h = linear_act(x.reshape(b * t, d), p[prefix + "w_mlp_in"],
+                       p[prefix + "b_mlp_in"], activation=True)
+        o = linear_act(h, p[prefix + "w_mlp_out"], p[prefix + "b_mlp_out"],
+                       activation=False)
+        return o.reshape(b, t, d)
+    h = gelu_tanh(x @ p[prefix + "w_mlp_in"] + p[prefix + "b_mlp_in"])
+    return h @ p[prefix + "w_mlp_out"] + p[prefix + "b_mlp_out"]
+
+
+def logits_fn(cfg: ModelConfig, w: jnp.ndarray, tokens: jnp.ndarray,
+              use_pallas: bool = True) -> jnp.ndarray:
+    """Forward pass: tokens i32[B, T] -> logits f32[B, T, V] (tied head)."""
+    p = unflatten(cfg, w)
+    x = p["embed"][tokens] + p["pos"][None, : tokens.shape[1]]
+    for l in range(cfg.n_layers):
+        pre = f"layer{l}."
+        x = x + _attention(cfg, _layernorm(x, p[pre + "ln1_gain"], p[pre + "ln1_bias"]), p, pre)
+        x = x + _mlp(cfg, _layernorm(x, p[pre + "ln2_gain"], p[pre + "ln2_bias"]), p, pre, use_pallas)
+    x = _layernorm(x, p["lnf_gain"], p["lnf_bias"])
+    return x @ p["embed"].T
+
+
+def loss_fn(cfg: ModelConfig, w: jnp.ndarray, batch: jnp.ndarray,
+            use_pallas: bool = True) -> jnp.ndarray:
+    """Mean next-token cross-entropy.  batch: i32[B, T+1]."""
+    tokens, targets = batch[:, :-1], batch[:, 1:]
+    logits = logits_fn(cfg, w, tokens, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def eval_fn(cfg: ModelConfig, w: jnp.ndarray, batch: jnp.ndarray):
+    """(mean loss, # correct last-position predictions).
+
+    Synthetic classification tasks put the label token in the final
+    position, so last-position argmax accuracy is the task metric.
+    """
+    tokens, targets = batch[:, :-1], batch[:, 1:]
+    logits = logits_fn(cfg, w, tokens, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    pred_last = jnp.argmax(logits[:, -1, :], axis=-1)
+    correct = (pred_last == targets[:, -1]).astype(jnp.int32).sum()
+    return nll.mean(), correct
+
+
+def spsa_probe(cfg: ModelConfig, w: jnp.ndarray, batch: jnp.ndarray,
+               seed: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """SPSA projection p = (L(w + mu z) - L(w - mu z)) / (2 mu), n = 1.
+
+    Both perturbed parameter vectors come from the fused Pallas
+    ``spsa_axpy`` kernel, so the direction z is bit-identical to the one
+    ``update`` later applies — the invariant FeedSign's 1-bit protocol
+    rests on.
+    """
+    wp = philox.spsa_axpy(w, seed, mu)
+    wm = philox.spsa_axpy(w, seed, -mu)
+    lp = loss_fn(cfg, wp, batch, use_pallas=True)
+    lm = loss_fn(cfg, wm, batch, use_pallas=True)
+    return (lp - lm) / (2.0 * mu)
+
+
+def update(cfg: ModelConfig, w: jnp.ndarray, seed: jnp.ndarray,
+           step: jnp.ndarray) -> jnp.ndarray:
+    """w' = w - step * z(seed).  step = f * eta (FeedSign) or mean-projection
+    * eta (ZO-FedSGD); the sign/aggregation logic lives in rust."""
+    return philox.spsa_axpy(w, seed, -step)
+
+
+def fo_step(cfg: ModelConfig, w: jnp.ndarray, batch: jnp.ndarray, lr: jnp.ndarray):
+    """First-order FedSGD baseline step (and the pretraining engine)."""
+    loss, grad = jax.value_and_grad(lambda ww: loss_fn(cfg, ww, batch, use_pallas=False))(w)
+    return w - lr * grad, loss
+
+
+def grad_proj(cfg: ModelConfig, w: jnp.ndarray, batch: jnp.ndarray,
+              seed: jnp.ndarray) -> jnp.ndarray:
+    """Exact directional derivative z(seed) . grad L(w, batch) via jvp.
+
+    Forward-mode only — this is the mu -> 0 limit of the SPSA projection and
+    the ground truth for the Appendix-E sign-reversing study.
+    """
+    z = philox.philox_normal(seed, w.shape[0])
+    _, jvp_val = jax.jvp(lambda ww: loss_fn(cfg, ww, batch, use_pallas=False), (w,), (z,))
+    return jvp_val
+
+
+def zvec(cfg: ModelConfig, seed: jnp.ndarray) -> jnp.ndarray:
+    """The raw step direction z(seed) — exported for cross-implementation
+    parity tests between the Pallas kernel and rust simkit."""
+    return philox.philox_normal(seed, cfg.padded_size)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> jnp.ndarray:
+    """Reference initial flat parameter vector (python-side tests/pretrain).
+
+    Segment-wise: weights ~ std * N(0,1) from the same Philox stream the
+    rust initializer uses (seed offset = segment index), gains = 1, biases
+    = 0.  Keeping init generation counter-based makes python and rust
+    checkpoints interchangeable.
+    """
+    from .kernels.ref import philox_normal_ref
+
+    parts = []
+    for idx, (_, shape, std) in enumerate(cfg.segments()):
+        n = 1
+        for s in shape:
+            n *= s
+        if std == 1.0 and len(shape) == 1:  # layernorm gain
+            parts.append(jnp.ones((n,), jnp.float32))
+        elif std == 0.0:
+            parts.append(jnp.zeros((n,), jnp.float32))
+        else:
+            m = ((n + 3) // 4) * 4
+            z = philox_normal_ref(seed * 65536 + idx, m)[:n]
+            parts.append(std * z)
+    flat = jnp.concatenate(parts)
+    pad = cfg.padded_size - flat.shape[0]
+    return jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])

@@ -1,0 +1,81 @@
+"""AOT export smoke tests: lowering round-trips and the manifest contract."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import _export_fns, build_manifest, to_hlo_text
+
+CFG = M.VARIANTS["tiny"]
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_all_tiny_graphs_lower_to_hlo_text(self):
+        for name, fn, example in _export_fns(CFG):
+            text = to_hlo_text(jax.jit(fn).lower(*example))
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_probe_contains_no_custom_calls(self):
+        """interpret=True must lower Pallas to plain HLO — a Mosaic
+        custom-call would be unloadable by the CPU PJRT client."""
+        name, fn, example = _export_fns(CFG)[0]
+        text = to_hlo_text(jax.jit(fn).lower(*example))
+        assert "custom-call" not in text.lower()
+
+    def test_exported_probe_matches_eager(self):
+        """Executing the lowered computation through jax must equal eager."""
+        w = M.init_params(CFG)
+        rng = np.random.RandomState(0)
+        batch = jnp.array(rng.randint(0, CFG.vocab, (CFG.batch_probe, CFG.seq_len + 1)), jnp.int32)
+        jit_p = jax.jit(lambda *a: M.spsa_probe(CFG, *a))
+        eager = M.spsa_probe(CFG, w, batch, jnp.int32(1), jnp.float32(1e-3))
+        jitted = jit_p(w, batch, jnp.int32(1), jnp.float32(1e-3))
+        assert abs(float(eager) - float(jitted)) < 1e-5
+
+
+class TestManifest:
+    def test_build_manifest_schema(self):
+        m = build_manifest(["tiny"])
+        t = m["models"]["tiny"]
+        assert t["n_params"] == CFG.n_params
+        assert t["padded_size"] == CFG.padded_size
+        assert len(t["segments"]) == len(CFG.segments())
+        assert set(t["artifacts"]) == {
+            "spsa_probe", "update", "loss", "eval", "fo_step", "grad_proj", "zvec"
+        }
+
+    def test_philox_vectors_present(self):
+        m = build_manifest(["tiny"])
+        ph = m["philox"]
+        assert ph["rounds"] == 10
+        assert len(ph["vectors"]) >= 3
+        for v in ph["vectors"]:
+            assert len(v["normals"]) == 16
+            assert len(v["words"]) == 4
+
+    @pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                        reason="artifacts not built")
+    def test_written_manifest_matches_current_code(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            written = json.load(f)
+        fresh = build_manifest(list(written["models"].keys()))
+        assert written["philox"] == fresh["philox"]
+        for name, mod in fresh["models"].items():
+            assert written["models"][name]["n_params"] == mod["n_params"]
+            assert written["models"][name]["padded_size"] == mod["padded_size"]
+
+    @pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                        reason="artifacts not built")
+    def test_all_artifact_files_exist(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            manifest = json.load(f)
+        for mod in manifest["models"].values():
+            for fname in mod["artifacts"].values():
+                assert os.path.exists(os.path.join(ART, fname)), fname

@@ -1,0 +1,81 @@
+"""linear_gelu Pallas kernel vs pure-jnp oracle (hypothesis shape sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import gelu_tanh, linear_act, linear_gelu, _pick_block
+from compile.kernels.ref import linear_gelu_ref, linear_ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(shape, seed):
+    return jnp.array(np.random.RandomState(seed).randn(*shape).astype(np.float32))
+
+
+class TestPickBlock:
+    def test_power_of_two(self):
+        assert _pick_block(1024, 128) == 128
+        assert _pick_block(64, 128) == 64
+
+    def test_awkward_dims(self):
+        assert 320 % _pick_block(320, 128) == 0
+        assert _pick_block(320, 128) >= 8
+        assert 96 % _pick_block(96, 128) == 0
+
+    def test_prime_dim_falls_back(self):
+        b = _pick_block(97, 128)
+        assert 97 % b == 0
+
+    @given(dim=st.integers(1, 2048), cap=st.integers(1, 256))
+    @settings(**SETTINGS)
+    def test_always_divides(self, dim, cap):
+        b = _pick_block(dim, cap)
+        assert dim % b == 0 and 1 <= b <= max(cap, 1) or b == dim
+
+
+class TestLinearGelu:
+    @given(
+        m=st.sampled_from([8, 32, 64, 128]),
+        k=st.sampled_from([16, 64, 96, 320]),
+        n=st.sampled_from([16, 64, 160, 256]),
+        seed=st.integers(0, 1000),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, m, k, n, seed):
+        x, w, b = _rand((m, k), seed), _rand((k, n), seed + 1), _rand((n,), seed + 2)
+        out = linear_gelu(x, w, b, bm=32, bn=32, bk=32)
+        expect = linear_gelu_ref(x, w, b)
+        np.testing.assert_allclose(np.array(out), np.array(expect), atol=2e-4, rtol=2e-4)
+
+    def test_affine_only(self):
+        x, w, b = _rand((16, 32), 0), _rand((32, 48), 1), _rand((48,), 2)
+        out = linear_act(x, w, b, activation=False, bm=8, bn=16, bk=16)
+        np.testing.assert_allclose(
+            np.array(out), np.array(linear_ref(x, w, b)), atol=1e-4, rtol=1e-4
+        )
+
+    def test_k_accumulation_order_invariant(self):
+        """Different bk tilings accumulate the same result (fp tolerance)."""
+        x, w, b = _rand((32, 128), 3), _rand((128, 64), 4), _rand((64,), 5)
+        a = linear_gelu(x, w, b, bk=32)
+        c = linear_gelu(x, w, b, bk=128)
+        np.testing.assert_allclose(np.array(a), np.array(c), atol=1e-4, rtol=1e-4)
+
+    def test_gelu_known_values(self):
+        x = jnp.array([0.0, 1.0, -1.0, 10.0, -10.0], jnp.float32)
+        g = np.array(gelu_tanh(x))
+        assert abs(g[0]) < 1e-7
+        assert abs(g[1] - 0.8412) < 1e-3
+        assert abs(g[2] + 0.1588) < 1e-3
+        assert abs(g[3] - 10.0) < 1e-4
+        assert abs(g[4]) < 1e-4
+
+    def test_model_shapes(self):
+        """The exact shapes the `base` variant MLP feeds the kernel."""
+        m, k, n = 8 * 128, 320, 1280
+        x, w, b = _rand((m, k), 6), _rand((k, n), 7), _rand((n,), 8)
+        out = linear_gelu(x, w, b)
+        expect = linear_gelu_ref(x, w, b)
+        np.testing.assert_allclose(np.array(out), np.array(expect), atol=5e-4, rtol=5e-4)

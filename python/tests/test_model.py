@@ -1,0 +1,134 @@
+"""L2 model tests: shapes, SPSA semantics, determinism, FO step sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.VARIANTS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def w0():
+    return M.init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.RandomState(1)
+    return jnp.array(rng.randint(0, CFG.vocab, (4, CFG.seq_len + 1)), jnp.int32)
+
+
+class TestLayout:
+    def test_param_count_matches_segments(self):
+        total = sum(int(np.prod(s)) for _, s, _ in CFG.segments())
+        assert total == CFG.n_params
+
+    def test_padded_multiple(self):
+        assert CFG.padded_size % M.PAD_MULTIPLE == 0
+        assert CFG.padded_size >= CFG.n_params
+
+    def test_unflatten_shapes(self, w0):
+        p = M.unflatten(CFG, w0)
+        assert p["embed"].shape == (CFG.vocab, CFG.d_model)
+        assert p["layer0.w_qkv"].shape == (CFG.d_model, 3 * CFG.d_model)
+        assert p["lnf_gain"].shape == (CFG.d_model,)
+
+    def test_all_variants_consistent(self):
+        for cfg in M.VARIANTS.values():
+            assert cfg.d_model % cfg.n_heads == 0
+            assert cfg.padded_size % 1024 == 0
+
+    def test_init_deterministic(self):
+        a = M.init_params(CFG, seed=3)
+        b = M.init_params(CFG, seed=3)
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+    def test_init_layernorm_gains_are_one(self, w0):
+        p = M.unflatten(CFG, w0)
+        np.testing.assert_array_equal(np.array(p["layer0.ln1_gain"]), 1.0)
+        np.testing.assert_array_equal(np.array(p["layer1.ln2_bias"]), 0.0)
+
+
+class TestForward:
+    def test_logits_shape(self, w0, batch):
+        logits = M.logits_fn(CFG, w0, batch[:, :-1], use_pallas=False)
+        assert logits.shape == (4, CFG.seq_len, CFG.vocab)
+
+    def test_pallas_and_jnp_paths_agree(self, w0, batch):
+        a = M.loss_fn(CFG, w0, batch, use_pallas=True)
+        b = M.loss_fn(CFG, w0, batch, use_pallas=False)
+        assert abs(float(a) - float(b)) < 1e-4
+
+    def test_initial_loss_near_uniform(self, w0, batch):
+        # fresh init should predict ~ uniformly: loss ~ log(vocab)
+        loss = float(M.loss_fn(CFG, w0, batch, use_pallas=False))
+        assert abs(loss - np.log(CFG.vocab)) < 0.5
+
+    def test_causality(self, w0):
+        """Changing a future token must not change past logits."""
+        rng = np.random.RandomState(2)
+        t1 = rng.randint(0, CFG.vocab, (1, CFG.seq_len))
+        t2 = t1.copy()
+        t2[0, -1] = (t2[0, -1] + 1) % CFG.vocab
+        l1 = M.logits_fn(CFG, w0, jnp.array(t1, jnp.int32), use_pallas=False)
+        l2 = M.logits_fn(CFG, w0, jnp.array(t2, jnp.int32), use_pallas=False)
+        np.testing.assert_allclose(
+            np.array(l1[:, :-1]), np.array(l2[:, :-1]), atol=1e-5
+        )
+
+
+class TestSpsa:
+    def test_probe_approximates_directional_derivative(self, w0, batch):
+        p = float(M.spsa_probe(CFG, w0, batch, jnp.int32(3), jnp.float32(1e-3)))
+        g = float(M.grad_proj(CFG, w0, batch, jnp.int32(3)))
+        assert np.sign(p) == np.sign(g)
+        assert abs(p - g) < 0.2 * max(abs(g), 1.0)
+
+    def test_probe_mu_convergence(self, w0, batch):
+        """Smaller mu -> probe closer to the exact jvp."""
+        g = float(M.grad_proj(CFG, w0, batch, jnp.int32(5)))
+        p_big = float(M.spsa_probe(CFG, w0, batch, jnp.int32(5), jnp.float32(1e-1)))
+        p_small = float(M.spsa_probe(CFG, w0, batch, jnp.int32(5), jnp.float32(1e-3)))
+        assert abs(p_small - g) <= abs(p_big - g) + 1e-4
+
+    def test_update_then_inverse_restores(self, w0):
+        """w -> update(seed, s) -> update(seed, -s) must round-trip exactly
+        up to f32 add/sub (the orbit-replay invariant)."""
+        w1 = M.update(CFG, w0, jnp.int32(9), jnp.float32(0.01))
+        w2 = M.update(CFG, w1, jnp.int32(9), jnp.float32(-0.01))
+        np.testing.assert_allclose(np.array(w2), np.array(w0), atol=1e-6)
+
+    def test_update_direction_matches_zvec(self, w0):
+        z = M.zvec(CFG, jnp.int32(4))
+        w1 = M.update(CFG, w0, jnp.int32(4), jnp.float32(1.0))
+        np.testing.assert_allclose(np.array(w0 - w1), np.array(z), atol=1e-5)
+
+    def test_probe_deterministic(self, w0, batch):
+        a = M.spsa_probe(CFG, w0, batch, jnp.int32(8), jnp.float32(1e-3))
+        b = M.spsa_probe(CFG, w0, batch, jnp.int32(8), jnp.float32(1e-3))
+        assert float(a) == float(b)
+
+    def test_feedsign_vote_step_descends(self, w0, batch):
+        """One FeedSign step with the correct sign must reduce the loss for a
+        small enough step size (descent lemma, Theorem B.1)."""
+        l0 = float(M.loss_fn(CFG, w0, batch, use_pallas=False))
+        p = float(M.spsa_probe(CFG, w0, batch, jnp.int32(2), jnp.float32(1e-3)))
+        f = 1.0 if p > 0 else -1.0
+        w1 = M.update(CFG, w0, jnp.int32(2), jnp.float32(f * 1e-3))
+        l1 = float(M.loss_fn(CFG, w1, batch, use_pallas=False))
+        assert l1 < l0
+
+
+class TestFoStep:
+    def test_loss_decreases(self, w0, batch):
+        w, loss0 = M.fo_step(CFG, w0, batch, jnp.float32(0.05))
+        _, loss1 = M.fo_step(CFG, w, batch, jnp.float32(0.05))
+        assert float(loss1) < float(loss0)
+
+    def test_eval_counts_bounded(self, w0, batch):
+        loss, correct = M.eval_fn(CFG, w0, batch)
+        assert 0 <= int(correct) <= batch.shape[0]
+        assert float(loss) > 0

@@ -1,0 +1,133 @@
+"""Kernel-vs-oracle tests for the shared-PRNG substrate (L1).
+
+The Philox pipeline is the load-bearing wall of FeedSign: every party must
+regenerate the same direction z from the same 32-bit seed.  hypothesis
+sweeps seeds/shapes/blocks; u32 words are checked bit-exactly, float paths
+to f32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import philox, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _py_philox4x32(seed: int, counter: int, rounds: int = 10):
+    """Independent big-int reference (no jnp) for the Philox words."""
+    M0, M1 = 0xD2511F53, 0xCD9E8D57
+    W0, W1 = 0x9E3779B9, 0xBB67AE85
+    mask = 0xFFFFFFFF
+    c = [counter & mask, 0, 0, 0]
+    k0, k1 = seed & mask, philox.KEY1_INIT
+    for _ in range(rounds):
+        p0 = M0 * c[0]
+        p1 = M1 * c[2]
+        hi0, lo0 = (p0 >> 32) & mask, p0 & mask
+        hi1, lo1 = (p1 >> 32) & mask, p1 & mask
+        c = [(hi1 ^ c[1] ^ k0) & mask, lo1, (hi0 ^ c[3] ^ k1) & mask, lo0]
+        k0 = (k0 + W0) & mask
+        k1 = (k1 + W1) & mask
+    return c
+
+
+class TestPhiloxWords:
+    @given(seed=st.integers(0, 2**32 - 1), counter=st.integers(0, 2**32 - 1))
+    @settings(**SETTINGS)
+    def test_words_match_bigint_reference(self, seed, counter):
+        x0, x1, x2, x3 = ref.philox4x32_ref(seed, jnp.array([counter], jnp.uint32))
+        expect = _py_philox4x32(seed, counter)
+        assert [int(x0[0]), int(x1[0]), int(x2[0]), int(x3[0])] == expect
+
+    def test_distinct_seeds_distinct_words(self):
+        counters = jnp.arange(64, dtype=jnp.uint32)
+        a = ref.philox4x32_ref(1, counters)
+        b = ref.philox4x32_ref(2, counters)
+        assert not np.array_equal(np.array(a[0]), np.array(b[0]))
+
+    def test_deterministic(self):
+        counters = jnp.arange(128, dtype=jnp.uint32)
+        a = ref.philox4x32_ref(7, counters)
+        b = ref.philox4x32_ref(7, counters)
+        for x, y in zip(a, b):
+            assert np.array_equal(np.array(x), np.array(y))
+
+
+class TestPhiloxNormalKernel:
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        log_n=st.integers(3, 12),
+        log_block=st.integers(3, 10),
+    )
+    @settings(**SETTINGS)
+    def test_kernel_matches_ref(self, seed, log_n, log_block):
+        n, block = 1 << log_n, 1 << log_block
+        z = philox.philox_normal(jnp.int32(seed), n, block=block)
+        zr = ref.philox_normal_ref(seed, n)
+        np.testing.assert_allclose(np.array(z), np.array(zr), atol=1e-6, rtol=1e-6)
+
+    def test_block_independence(self):
+        """z must not depend on the tiling — blocks derive global counters."""
+        z1 = philox.philox_normal(jnp.int32(5), 4096, block=256)
+        z2 = philox.philox_normal(jnp.int32(5), 4096, block=4096)
+        np.testing.assert_array_equal(np.array(z1), np.array(z2))
+
+    def test_unit_gaussian_moments(self):
+        z = np.array(ref.philox_normal_ref(123, 1 << 18))
+        assert abs(z.mean()) < 0.01
+        assert abs(z.std() - 1.0) < 0.01
+        # tails exist but are sane
+        assert np.abs(z).max() < 7.0
+
+    def test_no_degenerate_values(self):
+        z = np.array(ref.philox_normal_ref(9, 1 << 16))
+        assert np.isfinite(z).all()
+
+    def test_rejects_non_multiple_of_4(self):
+        with pytest.raises(ValueError):
+            philox.philox_normal(jnp.int32(0), 1023)
+
+
+class TestSpsaAxpyKernel:
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        log_n=st.integers(3, 12),
+        scale=st.floats(-10.0, 10.0, allow_nan=False, width=32),
+    )
+    @settings(**SETTINGS)
+    def test_kernel_matches_ref(self, seed, log_n, scale):
+        n = 1 << log_n
+        w = jnp.arange(n, dtype=jnp.float32) * 0.01
+        out = philox.spsa_axpy(w, jnp.int32(seed), jnp.float32(scale), block=256)
+        expect = ref.spsa_axpy_ref(w, seed, scale)
+        np.testing.assert_allclose(np.array(out), np.array(expect), atol=1e-5, rtol=1e-5)
+
+    def test_zero_scale_identity(self):
+        w = jnp.linspace(-1, 1, 512)
+        out = philox.spsa_axpy(w.astype(jnp.float32), jnp.int32(3), jnp.float32(0.0))
+        np.testing.assert_array_equal(np.array(out), np.array(w, np.float32))
+
+    def test_plus_minus_symmetric(self):
+        """probe+ and probe- must straddle w exactly: (wp + wm)/2 == w."""
+        w = jnp.ones(1024, jnp.float32)
+        wp = philox.spsa_axpy(w, jnp.int32(11), jnp.float32(0.5))
+        wm = philox.spsa_axpy(w, jnp.int32(11), jnp.float32(-0.5))
+        np.testing.assert_allclose(np.array((wp + wm) / 2), np.ones(1024), atol=1e-6)
+
+    def test_same_z_as_philox_normal(self):
+        """axpy's in-kernel noise == the standalone generator's z."""
+        w = jnp.zeros(2048, jnp.float32)
+        z_axpy = philox.spsa_axpy(w, jnp.int32(77), jnp.float32(1.0), block=512)
+        z_gen = philox.philox_normal(jnp.int32(77), 2048, block=1024)
+        np.testing.assert_allclose(np.array(z_axpy), np.array(z_gen), atol=1e-6)
+
+    def test_awkward_length_blocks(self):
+        """lengths that are multiples of 4 but not powers of two still tile."""
+        n = 4 * 3 * 7 * 5  # 420
+        w = jnp.zeros(n, jnp.float32)
+        out = philox.spsa_axpy(w, jnp.int32(2), jnp.float32(1.0), block=256)
+        expect = ref.philox_normal_ref(2, n)
+        np.testing.assert_allclose(np.array(out), np.array(expect), atol=1e-6)

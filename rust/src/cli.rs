@@ -1,0 +1,109 @@
+//! Tiny argv parser (the offline environment has no clap): positional
+//! subcommand + `--flag value` / `--flag` options.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.  An option is `--name value`; a bare `--name`
+    /// followed by another option or the end is a boolean flag.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with("--") {
+                out.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument {arg:?}");
+            };
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    out.options.insert(name.to_string(), it.next().unwrap().clone());
+                }
+                _ => out.flags.push(name.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.str(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.str(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        match self.str(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.str(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parse_command_and_options() {
+        let a = Args::parse(&argv("run --config exp.toml --rounds 100 --verbose")).unwrap();
+        assert_eq!(a.command, "run");
+        assert_eq!(a.str("config"), Some("exp.toml"));
+        assert_eq!(a.u64_or("rounds", 0).unwrap(), 100);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required() {
+        let a = Args::parse(&argv("run")).unwrap();
+        assert!(a.req("config").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv("quickstart")).unwrap();
+        assert_eq!(a.u64_or("rounds", 2000).unwrap(), 2000);
+        assert_eq!(a.f32_or("eta", 1e-3).unwrap(), 1e-3);
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(&argv("run stray")).is_err());
+    }
+}

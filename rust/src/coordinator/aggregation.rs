@@ -1,0 +1,201 @@
+//! Update aggregation rules (Definition 3.2 / Equation 4).
+//!
+//! * **FeedSign** — majority vote over client signs:
+//!   `f = Sign(sum_k Sign(p_k))`; the PS never sees a magnitude.
+//! * **ZO-FedSGD** — mean projection: `f = (1/K) sum_k p_k` applied along
+//!   each client's own direction (seed-projection pairs).
+//! * **DP-FeedSign** — Definition D.1's exponential-mechanism vote.
+//! * **FedSGD** — dense gradient averaging (the FO baseline).
+//! * **MeZO** — centralized ZO (K = 1), no aggregation.
+
+use crate::simkit::prng::Rng;
+
+/// Which federated algorithm a session runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Algorithm {
+    FeedSign,
+    ZoFedSgd,
+    FedSgd,
+    Mezo,
+    /// FeedSign with the (epsilon, 0)-DP vote of Definition D.1.
+    DpFeedSign { epsilon: f32 },
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::FeedSign => "feedsign",
+            Algorithm::ZoFedSgd => "zo-fedsgd",
+            Algorithm::FedSgd => "fedsgd",
+            Algorithm::Mezo => "mezo",
+            Algorithm::DpFeedSign { .. } => "dp-feedsign",
+        }
+    }
+
+    /// Parse from a config string (`dp-feedsign:eps` carries the budget).
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "feedsign" => Some(Algorithm::FeedSign),
+            "zo-fedsgd" | "zofedsgd" => Some(Algorithm::ZoFedSgd),
+            "fedsgd" | "fo" => Some(Algorithm::FedSgd),
+            "mezo" => Some(Algorithm::Mezo),
+            _ => s.strip_prefix("dp-feedsign:").and_then(|eps| {
+                eps.parse::<f32>().ok().map(|epsilon| Algorithm::DpFeedSign { epsilon })
+            }),
+        }
+    }
+}
+
+/// FeedSign's majority vote.  Ties (even K, split vote) resolve to +1 —
+/// a fixed convention both PS and clients share, so it costs no bits.
+pub fn majority_sign(signs: &[i8]) -> i8 {
+    let sum: i32 = signs.iter().map(|&s| s as i32).sum();
+    if sum >= 0 {
+        1
+    } else {
+        -1
+    }
+}
+
+/// ZO-FedSGD's mean projection.
+pub fn mean_projection(ps: &[f32]) -> f32 {
+    ps.iter().sum::<f32>() / ps.len() as f32
+}
+
+/// Definition D.1: sample the global sign from the exponential mechanism
+/// over vote counts.  `q_+`/`q_-` are the counts of +1/-1 votes;
+/// `P(f = s) ∝ exp(eps * q_s / 4)`.  `eps -> 0` degenerates to a fair
+/// coin (perfect privacy, no signal); `eps -> inf` recovers the majority
+/// vote.
+pub fn dp_vote(signs: &[i8], epsilon: f32, rng: &mut Rng) -> i8 {
+    let q_plus = signs.iter().filter(|&&s| s > 0).count() as f32;
+    let q_minus = signs.len() as f32 - q_plus;
+    // subtract the max exponent for numerical stability
+    let e_plus = epsilon * q_plus / 4.0;
+    let e_minus = epsilon * q_minus / 4.0;
+    let m = e_plus.max(e_minus);
+    let p_plus = (e_plus - m).exp();
+    let p_minus = (e_minus - m).exp();
+    let threshold = p_plus / (p_plus + p_minus);
+    if rng.uniform() < threshold {
+        1
+    } else {
+        -1
+    }
+}
+
+/// Average dense gradients in place into `acc` (which must be zeroed by
+/// the caller before the first call); `count` is applied by
+/// [`finish_mean`].
+pub fn accumulate(acc: &mut [f32], g: &[f32]) {
+    debug_assert_eq!(acc.len(), g.len());
+    for (a, b) in acc.iter_mut().zip(g) {
+        *a += b;
+    }
+}
+
+pub fn finish_mean(acc: &mut [f32], count: usize) {
+    let inv = 1.0 / count as f32;
+    for a in acc.iter_mut() {
+        *a *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn majority_basic() {
+        assert_eq!(majority_sign(&[1, 1, -1]), 1);
+        assert_eq!(majority_sign(&[-1, -1, 1]), -1);
+        assert_eq!(majority_sign(&[1, -1]), 1); // tie convention
+    }
+
+    #[test]
+    fn majority_unanimous() {
+        assert_eq!(majority_sign(&[-1; 25]), -1);
+        assert_eq!(majority_sign(&[1; 25]), 1);
+    }
+
+    #[test]
+    fn mean_projection_basic() {
+        assert!((mean_projection(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        assert_eq!(Algorithm::parse("feedsign"), Some(Algorithm::FeedSign));
+        assert_eq!(Algorithm::parse("ZO-FedSGD"), Some(Algorithm::ZoFedSgd));
+        assert_eq!(Algorithm::parse("fo"), Some(Algorithm::FedSgd));
+        assert_eq!(Algorithm::parse("mezo"), Some(Algorithm::Mezo));
+        assert_eq!(
+            Algorithm::parse("dp-feedsign:2.5"),
+            Some(Algorithm::DpFeedSign { epsilon: 2.5 })
+        );
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn dp_vote_high_epsilon_recovers_majority() {
+        let mut rng = Rng::new(0, 0);
+        let signs = [1i8, 1, 1, -1, -1];
+        for _ in 0..50 {
+            assert_eq!(dp_vote(&signs, 1000.0, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn dp_vote_zero_epsilon_fair_coin() {
+        let mut rng = Rng::new(1, 0);
+        let signs = [1i8; 9];
+        let plus = (0..4000)
+            .filter(|_| dp_vote(&signs, 0.0, &mut rng) == 1)
+            .count();
+        let frac = plus as f32 / 4000.0;
+        assert!((frac - 0.5).abs() < 0.05, "frac {frac}");
+    }
+
+    #[test]
+    fn dp_vote_distribution_matches_mechanism() {
+        // K=5, 4 votes +1, 1 vote -1, eps=2: P(+) = e^{2*4/4} / (e^2 + e^{0.5})
+        let mut rng = Rng::new(2, 0);
+        let signs = [1i8, 1, 1, 1, -1];
+        let eps = 2.0f32;
+        let expect = (eps * 4.0 / 4.0).exp() / ((eps * 4.0 / 4.0).exp() + (eps * 1.0 / 4.0).exp());
+        let n = 20_000;
+        let plus = (0..n).filter(|_| dp_vote(&signs, eps, &mut rng) == 1).count();
+        let frac = plus as f32 / n as f32;
+        assert!((frac - expect).abs() < 0.02, "frac {frac} expect {expect}");
+    }
+
+    #[test]
+    fn dp_epsilon_ratio_bounded() {
+        // (eps,0)-DP: changing ONE vote changes the outcome distribution by
+        // at most e^eps (Theorem D.2)
+        let eps = 1.5f32;
+        let p_of = |signs: &[i8]| {
+            let q_plus = signs.iter().filter(|&&s| s > 0).count() as f32;
+            let q_minus = signs.len() as f32 - q_plus;
+            let a = (eps * q_plus / 4.0).exp();
+            let b = (eps * q_minus / 4.0).exp();
+            a / (a + b)
+        };
+        let p1 = p_of(&[1, 1, 1, -1, -1]);
+        let p2 = p_of(&[1, 1, -1, -1, -1]); // one vote flipped
+        let ratio = (p1 / p2).max(p2 / p1);
+        assert!(ratio <= eps.exp(), "ratio {ratio} > e^eps {}", eps.exp());
+        let r_neg = ((1.0 - p1) / (1.0 - p2)).max((1.0 - p2) / (1.0 - p1));
+        assert!(r_neg <= eps.exp());
+    }
+
+    #[test]
+    fn accumulate_and_mean() {
+        let mut acc = vec![0.0; 3];
+        accumulate(&mut acc, &[1.0, 2.0, 3.0]);
+        accumulate(&mut acc, &[3.0, 2.0, 1.0]);
+        finish_mean(&mut acc, 2);
+        assert_eq!(acc, vec![2.0, 2.0, 2.0]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Byzantine client models (§4.3, Remark 4.1).
+//!
+//! Because the direction `z` is pinned by the shared PRNG, *every* attack
+//! on a seed-pair system collapses to corrupting the scalar the client
+//! uploads (Remark 3.14): gradient-noise injection and label flipping are
+//! both equivalent to a wrong projection.  The paper's strongest attacker
+//! per protocol:
+//!
+//! * FeedSign — always transmit the **reversed sign**;
+//! * ZO-FedSGD — transmit a **random number** as the projection;
+//! * FedSGD — transmit the negated gradient (sign-flip analogue).
+
+use crate::simkit::prng::Rng;
+
+/// Attack behaviour of one client.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Attack {
+    /// Honest client.
+    None,
+    /// FeedSign's worst case: reversed sign (also negates FO gradients).
+    SignFlip,
+    /// ZO-FedSGD's Table 5 attacker: projection replaced by `N(0, scale²)`.
+    RandomProjection { scale: f32 },
+    /// Additive Gaussian corruption of the projection.
+    GaussNoise { scale: f32 },
+    /// Labels permuted at shard setup (handled in data plumbing; at the
+    /// protocol layer the client is honest about its corrupted data).
+    LabelFlip,
+}
+
+impl Attack {
+    pub fn is_byzantine(&self) -> bool {
+        !matches!(self, Attack::None)
+    }
+
+    /// Corrupt an uplink *sign* (FeedSign protocol).
+    pub fn mutate_sign(&self, sign: i8, rng: &mut Rng) -> i8 {
+        match self {
+            Attack::None | Attack::LabelFlip => sign,
+            Attack::SignFlip => -sign,
+            Attack::RandomProjection { .. } => {
+                if rng.uniform() < 0.5 {
+                    1
+                } else {
+                    -1
+                }
+            }
+            Attack::GaussNoise { scale } => {
+                // noise on the projection flips the sign when it dominates;
+                // model as flip with prob related to scale
+                let flip_p = 0.5 * (1.0 - (-scale).exp());
+                if rng.uniform() < flip_p {
+                    -sign
+                } else {
+                    sign
+                }
+            }
+        }
+    }
+
+    /// Corrupt an uplink *projection* (ZO-FedSGD protocol).
+    pub fn mutate_projection(&self, p: f32, rng: &mut Rng) -> f32 {
+        match self {
+            Attack::None | Attack::LabelFlip => p,
+            Attack::SignFlip => -p,
+            Attack::RandomProjection { scale } => rng.normal() * scale,
+            Attack::GaussNoise { scale } => p + rng.normal() * scale,
+        }
+    }
+
+    /// Corrupt an uplink *gradient* in place (FedSGD protocol).
+    pub fn mutate_gradient(&self, g: &mut [f32], rng: &mut Rng) {
+        match self {
+            Attack::None | Attack::LabelFlip => {}
+            Attack::SignFlip => {
+                for v in g.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            Attack::RandomProjection { scale } => {
+                for v in g.iter_mut() {
+                    *v = rng.normal() * scale;
+                }
+            }
+            Attack::GaussNoise { scale } => {
+                for v in g.iter_mut() {
+                    *v += rng.normal() * scale;
+                }
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Attack> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "none" | "" => Some(Attack::None),
+            "sign-flip" | "signflip" => Some(Attack::SignFlip),
+            "label-flip" | "labelflip" => Some(Attack::LabelFlip),
+            _ => {
+                if let Some(rest) = s.strip_prefix("random-projection") {
+                    let scale = rest.strip_prefix(':').and_then(|v| v.parse().ok()).unwrap_or(1.0);
+                    Some(Attack::RandomProjection { scale })
+                } else if let Some(rest) = s.strip_prefix("gauss-noise") {
+                    let scale = rest.strip_prefix(':').and_then(|v| v.parse().ok()).unwrap_or(1.0);
+                    Some(Attack::GaussNoise { scale })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// Assign attacks: the first `n_byzantine` clients attack, the rest are
+/// honest.  (Client order is already a random permutation of the shard
+/// assignment, so "first B" is equivalent to a random subset.)
+pub fn assign(k: usize, n_byzantine: usize, attack: Attack) -> Vec<Attack> {
+    assert!(n_byzantine <= k);
+    (0..k)
+        .map(|i| if i < n_byzantine { attack } else { Attack::None })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn honest_passthrough() {
+        let mut rng = Rng::new(0, 0);
+        assert_eq!(Attack::None.mutate_sign(1, &mut rng), 1);
+        assert_eq!(Attack::None.mutate_projection(0.7, &mut rng), 0.7);
+    }
+
+    #[test]
+    fn sign_flip_reverses() {
+        let mut rng = Rng::new(0, 0);
+        assert_eq!(Attack::SignFlip.mutate_sign(1, &mut rng), -1);
+        assert_eq!(Attack::SignFlip.mutate_sign(-1, &mut rng), 1);
+        assert_eq!(Attack::SignFlip.mutate_projection(0.5, &mut rng), -0.5);
+    }
+
+    #[test]
+    fn random_projection_is_random() {
+        let mut rng = Rng::new(1, 0);
+        let a = Attack::RandomProjection { scale: 1.0 };
+        let vals: Vec<f32> = (0..100).map(|_| a.mutate_projection(5.0, &mut rng)).collect();
+        // none should equal the honest value; mean near 0
+        assert!(vals.iter().all(|&v| v != 5.0));
+        let mean = vals.iter().sum::<f32>() / 100.0;
+        assert!(mean.abs() < 0.5);
+    }
+
+    #[test]
+    fn gradient_sign_flip() {
+        let mut rng = Rng::new(2, 0);
+        let mut g = vec![1.0, -2.0, 3.0];
+        Attack::SignFlip.mutate_gradient(&mut g, &mut rng);
+        assert_eq!(g, vec![-1.0, 2.0, -3.0]);
+    }
+
+    #[test]
+    fn assign_counts() {
+        let attacks = assign(5, 2, Attack::SignFlip);
+        assert_eq!(attacks.iter().filter(|a| a.is_byzantine()).count(), 2);
+        assert_eq!(attacks[0], Attack::SignFlip);
+        assert_eq!(attacks[4], Attack::None);
+    }
+
+    #[test]
+    fn parse_attacks() {
+        assert_eq!(Attack::parse("none"), Some(Attack::None));
+        assert_eq!(Attack::parse("sign-flip"), Some(Attack::SignFlip));
+        assert_eq!(
+            Attack::parse("random-projection:2.0"),
+            Some(Attack::RandomProjection { scale: 2.0 })
+        );
+        assert_eq!(
+            Attack::parse("gauss-noise"),
+            Some(Attack::GaussNoise { scale: 1.0 })
+        );
+        assert_eq!(Attack::parse("bogus"), None);
+    }
+}

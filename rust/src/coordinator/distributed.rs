@@ -1,0 +1,197 @@
+//! Threaded leader/worker topology: the same FeedSign protocol as
+//! [`super::session::Session`], but with the PS and every client as
+//! separate OS threads exchanging [`crate::comm::Message`]s over metered
+//! channels — the deployment shape of Figure 1.
+//!
+//! The PS thread holds **no model parameters** (the paper's §D.2
+//! property): it sees only 1-bit votes and emits 1-bit directions.  A
+//! cross-topology test pins this runtime against the synchronous session:
+//! identical seeds must produce bit-identical final models.
+
+use crate::comm::{self, Ledger, Message};
+use crate::coordinator::aggregation;
+use crate::coordinator::byzantine::Attack;
+use crate::data::{Dataset, Shard};
+use crate::engine::Engine;
+use crate::simkit::prng::Rng;
+use std::sync::Arc;
+
+/// Client task configuration.
+pub struct DistClient {
+    pub engine: Box<dyn Engine + Send>,
+    pub w: Vec<f32>,
+    pub shard: Shard,
+    pub attack: Attack,
+    pub rng: Rng,
+}
+
+/// Outcome of a distributed FeedSign run.
+pub struct DistResult {
+    /// final parameter replicas, one per client (must all be equal)
+    pub finals: Vec<Vec<f32>>,
+    pub ledger: Ledger,
+    pub votes_per_round: Vec<Vec<i8>>,
+}
+
+/// Run `rounds` of distributed FeedSign over worker threads.
+///
+/// Protocol per round `t`: PS broadcasts `RoundStart` (seed = t is
+/// implicit), each client probes its shard and uploads `SignVote`, the PS
+/// majority-votes and broadcasts `GlobalSign`, each client applies the
+/// update locally.
+pub fn run_feedsign(
+    clients: Vec<DistClient>,
+    train: Dataset,
+    rounds: u64,
+    eta: f32,
+    mu: f32,
+    batch_size: usize,
+) -> DistResult {
+    let k = clients.len();
+    let train = Arc::new(train);
+    let mut ps_links = Vec::with_capacity(k);
+    let mut handles = Vec::with_capacity(k);
+
+    for mut c in clients {
+        let (duplex, port) = comm::link();
+        ps_links.push(duplex);
+        let train = Arc::clone(&train);
+        handles.push(std::thread::spawn(move || {
+            while let Ok(msg) = port.from_ps.recv() {
+                match msg {
+                    Message::RoundStart { round } => {
+                        let seed = round as u32;
+                        let batch = c.shard.next_batch(&train, batch_size, &mut c.rng);
+                        let p = c.engine.probe(&mut c.w, &batch, seed, mu);
+                        let honest = if p >= 0.0 { 1i8 } else { -1 };
+                        let sign = c.attack.mutate_sign(honest, &mut c.rng);
+                        // upload the vote, then wait for the global direction
+                        if port.to_ps.send(Message::SignVote { sign }).is_err() {
+                            break;
+                        }
+                        let Ok(Message::GlobalSign { sign: f }) = port.from_ps.recv() else {
+                            break;
+                        };
+                        c.engine.update(&mut c.w, seed, f as f32 * eta);
+                    }
+                    _ => break,
+                }
+            }
+            c.w
+        }));
+    }
+
+    // PS loop (this thread): drives rounds, meters the ledger, holds no w.
+    let mut ledger = Ledger::default();
+    let mut votes_per_round = Vec::with_capacity(rounds as usize);
+    for t in 0..rounds {
+        for link in &ps_links {
+            let msg = Message::RoundStart { round: t };
+            ledger.record(&msg);
+            link.to_client.send(msg).expect("client alive");
+        }
+        let mut signs = Vec::with_capacity(k);
+        for link in &ps_links {
+            let msg = link.from_client.recv().expect("client alive");
+            let Message::SignVote { sign } = msg else {
+                panic!("protocol violation: expected SignVote");
+            };
+            ledger.record(&Message::SignVote { sign });
+            signs.push(sign);
+        }
+        let f = aggregation::majority_sign(&signs);
+        votes_per_round.push(signs);
+        for link in &ps_links {
+            let msg = Message::GlobalSign { sign: f };
+            ledger.record(&msg);
+            link.to_client.send(msg).expect("client alive");
+        }
+    }
+    drop(ps_links); // closes channels; clients exit their loops
+
+    let mut finals = Vec::with_capacity(k);
+    for h in handles {
+        finals.push(h.join().expect("client thread panicked"));
+    }
+    DistResult { finals, ledger, votes_per_round }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::{split, Partition};
+    use crate::data::vision::{generate, SYNTH_CIFAR10};
+    use crate::engine::NativeEngine;
+    use crate::simkit::nn::LinearProbe;
+
+    fn dist_clients(k: usize, train: &Dataset) -> Vec<DistClient> {
+        let shards = split(train, k, Partition::Iid, 0);
+        shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| {
+                let engine: Box<dyn Engine + Send> =
+                    Box::new(NativeEngine::new(LinearProbe::new(128, 10)));
+                let w = engine.init_params(7);
+                DistClient {
+                    engine,
+                    w,
+                    shard,
+                    attack: Attack::None,
+                    rng: Rng::new(7 ^ 0xC11E_17, id as u32 + 1),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn distributed_replicas_converge_identically() {
+        let train = generate(&SYNTH_CIFAR10, 300, 0);
+        let clients = dist_clients(4, &train);
+        let res = run_feedsign(clients, train, 50, 2e-3, 1e-3, 16);
+        for w in &res.finals[1..] {
+            assert_eq!(w, &res.finals[0], "replica drift in distributed topology");
+        }
+        assert_eq!(res.ledger.uplink_bits, 50 * 4);
+        assert_eq!(res.ledger.downlink_bits, 50 * 4);
+        assert_eq!(res.votes_per_round.len(), 50);
+    }
+
+    #[test]
+    fn distributed_matches_sync_session() {
+        use crate::coordinator::session::{Client, Session, SessionCfg};
+        let train = generate(&SYNTH_CIFAR10, 300, 0);
+        let test = generate(&SYNTH_CIFAR10, 100, 1);
+
+        // sync run
+        let shards = split(&train, 3, Partition::Iid, 0);
+        let clients: Vec<Client> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| {
+                Client::new(id, Box::new(NativeEngine::new(LinearProbe::new(128, 10))), shard, 7)
+            })
+            .collect();
+        let cfg = SessionCfg {
+            rounds: 40,
+            eta: 2e-3,
+            mu: 1e-3,
+            batch_size: 16,
+            eval_every: 0,
+            seed: 7,
+            ..Default::default()
+        };
+        let mut sync = Session::new(cfg, clients, train.clone(), test);
+        for t in 0..40 {
+            sync.step(t);
+        }
+
+        // distributed run with identical seeds
+        let dclients = dist_clients(3, &train);
+        let res = run_feedsign(dclients, train, 40, 2e-3, 1e-3, 16);
+        assert_eq!(
+            res.finals[0], sync.clients[0].w,
+            "topologies diverged despite identical seeds"
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: the paper's federated fine-tuning runtime.
+//!
+//! * [`aggregation`] — the FeedSign / ZO-FedSGD / DP / FO update rules;
+//! * [`byzantine`] — attack models (sign flip, random projection, …);
+//! * [`session`] — the deterministic synchronous round loop that all
+//!   benches/examples drive;
+//! * [`distributed`] — the tokio leader/worker topology (same protocol,
+//!   real message passing), pinned to the sync session by test.
+
+pub mod aggregation;
+pub mod byzantine;
+pub mod distributed;
+pub mod session;
+
+pub use aggregation::Algorithm;
+pub use byzantine::Attack;
+pub use session::{Client, Session, SessionCfg};

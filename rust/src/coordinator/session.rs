@@ -1,0 +1,464 @@
+//! The federated session: PS round loop + client pool (Algorithm 1).
+//!
+//! One `Session` owns the K clients (each with its own parameter vector,
+//! engine, data shard and attack model) and drives T aggregation rounds of
+//! the configured algorithm, metering every protocol message through the
+//! [`crate::comm::Ledger`] and recording the orbit as it goes.
+//!
+//! The loop is deterministic: FeedSign's step seed is the round index
+//! (`seed = t`, §I.1), client-private randomness comes from per-client
+//! Philox streams, and eval cadence is fixed — so two sessions with the
+//! same config produce identical runs, which the cross-topology test in
+//! `rust/tests/` (sync vs tokio-distributed) relies on.
+
+use crate::comm::{Ledger, Message};
+use crate::coordinator::aggregation::{self, Algorithm};
+use crate::coordinator::byzantine::Attack;
+use crate::data::{Batch, Dataset, Shard};
+use crate::engine::Engine;
+use crate::metrics::{RoundRecord, RunResult};
+use crate::orbit::Orbit;
+use crate::simkit::prng::Rng;
+
+/// One federated client: local parameters + compute engine + data shard.
+pub struct Client {
+    pub id: usize,
+    pub w: Vec<f32>,
+    pub engine: Box<dyn Engine>,
+    pub shard: Shard,
+    pub rng: Rng,
+    pub attack: Attack,
+}
+
+impl Client {
+    pub fn new(id: usize, engine: Box<dyn Engine>, shard: Shard, init_seed: u32) -> Self {
+        let w = engine.init_params(init_seed);
+        Client {
+            id,
+            w,
+            engine,
+            shard,
+            rng: Rng::new(init_seed ^ 0xC11E_17, id as u32 + 1),
+            attack: Attack::None,
+        }
+    }
+
+    pub fn with_attack(mut self, attack: Attack) -> Self {
+        self.attack = attack;
+        self
+    }
+
+    /// Start from an existing (pretrained) checkpoint instead of init.
+    pub fn with_checkpoint(mut self, w: &[f32]) -> Self {
+        assert_eq!(w.len(), self.w.len());
+        self.w.copy_from_slice(w);
+        self
+    }
+}
+
+/// Session hyperparameters.
+#[derive(Debug, Clone)]
+pub struct SessionCfg {
+    pub algorithm: Algorithm,
+    pub rounds: u64,
+    pub eta: f32,
+    pub mu: f32,
+    pub batch_size: usize,
+    /// evaluate every this many rounds (0 = only at the end)
+    pub eval_every: u64,
+    /// eval minibatches per evaluation
+    pub eval_batches: usize,
+    pub eval_batch_size: usize,
+    /// extra multiplicative projection noise `1 + c_g_noise*N(0,1)` — the
+    /// paper's Figure 2 heterogeneity amplifier (Appendix H)
+    pub c_g_noise: f32,
+    pub seed: u32,
+    /// print progress to stderr
+    pub verbose: bool,
+}
+
+impl Default for SessionCfg {
+    fn default() -> Self {
+        SessionCfg {
+            algorithm: Algorithm::FeedSign,
+            rounds: 1000,
+            eta: 1e-3,
+            mu: 1e-3,
+            batch_size: 16,
+            eval_every: 100,
+            eval_batches: 4,
+            eval_batch_size: 32,
+            c_g_noise: 0.0,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// The federated runtime.
+pub struct Session {
+    pub cfg: SessionCfg,
+    pub clients: Vec<Client>,
+    pub train: Dataset,
+    pub test: Dataset,
+    pub ledger: Ledger,
+    pub orbit: Orbit,
+    dp_rng: Rng,
+    eval_rng: Rng,
+}
+
+impl Session {
+    pub fn new(cfg: SessionCfg, clients: Vec<Client>, train: Dataset, test: Dataset) -> Self {
+        assert!(!clients.is_empty());
+        if matches!(cfg.algorithm, Algorithm::Mezo) {
+            assert_eq!(clients.len(), 1, "MeZO is centralized (K = 1)");
+        }
+        let orbit = Orbit::new(cfg.algorithm.name(), cfg.seed, cfg.eta);
+        let dp_rng = Rng::new(cfg.seed ^ 0xD9, 0xD9);
+        let eval_rng = Rng::new(cfg.seed ^ 0xEE, 0xEE);
+        Session { cfg, clients, train, test, ledger: Ledger::default(), orbit, dp_rng, eval_rng }
+    }
+
+    /// Drive all rounds; returns the run record.
+    pub fn run(&mut self) -> RunResult {
+        let start = std::time::Instant::now();
+        let mut records = Vec::new();
+        for t in 0..self.cfg.rounds {
+            self.step(t);
+            let do_eval = self.cfg.eval_every > 0 && (t + 1) % self.cfg.eval_every == 0;
+            if do_eval {
+                let (loss, acc) = self.evaluate();
+                if self.cfg.verbose {
+                    eprintln!(
+                        "[{}] round {:>6}: eval loss {loss:.4} acc {:.1}% (up {} bits)",
+                        self.cfg.algorithm.name(),
+                        t + 1,
+                        acc * 100.0,
+                        self.ledger.uplink_bits
+                    );
+                }
+                records.push(RoundRecord {
+                    round: t + 1,
+                    eval_loss: loss,
+                    eval_acc: acc,
+                    uplink_bits: self.ledger.uplink_bits,
+                    downlink_bits: self.ledger.downlink_bits,
+                });
+            }
+        }
+        let (final_loss, final_acc) = self.evaluate();
+        RunResult {
+            algorithm: self.cfg.algorithm.name().to_string(),
+            records,
+            ledger: self.ledger.clone(),
+            final_loss,
+            final_acc,
+            rounds: self.cfg.rounds,
+            wall_s: start.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// One aggregation round.
+    pub fn step(&mut self, t: u64) {
+        match self.cfg.algorithm {
+            Algorithm::FeedSign => self.step_feedsign(t, None),
+            Algorithm::DpFeedSign { epsilon } => self.step_feedsign(t, Some(epsilon)),
+            Algorithm::ZoFedSgd => self.step_zo_fedsgd(),
+            Algorithm::FedSgd => self.step_fedsgd(),
+            Algorithm::Mezo => self.step_mezo(t),
+        }
+    }
+
+
+    /// FeedSign (Algorithm 1, FeedSign branch): shared seed = t, 1-bit
+    /// votes up, 1-bit majority (or DP vote) down, synchronized update.
+    fn step_feedsign(&mut self, t: u64, dp_epsilon: Option<f32>) {
+        let seed = t as u32;
+        let (mu, bs, c_g) = (self.cfg.mu, self.cfg.batch_size, self.cfg.c_g_noise);
+        let mut signs = Vec::with_capacity(self.clients.len());
+        for c in &mut self.clients {
+            // RoundStart carries the implicit seed schedule (0 payload bits)
+            self.ledger.record(&Message::RoundStart { round: t });
+            let batch = c.shard.next_batch(&self.train, bs, &mut c.rng);
+            let mut p = c.engine.probe(&mut c.w, &batch, seed, mu);
+            if c_g > 0.0 {
+                p *= 1.0 + c_g * c.rng.normal();
+            }
+            let honest = if p >= 0.0 { 1i8 } else { -1 };
+            let sign = c.attack.mutate_sign(honest, &mut c.rng);
+            let msg = Message::SignVote { sign };
+            self.ledger.record(&msg);
+            signs.push(sign);
+        }
+        let f = match dp_epsilon {
+            None => aggregation::majority_sign(&signs),
+            Some(eps) => aggregation::dp_vote(&signs, eps, &mut self.dp_rng),
+        };
+        let step = f as f32 * self.cfg.eta;
+        for c in &mut self.clients {
+            self.ledger.record(&Message::GlobalSign { sign: f });
+            c.engine.update(&mut c.w, seed, step);
+        }
+        self.orbit.push_sign(f);
+    }
+
+    /// ZO-FedSGD (FwdLLM/FedKSeed-style): each client samples its own seed,
+    /// uploads a 64-bit seed-projection pair; everyone downloads all K
+    /// pairs and applies the mean update.
+    fn step_zo_fedsgd(&mut self) {
+        let (mu, bs, c_g) = (self.cfg.mu, self.cfg.batch_size, self.cfg.c_g_noise);
+        let k = self.clients.len();
+        let mut pairs = Vec::with_capacity(k);
+        for c in &mut self.clients {
+            let seed = c.rng.next_u32() & 0x7FFF_FFFF; // direction counters < 2^31
+            let batch = c.shard.next_batch(&self.train, bs, &mut c.rng);
+            let mut p = c.engine.probe(&mut c.w, &batch, seed, mu);
+            if c_g > 0.0 {
+                p *= 1.0 + c_g * c.rng.normal();
+            }
+            let p = c.attack.mutate_projection(p, &mut c.rng);
+            let msg = Message::Projection { seed, p };
+            self.ledger.record(&msg);
+            pairs.push((seed, p));
+        }
+        for c in &mut self.clients {
+            self.ledger.record(&Message::GlobalProjections { pairs: pairs.clone() });
+            for &(seed, p) in &pairs {
+                c.engine.update(&mut c.w, seed, self.cfg.eta * p / k as f32);
+            }
+        }
+        self.orbit.push_pairs(pairs);
+    }
+
+    /// FedSGD first-order baseline: dense gradient exchange.
+    fn step_fedsgd(&mut self) {
+        let bs = self.cfg.batch_size;
+        let d = self.clients[0].engine.n_params();
+        let mut acc = vec![0.0f32; d];
+        let mut g = vec![0.0f32; d];
+        for c in &mut self.clients {
+            let batch = c.shard.next_batch(&self.train, bs, &mut c.rng);
+            c.engine.grad(&mut c.w, &batch, &mut g);
+            c.attack.mutate_gradient(&mut g, &mut c.rng);
+            self.ledger.record(&Message::Gradient { g: Vec::new() }); // meter below
+            self.ledger.uplink_bits += 32 * d as u64;
+            aggregation::accumulate(&mut acc, &g);
+        }
+        aggregation::finish_mean(&mut acc, self.clients.len());
+        for c in &mut self.clients {
+            self.ledger.record(&Message::GlobalGradient { g: Vec::new() });
+            self.ledger.downlink_bits += 32 * d as u64;
+            for (wi, gi) in c.w.iter_mut().zip(&acc) {
+                *wi -= self.cfg.eta * gi;
+            }
+        }
+    }
+
+    /// Centralized MeZO (K = 1): no communication.
+    fn step_mezo(&mut self, t: u64) {
+        let seed = t as u32;
+        let (mu, bs) = (self.cfg.mu, self.cfg.batch_size);
+        let c = &mut self.clients[0];
+        let batch = c.shard.next_batch(&self.train, bs, &mut c.rng);
+        let p = c.engine.probe(&mut c.w, &batch, seed, mu);
+        c.engine.update(&mut c.w, seed, self.cfg.eta * p);
+        self.orbit.push_pairs(vec![(seed, p)]);
+    }
+
+    /// Evaluate the global model (client 0's replica — identical across
+    /// clients for every synchronized algorithm) on the test set.
+    pub fn evaluate(&mut self) -> (f32, f32) {
+        let c = &mut self.clients[0];
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0u32;
+        let mut total = 0u32;
+        let mut eval_shard = Shard::new((0..self.test.len()).collect());
+        for _ in 0..self.cfg.eval_batches {
+            let batch = eval_shard.next_batch(&self.test, self.cfg.eval_batch_size, &mut self.eval_rng);
+            let rows = batch.rows() as u32;
+            let (l, corr) = c.engine.eval(&mut c.w, &batch);
+            loss_sum += l as f64;
+            correct += corr;
+            total += rows;
+        }
+        (
+            (loss_sum / self.cfg.eval_batches as f64) as f32,
+            correct as f32 / total.max(1) as f32,
+        )
+    }
+
+    /// Checksum of client replicas — synchronized algorithms must keep all
+    /// replicas identical (`assert_synchronized` test hook).
+    pub fn replicas_synchronized(&self) -> bool {
+        let w0 = &self.clients[0].w;
+        self.clients.iter().all(|c| &c.w == w0)
+    }
+
+    /// Batch for external probing (sign-reversal studies).
+    pub fn sample_train_batch(&mut self, client: usize, size: usize) -> Batch {
+        let c = &mut self.clients[client];
+        c.shard.next_batch(&self.train, size, &mut c.rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::{split, Partition};
+    use crate::data::vision::{generate, SYNTH_CIFAR10};
+    use crate::engine::NativeEngine;
+    use crate::simkit::nn::LinearProbe;
+
+    fn make_session(algo: Algorithm, k: usize, rounds: u64) -> Session {
+        let train = generate(&SYNTH_CIFAR10, 400, 0);
+        let test = generate(&SYNTH_CIFAR10, 200, 1);
+        let shards = split(&train, k, Partition::Iid, 0);
+        let clients: Vec<Client> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| {
+                Client::new(id, Box::new(NativeEngine::new(LinearProbe::new(128, 10))), shard, 7)
+            })
+            .collect();
+        let cfg = SessionCfg {
+            algorithm: algo,
+            rounds,
+            eta: 2e-3,
+            mu: 1e-3,
+            batch_size: 16,
+            eval_every: 0,
+            eval_batches: 4,
+            eval_batch_size: 32,
+            seed: 7,
+            ..Default::default()
+        };
+        Session::new(cfg, clients, train, test)
+    }
+
+    #[test]
+    fn feedsign_improves_over_init() {
+        let mut s = make_session(Algorithm::FeedSign, 5, 0);
+        let (l0, a0) = s.evaluate();
+        for t in 0..800 {
+            s.step(t);
+        }
+        let (l1, a1) = s.evaluate();
+        assert!(l1 < l0, "loss {l0} -> {l1}");
+        assert!(a1 > a0, "acc {a0} -> {a1}");
+    }
+
+    #[test]
+    fn feedsign_keeps_replicas_synchronized() {
+        let mut s = make_session(Algorithm::FeedSign, 5, 0);
+        for t in 0..50 {
+            s.step(t);
+        }
+        assert!(s.replicas_synchronized());
+    }
+
+    #[test]
+    fn zo_fedsgd_keeps_replicas_synchronized() {
+        let mut s = make_session(Algorithm::ZoFedSgd, 4, 0);
+        for t in 0..50 {
+            s.step(t);
+        }
+        assert!(s.replicas_synchronized());
+    }
+
+    #[test]
+    fn fedsgd_descends_fast() {
+        let mut s = make_session(Algorithm::FedSgd, 3, 0);
+        s.cfg.eta = 0.1;
+        let (l0, _) = s.evaluate();
+        for t in 0..60 {
+            s.step(t);
+        }
+        let (l1, _) = s.evaluate();
+        assert!(l1 < l0 * 0.8, "FO should descend quickly: {l0} -> {l1}");
+        assert!(s.replicas_synchronized());
+    }
+
+    #[test]
+    fn comm_accounting_feedsign_exact() {
+        let mut s = make_session(Algorithm::FeedSign, 5, 0);
+        for t in 0..100 {
+            s.step(t);
+        }
+        // Eq. 5: 1 bit up per client per step, 1 bit down per client per step
+        assert_eq!(s.ledger.uplink_bits, 100 * 5);
+        assert_eq!(s.ledger.downlink_bits, 100 * 5);
+    }
+
+    #[test]
+    fn comm_accounting_zo_fedsgd_exact() {
+        let mut s = make_session(Algorithm::ZoFedSgd, 5, 0);
+        for t in 0..10 {
+            s.step(t);
+        }
+        // 64 bits up per client per step; 64*K bits down per client per step
+        assert_eq!(s.ledger.uplink_bits, 10 * 5 * 64);
+        assert_eq!(s.ledger.downlink_bits, 10 * 5 * 5 * 64);
+    }
+
+    #[test]
+    fn mezo_has_zero_comm() {
+        let mut s = make_session(Algorithm::Mezo, 1, 0);
+        for t in 0..20 {
+            s.step(t);
+        }
+        assert_eq!(s.ledger.total_bits(), 0);
+    }
+
+    #[test]
+    fn orbit_replay_matches_final_params() {
+        let mut s = make_session(Algorithm::FeedSign, 3, 0);
+        for t in 0..200 {
+            s.step(t);
+        }
+        let mut w = s.clients[0].engine.init_params(7);
+        s.orbit.replay(&mut w);
+        assert_eq!(w, s.clients[0].w, "orbit replay must reconstruct exactly");
+    }
+
+    #[test]
+    fn run_produces_records() {
+        let mut s = make_session(Algorithm::FeedSign, 2, 50);
+        s.cfg.eval_every = 10;
+        let result = s.run();
+        assert_eq!(s.cfg.rounds, 50);
+        assert_eq!(result.records.len(), 5);
+        assert!(result.wall_s > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let r1 = make_session(Algorithm::FeedSign, 3, 30).run();
+        let r2 = make_session(Algorithm::FeedSign, 3, 30).run();
+        assert_eq!(r1.final_loss, r2.final_loss);
+        assert_eq!(r1.final_acc, r2.final_acc);
+    }
+
+    #[test]
+    fn byzantine_sign_flip_majority_resists() {
+        // 1 attacker of 5: FeedSign majority vote must still learn
+        let mut s = make_session(Algorithm::FeedSign, 5, 0);
+        s.clients[0].attack = Attack::SignFlip;
+        let (l0, _) = s.evaluate();
+        for t in 0..800 {
+            s.step(t);
+        }
+        let (l1, _) = s.evaluate();
+        assert!(l1 < l0, "FeedSign under 1/5 Byzantine should still learn");
+    }
+
+    #[test]
+    fn dp_feedsign_runs_and_learns_at_high_epsilon() {
+        let mut s = make_session(Algorithm::DpFeedSign { epsilon: 50.0 }, 5, 0);
+        let (l0, _) = s.evaluate();
+        for t in 0..600 {
+            s.step(t);
+        }
+        let (l1, _) = s.evaluate();
+        assert!(l1 < l0);
+    }
+}

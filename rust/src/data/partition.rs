@@ -1,0 +1,180 @@
+//! Client data sharding: iid and Dirichlet(beta) label-skew partitioning
+//! (Vahidian et al., the scheme Table 4 / Figure 2 use).
+//!
+//! For each class `c`, a proportion vector `p ~ Dirichlet(beta * 1_K)`
+//! splits that class's samples across the K clients; small `beta` gives
+//! each client a spiky class marginal (high heterogeneity, large sigma_h in
+//! Assumption 3.6), large `beta` approaches iid.
+
+use super::{Dataset, Shard};
+use crate::simkit::prng::Rng;
+
+/// How client shards are drawn from the training set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Partition {
+    /// Uniform random split.
+    Iid,
+    /// Dirichlet label-skew with concentration `beta`.
+    Dirichlet { beta: f32 },
+}
+
+/// Split `data` into `k` shards.  Every sample is assigned to exactly one
+/// client; empty shards are repaired by stealing one sample from the
+/// largest shard (a K-client round needs K non-empty shards).
+pub fn split(data: &Dataset, k: usize, how: Partition, seed: u32) -> Vec<Shard> {
+    assert!(k >= 1);
+    let n = data.len();
+    assert!(n >= k, "fewer samples than clients");
+    let mut rng = Rng::new(seed, 0xD1E7);
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); k];
+
+    match how {
+        Partition::Iid => {
+            let mut idx: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut idx);
+            for (i, s) in idx.into_iter().enumerate() {
+                buckets[i % k].push(s);
+            }
+        }
+        Partition::Dirichlet { beta } => {
+            assert!(beta > 0.0, "beta must be positive");
+            let n_classes = data.n_classes().max(1);
+            let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+            for i in 0..n {
+                by_class[data.label(i) as usize].push(i);
+            }
+            for class_samples in by_class.iter_mut() {
+                if class_samples.is_empty() {
+                    continue;
+                }
+                rng.shuffle(class_samples);
+                let props = rng.dirichlet(beta, k);
+                // cumulative allocation preserving total count
+                let m = class_samples.len();
+                let mut cuts = vec![0usize; k + 1];
+                let mut acc = 0.0f32;
+                for (j, p) in props.iter().enumerate() {
+                    acc += p;
+                    cuts[j + 1] = ((acc * m as f32).round() as usize).min(m);
+                }
+                cuts[k] = m;
+                for j in 0..k {
+                    buckets[j].extend_from_slice(&class_samples[cuts[j]..cuts[j + 1]]);
+                }
+            }
+        }
+    }
+
+    // repair empties
+    loop {
+        let Some(empty) = buckets.iter().position(|b| b.is_empty()) else { break };
+        let largest = (0..k)
+            .max_by_key(|&j| buckets[j].len())
+            .expect("k >= 1");
+        assert!(buckets[largest].len() > 1, "cannot repair empty shard");
+        let moved = buckets[largest].pop().unwrap();
+        buckets[empty].push(moved);
+    }
+
+    buckets.into_iter().map(Shard::new).collect()
+}
+
+/// Heterogeneity diagnostic: mean total-variation distance between each
+/// client's class marginal and the global marginal (0 = iid, ->1 = fully
+/// skewed).  Reported alongside Table 4 / Fig 2 results.
+pub fn label_skew(data: &Dataset, shards: &[Shard]) -> f32 {
+    let n_classes = data.n_classes().max(1);
+    let mut global = vec![0.0f32; n_classes];
+    for i in 0..data.len() {
+        global[data.label(i) as usize] += 1.0;
+    }
+    let total = data.len() as f32;
+    for g in &mut global {
+        *g /= total;
+    }
+    let mut tv_sum = 0.0;
+    for shard in shards {
+        let mut local = vec![0.0f32; n_classes];
+        for &i in &shard.indices {
+            local[data.label(i) as usize] += 1.0;
+        }
+        let m = shard.len().max(1) as f32;
+        let tv: f32 = local
+            .iter()
+            .zip(&global)
+            .map(|(l, g)| (l / m - g).abs())
+            .sum::<f32>()
+            / 2.0;
+        tv_sum += tv;
+    }
+    tv_sum / shards.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vision::{generate, SYNTH_CIFAR10};
+
+    fn dataset() -> Dataset {
+        generate(&SYNTH_CIFAR10, 600, 0)
+    }
+
+    fn assert_is_partition(n: usize, shards: &[Shard]) {
+        let mut seen = vec![false; n];
+        for s in shards {
+            for &i in &s.indices {
+                assert!(!seen[i], "sample {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "some sample unassigned");
+    }
+
+    #[test]
+    fn iid_is_partition_and_balanced() {
+        let d = dataset();
+        let shards = split(&d, 5, Partition::Iid, 1);
+        assert_is_partition(600, &shards);
+        for s in &shards {
+            assert_eq!(s.len(), 120);
+        }
+    }
+
+    #[test]
+    fn dirichlet_is_partition() {
+        let d = dataset();
+        for &beta in &[0.1f32, 1.0, 10.0] {
+            let shards = split(&d, 7, Partition::Dirichlet { beta }, 2);
+            assert_is_partition(600, &shards);
+            assert!(shards.iter().all(|s| !s.is_empty()));
+        }
+    }
+
+    #[test]
+    fn beta_controls_skew() {
+        let d = dataset();
+        let skew_small = label_skew(&d, &split(&d, 5, Partition::Dirichlet { beta: 0.1 }, 3));
+        let skew_big = label_skew(&d, &split(&d, 5, Partition::Dirichlet { beta: 100.0 }, 3));
+        let skew_iid = label_skew(&d, &split(&d, 5, Partition::Iid, 3));
+        assert!(skew_small > skew_big + 0.1, "{skew_small} vs {skew_big}");
+        assert!(skew_iid < 0.15, "iid skew {skew_iid}");
+    }
+
+    #[test]
+    fn deterministic_split() {
+        let d = dataset();
+        let a = split(&d, 5, Partition::Dirichlet { beta: 0.5 }, 9);
+        let b = split(&d, 5, Partition::Dirichlet { beta: 0.5 }, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.indices, y.indices);
+        }
+    }
+
+    #[test]
+    fn many_clients_few_samples() {
+        let d = generate(&SYNTH_CIFAR10, 30, 5);
+        let shards = split(&d, 25, Partition::Dirichlet { beta: 0.2 }, 4);
+        assert_is_partition(30, &shards);
+        assert!(shards.iter().all(|s| !s.is_empty()));
+    }
+}

@@ -1,0 +1,130 @@
+//! Differentially private FeedSign (Definition D.1 / Theorem D.2).
+//!
+//! The vote mechanism itself lives in
+//! [`crate::coordinator::aggregation::dp_vote`]; this module adds the
+//! analysis utilities: the exact mechanism distribution, the (eps, 0)-DP
+//! certificate check, the privacy-convergence trade-off curve (Remark D.3:
+//! eps -> 0 pushes the sign-reversing probability p_t -> 1/2, killing the
+//! Theorem 3.11 rate), and composition accounting across rounds.
+
+/// Exact `P(f = +1)` of the Definition D.1 mechanism for a vote multiset
+/// with `q_plus` +1 votes out of `k`.
+pub fn mechanism_p_plus(q_plus: usize, k: usize, epsilon: f32) -> f64 {
+    let q_minus = (k - q_plus) as f64;
+    let e_plus = (epsilon as f64) * q_plus as f64 / 4.0;
+    let e_minus = (epsilon as f64) * q_minus / 4.0;
+    let m = e_plus.max(e_minus);
+    let a = (e_plus - m).exp();
+    let b = (e_minus - m).exp();
+    a / (a + b)
+}
+
+/// `(P(f=+1), P(f=-1))` computed directly (no `1 - p` cancellation, so the
+/// tail probabilities stay exact down to ~e^-700).
+pub fn mechanism_probs(q_plus: usize, k: usize, epsilon: f32) -> (f64, f64) {
+    let q_minus = (k - q_plus) as f64;
+    let e_plus = (epsilon as f64) * q_plus as f64 / 4.0;
+    let e_minus = (epsilon as f64) * q_minus / 4.0;
+    let m = e_plus.max(e_minus);
+    let a = (e_plus - m).exp();
+    let b = (e_minus - m).exp();
+    (a / (a + b), b / (a + b))
+}
+
+/// Worst-case privacy-loss ratio over all adjacent vote vectors (differing
+/// in one client's vote) — must be `<= e^eps` for the (eps, 0)-DP claim.
+pub fn worst_case_ratio(k: usize, epsilon: f32) -> f64 {
+    let mut worst: f64 = 1.0;
+    for q in 0..k {
+        // adjacent: q vs q+1 positive votes
+        let (p1p, p1m) = mechanism_probs(q, k, epsilon);
+        let (p2p, p2m) = mechanism_probs(q + 1, k, epsilon);
+        let r = (p1p / p2p).max(p2p / p1p);
+        let rn = (p1m / p2m).max(p2m / p1m);
+        worst = worst.max(r).max(rn);
+    }
+    worst
+}
+
+/// Effective sign-reversing probability induced by the DP vote when the
+/// honest majority is `q_plus`/`k` and the true global sign is +1: the
+/// probability the broadcast direction is wrong (Remark D.3's p_t term).
+pub fn dp_sign_error(q_plus: usize, k: usize, epsilon: f32) -> f64 {
+    1.0 - mechanism_p_plus(q_plus, k, epsilon)
+}
+
+/// Linear (basic) composition: total privacy budget after `rounds` steps.
+pub fn composed_epsilon(epsilon_per_round: f32, rounds: u64) -> f64 {
+    epsilon_per_round as f64 * rounds as f64
+}
+
+/// One point of the privacy-convergence trade-off (Remark D.3): with a
+/// unanimous honest vote, the mechanism's error rate as a function of eps.
+#[derive(Debug, Clone, Copy)]
+pub struct TradeoffPoint {
+    pub epsilon: f32,
+    pub sign_error: f64,
+    /// the `(1 - 2 p_t)` rate factor this error implies in Theorem 3.11
+    pub rate_factor: f64,
+}
+
+/// Sweep the trade-off for `k` unanimous voters.
+pub fn tradeoff_curve(k: usize, epsilons: &[f32]) -> Vec<TradeoffPoint> {
+    epsilons
+        .iter()
+        .map(|&epsilon| {
+            let err = dp_sign_error(k, k, epsilon);
+            TradeoffPoint { epsilon, sign_error: err, rate_factor: 1.0 - 2.0 * err }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mechanism_degenerates_to_coin_at_zero_eps() {
+        assert!((mechanism_p_plus(5, 5, 0.0) - 0.5).abs() < 1e-12);
+        assert!((mechanism_p_plus(0, 5, 0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mechanism_recovers_majority_at_high_eps() {
+        assert!(mechanism_p_plus(4, 5, 100.0) > 0.999_999);
+        assert!(mechanism_p_plus(1, 5, 100.0) < 1e-6);
+    }
+
+    #[test]
+    fn dp_certificate_holds_for_range_of_eps_and_k() {
+        for &eps in &[0.1f32, 0.5, 1.0, 2.0, 8.0] {
+            for &k in &[2usize, 5, 25] {
+                let r = worst_case_ratio(k, eps);
+                assert!(
+                    r <= (eps as f64).exp() + 1e-9,
+                    "eps={eps} k={k}: ratio {r} > e^eps"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sign_error_monotone_in_epsilon() {
+        let curve = tradeoff_curve(5, &[0.0, 0.5, 1.0, 2.0, 4.0, 8.0]);
+        for w in curve.windows(2) {
+            assert!(
+                w[1].sign_error <= w[0].sign_error + 1e-12,
+                "error must shrink as eps grows"
+            );
+        }
+        // eps=0: rate factor 0 (no convergence); eps large: factor -> 1
+        assert!(curve.first().unwrap().rate_factor.abs() < 1e-9);
+        assert!(curve.last().unwrap().rate_factor > 0.99);
+    }
+
+    #[test]
+    fn composition_linear() {
+        assert!((composed_epsilon(0.1, 100) - 10.0).abs() < 1e-5);
+        assert_eq!(composed_epsilon(0.5, 4), 2.0);
+    }
+}

@@ -1,0 +1,42 @@
+//! # FeedSign — robust full-parameter federated fine-tuning with 1-bit communication
+//!
+//! Reproduction of Cai, Chen & Zhu, *"FeedSign: Robust Full-parameter
+//! Federated Fine-tuning of Large Models with Extremely Low Communication
+//! Overhead of One Bit"* (2025), as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (build-time Python): Pallas kernels for the shared-PRNG
+//!   substrate — counter-based Philox noise generation fused with the SPSA
+//!   AXPY — plus a tiled `linear_gelu` for the transformer MLP hot-spot.
+//! * **Layer 2** (build-time Python): a decoder-only transformer LM over a
+//!   flat parameter vector; the SPSA probe / update / eval / FO-baseline
+//!   step graphs are AOT-lowered to HLO text (`make artifacts`).
+//! * **Layer 3** (this crate): the federated runtime — parameter server,
+//!   client pool, 1-bit vote aggregation, Byzantine attack models, data
+//!   heterogeneity, orbit storage, differential privacy — with Python never
+//!   on the request path.
+//!
+//! Two interchangeable [`engine::Engine`] backends drive client compute:
+//! [`runtime::PjrtEngine`] executes the AOT artifacts through the PJRT C
+//! API, and [`simkit`] is a pure-rust NN substrate (own Philox PRNG,
+//! bit-compatible with the Pallas kernel at the u32 level) that makes the
+//! paper's 10^4–10^5-step sweeps tractable on this testbed.
+//!
+//! Entry points: [`coordinator::session::Session`] for programmatic use,
+//! the `feedsign` binary for the CLI, `examples/` for runnable scenarios
+//! and `benches/` for the per-table/figure reproduction harnesses.
+
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dp;
+pub mod engine;
+pub mod metrics;
+pub mod orbit;
+pub mod runtime;
+pub mod simkit;
+pub mod theory;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

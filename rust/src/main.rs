@@ -1,0 +1,205 @@
+//! `feedsign` — the launcher CLI for the FeedSign federated runtime.
+//!
+//! Subcommands:
+//! * `run --config exp.toml [--csv out.csv] [--orbit out.orbit]`
+//! * `quickstart [--rounds N]` — built-in 5-client FeedSign demo
+//! * `init-config` — print a starter TOML
+//! * `theory [--eta X] [--p-max P]` — Theorem 3.11 rate/floor table
+//! * `replay --input orbit.bin --n-params D`
+//! * `list-tasks`
+//! * `dp-tradeoff [--clients K]`
+//! * `pjrt-info [--variant tiny]` — load an AOT variant, smoke one probe
+
+mod cli;
+
+use anyhow::{Context, Result};
+use cli::Args;
+use feedsign::config::{self, ExperimentConfig};
+use feedsign::coordinator::Algorithm;
+use feedsign::data::tasks;
+use feedsign::{dp, metrics, orbit, runtime, theory};
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+feedsign — FeedSign federated fine-tuning runtime
+
+USAGE: feedsign <command> [options]
+
+COMMANDS:
+  run          --config exp.toml [--csv curve.csv] [--orbit run.orbit]
+  quickstart   [--rounds 2000]
+  init-config
+  theory       [--eta 1e-3] [--p-max 0.1]
+  replay       --input run.orbit --n-params D
+  list-tasks
+  dp-tradeoff  [--clients 5]
+  pjrt-info    [--variant tiny]
+";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "quickstart" => cmd_quickstart(&args),
+        "init-config" => {
+            print!("{}", config::quickstart().to_toml());
+            Ok(())
+        }
+        "theory" => cmd_theory(&args),
+        "replay" => cmd_replay(&args),
+        "list-tasks" => cmd_list_tasks(),
+        "dp-tradeoff" => cmd_dp_tradeoff(&args),
+        "pjrt-info" => cmd_pjrt_info(&args),
+        "" | "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::load(&PathBuf::from(args.req("config")?))?;
+    println!("experiment: {}", cfg.name);
+    let mut session = cfg.build_session()?;
+    let result = session.run();
+    print_result(&result);
+    if let Some(path) = args.str("csv") {
+        std::fs::write(path, result.to_csv()).with_context(|| format!("writing {path}"))?;
+        println!("curve written to {path}");
+    }
+    if let Some(path) = args.str("orbit") {
+        let bytes = orbit::encode(&session.orbit);
+        std::fs::write(path, &bytes).with_context(|| format!("writing {path}"))?;
+        println!("orbit written to {path} ({} bytes for {} steps)", bytes.len(), session.orbit.len());
+    }
+    Ok(())
+}
+
+fn cmd_quickstart(args: &Args) -> Result<()> {
+    let mut cfg = config::quickstart();
+    cfg.rounds = args.u64_or("rounds", 2000)?;
+    let mut session = cfg.build_session()?;
+    let result = session.run();
+    print_result(&result);
+    Ok(())
+}
+
+fn cmd_theory(args: &Args) -> Result<()> {
+    let eta = args.f32_or("eta", 1e-3)?;
+    let p_max = args.f32_or("p-max", 0.1)?;
+    let c = theory::Constants::example();
+    println!("constants: {c:?}\n");
+    let rows = [
+        ("fedsgd", theory::fedsgd(&c, eta)),
+        ("zo-fedsgd", theory::zo_fedsgd(&c, eta)),
+        ("feedsign", theory::feedsign(&c, eta, p_max)),
+    ];
+    println!("{:>10} | {:>12} | {:>12} | {:>12}", "method", "rate A", "floor C", "C/A");
+    for (name, rf) in rows {
+        println!(
+            "{name:>10} | {:>12.3e} | {:>12.3e} | {:>12.3e}",
+            rf.a,
+            rf.c,
+            rf.error_floor()
+        );
+    }
+    println!("\nzeta (Eq. 14) = {:.2}", theory::zeta(&c));
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    let bytes = std::fs::read(args.req("input")?)?;
+    let n_params: usize = args.req("n-params")?.parse()?;
+    let orb = orbit::decode(&bytes)?;
+    println!(
+        "orbit: algorithm={} steps={} eta={} init_seed={}",
+        orb.algorithm,
+        orb.len(),
+        orb.eta,
+        orb.init_seed
+    );
+    let report = orbit::storage_report(&orb, n_params);
+    println!(
+        "storage: {} bytes vs {} byte checkpoint ({}x smaller)",
+        report.orbit_bytes, report.checkpoint_bytes, report.ratio as u64
+    );
+    let mut w = vec![0.0f32; n_params];
+    orb.replay(&mut w);
+    let checksum: f64 = w.iter().map(|v| *v as f64).sum();
+    println!("replayed delta checksum: {checksum:.6}");
+    Ok(())
+}
+
+fn cmd_list_tasks() -> Result<()> {
+    println!("LM tasks (Table 2/4/5 columns):");
+    for t in tasks::OPT_TASKS {
+        println!("  {:16} classes={} signal_rate={:.2}", t.name, t.n_classes, t.signal_rate);
+    }
+    println!("few-shot tasks (Table 7/13 columns):");
+    for t in tasks::ROBERTA_TASKS {
+        println!("  {:16} classes={} signal_rate={:.2}", t.name, t.n_classes, t.signal_rate);
+    }
+    println!("vision tasks (Table 3/9): synth-cifar10, synth-cifar100");
+    Ok(())
+}
+
+fn cmd_dp_tradeoff(args: &Args) -> Result<()> {
+    let clients = args.usize_or("clients", 5)?;
+    let eps = [0.0f32, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0];
+    println!("{:>8} | {:>12} | {:>12}", "epsilon", "P(sign err)", "rate factor");
+    for p in dp::tradeoff_curve(clients, &eps) {
+        println!("{:>8.1} | {:>12.4} | {:>12.4}", p.epsilon, p.sign_error, p.rate_factor);
+    }
+    Ok(())
+}
+
+fn cmd_pjrt_info(args: &Args) -> Result<()> {
+    let variant = args.str("variant").unwrap_or("tiny");
+    let dir = runtime::artifacts_dir();
+    println!("loading variant {variant:?} from {}", dir.display());
+    let model = runtime::PjrtModel::load(&dir, variant)?;
+    println!(
+        "platform: {} | params: {} (padded {})",
+        model.platform(),
+        model.entry.n_params,
+        model.entry.padded_size
+    );
+    let w = model.init_params(0);
+    let cols = model.entry.seq_len + 1;
+    let rows = model.entry.batch_probe;
+    let data: Vec<u32> = (0..rows * cols).map(|i| (i % model.entry.vocab) as u32).collect();
+    let batch = feedsign::data::Batch::Tokens { data, rows, cols };
+    let t0 = std::time::Instant::now();
+    let p = model.spsa_probe(&w, &batch, 0, 1e-3)?;
+    println!("spsa_probe(seed=0) = {p:.6} in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    Ok(())
+}
+
+fn print_result(result: &metrics::RunResult) {
+    println!("\n{}: {} rounds in {:.1}s", result.algorithm, result.rounds, result.wall_s);
+    println!(
+        "final: loss {:.4}, accuracy {:.1}% (best {:.1}%)",
+        result.final_loss,
+        result.final_acc * 100.0,
+        result.best_acc() * 100.0
+    );
+    println!(
+        "communication: {} bits up, {} bits down ({} msgs)",
+        result.ledger.uplink_bits,
+        result.ledger.downlink_bits,
+        result.ledger.uplink_msgs + result.ledger.downlink_msgs
+    );
+    let algo = Algorithm::parse(&result.algorithm);
+    if matches!(algo, Some(Algorithm::FeedSign | Algorithm::DpFeedSign { .. })) {
+        let lm = feedsign::comm::LinkModel::mobile();
+        println!(
+            "projected comm time on a mobile link: {:.3}s total",
+            lm.seconds(&result.ledger)
+        );
+    }
+}

@@ -1,0 +1,165 @@
+//! Run metrics: per-round records, CSV/JSON export and mean/std summaries
+//! over repeated runs (the paper reports 5-seed means with std brackets).
+
+use crate::comm::Ledger;
+
+/// One evaluation point along a run.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: u64,
+    pub eval_loss: f32,
+    pub eval_acc: f32,
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+}
+
+/// The outcome of one federated run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub algorithm: String,
+    pub records: Vec<RoundRecord>,
+    pub ledger: Ledger,
+    pub final_loss: f32,
+    pub final_acc: f32,
+    pub rounds: u64,
+    pub wall_s: f64,
+}
+
+impl RunResult {
+    /// Best (max) eval accuracy along the run — the paper reports best
+    /// checkpoint metrics.
+    pub fn best_acc(&self) -> f32 {
+        self.records.iter().map(|r| r.eval_acc).fold(self.final_acc, f32::max)
+    }
+
+    /// Best (min) eval loss along the run.
+    pub fn best_loss(&self) -> f32 {
+        self.records.iter().map(|r| r.eval_loss).fold(self.final_loss, f32::min)
+    }
+
+    /// CSV dump: `round,eval_loss,eval_acc,uplink_bits,downlink_bits`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("round,eval_loss,eval_acc,uplink_bits,downlink_bits\n");
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{},{},{},{}\n",
+                r.round, r.eval_loss, r.eval_acc, r.uplink_bits, r.downlink_bits
+            ));
+        }
+        s
+    }
+}
+
+/// mean ± std over repeated runs (population std, like numpy default).
+#[derive(Debug, Clone, Copy)]
+pub struct MeanStd {
+    pub mean: f32,
+    pub std: f32,
+}
+
+impl std::fmt::Display for MeanStd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.1} ({:.1})", self.mean, self.std)
+    }
+}
+
+pub fn mean_std(values: &[f32]) -> MeanStd {
+    let n = values.len().max(1) as f32;
+    let mean = values.iter().sum::<f32>() / n;
+    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    MeanStd { mean, std: var.sqrt() }
+}
+
+/// Aggregate the best-accuracy metric (in percent) over repeats.
+pub fn best_acc_pct(runs: &[RunResult]) -> MeanStd {
+    let accs: Vec<f32> = runs.iter().map(|r| r.best_acc() * 100.0).collect();
+    mean_std(&accs)
+}
+
+/// Pretty-print a metrics table row set: header + one row per method.
+pub fn render_table(title: &str, columns: &[&str], rows: &[(String, Vec<String>)]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("\n== {title} ==\n"));
+    let width = rows.iter().map(|(n, _)| n.len()).max().unwrap_or(8).max(10);
+    out.push_str(&format!("{:width$}", "method"));
+    for c in columns {
+        out.push_str(&format!(" | {c:>12}"));
+    }
+    out.push('\n');
+    out.push_str(&"-".repeat(width + columns.len() * 15));
+    out.push('\n');
+    for (name, cells) in rows {
+        out.push_str(&format!("{name:width$}"));
+        for c in cells {
+            out.push_str(&format!(" | {c:>12}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(accs: &[f32]) -> RunResult {
+        RunResult {
+            algorithm: "feedsign".into(),
+            records: accs
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| RoundRecord {
+                    round: i as u64,
+                    eval_loss: 1.0 - a,
+                    eval_acc: a,
+                    uplink_bits: i as u64,
+                    downlink_bits: i as u64,
+                })
+                .collect(),
+            ledger: Ledger::default(),
+            final_loss: 1.0 - accs.last().copied().unwrap_or(0.0),
+            final_acc: accs.last().copied().unwrap_or(0.0),
+            rounds: accs.len() as u64,
+            wall_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn best_metrics() {
+        let r = run(&[0.1, 0.5, 0.3]);
+        assert_eq!(r.best_acc(), 0.5);
+        assert!((r.best_loss() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let ms = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((ms.mean - 2.0).abs() < 1e-6);
+        assert!((ms.std - (2.0f32 / 3.0).sqrt()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mean_std_display_matches_paper_format() {
+        let ms = MeanStd { mean: 87.3, std: 0.5 };
+        assert_eq!(format!("{ms}"), "87.3 (0.5)");
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = run(&[0.1, 0.2]).to_csv();
+        assert!(csv.starts_with("round,"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn table_render_contains_cells() {
+        let t = render_table(
+            "Table X",
+            &["acc"],
+            &[("feedsign".into(), vec!["87.3 (0.5)".into()])],
+        );
+        assert!(t.contains("Table X"));
+        assert!(t.contains("feedsign"));
+        assert!(t.contains("87.3"));
+    }
+}

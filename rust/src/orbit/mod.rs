@@ -1,0 +1,312 @@
+//! Orbit storage: a fine-tuned model as the sequence of aggregated
+//! seed-direction steps from a checkpoint (§5 / Appendix D.1, Figs 5–6).
+//!
+//! A FeedSign orbit entry is a single bit (the seed is the round index);
+//! a ZO-FedSGD orbit entry is K seed-projection pairs.  Replaying the
+//! orbit over the shared PRNG reconstructs the fine-tuned parameters
+//! **bit-exactly** (f32 addition of regenerated terms is deterministic),
+//! which is the paper's "OPT-13B fine-tune in < 200 bytes" claim — the
+//! `fig5_orbit_storage` bench regenerates the storage-ledger comparison.
+
+use crate::simkit::zo;
+
+/// One aggregated global step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OrbitEntry {
+    /// FeedSign: the 1-bit global vote; seed is the step index.
+    Sign(i8),
+    /// ZO-FedSGD / MeZO: aggregated seed-projection pairs applied that
+    /// step (MeZO has one pair; ZO-FedSGD one per client).
+    Pairs(Vec<(u32, f32)>),
+}
+
+/// A complete fine-tuning orbit.
+#[derive(Debug, Clone)]
+pub struct Orbit {
+    /// Algorithm tag (matches `Algorithm::name()`).
+    pub algorithm: String,
+    /// Shared checkpoint the orbit starts from.
+    pub init_seed: u32,
+    /// Learning rate folded into replay.
+    pub eta: f32,
+    pub entries: Vec<OrbitEntry>,
+}
+
+/// Serialized-size magic + version.
+const MAGIC: u32 = 0xFEED_5160;
+const VERSION: u8 = 1;
+
+impl Orbit {
+    pub fn new(algorithm: &str, init_seed: u32, eta: f32) -> Self {
+        Orbit { algorithm: algorithm.to_string(), init_seed, eta, entries: Vec::new() }
+    }
+
+    pub fn push_sign(&mut self, sign: i8) {
+        self.entries.push(OrbitEntry::Sign(sign));
+    }
+
+    pub fn push_pairs(&mut self, pairs: Vec<(u32, f32)>) {
+        self.entries.push(OrbitEntry::Pairs(pairs));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Replay the orbit onto a parameter vector (which must be the
+    /// checkpoint the orbit started from).  FeedSign steps use
+    /// `seed = step index`, exactly the protocol's seed schedule.
+    pub fn replay(&self, w: &mut [f32]) {
+        for (t, entry) in self.entries.iter().enumerate() {
+            match entry {
+                OrbitEntry::Sign(s) => {
+                    zo::apply_update(w, t as u32, *s as f32 * self.eta);
+                }
+                OrbitEntry::Pairs(pairs) => {
+                    let k = pairs.len().max(1) as f32;
+                    for &(seed, p) in pairs {
+                        zo::apply_update(w, seed, self.eta * p / k);
+                    }
+                }
+            }
+        }
+    }
+
+}
+
+/// Compact binary encoding (separate from serde so the storage ledger
+/// reflects true wire size, not JSON overhead).
+pub fn encode(orbit: &Orbit) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    let algo = orbit.algorithm.as_bytes();
+    out.push(algo.len() as u8);
+    out.extend_from_slice(algo);
+    out.extend_from_slice(&orbit.init_seed.to_le_bytes());
+    out.extend_from_slice(&orbit.eta.to_le_bytes());
+    out.extend_from_slice(&(orbit.entries.len() as u64).to_le_bytes());
+
+    // homogeneous fast path: all Sign entries -> bit-packed
+    let all_signs = orbit.entries.iter().all(|e| matches!(e, OrbitEntry::Sign(_)));
+    out.push(all_signs as u8);
+    if all_signs {
+        let mut byte = 0u8;
+        for (i, e) in orbit.entries.iter().enumerate() {
+            let OrbitEntry::Sign(s) = e else { unreachable!() };
+            if *s > 0 {
+                byte |= 1 << (i % 8);
+            }
+            if i % 8 == 7 {
+                out.push(byte);
+                byte = 0;
+            }
+        }
+        if orbit.entries.len() % 8 != 0 {
+            out.push(byte);
+        }
+    } else {
+        for e in &orbit.entries {
+            match e {
+                OrbitEntry::Sign(s) => {
+                    out.push(0u8);
+                    out.push(*s as u8);
+                }
+                OrbitEntry::Pairs(pairs) => {
+                    out.push(1u8);
+                    out.extend_from_slice(&(pairs.len() as u32).to_le_bytes());
+                    for (seed, p) in pairs {
+                        out.extend_from_slice(&seed.to_le_bytes());
+                        out.extend_from_slice(&p.to_le_bytes());
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Decode [`encode`]'s output.
+pub fn decode(bytes: &[u8]) -> anyhow::Result<Orbit> {
+    use anyhow::{bail, Context};
+    let mut pos = 0usize;
+    let mut take = |n: usize| -> anyhow::Result<&[u8]> {
+        if pos + n > bytes.len() {
+            bail!("orbit truncated at offset {pos}");
+        }
+        let s = &bytes[pos..pos + n];
+        pos += n;
+        Ok(s)
+    };
+    let magic = u32::from_le_bytes(take(4)?.try_into().unwrap());
+    if magic != MAGIC {
+        bail!("bad orbit magic {magic:#x}");
+    }
+    let version = take(1)?[0];
+    if version != VERSION {
+        bail!("unsupported orbit version {version}");
+    }
+    let alen = take(1)?[0] as usize;
+    let algorithm = String::from_utf8(take(alen)?.to_vec()).context("algorithm name")?;
+    let init_seed = u32::from_le_bytes(take(4)?.try_into().unwrap());
+    let eta = f32::from_le_bytes(take(4)?.try_into().unwrap());
+    let count = u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize;
+    let all_signs = take(1)?[0] == 1;
+
+    let mut entries = Vec::with_capacity(count);
+    if all_signs {
+        let nbytes = (count + 7) / 8;
+        let packed = take(nbytes)?.to_vec();
+        for i in 0..count {
+            let bit = (packed[i / 8] >> (i % 8)) & 1;
+            entries.push(OrbitEntry::Sign(if bit == 1 { 1 } else { -1 }));
+        }
+    } else {
+        for _ in 0..count {
+            let tag = take(1)?[0];
+            match tag {
+                0 => entries.push(OrbitEntry::Sign(take(1)?[0] as i8)),
+                1 => {
+                    let n = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+                    let mut pairs = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let seed = u32::from_le_bytes(take(4)?.try_into().unwrap());
+                        let p = f32::from_le_bytes(take(4)?.try_into().unwrap());
+                        pairs.push((seed, p));
+                    }
+                    entries.push(OrbitEntry::Pairs(pairs));
+                }
+                t => bail!("bad entry tag {t}"),
+            }
+        }
+    }
+    Ok(Orbit { algorithm, init_seed, eta, entries })
+}
+
+/// Storage ledger entry for the Fig 5/6 comparison.
+#[derive(Debug, Clone)]
+pub struct StorageReport {
+    pub steps: usize,
+    pub orbit_bytes: usize,
+    pub checkpoint_bytes: usize,
+    pub ratio: f64,
+}
+
+/// Compare orbit size against a dense f32 checkpoint of `n_params`.
+pub fn storage_report(orbit: &Orbit, n_params: usize) -> StorageReport {
+    let orbit_bytes = encode(orbit).len();
+    let checkpoint_bytes = n_params * 4;
+    StorageReport {
+        steps: orbit.len(),
+        orbit_bytes,
+        checkpoint_bytes,
+        ratio: checkpoint_bytes as f64 / orbit_bytes.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkit::prng::normals_vec;
+
+    fn sign_orbit(t: usize) -> Orbit {
+        let mut o = Orbit::new("feedsign", 0, 1e-3);
+        for i in 0..t {
+            o.push_sign(if i % 3 == 0 { -1 } else { 1 });
+        }
+        o
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_signs() {
+        let o = sign_orbit(1000);
+        let bytes = encode(&o);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(o.entries, back.entries);
+        assert_eq!(o.eta, back.eta);
+        assert_eq!(o.algorithm, back.algorithm);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_pairs() {
+        let mut o = Orbit::new("zo-fedsgd", 3, 1e-4);
+        o.push_pairs(vec![(1, 0.5), (2, -0.25)]);
+        o.push_sign(1); // mixed orbit
+        o.push_pairs(vec![(9, 1.25)]);
+        let back = decode(&encode(&o)).unwrap();
+        assert_eq!(o.entries, back.entries);
+    }
+
+    #[test]
+    fn feedsign_orbit_is_one_bit_per_step() {
+        let o = sign_orbit(10_000);
+        let bytes = encode(&o).len();
+        // header is ~30 bytes; payload must be 1250 bytes for 10k steps
+        assert!(bytes <= 10_000 / 8 + 64, "orbit too large: {bytes}");
+    }
+
+    #[test]
+    fn paper_claim_200_bytes_at_paper_scale() {
+        // §D.1: "10,000 fine-tune steps ... less than 200 bytes" — the paper
+        // counts the *information content* (10k bits = 1250 bytes packed, or
+        // ~200 bytes after entropy coding of a biased stream).  Our packed
+        // format achieves 1 bit/step exactly; verify the OPT-13B comparison
+        // direction: 24 GB checkpoint vs ~1.3 KB orbit.
+        let o = sign_orbit(10_000);
+        let rep = storage_report(&o, 13_000_000_000 / 4 * 4);
+        assert!(rep.orbit_bytes < 1400);
+        assert!(rep.ratio > 1e6);
+    }
+
+    #[test]
+    fn replay_reconstructs_bit_exactly() {
+        let mut w = normals_vec(42, 512);
+        let w0 = w.clone();
+        let mut o = Orbit::new("feedsign", 42, 0.01);
+        // simulate training: apply updates while recording
+        for t in 0..100u32 {
+            let s = if t % 2 == 0 { 1i8 } else { -1 };
+            crate::simkit::zo::apply_update(&mut w, t, s as f32 * 0.01);
+            o.push_sign(s);
+        }
+        // replay from the checkpoint
+        let mut w_replay = w0;
+        o.replay(&mut w_replay);
+        assert_eq!(w, w_replay, "replay must be bit-exact");
+    }
+
+    #[test]
+    fn replay_pairs_matches_direct() {
+        let mut w = normals_vec(7, 256);
+        let w0 = w.clone();
+        let mut o = Orbit::new("zo-fedsgd", 7, 0.05);
+        for t in 0..20u32 {
+            let pairs = vec![(t * 2, 0.3f32), (t * 2 + 1, -0.7f32)];
+            for &(s, p) in &pairs {
+                crate::simkit::zo::apply_update(&mut w, s, 0.05 * p / 2.0);
+            }
+            o.push_pairs(pairs);
+        }
+        let mut w_replay = w0;
+        o.replay(&mut w_replay);
+        assert_eq!(w, w_replay);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode(&[1, 2, 3]).is_err());
+        let mut bytes = encode(&sign_orbit(8));
+        bytes[0] ^= 0xFF;
+        assert!(decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let bytes = encode(&sign_orbit(100));
+        assert!(decode(&bytes[..bytes.len() - 5]).is_err());
+    }
+}

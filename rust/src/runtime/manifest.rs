@@ -1,0 +1,266 @@
+//! `artifacts/manifest.json` — the contract between the python compile
+//! path and the rust runtime: model shapes, segment layout + init stds,
+//! artifact file names, and the Philox test vectors that pin rust's PRNG
+//! to the Pallas kernel.  Parsed with the in-tree JSON parser
+//! ([`crate::util::json`]).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub philox: PhiloxVectors,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PhiloxVectors {
+    pub key1_init: u32,
+    pub rounds: u32,
+    pub vectors: Vec<PhiloxVector>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PhiloxVector {
+    pub seed: u32,
+    pub counters: Vec<u32>,
+    /// words[lane][counter] for the 4 output lanes
+    pub words: Vec<Vec<u32>>,
+    pub normals: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SegmentEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init_std: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch_probe: usize,
+    pub batch_eval: usize,
+    pub n_params: usize,
+    pub padded_size: usize,
+    pub segments: Vec<SegmentEntry>,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("manifest: missing numeric {key}"))
+}
+
+impl Manifest {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let ph = v.get("philox").context("manifest: missing philox")?;
+        let vectors = ph
+            .get("vectors")
+            .and_then(Json::as_arr)
+            .context("philox.vectors")?
+            .iter()
+            .map(|pv| -> Result<PhiloxVector> {
+                let list_u32 = |key: &str| -> Result<Vec<u32>> {
+                    Ok(pv
+                        .get(key)
+                        .and_then(Json::as_arr)
+                        .with_context(|| format!("philox vector {key}"))?
+                        .iter()
+                        .filter_map(Json::as_u32)
+                        .collect())
+                };
+                let words = pv
+                    .get("words")
+                    .and_then(Json::as_arr)
+                    .context("words")?
+                    .iter()
+                    .map(|lane| {
+                        lane.as_arr()
+                            .map(|a| a.iter().filter_map(Json::as_u32).collect::<Vec<_>>())
+                            .context("word lane")
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let normals = pv
+                    .get("normals")
+                    .and_then(Json::as_arr)
+                    .context("normals")?
+                    .iter()
+                    .filter_map(|n| n.as_f64().map(|f| f as f32))
+                    .collect();
+                Ok(PhiloxVector {
+                    seed: pv.get("seed").and_then(Json::as_u32).context("seed")?,
+                    counters: list_u32("counters")?,
+                    words,
+                    normals,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let philox = PhiloxVectors {
+            key1_init: ph.get("key1_init").and_then(Json::as_u32).context("key1_init")?,
+            rounds: ph.get("rounds").and_then(Json::as_u32).context("rounds")?,
+            vectors,
+        };
+
+        let mut models = BTreeMap::new();
+        for (name, m) in v
+            .get("models")
+            .and_then(Json::as_obj)
+            .context("manifest: missing models")?
+        {
+            let segments = m
+                .get("segments")
+                .and_then(Json::as_arr)
+                .context("segments")?
+                .iter()
+                .map(|s| -> Result<SegmentEntry> {
+                    Ok(SegmentEntry {
+                        name: s.get("name").and_then(Json::as_str).context("segment name")?.to_string(),
+                        shape: s
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .context("segment shape")?
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect(),
+                        init_std: s
+                            .get("init_std")
+                            .and_then(Json::as_f64)
+                            .context("segment init_std")? as f32,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let artifacts = m
+                .get("artifacts")
+                .and_then(Json::as_obj)
+                .context("artifacts")?
+                .iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect();
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    vocab: req_usize(m, "vocab")?,
+                    d_model: req_usize(m, "d_model")?,
+                    n_layers: req_usize(m, "n_layers")?,
+                    n_heads: req_usize(m, "n_heads")?,
+                    seq_len: req_usize(m, "seq_len")?,
+                    batch_probe: req_usize(m, "batch_probe")?,
+                    batch_eval: req_usize(m, "batch_eval")?,
+                    n_params: req_usize(m, "n_params")?,
+                    padded_size: req_usize(m, "padded_size")?,
+                    segments,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { philox, models })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(&v)
+    }
+
+    /// Verify rust's Philox implementation reproduces the kernel's recorded
+    /// vectors (u32 words bit-exactly, normals to 1e-5).  Returns the max
+    /// normal deviation.
+    pub fn verify_philox(&self) -> Result<f32> {
+        use crate::simkit::prng;
+        anyhow::ensure!(self.philox.key1_init == prng::KEY1_INIT, "KEY1_INIT mismatch");
+        anyhow::ensure!(self.philox.rounds == 10, "round count mismatch");
+        let mut max_dev = 0.0f32;
+        for v in &self.philox.vectors {
+            for (ci, &ctr) in v.counters.iter().enumerate() {
+                let words = prng::philox4x32(v.seed, ctr);
+                for lane in 0..4 {
+                    anyhow::ensure!(
+                        words[lane] == v.words[lane][ci],
+                        "philox word mismatch at seed {} ctr {ctr} lane {lane}: {} != {}",
+                        v.seed,
+                        words[lane],
+                        v.words[lane][ci]
+                    );
+                }
+            }
+            let normals = prng::normals_vec(v.seed, v.normals.len());
+            for (a, b) in normals.iter().zip(&v.normals) {
+                max_dev = max_dev.max((a - b).abs());
+            }
+            anyhow::ensure!(max_dev < 1e-5, "normals deviate by {max_dev}");
+        }
+        Ok(max_dev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, artifacts_dir};
+
+    #[test]
+    fn parse_inline_manifest() {
+        let text = r#"{
+          "philox": {"key1_init": 3405705229, "rounds": 10, "vectors": []},
+          "models": {
+            "t": {"vocab": 8, "d_model": 4, "n_layers": 1, "n_heads": 2,
+                   "seq_len": 4, "batch_probe": 2, "batch_eval": 4,
+                   "n_params": 100, "padded_size": 1024,
+                   "segments": [{"name": "embed", "shape": [8, 4], "init_std": 0.02}],
+                   "artifacts": {"loss": "t_loss.hlo.txt"}}
+          }
+        }"#;
+        let m = Manifest::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(m.models["t"].padded_size, 1024);
+        assert_eq!(m.models["t"].segments[0].shape, vec![8, 4]);
+        assert_eq!(m.philox.key1_init, 3_405_705_229);
+    }
+
+    #[test]
+    fn real_manifest_philox_parity() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir().join("manifest.json")).unwrap();
+        let dev = m.verify_philox().unwrap();
+        assert!(dev < 1e-5, "kernel/rust PRNG deviation {dev}");
+    }
+
+    #[test]
+    fn real_manifest_segments_match_simkit_layout() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir().join("manifest.json")).unwrap();
+        assert!(!m.models.is_empty());
+        for (name, entry) in &m.models {
+            let cfg = crate::simkit::nn::ModelCfg::new(
+                entry.vocab,
+                entry.d_model,
+                entry.n_layers,
+                entry.n_heads,
+                entry.seq_len,
+            );
+            assert_eq!(cfg.n_params(), entry.n_params, "variant {name}");
+            assert_eq!(cfg.padded_size(), entry.padded_size, "variant {name}");
+            let segs = cfg.segments();
+            assert_eq!(segs.len(), entry.segments.len(), "variant {name}");
+            for (a, b) in segs.iter().zip(&entry.segments) {
+                assert_eq!(a.0, b.name);
+                assert_eq!(a.1, b.shape);
+                assert!((a.2 - b.init_std).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` + the
+//! manifest) and executes them on the XLA CPU client — the production path
+//! of the three-layer architecture.  Python is never invoked here.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md for the 64-bit-proto-id gotcha).  Every
+//! graph is compiled exactly once per process ([`PjrtModel`] caches the
+//! loaded executables) and reused across all federated rounds.
+
+pub mod manifest;
+
+use crate::data::Batch;
+use crate::engine::Engine;
+use anyhow::{bail, Context, Result};
+use manifest::{Manifest, ModelEntry};
+use std::path::{Path, PathBuf};
+
+/// A loaded model variant: every step graph compiled and ready.
+pub struct PjrtModel {
+    pub entry: ModelEntry,
+    client: xla::PjRtClient,
+    exe_probe: xla::PjRtLoadedExecutable,
+    exe_update: xla::PjRtLoadedExecutable,
+    exe_loss: xla::PjRtLoadedExecutable,
+    exe_eval: xla::PjRtLoadedExecutable,
+    exe_fo: xla::PjRtLoadedExecutable,
+    exe_grad_proj: xla::PjRtLoadedExecutable,
+    exe_zvec: xla::PjRtLoadedExecutable,
+}
+
+fn compile(client: &xla::PjRtClient, dir: &Path, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(file);
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("artifact path not utf-8")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+impl PjrtModel {
+    /// Load one variant from an artifacts directory.
+    pub fn load(dir: &Path, variant: &str) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let Some(entry) = manifest.models.get(variant) else {
+            bail!(
+                "variant {variant:?} not in manifest (have: {:?})",
+                manifest.models.keys().collect::<Vec<_>>()
+            );
+        };
+        let entry = entry.clone();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let art = |k: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let f = entry
+                .artifacts
+                .get(k)
+                .with_context(|| format!("manifest missing artifact {k}"))?;
+            compile(&client, dir, f)
+        };
+        Ok(PjrtModel {
+            exe_probe: art("spsa_probe")?,
+            exe_update: art("update")?,
+            exe_loss: art("loss")?,
+            exe_eval: art("eval")?,
+            exe_fo: art("fo_step")?,
+            exe_grad_proj: art("grad_proj")?,
+            exe_zvec: art("zvec")?,
+            entry,
+            client,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.entry.padded_size
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn w_literal(&self, w: &[f32]) -> Result<xla::Literal> {
+        if w.len() != self.entry.padded_size {
+            bail!("parameter length {} != padded size {}", w.len(), self.entry.padded_size);
+        }
+        Ok(xla::Literal::vec1(w))
+    }
+
+    fn batch_literal(&self, batch: &Batch, expect_rows: usize) -> Result<xla::Literal> {
+        let Batch::Tokens { data, rows, cols } = batch else {
+            bail!("PJRT engine expects token batches");
+        };
+        if *rows != expect_rows || *cols != self.entry.seq_len + 1 {
+            bail!(
+                "batch shape ({rows}, {cols}) != expected ({expect_rows}, {})",
+                self.entry.seq_len + 1
+            );
+        }
+        let ints: Vec<i32> = data.iter().map(|&t| t as i32).collect();
+        Ok(xla::Literal::vec1(&ints).reshape(&[*rows as i64, *cols as i64])?)
+    }
+
+    /// SPSA projection through the AOT graph.
+    pub fn spsa_probe(&self, w: &[f32], batch: &Batch, seed: u32, mu: f32) -> Result<f32> {
+        let args = [
+            self.w_literal(w)?,
+            self.batch_literal(batch, self.entry.batch_probe)?,
+            xla::Literal::from(seed as i32),
+            xla::Literal::from(mu),
+        ];
+        let out = self.exe_probe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let tuple = out.to_tuple1()?;
+        Ok(tuple.to_vec::<f32>()?[0])
+    }
+
+    /// `w' = w - step * z(seed)` through the AOT graph.
+    pub fn update(&self, w: &mut [f32], seed: u32, step: f32) -> Result<()> {
+        let args = [
+            self.w_literal(w)?,
+            xla::Literal::from(seed as i32),
+            xla::Literal::from(step),
+        ];
+        let out = self.exe_update.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let tuple = out.to_tuple1()?;
+        let new_w = tuple.to_vec::<f32>()?;
+        w.copy_from_slice(&new_w);
+        Ok(())
+    }
+
+    /// Mean loss on an eval-shaped batch.
+    pub fn loss(&self, w: &[f32], batch: &Batch) -> Result<f32> {
+        let args = [self.w_literal(w)?, self.batch_literal(batch, self.entry.batch_eval)?];
+        let out = self.exe_loss.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?[0])
+    }
+
+    /// `(mean loss, #correct-last-position)` on an eval-shaped batch.
+    pub fn eval(&self, w: &[f32], batch: &Batch) -> Result<(f32, u32)> {
+        let args = [self.w_literal(w)?, self.batch_literal(batch, self.entry.batch_eval)?];
+        let mut out = self.exe_eval.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let mut parts = out.decompose_tuple()?;
+        if parts.len() != 2 {
+            bail!("eval graph returned {} outputs, expected 2", parts.len());
+        }
+        let correct = parts.pop().unwrap().to_vec::<i32>()?[0] as u32;
+        let loss = parts.pop().unwrap().to_vec::<f32>()?[0];
+        Ok((loss, correct))
+    }
+
+    /// First-order step; returns loss.
+    pub fn fo_step(&self, w: &mut [f32], batch: &Batch, lr: f32) -> Result<f32> {
+        let args = [
+            self.w_literal(w)?,
+            self.batch_literal(batch, self.entry.batch_probe)?,
+            xla::Literal::from(lr),
+        ];
+        let mut out = self.exe_fo.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let mut parts = out.decompose_tuple()?;
+        if parts.len() != 2 {
+            bail!("fo_step graph returned {} outputs, expected 2", parts.len());
+        }
+        let loss = parts.pop().unwrap().to_vec::<f32>()?[0];
+        let new_w = parts.pop().unwrap().to_vec::<f32>()?;
+        w.copy_from_slice(&new_w);
+        Ok(loss)
+    }
+
+    /// Exact directional derivative `z(seed) . grad L` (Appendix E study).
+    pub fn grad_proj(&self, w: &[f32], batch: &Batch, seed: u32) -> Result<f32> {
+        let args = [
+            self.w_literal(w)?,
+            self.batch_literal(batch, self.entry.batch_probe)?,
+            xla::Literal::from(seed as i32),
+        ];
+        let out = self.exe_grad_proj.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?[0])
+    }
+
+    /// The raw direction z(seed) — parity testing against simkit's PRNG.
+    pub fn zvec(&self, seed: u32) -> Result<Vec<f32>> {
+        let args = [xla::Literal::from(seed as i32)];
+        let out = self.exe_zvec.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Initial parameters from the manifest's segment layout (same
+    /// construction as `compile.model.init_params`).
+    pub fn init_params(&self, seed: u32) -> Vec<f32> {
+        let segs: Vec<(String, Vec<usize>, f32)> = self
+            .entry
+            .segments
+            .iter()
+            .map(|s| (s.name.clone(), s.shape.clone(), s.init_std))
+            .collect();
+        crate::simkit::prng::init_flat_params(&segs, self.entry.padded_size, seed)
+    }
+}
+
+/// [`Engine`] adapter over a shared loaded model (one compile, many
+/// clients).  The xla crate's handles are not thread-safe, so PJRT-backed
+/// clients run on the synchronous [`crate::coordinator::Session`] only;
+/// the threaded distributed topology is native-engine only (the `Engine`
+/// trait deliberately has no `Send` supertrait for this reason).
+pub struct SharedPjrtEngine {
+    model: std::rc::Rc<PjrtModel>,
+}
+
+impl SharedPjrtEngine {
+    pub fn new(model: std::rc::Rc<PjrtModel>) -> Self {
+        SharedPjrtEngine { model }
+    }
+
+    /// Load a variant and wrap it for K clients.
+    pub fn load_shared(dir: &Path, variant: &str) -> Result<std::rc::Rc<PjrtModel>> {
+        Ok(std::rc::Rc::new(PjrtModel::load(dir, variant)?))
+    }
+}
+
+impl Engine for SharedPjrtEngine {
+    fn n_params(&self) -> usize {
+        self.model.n_params()
+    }
+
+    fn probe(&mut self, w: &mut [f32], batch: &Batch, seed: u32, mu: f32) -> f32 {
+        self.model.spsa_probe(w, batch, seed, mu).expect("pjrt probe")
+    }
+
+    fn update(&mut self, w: &mut [f32], seed: u32, step: f32) {
+        self.model.update(w, seed, step).expect("pjrt update")
+    }
+
+    fn eval(&mut self, w: &mut [f32], batch: &Batch) -> (f32, u32) {
+        self.model.eval(w, batch).expect("pjrt eval")
+    }
+
+    fn fo_step(&mut self, w: &mut [f32], batch: &Batch, lr: f32) -> f32 {
+        self.model.fo_step(w, batch, lr).expect("pjrt fo_step")
+    }
+
+    fn grad(&mut self, _w: &mut [f32], _batch: &Batch, _out: &mut [f32]) -> f32 {
+        unimplemented!("dense gradient exchange is a native-engine baseline")
+    }
+
+    fn init_params(&self, seed: u32) -> Vec<f32> {
+        self.model.init_params(seed)
+    }
+}
+
+/// Default artifacts directory: `$FEEDSIGN_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("FEEDSIGN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True if the artifacts (manifest) are present — tests skip PJRT paths
+/// otherwise.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,15 @@
+//! Pure-rust NN simulation substrate.
+//!
+//! The PJRT engine proves the three-layer AOT architecture; this module
+//! exists because the paper's evaluation needs 10^4–10^5 federated steps ×
+//! K clients × 5 repeats, which per-call PJRT dispatch cannot sustain on
+//! this testbed.  It provides bit-compatible shared randomness
+//! ([`prng`], pinned to the Pallas kernel), dense kernels ([`ops`]),
+//! models with hand-written backprop ([`nn`]) and the in-place SPSA walker
+//! ([`zo`]).  `coordinator` code is engine-agnostic: the same session runs
+//! on either backend through [`crate::engine::Engine`].
+
+pub mod nn;
+pub mod ops;
+pub mod prng;
+pub mod zo;

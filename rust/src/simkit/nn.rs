@@ -1,0 +1,961 @@
+//! Native model substrate: a decoder-only transformer LM and a linear-probe
+//! classifier, both over **flat parameter vectors**, with hand-written
+//! backprop for the first-order FedSGD baseline.
+//!
+//! The transformer mirrors `python/compile/model.py` exactly — same segment
+//! layout (the manifest's `segments` list round-trips through
+//! [`ModelCfg::segments`]), same layernorm/GeLU/attention formulation — so
+//! checkpoints and orbits are interchangeable between the PJRT engine and
+//! this substrate at the semantic level.  The linear probe is the paper's
+//! "ViT last-layer FFT" analogue (Table 3/9, Figs 2–4): a frozen featurizer
+//! lives in [`crate::data::vision`], only the classifier head trains.
+
+use super::ops;
+use crate::data::Batch;
+
+/// Architecture hyperparameters, mirroring `compile.model.ModelConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+}
+
+pub const PAD_MULTIPLE: usize = 1024;
+
+impl ModelCfg {
+    pub fn new(vocab: usize, d_model: usize, n_layers: usize, n_heads: usize, seq_len: usize) -> Self {
+        assert!(d_model % n_heads == 0, "heads must divide d_model");
+        ModelCfg { vocab, d_model, n_layers, n_heads, seq_len }
+    }
+
+    /// A very small config for tests and fast benches.
+    pub fn test_tiny() -> Self {
+        ModelCfg::new(32, 16, 2, 2, 8)
+    }
+
+    pub fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// `(name, shape, init_std)` per parameter segment, in flat order —
+    /// byte-for-byte the layout `compile.model.ModelConfig.segments` emits.
+    pub fn segments(&self) -> Vec<(String, Vec<usize>, f32)> {
+        let (d, f, v, t) = (self.d_model, self.d_ff(), self.vocab, self.seq_len);
+        let w_std = 0.02f32;
+        let mut segs: Vec<(String, Vec<usize>, f32)> = vec![
+            ("embed".into(), vec![v, d], w_std),
+            ("pos".into(), vec![t, d], w_std),
+        ];
+        for l in 0..self.n_layers {
+            let p = format!("layer{l}.");
+            segs.extend([
+                (format!("{p}ln1_gain"), vec![d], 1.0),
+                (format!("{p}ln1_bias"), vec![d], 0.0),
+                (format!("{p}w_qkv"), vec![d, 3 * d], w_std),
+                (format!("{p}b_qkv"), vec![3 * d], 0.0),
+                (format!("{p}w_attn_out"), vec![d, d], w_std),
+                (format!("{p}b_attn_out"), vec![d], 0.0),
+                (format!("{p}ln2_gain"), vec![d], 1.0),
+                (format!("{p}ln2_bias"), vec![d], 0.0),
+                (format!("{p}w_mlp_in"), vec![d, f], w_std),
+                (format!("{p}b_mlp_in"), vec![f], 0.0),
+                (format!("{p}w_mlp_out"), vec![f, d], w_std),
+                (format!("{p}b_mlp_out"), vec![d], 0.0),
+            ]);
+        }
+        segs.push(("lnf_gain".into(), vec![d], 1.0));
+        segs.push(("lnf_bias".into(), vec![d], 0.0));
+        segs
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.segments().iter().map(|(_, s, _)| s.iter().product::<usize>()).sum()
+    }
+
+    pub fn padded_size(&self) -> usize {
+        (self.n_params() + PAD_MULTIPLE - 1) / PAD_MULTIPLE * PAD_MULTIPLE
+    }
+}
+
+/// Byte offsets of each segment inside the flat vector.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub offsets: Vec<(String, usize, usize)>, // (name, offset, len)
+}
+
+impl Layout {
+    pub fn of(cfg: &ModelCfg) -> Self {
+        let mut offsets = Vec::new();
+        let mut off = 0usize;
+        for (name, shape, _) in cfg.segments() {
+            let n: usize = shape.iter().product();
+            offsets.push((name, off, n));
+            off += n;
+        }
+        Layout { offsets }
+    }
+
+    pub fn get<'w>(&self, w: &'w [f32], name: &str) -> &'w [f32] {
+        let (_, off, len) = self
+            .offsets
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .unwrap_or_else(|| panic!("unknown segment {name}"));
+        &w[*off..off + len]
+    }
+
+    pub fn range(&self, name: &str) -> std::ops::Range<usize> {
+        let (_, off, len) = self
+            .offsets
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .unwrap_or_else(|| panic!("unknown segment {name}"));
+        *off..*off + *len
+    }
+}
+
+/// Trainable model interface shared by the transformer and linear probe;
+/// [`crate::engine::NativeEngine`] adapts it to the federated `Engine`.
+pub trait Model: Send {
+    /// Flat (padded) parameter vector length.
+    fn n_params(&self) -> usize;
+    /// Mean loss on a batch.
+    fn loss(&mut self, w: &[f32], batch: &Batch) -> f32;
+    /// `(mean loss, #correct)` on an eval batch.
+    fn eval(&mut self, w: &[f32], batch: &Batch) -> (f32, u32);
+    /// Loss and full gradient (accumulated into `grad`, which is zeroed here).
+    fn loss_and_grad(&mut self, w: &[f32], batch: &Batch, grad: &mut [f32]) -> f32;
+    /// Fresh initial parameter vector.
+    fn init(&self, seed: u32) -> Vec<f32>;
+}
+
+// ---------------------------------------------------------------------------
+// Linear probe (vision last-layer FFT analogue)
+// ---------------------------------------------------------------------------
+
+/// `logits = x @ W^T + b` over frozen features — the trainable part of the
+/// paper's ViT/ResNet last-layer fine-tuning experiments.
+pub struct LinearProbe {
+    pub dim: usize,
+    pub classes: usize,
+    probs: Vec<f32>,
+}
+
+impl LinearProbe {
+    pub fn new(dim: usize, classes: usize) -> Self {
+        LinearProbe { dim, classes, probs: Vec::new() }
+    }
+
+    pub fn raw_params(&self) -> usize {
+        self.classes * self.dim + self.classes
+    }
+
+    fn logits(&self, w: &[f32], x: &[f32], rows: usize, out: &mut Vec<f32>) {
+        let (c, f) = (self.classes, self.dim);
+        out.resize(rows * c, 0.0);
+        out.fill(0.0);
+        // W stored [C, F] row-major, then bias [C]
+        ops::matmul_bt_acc(x, &w[..c * f], out, rows, f, c);
+        let bias = &w[c * f..c * f + c];
+        for r in 0..rows {
+            for (v, &b) in out[r * c..(r + 1) * c].iter_mut().zip(bias) {
+                *v += b;
+            }
+        }
+    }
+}
+
+impl Model for LinearProbe {
+    fn n_params(&self) -> usize {
+        (self.raw_params() + PAD_MULTIPLE - 1) / PAD_MULTIPLE * PAD_MULTIPLE
+    }
+
+    fn loss(&mut self, w: &[f32], batch: &Batch) -> f32 {
+        let Batch::Features { x, y, rows, dim } = batch else {
+            panic!("LinearProbe expects feature batches");
+        };
+        debug_assert_eq!(*dim, self.dim);
+        let mut logits = Vec::new();
+        self.logits(w, x, *rows, &mut logits);
+        self.probs.resize(*rows * self.classes, 0.0);
+        ops::cross_entropy(&logits, y, &mut self.probs, *rows, self.classes)
+    }
+
+    fn eval(&mut self, w: &[f32], batch: &Batch) -> (f32, u32) {
+        let Batch::Features { x, y, rows, .. } = batch else {
+            panic!("LinearProbe expects feature batches");
+        };
+        let mut logits = Vec::new();
+        self.logits(w, x, *rows, &mut logits);
+        self.probs.resize(*rows * self.classes, 0.0);
+        let loss = ops::cross_entropy(&logits, y, &mut self.probs, *rows, self.classes);
+        let mut correct = 0u32;
+        for r in 0..*rows {
+            let row = &logits[r * self.classes..(r + 1) * self.classes];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if argmax as u32 == y[r] {
+                correct += 1;
+            }
+        }
+        (loss, correct)
+    }
+
+    fn loss_and_grad(&mut self, w: &[f32], batch: &Batch, grad: &mut [f32]) -> f32 {
+        let Batch::Features { x, y, rows, .. } = batch else {
+            panic!("LinearProbe expects feature batches");
+        };
+        let (c, f) = (self.classes, self.dim);
+        let loss = self.loss(w, batch);
+        grad.fill(0.0);
+        let mut dlogits = vec![0.0; *rows * c];
+        ops::cross_entropy_backward(&self.probs, y, &mut dlogits, *rows, c);
+        // dW[C,F] = dlogits^T @ x ; db = column sums
+        ops::matmul_at_acc(&dlogits, x, &mut grad[..c * f], *rows, c, f);
+        for r in 0..*rows {
+            for j in 0..c {
+                grad[c * f + j] += dlogits[r * c + j];
+            }
+        }
+        loss
+    }
+
+    fn init(&self, seed: u32) -> Vec<f32> {
+        let mut w = crate::simkit::prng::normals_vec(seed, self.n_params());
+        for v in w.iter_mut() {
+            *v *= 0.02;
+        }
+        for v in w[self.raw_params()..].iter_mut() {
+            *v = 0.0;
+        }
+        // zero bias
+        let (c, f) = (self.classes, self.dim);
+        for v in w[c * f..c * f + c].iter_mut() {
+            *v = 0.0;
+        }
+        w
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transformer LM
+// ---------------------------------------------------------------------------
+
+/// Per-layer activation cache for the backward pass.
+#[derive(Default, Clone)]
+struct LayerActs {
+    x_in: Vec<f32>,      // [bt, d] residual stream entering the layer
+    ln1: Vec<f32>,       // [bt, d]
+    ln1_stats: Vec<(f32, f32)>,
+    qkv: Vec<f32>,       // [bt, 3d]
+    attn: Vec<f32>,      // [b, h, t, t] softmax weights
+    attn_merged: Vec<f32>, // [bt, d] pre-projection
+    x_mid: Vec<f32>,     // [bt, d] residual after attention
+    ln2: Vec<f32>,       // [bt, d]
+    ln2_stats: Vec<(f32, f32)>,
+    mlp_pre: Vec<f32>,   // [bt, f] pre-GeLU
+    mlp_h: Vec<f32>,     // [bt, f] post-GeLU
+}
+
+/// Decoder-only transformer LM over a flat parameter vector, with cached
+/// activations and hand-written backprop.  Scratch buffers are reused
+/// across calls so the federated round loop is allocation-free after
+/// warmup.
+pub struct TransformerSim {
+    pub cfg: ModelCfg,
+    layout: Layout,
+    acts: Vec<LayerActs>,
+    xf: Vec<f32>,     // final-LN output [bt, d]
+    xf_stats: Vec<(f32, f32)>,
+    x_last: Vec<f32>, // pre-final-LN residual
+    logits: Vec<f32>, // [bt, v]
+    probs: Vec<f32>,
+}
+
+impl TransformerSim {
+    pub fn new(cfg: ModelCfg) -> Self {
+        let layout = Layout::of(&cfg);
+        TransformerSim {
+            acts: vec![LayerActs::default(); cfg.n_layers],
+            layout,
+            cfg,
+            xf: Vec::new(),
+            xf_stats: Vec::new(),
+            x_last: Vec::new(),
+            logits: Vec::new(),
+            probs: Vec::new(),
+        }
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// Bytes of live activation scratch after the last forward/backward —
+    /// the measured basis of the Table 10 memory comparison (inference vs
+    /// backprop).  The SPSA probe path needs only these inference
+    /// activations; `loss_and_grad` additionally materialises per-layer
+    /// gradient buffers of comparable size plus the full dense gradient.
+    pub fn activation_bytes(&self) -> usize {
+        let f32s = |v: &Vec<f32>| v.capacity() * std::mem::size_of::<f32>();
+        let mut total = f32s(&self.xf)
+            + f32s(&self.x_last)
+            + f32s(&self.logits)
+            + f32s(&self.probs)
+            + self.xf_stats.capacity() * std::mem::size_of::<(f32, f32)>();
+        for a in &self.acts {
+            total += f32s(&a.x_in)
+                + f32s(&a.ln1)
+                + f32s(&a.qkv)
+                + f32s(&a.attn)
+                + f32s(&a.attn_merged)
+                + f32s(&a.x_mid)
+                + f32s(&a.ln2)
+                + f32s(&a.mlp_pre)
+                + f32s(&a.mlp_h)
+                + (a.ln1_stats.capacity() + a.ln2_stats.capacity())
+                    * std::mem::size_of::<(f32, f32)>();
+        }
+        total
+    }
+
+    fn tokens_of<'b>(&self, batch: &'b Batch) -> (&'b [u32], usize, usize) {
+        let Batch::Tokens { data, rows, cols } = batch else {
+            panic!("TransformerSim expects token batches");
+        };
+        assert_eq!(*cols, self.cfg.seq_len + 1, "batch cols must be seq_len+1");
+        (data, *rows, *cols)
+    }
+
+    /// Forward pass, caching activations; fills `self.logits` ([b*t, v]).
+    fn forward(&mut self, w: &[f32], tokens: &[u32], b: usize) {
+        let cfg = self.cfg.clone();
+        let (d, t, v, f, h) = (cfg.d_model, cfg.seq_len, cfg.vocab, cfg.d_ff(), cfg.n_heads);
+        let hd = cfg.head_dim();
+        let bt = b * t;
+        let embed = self.layout.range("embed");
+        let pos = self.layout.range("pos");
+
+        // embedding + positional
+        let mut x = vec![0.0f32; bt * d];
+        {
+            let e = &w[embed.clone()];
+            let p = &w[pos.clone()];
+            for row in 0..bt {
+                let tok = tokens[(row / t) * (t + 1) + row % t] as usize;
+                let tpos = row % t;
+                for j in 0..d {
+                    x[row * d + j] = e[tok * d + j] + p[tpos * d + j];
+                }
+            }
+        }
+
+        let scale = 1.0 / (hd as f32).sqrt();
+        for l in 0..cfg.n_layers {
+            let pre = format!("layer{l}.");
+            let a = &mut self.acts[l];
+            a.x_in.clone_from(&x);
+
+            // LN1
+            a.ln1.resize(bt * d, 0.0);
+            a.ln1_stats.resize(bt, (0.0, 0.0));
+            let g1 = self.layout.get(w, &format!("{pre}ln1_gain"));
+            let b1 = self.layout.get(w, &format!("{pre}ln1_bias"));
+            for r in 0..bt {
+                a.ln1_stats[r] = ops::layernorm_row(
+                    &a.x_in[r * d..(r + 1) * d],
+                    g1,
+                    b1,
+                    &mut a.ln1[r * d..(r + 1) * d],
+                    1e-5,
+                );
+            }
+
+            // QKV
+            a.qkv.resize(bt * 3 * d, 0.0);
+            let wqkv = self.layout.get(w, &format!("{pre}w_qkv"));
+            let bqkv = self.layout.get(w, &format!("{pre}b_qkv"));
+            ops::matmul(&a.ln1, wqkv, &mut a.qkv, bt, d, 3 * d);
+            for r in 0..bt {
+                for (vv, &bb) in a.qkv[r * 3 * d..(r + 1) * 3 * d].iter_mut().zip(bqkv) {
+                    *vv += bb;
+                }
+            }
+
+            // attention per batch-row and head
+            a.attn.resize(b * h * t * t, 0.0);
+            a.attn_merged.resize(bt * d, 0.0);
+            a.attn_merged.fill(0.0);
+            for bi in 0..b {
+                for hi in 0..h {
+                    let att = &mut a.attn[(bi * h + hi) * t * t..(bi * h + hi + 1) * t * t];
+                    // scores (causal)
+                    for ti in 0..t {
+                        let q = &a.qkv[((bi * t + ti) * 3 * d + hi * hd)..];
+                        for tj in 0..t {
+                            att[ti * t + tj] = if tj <= ti {
+                                let k =
+                                    &a.qkv[((bi * t + tj) * 3 * d + d + hi * hd)..];
+                                let mut s = 0.0;
+                                for u in 0..hd {
+                                    s += q[u] * k[u];
+                                }
+                                s * scale
+                            } else {
+                                f32::NEG_INFINITY
+                            };
+                        }
+                    }
+                    ops::softmax_rows(att, t, t);
+                    // out = attn @ V
+                    for ti in 0..t {
+                        let orow = &mut a.attn_merged
+                            [(bi * t + ti) * d + hi * hd..(bi * t + ti) * d + (hi + 1) * hd];
+                        for tj in 0..=ti {
+                            let aw = att[ti * t + tj];
+                            if aw == 0.0 {
+                                continue;
+                            }
+                            let vrow =
+                                &a.qkv[((bi * t + tj) * 3 * d + 2 * d + hi * hd)..];
+                            for u in 0..hd {
+                                orow[u] += aw * vrow[u];
+                            }
+                        }
+                    }
+                }
+            }
+
+            // output projection + residual
+            a.x_mid.resize(bt * d, 0.0);
+            let wo = self.layout.get(w, &format!("{pre}w_attn_out"));
+            let bo = self.layout.get(w, &format!("{pre}b_attn_out"));
+            ops::matmul(&a.attn_merged, wo, &mut a.x_mid, bt, d, d);
+            for r in 0..bt {
+                for j in 0..d {
+                    a.x_mid[r * d + j] += bo[j] + a.x_in[r * d + j];
+                }
+            }
+
+            // LN2 + MLP + residual
+            a.ln2.resize(bt * d, 0.0);
+            a.ln2_stats.resize(bt, (0.0, 0.0));
+            let g2 = self.layout.get(w, &format!("{pre}ln2_gain"));
+            let b2 = self.layout.get(w, &format!("{pre}ln2_bias"));
+            for r in 0..bt {
+                a.ln2_stats[r] = ops::layernorm_row(
+                    &a.x_mid[r * d..(r + 1) * d],
+                    g2,
+                    b2,
+                    &mut a.ln2[r * d..(r + 1) * d],
+                    1e-5,
+                );
+            }
+            a.mlp_pre.resize(bt * f, 0.0);
+            let wi = self.layout.get(w, &format!("{pre}w_mlp_in"));
+            let bi_ = self.layout.get(w, &format!("{pre}b_mlp_in"));
+            ops::matmul(&a.ln2, wi, &mut a.mlp_pre, bt, d, f);
+            for r in 0..bt {
+                for (vv, &bb) in a.mlp_pre[r * f..(r + 1) * f].iter_mut().zip(bi_) {
+                    *vv += bb;
+                }
+            }
+            a.mlp_h.resize(bt * f, 0.0);
+            for (hh, &p) in a.mlp_h.iter_mut().zip(a.mlp_pre.iter()) {
+                *hh = ops::gelu(p);
+            }
+            let wo2 = self.layout.get(w, &format!("{pre}w_mlp_out"));
+            let bo2 = self.layout.get(w, &format!("{pre}b_mlp_out"));
+            x.clone_from(&a.x_mid);
+            ops::matmul_acc(&a.mlp_h, wo2, &mut x, bt, f, d);
+            for r in 0..bt {
+                for j in 0..d {
+                    x[r * d + j] += bo2[j];
+                }
+            }
+        }
+
+        // final LN + tied head
+        self.x_last.clone_from(&x);
+        self.xf.resize(bt * d, 0.0);
+        self.xf_stats.resize(bt, (0.0, 0.0));
+        let gf = self.layout.get(w, "lnf_gain");
+        let bf = self.layout.get(w, "lnf_bias");
+        for r in 0..bt {
+            self.xf_stats[r] = ops::layernorm_row(
+                &x[r * d..(r + 1) * d],
+                gf,
+                bf,
+                &mut self.xf[r * d..(r + 1) * d],
+                1e-5,
+            );
+        }
+        self.logits.resize(bt * v, 0.0);
+        self.logits.fill(0.0);
+        let e = &w[embed];
+        ops::matmul_bt_acc(&self.xf, e, &mut self.logits, bt, d, v);
+    }
+
+    fn targets(tokens: &[u32], b: usize, t: usize) -> Vec<u32> {
+        let mut tg = Vec::with_capacity(b * t);
+        for bi in 0..b {
+            for ti in 0..t {
+                tg.push(tokens[bi * (t + 1) + ti + 1]);
+            }
+        }
+        tg
+    }
+}
+
+impl Model for TransformerSim {
+    fn n_params(&self) -> usize {
+        self.cfg.padded_size()
+    }
+
+    fn loss(&mut self, w: &[f32], batch: &Batch) -> f32 {
+        let (tokens, b, _) = self.tokens_of(batch);
+        let tokens = tokens.to_vec();
+        let t = self.cfg.seq_len;
+        self.forward(w, &tokens, b);
+        let targets = Self::targets(&tokens, b, t);
+        self.probs.resize(b * t * self.cfg.vocab, 0.0);
+        ops::cross_entropy(&self.logits, &targets, &mut self.probs, b * t, self.cfg.vocab)
+    }
+
+    fn eval(&mut self, w: &[f32], batch: &Batch) -> (f32, u32) {
+        let (tokens, b, _) = self.tokens_of(batch);
+        let tokens = tokens.to_vec();
+        let t = self.cfg.seq_len;
+        let v = self.cfg.vocab;
+        let loss = self.loss(w, batch);
+        // last-position accuracy (classification tasks put the label there)
+        let mut correct = 0u32;
+        for bi in 0..b {
+            let row = &self.logits[(bi * t + t - 1) * v..(bi * t + t) * v];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+                .unwrap()
+                .0 as u32;
+            if argmax == tokens[bi * (t + 1) + t] {
+                correct += 1;
+            }
+        }
+        (loss, correct)
+    }
+
+    fn loss_and_grad(&mut self, w: &[f32], batch: &Batch, grad: &mut [f32]) -> f32 {
+        let (tokens, b, _) = self.tokens_of(batch);
+        let tokens = tokens.to_vec();
+        let cfg = self.cfg.clone();
+        let (d, t, v, f, h) = (cfg.d_model, cfg.seq_len, cfg.vocab, cfg.d_ff(), cfg.n_heads);
+        let hd = cfg.head_dim();
+        let bt = b * t;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        self.forward(w, &tokens, b);
+        let targets = Self::targets(&tokens, b, t);
+        self.probs.resize(bt * v, 0.0);
+        let loss =
+            ops::cross_entropy(&self.logits, &targets, &mut self.probs, bt, v);
+
+        grad.fill(0.0);
+        let mut dlogits = vec![0.0f32; bt * v];
+        ops::cross_entropy_backward(&self.probs, &targets, &mut dlogits, bt, v);
+
+        // tied head: logits = xf @ E^T
+        let embed_r = self.layout.range("embed");
+        let mut dxf = vec![0.0f32; bt * d];
+        ops::matmul_acc(&dlogits, &w[embed_r.clone()], &mut dxf, bt, v, d);
+        ops::matmul_at_acc(&dlogits, &self.xf, &mut grad[embed_r.clone()], bt, v, d);
+
+        // final LN backward
+        let mut dx = vec![0.0f32; bt * d];
+        {
+            let gf = self.layout.get(w, "lnf_gain").to_vec();
+            let gr = self.layout.range("lnf_gain");
+            let br = self.layout.range("lnf_bias");
+            let (gslice, rest) = grad[gr.start..br.end].split_at_mut(gr.len());
+            for r in 0..bt {
+                let (mean, rstd) = self.xf_stats[r];
+                ops::layernorm_row_backward(
+                    &self.x_last[r * d..(r + 1) * d],
+                    &gf,
+                    &dxf[r * d..(r + 1) * d],
+                    mean,
+                    rstd,
+                    &mut dx[r * d..(r + 1) * d],
+                    gslice,
+                    rest,
+                );
+            }
+        }
+
+        // layers in reverse
+        for l in (0..cfg.n_layers).rev() {
+            let pre = format!("layer{l}.");
+            let a = &self.acts[l];
+
+            // ---- MLP backward: x = x_mid + (gelu(ln2@Wi+bi))@Wo + bo
+            let mut dmlp_h = vec![0.0f32; bt * f];
+            {
+                let wo2 = self.layout.get(w, &format!("{pre}w_mlp_out")).to_vec();
+                ops::matmul_bt_acc(&dx, &wo2, &mut dmlp_h, bt, d, f);
+                let wr = self.layout.range(format!("{pre}w_mlp_out").as_str());
+                ops::matmul_at_acc(&a.mlp_h, &dx, &mut grad[wr], bt, f, d);
+                let br = self.layout.range(format!("{pre}b_mlp_out").as_str());
+                for r in 0..bt {
+                    for j in 0..d {
+                        grad[br.start + j] += dx[r * d + j];
+                    }
+                }
+            }
+            let mut dmlp_pre = vec![0.0f32; bt * f];
+            for i in 0..bt * f {
+                dmlp_pre[i] = dmlp_h[i] * ops::gelu_grad(a.mlp_pre[i]);
+            }
+            let mut dln2 = vec![0.0f32; bt * d];
+            {
+                let wi = self.layout.get(w, &format!("{pre}w_mlp_in")).to_vec();
+                ops::matmul_bt_acc(&dmlp_pre, &wi, &mut dln2, bt, f, d);
+                let wr = self.layout.range(format!("{pre}w_mlp_in").as_str());
+                ops::matmul_at_acc(&a.ln2, &dmlp_pre, &mut grad[wr], bt, d, f);
+                let br = self.layout.range(format!("{pre}b_mlp_in").as_str());
+                for r in 0..bt {
+                    for j in 0..f {
+                        grad[br.start + j] += dmlp_pre[r * f + j];
+                    }
+                }
+            }
+            // LN2 backward -> dx_mid ; plus the residual path dx
+            let mut dx_mid = dx.clone(); // residual branch
+            {
+                let g2 = self.layout.get(w, &format!("{pre}ln2_gain")).to_vec();
+                let gr = self.layout.range(format!("{pre}ln2_gain").as_str());
+                let br = self.layout.range(format!("{pre}ln2_bias").as_str());
+                let (gslice, bslice) = grad[gr.start..br.end].split_at_mut(gr.len());
+                for r in 0..bt {
+                    let (mean, rstd) = a.ln2_stats[r];
+                    ops::layernorm_row_backward(
+                        &a.x_mid[r * d..(r + 1) * d],
+                        &g2,
+                        &dln2[r * d..(r + 1) * d],
+                        mean,
+                        rstd,
+                        &mut dx_mid[r * d..(r + 1) * d],
+                        gslice,
+                        bslice,
+                    );
+                }
+            }
+
+            // ---- attention backward: x_mid = x_in + merged@Wo + bo
+            let mut dmerged = vec![0.0f32; bt * d];
+            {
+                let wo = self.layout.get(w, &format!("{pre}w_attn_out")).to_vec();
+                ops::matmul_bt_acc(&dx_mid, &wo, &mut dmerged, bt, d, d);
+                let wr = self.layout.range(format!("{pre}w_attn_out").as_str());
+                ops::matmul_at_acc(&a.attn_merged, &dx_mid, &mut grad[wr], bt, d, d);
+                let br = self.layout.range(format!("{pre}b_attn_out").as_str());
+                for r in 0..bt {
+                    for j in 0..d {
+                        grad[br.start + j] += dx_mid[r * d + j];
+                    }
+                }
+            }
+
+            let mut dqkv = vec![0.0f32; bt * 3 * d];
+            for bi in 0..b {
+                for hi in 0..h {
+                    let att = &a.attn[(bi * h + hi) * t * t..(bi * h + hi + 1) * t * t];
+                    // datt[ti,tj] = dmerged[ti] . v[tj]; dv[tj] += att[ti,tj]*dmerged[ti]
+                    let mut datt = vec![0.0f32; t * t];
+                    for ti in 0..t {
+                        let dm = &dmerged
+                            [(bi * t + ti) * d + hi * hd..(bi * t + ti) * d + (hi + 1) * hd];
+                        for tj in 0..=ti {
+                            let vrow =
+                                &a.qkv[((bi * t + tj) * 3 * d + 2 * d + hi * hd)..];
+                            let mut s = 0.0;
+                            for u in 0..hd {
+                                s += dm[u] * vrow[u];
+                            }
+                            datt[ti * t + tj] = s;
+                            let aw = att[ti * t + tj];
+                            let dvrow = &mut dqkv
+                                [((bi * t + tj) * 3 * d + 2 * d + hi * hd)..];
+                            for u in 0..hd {
+                                dvrow[u] += aw * dm[u];
+                            }
+                        }
+                    }
+                    // softmax backward: ds = att * (datt - sum(datt*att))
+                    for ti in 0..t {
+                        let arow = &att[ti * t..(ti + 1) * t];
+                        let drow = &mut datt[ti * t..(ti + 1) * t];
+                        let sum: f32 =
+                            arow.iter().zip(drow.iter()).map(|(&aa, &dd)| aa * dd).sum();
+                        for (dd, &aa) in drow.iter_mut().zip(arow) {
+                            *dd = aa * (*dd - sum);
+                        }
+                    }
+                    // dq[ti] += ds[ti,tj]*k[tj]*scale ; dk[tj] += ds[ti,tj]*q[ti]*scale
+                    for ti in 0..t {
+                        for tj in 0..=ti {
+                            let ds = datt[ti * t + tj] * scale;
+                            if ds == 0.0 {
+                                continue;
+                            }
+                            for u in 0..hd {
+                                let qv = a.qkv[(bi * t + ti) * 3 * d + hi * hd + u];
+                                let kv = a.qkv[(bi * t + tj) * 3 * d + d + hi * hd + u];
+                                dqkv[(bi * t + ti) * 3 * d + hi * hd + u] += ds * kv;
+                                dqkv[(bi * t + tj) * 3 * d + d + hi * hd + u] += ds * qv;
+                            }
+                        }
+                    }
+                }
+            }
+
+            // qkv = ln1 @ Wqkv + bqkv
+            let mut dln1 = vec![0.0f32; bt * d];
+            {
+                let wqkv = self.layout.get(w, &format!("{pre}w_qkv")).to_vec();
+                ops::matmul_bt_acc(&dqkv, &wqkv, &mut dln1, bt, 3 * d, d);
+                let wr = self.layout.range(format!("{pre}w_qkv").as_str());
+                ops::matmul_at_acc(&a.ln1, &dqkv, &mut grad[wr], bt, d, 3 * d);
+                let br = self.layout.range(format!("{pre}b_qkv").as_str());
+                for r in 0..bt {
+                    for j in 0..3 * d {
+                        grad[br.start + j] += dqkv[r * 3 * d + j];
+                    }
+                }
+            }
+            // LN1 backward -> dx_in (plus residual dx_mid)
+            let mut dx_in = dx_mid.clone();
+            {
+                let g1 = self.layout.get(w, &format!("{pre}ln1_gain")).to_vec();
+                let gr = self.layout.range(format!("{pre}ln1_gain").as_str());
+                let br = self.layout.range(format!("{pre}ln1_bias").as_str());
+                let (gslice, bslice) = grad[gr.start..br.end].split_at_mut(gr.len());
+                for r in 0..bt {
+                    let (mean, rstd) = a.ln1_stats[r];
+                    ops::layernorm_row_backward(
+                        &a.x_in[r * d..(r + 1) * d],
+                        &g1,
+                        &dln1[r * d..(r + 1) * d],
+                        mean,
+                        rstd,
+                        &mut dx_in[r * d..(r + 1) * d],
+                        gslice,
+                        bslice,
+                    );
+                }
+            }
+            dx = dx_in;
+        }
+
+        // embedding + positional gradients
+        {
+            let er = self.layout.range("embed");
+            let pr = self.layout.range("pos");
+            for row in 0..bt {
+                let tok = tokens[(row / t) * (t + 1) + row % t] as usize;
+                let tpos = row % t;
+                for j in 0..d {
+                    grad[er.start + tok * d + j] += dx[row * d + j];
+                    grad[pr.start + tpos * d + j] += dx[row * d + j];
+                }
+            }
+        }
+        loss
+    }
+
+    fn init(&self, seed: u32) -> Vec<f32> {
+        crate::simkit::prng::init_flat_params(
+            &self.cfg.segments(),
+            self.cfg.padded_size(),
+            seed,
+        )
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Batch;
+    use crate::simkit::prng::Rng;
+
+    fn token_batch(cfg: &ModelCfg, b: usize, seed: u32) -> Batch {
+        let mut rng = Rng::new(seed, 0);
+        let cols = cfg.seq_len + 1;
+        let data: Vec<u32> = (0..b * cols).map(|_| rng.below(cfg.vocab) as u32).collect();
+        Batch::Tokens { data, rows: b, cols }
+    }
+
+    #[test]
+    fn segment_layout_matches_param_count() {
+        let cfg = ModelCfg::test_tiny();
+        let layout = Layout::of(&cfg);
+        let (name, off, len) = layout.offsets.last().unwrap().clone();
+        assert_eq!(name, "lnf_bias");
+        assert_eq!(off + len, cfg.n_params());
+    }
+
+    #[test]
+    fn initial_loss_near_uniform() {
+        let cfg = ModelCfg::test_tiny();
+        let mut m = TransformerSim::new(cfg.clone());
+        let w = m.init(0);
+        let batch = token_batch(&cfg, 4, 1);
+        let loss = m.loss(&w, &batch);
+        assert!((loss - (cfg.vocab as f32).ln()).abs() < 0.5, "loss {loss}");
+    }
+
+    #[test]
+    fn loss_deterministic() {
+        let cfg = ModelCfg::test_tiny();
+        let mut m = TransformerSim::new(cfg.clone());
+        let w = m.init(0);
+        let batch = token_batch(&cfg, 2, 2);
+        assert_eq!(m.loss(&w, &batch), m.loss(&w, &batch));
+    }
+
+    #[test]
+    fn transformer_grad_matches_finite_diff() {
+        let cfg = ModelCfg::new(16, 8, 1, 2, 4);
+        let mut m = TransformerSim::new(cfg.clone());
+        let w = m.init(0);
+        let batch = token_batch(&cfg, 2, 3);
+        let mut grad = vec![0.0; w.len()];
+        m.loss_and_grad(&w, &batch, &mut grad);
+        // probe a spread of parameter indices across segments
+        let idxs: Vec<usize> = (0..cfg.n_params()).step_by(cfg.n_params() / 23).collect();
+        let mut checked = 0;
+        for &i in &idxs {
+            let h = 1e-2f32;
+            let mut wp = w.clone();
+            let mut wm = w.clone();
+            wp[i] += h;
+            wm[i] -= h;
+            let fd = (m.loss(&wp, &batch) - m.loss(&wm, &batch)) / (2.0 * h);
+            if fd.abs() < 1e-5 && grad[i].abs() < 1e-5 {
+                continue;
+            }
+            assert!(
+                (grad[i] - fd).abs() < 3e-2 * grad[i].abs().max(fd.abs()).max(0.1),
+                "param {i}: grad={} fd={fd}",
+                grad[i]
+            );
+            checked += 1;
+        }
+        assert!(checked > 5, "too few non-trivial finite-diff checks");
+    }
+
+    #[test]
+    fn sgd_descends() {
+        let cfg = ModelCfg::test_tiny();
+        let mut m = TransformerSim::new(cfg.clone());
+        let mut w = m.init(0);
+        let batch = token_batch(&cfg, 4, 4);
+        let mut grad = vec![0.0; w.len()];
+        let l0 = m.loss_and_grad(&w, &batch, &mut grad);
+        let mut last = l0;
+        for _ in 0..10 {
+            let l = m.loss_and_grad(&w, &batch, &mut grad);
+            for (wi, gi) in w.iter_mut().zip(&grad) {
+                *wi -= 0.5 * gi;
+            }
+            last = l;
+        }
+        assert!(last < l0, "loss did not descend: {l0} -> {last}");
+    }
+
+    #[test]
+    fn grad_of_pad_region_is_zero() {
+        let cfg = ModelCfg::test_tiny();
+        let mut m = TransformerSim::new(cfg.clone());
+        let w = m.init(0);
+        let batch = token_batch(&cfg, 2, 5);
+        let mut grad = vec![0.0; w.len()];
+        m.loss_and_grad(&w, &batch, &mut grad);
+        assert!(grad[cfg.n_params()..].iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn eval_counts_bounded() {
+        let cfg = ModelCfg::test_tiny();
+        let mut m = TransformerSim::new(cfg.clone());
+        let w = m.init(0);
+        let batch = token_batch(&cfg, 8, 6);
+        let (loss, correct) = m.eval(&w, &batch);
+        assert!(loss > 0.0);
+        assert!(correct <= 8);
+    }
+
+    #[test]
+    fn linear_probe_grad_matches_finite_diff() {
+        let probe_dim = 12;
+        let classes = 5;
+        let mut m = LinearProbe::new(probe_dim, classes);
+        let w = m.init(1);
+        let mut rng = Rng::new(7, 0);
+        let rows = 6;
+        let x: Vec<f32> = (0..rows * probe_dim).map(|_| rng.normal()).collect();
+        let y: Vec<u32> = (0..rows).map(|_| rng.below(classes) as u32).collect();
+        let batch = Batch::Features { x, y, rows, dim: probe_dim };
+        let mut grad = vec![0.0; w.len()];
+        m.loss_and_grad(&w, &batch, &mut grad);
+        for i in (0..m.raw_params()).step_by(7) {
+            let h = 1e-2f32;
+            let mut wp = w.clone();
+            let mut wm = w.clone();
+            wp[i] += h;
+            wm[i] -= h;
+            let fd = (m.loss(&wp, &batch) - m.loss(&wm, &batch)) / (2.0 * h);
+            assert!((grad[i] - fd).abs() < 1e-2, "i={i} {} vs {fd}", grad[i]);
+        }
+    }
+
+    #[test]
+    fn linear_probe_learns_separable_data() {
+        let dim = 8;
+        let classes = 3;
+        let mut m = LinearProbe::new(dim, classes);
+        let mut w = m.init(0);
+        let mut rng = Rng::new(9, 0);
+        let rows = 64;
+        let mut x = vec![0.0f32; rows * dim];
+        let mut y = vec![0u32; rows];
+        for r in 0..rows {
+            let c = rng.below(classes);
+            y[r] = c as u32;
+            for j in 0..dim {
+                x[r * dim + j] = rng.normal() * 0.3 + if j == c { 3.0 } else { 0.0 };
+            }
+        }
+        let batch = Batch::Features { x, y, rows, dim };
+        let mut grad = vec![0.0; w.len()];
+        for _ in 0..60 {
+            m.loss_and_grad(&w, &batch, &mut grad);
+            for (wi, gi) in w.iter_mut().zip(&grad) {
+                *wi -= 0.5 * gi;
+            }
+        }
+        let (_, correct) = m.eval(&w, &batch);
+        assert!(correct as usize > rows * 9 / 10, "correct={correct}/{rows}");
+    }
+}

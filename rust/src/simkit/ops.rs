@@ -1,0 +1,377 @@
+//! Dense f32 kernels for the native simulation substrate.
+//!
+//! These are the rust analogues of the Layer-1/Layer-2 compute: a blocked
+//! matmul (the probe hot-spot), layernorm, softmax, GeLU and cross-entropy.
+//! Everything operates on flat `&[f32]` slices with explicit dimensions —
+//! the model code in [`crate::simkit::nn`] owns the shapes.
+
+/// `c[m,n] += a[m,k] @ b[k,n]` — i-k-j loop order so the inner loop is a
+/// contiguous SAXPY over `b`'s rows (auto-vectorizes well on one core).
+pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// `c = a @ b` (overwrites `c`).
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    c.fill(0.0);
+    matmul_acc(a, b, c, m, k, n);
+}
+
+/// `c[m,n] += a[m,k] @ b^T` where `b` is `[n,k]` (row-major).  Used by
+/// backprop (dX = dY @ W^T) and the tied LM head.
+pub fn matmul_bt_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                s += av * bv;
+            }
+            *cv += s;
+        }
+    }
+}
+
+/// `c[k,n] += a^T @ b` where `a` is `[m,k]`, `b` is `[m,n]`.  Weight
+/// gradients: dW = X^T @ dY.
+pub fn matmul_at_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+pub const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+pub const GELU_C: f32 = 0.044_715;
+
+/// tanh-approximation GeLU — identical formula to the Pallas kernel.
+#[inline(always)]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + GELU_C * x * x * x)).tanh())
+}
+
+/// d gelu(x) / dx.
+#[inline(always)]
+pub fn gelu_grad(x: f32) -> f32 {
+    let u = SQRT_2_OVER_PI * (x + GELU_C * x * x * x);
+    let t = u.tanh();
+    let du = SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// In-place row-wise softmax over a `[rows, cols]` buffer.
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    debug_assert_eq!(x.len(), rows * cols);
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Layer norm of one row: `y = (x - mean) / sqrt(var + eps) * gain + bias`.
+/// Returns `(mean, rstd)` for the backward pass.
+pub fn layernorm_row(
+    x: &[f32],
+    gain: &[f32],
+    bias: &[f32],
+    y: &mut [f32],
+    eps: f32,
+) -> (f32, f32) {
+    let d = x.len() as f32;
+    let mean = x.iter().sum::<f32>() / d;
+    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d;
+    let rstd = 1.0 / (var + eps).sqrt();
+    for ((yv, &xv), (&g, &b)) in y.iter_mut().zip(x).zip(gain.iter().zip(bias)) {
+        *yv = (xv - mean) * rstd * g + b;
+    }
+    (mean, rstd)
+}
+
+/// Backward of [`layernorm_row`]: accumulates into `dx`, `dgain`, `dbias`.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_row_backward(
+    x: &[f32],
+    gain: &[f32],
+    dy: &[f32],
+    mean: f32,
+    rstd: f32,
+    dx: &mut [f32],
+    dgain: &mut [f32],
+    dbias: &mut [f32],
+) {
+    let d = x.len() as f32;
+    // xhat = (x - mean) * rstd ; y = xhat*g + b
+    let mut sum_dxhat = 0.0f32;
+    let mut sum_dxhat_xhat = 0.0f32;
+    for i in 0..x.len() {
+        let xhat = (x[i] - mean) * rstd;
+        let dxhat = dy[i] * gain[i];
+        sum_dxhat += dxhat;
+        sum_dxhat_xhat += dxhat * xhat;
+        dgain[i] += dy[i] * xhat;
+        dbias[i] += dy[i];
+    }
+    for i in 0..x.len() {
+        let xhat = (x[i] - mean) * rstd;
+        let dxhat = dy[i] * gain[i];
+        dx[i] += rstd * (dxhat - sum_dxhat / d - xhat * sum_dxhat_xhat / d);
+    }
+}
+
+/// Mean cross-entropy over logits `[rows, classes]` with integer targets;
+/// writes softmax probabilities into `probs` (for the backward pass) and
+/// returns the mean NLL.
+pub fn cross_entropy(
+    logits: &[f32],
+    targets: &[u32],
+    probs: &mut [f32],
+    rows: usize,
+    classes: usize,
+) -> f32 {
+    debug_assert_eq!(logits.len(), rows * classes);
+    debug_assert_eq!(targets.len(), rows);
+    probs.copy_from_slice(logits);
+    softmax_rows(probs, rows, classes);
+    let mut nll = 0.0f64;
+    for r in 0..rows {
+        let p = probs[r * classes + targets[r] as usize].max(1e-30);
+        nll -= (p as f64).ln();
+    }
+    (nll / rows as f64) as f32
+}
+
+/// dlogits for mean cross-entropy given the cached probs: `(p - onehot)/rows`.
+pub fn cross_entropy_backward(
+    probs: &[f32],
+    targets: &[u32],
+    dlogits: &mut [f32],
+    rows: usize,
+    classes: usize,
+) {
+    let inv = 1.0 / rows as f32;
+    dlogits.copy_from_slice(probs);
+    for v in dlogits.iter_mut() {
+        *v *= inv;
+    }
+    for r in 0..rows {
+        dlogits[r * classes + targets[r] as usize] -= inv;
+    }
+}
+
+/// Euclidean norm.
+pub fn l2_norm(v: &[f32]) -> f32 {
+    v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// Dot product (f64 accumulation).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum::<f64>() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn rand_vec(n: usize, seed: u32) -> Vec<f32> {
+        crate::simkit::prng::normals_vec(seed, n)
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let (m, k, n) = (7, 11, 5);
+        let a = rand_vec(m * k, 1);
+        let b = rand_vec(k * n, 2);
+        let mut c = vec![0.0; m * n];
+        matmul(&a, &b, &mut c, m, k, n);
+        let expect = naive_matmul(&a, &b, m, k, n);
+        for (x, y) in c.iter().zip(&expect) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_naive() {
+        let (m, k, n) = (4, 6, 9);
+        let a = rand_vec(m * k, 3);
+        let bt = rand_vec(n * k, 4); // b^T stored as [n, k]
+        // b[p, j] = bt[j, p]
+        let mut b = vec![0.0; k * n];
+        for p in 0..k {
+            for j in 0..n {
+                b[p * n + j] = bt[j * k + p];
+            }
+        }
+        let mut c = vec![0.0; m * n];
+        matmul_bt_acc(&a, &bt, &mut c, m, k, n);
+        let expect = naive_matmul(&a, &b, m, k, n);
+        for (x, y) in c.iter().zip(&expect) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_at_matches_naive() {
+        let (m, k, n) = (8, 3, 4);
+        let a = rand_vec(m * k, 5);
+        let b = rand_vec(m * n, 6);
+        // a^T is [k, m]
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                at[p * m + i] = a[i * k + p];
+            }
+        }
+        let mut c = vec![0.0; k * n];
+        matmul_at_acc(&a, &b, &mut c, m, k, n);
+        let expect = naive_matmul(&at, &b, k, m, n);
+        for (x, y) in c.iter().zip(&expect) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let mut x = rand_vec(6 * 10, 7);
+        softmax_rows(&mut x, 6, 10);
+        for r in 0..6 {
+            let s: f32 = x[r * 10..(r + 1) * 10].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gelu_grad_finite_diff() {
+        for &x in &[-3.0f32, -1.0, -0.1, 0.0, 0.5, 2.0, 4.0] {
+            let h = 1e-3;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((gelu_grad(x) - fd).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn layernorm_roundtrip_stats() {
+        let x = rand_vec(64, 8);
+        let gain = vec![1.0; 64];
+        let bias = vec![0.0; 64];
+        let mut y = vec![0.0; 64];
+        layernorm_row(&x, &gain, &bias, &mut y, 1e-5);
+        let mean: f32 = y.iter().sum::<f32>() / 64.0;
+        let var: f32 = y.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 64.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn layernorm_backward_finite_diff() {
+        let d = 16;
+        let x = rand_vec(d, 9);
+        let gain = rand_vec(d, 10);
+        let bias = rand_vec(d, 11);
+        let dy = rand_vec(d, 12);
+        let mut y = vec![0.0; d];
+        let (mean, rstd) = layernorm_row(&x, &gain, &bias, &mut y, 1e-5);
+        let loss = |xx: &[f32]| -> f32 {
+            let mut yy = vec![0.0; d];
+            layernorm_row(xx, &gain, &bias, &mut yy, 1e-5);
+            dot(&yy, &dy)
+        };
+        let mut dx = vec![0.0; d];
+        let mut dg = vec![0.0; d];
+        let mut db = vec![0.0; d];
+        layernorm_row_backward(&x, &gain, &dy, mean, rstd, &mut dx, &mut dg, &mut db);
+        for i in 0..d {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            let h = 1e-2;
+            xp[i] += h;
+            xm[i] -= h;
+            let fd = (loss(&xp) - loss(&xm)) / (2.0 * h);
+            assert!((dx[i] - fd).abs() < 2e-2, "i={i} dx={} fd={fd}", dx[i]);
+        }
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits() {
+        let rows = 4;
+        let classes = 8;
+        let logits = vec![0.0; rows * classes];
+        let targets = vec![0u32, 1, 2, 3];
+        let mut probs = vec![0.0; rows * classes];
+        let nll = cross_entropy(&logits, &targets, &mut probs, rows, classes);
+        assert!((nll - (classes as f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cross_entropy_backward_finite_diff() {
+        let rows = 3;
+        let classes = 5;
+        let logits = rand_vec(rows * classes, 13);
+        let targets = vec![1u32, 4, 0];
+        let mut probs = vec![0.0; rows * classes];
+        cross_entropy(&logits, &targets, &mut probs, rows, classes);
+        let mut dl = vec![0.0; rows * classes];
+        cross_entropy_backward(&probs, &targets, &mut dl, rows, classes);
+        for i in 0..logits.len() {
+            let h = 1e-2;
+            let mut lp = logits.clone();
+            let mut lm = logits.clone();
+            lp[i] += h;
+            lm[i] -= h;
+            let mut tmp = vec![0.0; rows * classes];
+            let fp = cross_entropy(&lp, &targets, &mut tmp, rows, classes);
+            let fm = cross_entropy(&lm, &targets, &mut tmp, rows, classes);
+            let fd = (fp - fm) / (2.0 * h);
+            assert!((dl[i] - fd).abs() < 1e-3, "i={i}");
+        }
+    }
+}

@@ -1,0 +1,364 @@
+//! Counter-based Philox-4x32-10 PRNG — the rust half of FeedSign's shared
+//! randomness substrate.
+//!
+//! Construction is identical to the Pallas kernel in
+//! `python/compile/kernels/philox.py`: key `(seed, KEY1_INIT)`, counter
+//! block `(i, 0, 0, 0)`, 10 rounds, then `u32 -> (0,1)` via
+//! `(x >> 8) * 2^-24 + 2^-25` and Box–Muller.  The u32 word stream matches
+//! the kernel **bit-exactly** (pure integer pipeline; pinned against the
+//! manifest's recorded vectors in `runtime::manifest` tests); the f32
+//! normals agree to ~1e-6 (libm vs XLA transcendentals).
+//!
+//! Counter-based generation is what lets FeedSign ship a *direction in R^d*
+//! as a 32-bit seed: element `i` of `z` is a pure function of `(seed, i)`,
+//! so any tile of `z` can be regenerated wherever it is consumed — the
+//! in-place SPSA walker in [`crate::simkit::zo`] exploits exactly that.
+
+/// Philox multiplier constants (Salmon et al., SC'11).
+pub const PHILOX_M0: u32 = 0xD251_1F53;
+pub const PHILOX_M1: u32 = 0xCD9E_8D57;
+/// Weyl key increments.
+pub const PHILOX_W0: u32 = 0x9E37_79B9;
+pub const PHILOX_W1: u32 = 0xBB67_AE85;
+/// Initial second key lane (matches the Pallas kernel).
+pub const KEY1_INIT: u32 = 0xCAFE_F00D;
+
+const TWO_PI: f32 = 6.283_185_3;
+
+#[inline(always)]
+fn mulhilo(a: u32, b: u32) -> (u32, u32) {
+    let p = (a as u64) * (b as u64);
+    ((p >> 32) as u32, p as u32)
+}
+
+/// One Philox-4x32-10 block: 4 random u32 words for counter index `ctr`.
+#[inline]
+pub fn philox4x32(seed: u32, ctr: u32) -> [u32; 4] {
+    let (mut c0, mut c1, mut c2, mut c3) = (ctr, 0u32, 0u32, 0u32);
+    let mut k0 = seed;
+    let mut k1 = KEY1_INIT;
+    for _ in 0..10 {
+        let (hi0, lo0) = mulhilo(PHILOX_M0, c0);
+        let (hi1, lo1) = mulhilo(PHILOX_M1, c2);
+        (c0, c1, c2, c3) = (hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0);
+        k0 = k0.wrapping_add(PHILOX_W0);
+        k1 = k1.wrapping_add(PHILOX_W1);
+    }
+    [c0, c1, c2, c3]
+}
+
+/// Map a u32 to the log-safe interval (0, 1] — same bit recipe as the
+/// Pallas kernel, so uniform streams match exactly.  (The top of the
+/// range rounds to exactly 1.0f32, which is harmless: Box-Muller only
+/// needs u1 > 0.)
+#[inline(always)]
+pub fn u32_to_unit(x: u32) -> f32 {
+    (x >> 8) as f32 * (1.0 / (1 << 24) as f32) + 1.0 / (1 << 25) as f32
+}
+
+/// Box–Muller: two uniforms in (0,1) -> two standard normals.
+#[inline(always)]
+pub fn box_muller(u1: f32, u2: f32) -> (f32, f32) {
+    let r = (-2.0 * u1.ln()).sqrt();
+    let theta = TWO_PI * u2;
+    (r * theta.cos(), r * theta.sin())
+}
+
+/// The 4 standard normals of counter lane `ctr`: elements
+/// `z[4*ctr .. 4*ctr+4]` of the direction `z(seed)`.
+#[inline]
+pub fn normals4(seed: u32, ctr: u32) -> [f32; 4] {
+    let [x0, x1, x2, x3] = philox4x32(seed, ctr);
+    let (za, zb) = box_muller(u32_to_unit(x0), u32_to_unit(x1));
+    let (zc, zd) = box_muller(u32_to_unit(x2), u32_to_unit(x3));
+    [za, zb, zc, zd]
+}
+
+/// Fill `out` with the leading `out.len()` elements of `z(seed)`.
+pub fn normals_into(seed: u32, out: &mut [f32]) {
+    let n = out.len();
+    let mut i = 0usize;
+    let mut ctr = 0u32;
+    while i + 4 <= n {
+        out[i..i + 4].copy_from_slice(&normals4(seed, ctr));
+        i += 4;
+        ctr += 1;
+    }
+    if i < n {
+        let z = normals4(seed, ctr);
+        out[i..].copy_from_slice(&z[..n - i]);
+    }
+}
+
+/// Allocate-and-fill convenience for [`normals_into`].
+pub fn normals_vec(seed: u32, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0; n];
+    normals_into(seed, &mut v);
+    v
+}
+
+/// A stateful convenience RNG over the Philox stream, for everything that
+/// is *not* the shared direction (data generation, client seed sampling,
+/// Dirichlet partitioning, attack noise).  Each call consumes counter
+/// lanes from a private, very high counter region (bit 31 set) so it can
+/// never collide with direction streams, which use counters < 2^31.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    seed: u32,
+    ctr: u32,
+    /// buffered words from the last philox block
+    buf: [u32; 4],
+    buf_used: usize,
+}
+
+impl Rng {
+    /// Create a stream from `(seed, stream)`; different streams are
+    /// statistically independent (they perturb the key).
+    pub fn new(seed: u32, stream: u32) -> Self {
+        Rng {
+            seed: seed ^ stream.wrapping_mul(PHILOX_W1),
+            ctr: 0x8000_0000,
+            buf: [0; 4],
+            buf_used: 4,
+        }
+    }
+
+    /// Next raw u32 word.
+    pub fn next_u32(&mut self) -> u32 {
+        if self.buf_used == 4 {
+            self.buf = philox4x32(self.seed, self.ctr);
+            self.ctr = self.ctr.wrapping_add(1);
+            self.buf_used = 0;
+        }
+        let w = self.buf[self.buf_used];
+        self.buf_used += 1;
+        w
+    }
+
+    /// Uniform f32 in (0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        u32_to_unit(self.next_u32())
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u32() as u64 * n as u64 >> 32) as usize
+    }
+
+    /// Standard normal.
+    pub fn normal(&mut self) -> f32 {
+        let (u1, u2) = (self.uniform(), self.uniform());
+        box_muller(u1, u2).0
+    }
+
+    /// Gamma(alpha, 1) via Marsaglia–Tsang (alpha > 0), used by the
+    /// Dirichlet partitioner.
+    pub fn gamma(&mut self, alpha: f32) -> f32 {
+        if alpha < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(alpha + 1.0);
+            let u = self.uniform();
+            return g * u.powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x * x * x * x
+                || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * 1_k) sample of length `k`.
+    pub fn dirichlet(&mut self, alpha: f32, k: usize) -> Vec<f32> {
+        let mut g: Vec<f32> = (0..k).map(|_| self.gamma(alpha).max(1e-30)).collect();
+        let s: f32 = g.iter().sum();
+        for v in &mut g {
+            *v /= s;
+        }
+        g
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+    }
+}
+
+/// Build the initial flat parameter vector from manifest-style segment
+/// descriptions, matching `python compile.model.init_params`: weights are
+/// `std * z(seed*65536 + segment_index)`, layernorm gains are 1, biases 0.
+pub fn init_flat_params(
+    segments: &[(String, Vec<usize>, f32)],
+    padded_size: usize,
+    seed: u32,
+) -> Vec<f32> {
+    let mut w = Vec::with_capacity(padded_size);
+    for (idx, (_, shape, std)) in segments.iter().enumerate() {
+        let n: usize = shape.iter().product();
+        if *std == 1.0 && shape.len() == 1 {
+            w.extend(std::iter::repeat(1.0f32).take(n));
+        } else if *std == 0.0 {
+            w.extend(std::iter::repeat(0.0f32).take(n));
+        } else {
+            let m = (n + 3) / 4 * 4;
+            let z = normals_vec(seed.wrapping_mul(65536).wrapping_add(idx as u32), m);
+            w.extend(z[..n].iter().map(|v| v * std));
+        }
+    }
+    w.resize(padded_size, 0.0);
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn philox_known_structure() {
+        // distinct counters give distinct words
+        let a = philox4x32(0, 0);
+        let b = philox4x32(0, 1);
+        assert_ne!(a, b);
+        // distinct seeds give distinct words
+        let c = philox4x32(1, 0);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn philox_deterministic() {
+        assert_eq!(philox4x32(42, 7), philox4x32(42, 7));
+    }
+
+    #[test]
+    fn unit_interval_log_safe() {
+        assert!(u32_to_unit(0) > 0.0);
+        assert!(u32_to_unit(u32::MAX) <= 1.0);
+        // never zero anywhere in the low range either
+        for x in [1u32, 255, 256, 1 << 20] {
+            assert!(u32_to_unit(x) > 0.0);
+        }
+    }
+
+    #[test]
+    fn normals_moments() {
+        let z = normals_vec(123, 1 << 16);
+        let mean: f32 = z.iter().sum::<f32>() / z.len() as f32;
+        let var: f32 = z.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / z.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn normals_into_matches_normals4_tiling() {
+        let v = normals_vec(9, 10); // non-multiple-of-4 tail
+        let head = normals4(9, 0);
+        let mid = normals4(9, 1);
+        let tail = normals4(9, 2);
+        assert_eq!(&v[..4], &head);
+        assert_eq!(&v[4..8], &mid);
+        assert_eq!(&v[8..10], &tail[..2]);
+    }
+
+    #[test]
+    fn rng_streams_independent() {
+        let mut a = Rng::new(1, 0);
+        let mut b = Rng::new(1, 1);
+        let xa: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let xb: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_ne!(xa, xb);
+    }
+
+    #[test]
+    fn rng_below_bounds() {
+        let mut r = Rng::new(3, 0);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn gamma_positive_and_mean() {
+        let mut r = Rng::new(5, 0);
+        let n = 20_000;
+        let alpha = 2.5f32;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let g = r.gamma(alpha);
+            assert!(g > 0.0);
+            sum += g;
+        }
+        let mean = sum / n as f32;
+        assert!((mean - alpha).abs() < 0.1, "gamma mean {mean}");
+    }
+
+    #[test]
+    fn gamma_small_alpha() {
+        let mut r = Rng::new(6, 0);
+        for _ in 0..1000 {
+            let g = r.gamma(0.3);
+            assert!(g.is_finite() && g >= 0.0);
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(7, 0);
+        for &alpha in &[0.1f32, 1.0, 10.0] {
+            let d = r.dirichlet(alpha, 8);
+            let s: f32 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(d.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentration_behaviour() {
+        // small alpha -> spiky; large alpha -> uniform-ish
+        let mut r = Rng::new(8, 0);
+        let spiky = r.dirichlet(0.05, 10);
+        let flat = r.dirichlet(100.0, 10);
+        let max_spiky = spiky.iter().cloned().fold(0.0, f32::max);
+        let max_flat = flat.iter().cloned().fold(0.0, f32::max);
+        assert!(max_spiky > 0.5, "spiky {max_spiky}");
+        assert!(max_flat < 0.2, "flat {max_flat}");
+    }
+
+    #[test]
+    fn init_flat_params_layout() {
+        let segs = vec![
+            ("w".to_string(), vec![4, 8], 0.02f32),
+            ("gain".to_string(), vec![8], 1.0),
+            ("bias".to_string(), vec![8], 0.0),
+        ];
+        let w = init_flat_params(&segs, 64, 0);
+        assert_eq!(w.len(), 64);
+        assert!(w[..32].iter().any(|&v| v != 0.0));
+        assert!(w[32..40].iter().all(|&v| v == 1.0));
+        assert!(w[40..48].iter().all(|&v| v == 0.0));
+        assert!(w[48..].iter().all(|&v| v == 0.0)); // pad tail
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(11, 0);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,226 @@
+//! Zeroth-order SPSA in flat parameter space — the client-side compute of
+//! FeedSign and ZO-FedSGD (Definition 3.1 with n = 1).
+//!
+//! The walker is **in-place**: `w` is perturbed by `+mu z`, evaluated,
+//! shifted by `-2 mu z`, evaluated, then restored by `+mu z`, regenerating
+//! the Philox stream on each pass instead of materialising `z`.  That is
+//! MeZO's "Approach 2" (Appendix I.2) and the source of the paper's
+//! inference-level memory claim: peak extra memory is O(1), not O(d).
+//! It is the exact rust analogue of the fused `spsa_axpy` Pallas kernel.
+
+use super::nn::Model;
+use super::prng;
+use crate::data::Batch;
+
+/// In-place `w += scale * z(seed)` with streaming noise regeneration.
+pub fn perturb_in_place(w: &mut [f32], seed: u32, scale: f32) {
+    let n = w.len();
+    let mut i = 0usize;
+    let mut ctr = 0u32;
+    while i + 4 <= n {
+        let z = prng::normals4(seed, ctr);
+        w[i] += scale * z[0];
+        w[i + 1] += scale * z[1];
+        w[i + 2] += scale * z[2];
+        w[i + 3] += scale * z[3];
+        i += 4;
+        ctr += 1;
+    }
+    if i < n {
+        let z = prng::normals4(seed, ctr);
+        for (j, wj) in w[i..].iter_mut().enumerate() {
+            *wj += scale * z[j];
+        }
+    }
+}
+
+/// Fused `out[i] = w[i] + scale * z_i(seed)` (the rust analogue of the
+/// `spsa_axpy` Pallas kernel's out-of-place form).
+pub fn axpy_into(w: &[f32], out: &mut [f32], seed: u32, scale: f32) {
+    debug_assert_eq!(w.len(), out.len());
+    let n = w.len();
+    let mut i = 0usize;
+    let mut ctr = 0u32;
+    while i + 4 <= n {
+        let z = prng::normals4(seed, ctr);
+        out[i] = w[i] + scale * z[0];
+        out[i + 1] = w[i + 1] + scale * z[1];
+        out[i + 2] = w[i + 2] + scale * z[2];
+        out[i + 3] = w[i + 3] + scale * z[3];
+        i += 4;
+        ctr += 1;
+    }
+    if i < n {
+        let z = prng::normals4(seed, ctr);
+        for j in i..n {
+            out[j] = w[j] + scale * z[j - i];
+        }
+    }
+}
+
+/// SPSA gradient projection
+/// `p = (L(w + mu z, B) - L(w - mu z, B)) / (2 mu)`.
+///
+/// `w` is never mutated: each perturbed view is regenerated from `w` into
+/// `scratch` by the fused AXPY, so the protocol invariant "probe leaves the
+/// replica bit-identical" holds exactly (an in-place `+mu, -2mu, +mu`
+/// telescope drifts by ~1 ulp per step, which breaks ZO-FedSGD replica
+/// synchronization and orbit replay).  The cost is one d-float scratch
+/// buffer — still far below backprop's activations + dense gradient
+/// (Table 10).
+pub fn spsa_probe_scratch<M: Model + ?Sized>(
+    model: &mut M,
+    w: &[f32],
+    scratch: &mut Vec<f32>,
+    batch: &Batch,
+    seed: u32,
+    mu: f32,
+) -> f32 {
+    scratch.resize(w.len(), 0.0);
+    axpy_into(w, scratch, seed, mu);
+    let lp = model.loss(scratch, batch);
+    axpy_into(w, scratch, seed, -mu);
+    let lm = model.loss(scratch, batch);
+    (lp - lm) / (2.0 * mu)
+}
+
+/// Allocation-per-call convenience wrapper around
+/// [`spsa_probe_scratch`].
+pub fn spsa_probe<M: Model + ?Sized>(
+    model: &mut M,
+    w: &mut [f32],
+    batch: &Batch,
+    seed: u32,
+    mu: f32,
+) -> f32 {
+    let mut scratch = Vec::new();
+    spsa_probe_scratch(model, w, &mut scratch, batch, seed, mu)
+}
+
+/// Apply the aggregated update `w -= step * z(seed)`; `step` folds the
+/// global sign/projection and the learning rate.
+pub fn apply_update(w: &mut [f32], seed: u32, step: f32) {
+    perturb_in_place(w, seed, -step);
+}
+
+/// One centralized ZO-SGD (MeZO) step; returns the projection.
+pub fn mezo_step<M: Model + ?Sized>(
+    model: &mut M,
+    w: &mut [f32],
+    batch: &Batch,
+    seed: u32,
+    mu: f32,
+    eta: f32,
+) -> f32 {
+    let p = spsa_probe(model, w, batch, seed, mu);
+    apply_update(w, seed, eta * p);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkit::nn::{LinearProbe, Model, ModelCfg, TransformerSim};
+    use crate::simkit::prng::Rng;
+
+    /// Linearly separable features: class c has +2 planted on coordinate c.
+    fn feature_batch(dim: usize, classes: usize, rows: usize, seed: u32) -> Batch {
+        let mut rng = Rng::new(seed, 0);
+        let mut x = vec![0.0f32; rows * dim];
+        let mut y = vec![0u32; rows];
+        for r in 0..rows {
+            let c = rng.below(classes);
+            y[r] = c as u32;
+            for j in 0..dim {
+                x[r * dim + j] = rng.normal() + if j == c { 2.0 } else { 0.0 };
+            }
+        }
+        Batch::Features { x, y, rows, dim }
+    }
+
+    #[test]
+    fn perturb_matches_normals_vec() {
+        let mut w = vec![0.0f32; 100];
+        perturb_in_place(&mut w, 42, 2.0);
+        let z = prng::normals_vec(42, 100);
+        for (a, b) in w.iter().zip(&z) {
+            assert!((a - 2.0 * b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn probe_restores_w() {
+        let mut model = LinearProbe::new(16, 4);
+        let w0 = model.init(0);
+        let mut w = w0.clone();
+        let batch = feature_batch(16, 4, 8, 1);
+        spsa_probe(&mut model, &mut w, &batch, 7, 1e-3);
+        assert_eq!(w, w0, "probe must leave the replica bit-identical");
+    }
+
+    #[test]
+    fn probe_approximates_gradient_projection() {
+        let mut model = LinearProbe::new(8, 3);
+        let mut w = model.init(0);
+        let batch = feature_batch(8, 3, 16, 2);
+        let mut grad = vec![0.0; w.len()];
+        model.loss_and_grad(&w.clone(), &batch, &mut grad);
+        for seed in 0..8u32 {
+            let p = spsa_probe(&mut model, &mut w, &batch, seed, 1e-4);
+            let z = prng::normals_vec(seed, w.len());
+            let exact = crate::simkit::ops::dot(&z, &grad);
+            assert!(
+                (p - exact).abs() < 0.05 * exact.abs().max(1.0),
+                "seed {seed}: spsa {p} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn update_inverse_roundtrip() {
+        let mut w = prng::normals_vec(3, 256);
+        let w0 = w.clone();
+        apply_update(&mut w, 9, 0.05);
+        apply_update(&mut w, 9, -0.05);
+        for (a, b) in w.iter().zip(&w0) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mezo_descends_on_probe() {
+        let mut model = LinearProbe::new(8, 3);
+        let mut w = model.init(0);
+        let batch = feature_batch(8, 3, 32, 4);
+        let l0 = model.loss(&w, &batch);
+        for t in 0..300 {
+            mezo_step(&mut model, &mut w, &batch, t, 1e-3, 1e-4);
+        }
+        let l1 = model.loss(&w, &batch);
+        assert!(l1 < l0 - 0.02, "MeZO failed to descend: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn mezo_descends_transformer() {
+        let cfg = ModelCfg::test_tiny();
+        let mut model = TransformerSim::new(cfg.clone());
+        let mut w = model.init(0);
+        let mut rng = Rng::new(5, 0);
+        let cols = cfg.seq_len + 1;
+        // low-entropy batch (repeated token pattern) so ZO makes progress fast
+        let data: Vec<u32> = (0..8 * cols).map(|i| ((i % 3) + 1) as u32).collect();
+        let batch = Batch::Tokens { data, rows: 8, cols };
+        let _ = rng.next_u32();
+        let l0 = model.loss(&w, &batch);
+        let mut best = l0;
+        for t in 0..400 {
+            mezo_step(&mut model, &mut w, &batch, t, 1e-3, 1e-4);
+            if t % 50 == 0 {
+                best = best.min(model.loss(&w, &batch));
+            }
+        }
+        let l1 = model.loss(&w, &batch);
+        best = best.min(l1);
+        assert!(best < l0, "transformer MeZO failed to descend: {l0} -> best {best}");
+    }
+}

@@ -1,0 +1,256 @@
+//! Convergence-theory calculators: the Theorem 3.11 rate/floor constants
+//! for FedSGD, ZO-FedSGD and FeedSign, Proposition D.5's Byzantine
+//! sign-reversing composition, Lemma 3.9's low-effective-rank factor zeta
+//! (Eq. 14) and Proposition E.2's p_{t,e} bound.
+//!
+//! These let tests and benches confront measured convergence curves with
+//! the paper's predictions (same rate *shape*, error-floor ordering under
+//! heterogeneity) and power the `feedsign theory` CLI subcommand.
+
+/// Problem constants shared by the three bounds.
+#[derive(Debug, Clone, Copy)]
+pub struct Constants {
+    /// L-smoothness (Assumption 3.4)
+    pub l_smooth: f32,
+    /// PL constant delta (Assumption 3.7)
+    pub delta: f32,
+    /// local effective rank r (Assumption 3.5)
+    pub r_eff: f32,
+    /// model dimension d
+    pub dim: f32,
+    /// SPSA samples n (paper uses 1)
+    pub n_spsa: f32,
+    /// batch-noise factor c_g and sigma_g (Assumption 3.6)
+    pub c_g: f32,
+    pub sigma_g: f32,
+    /// heterogeneity factors c_h and sigma_h (Assumption 3.6)
+    pub c_h: f32,
+    pub sigma_h: f32,
+    /// gradient-variance/optimality-gap coupling alpha (Eq. 11)
+    pub alpha: f32,
+    /// clients K, batch size B
+    pub k: f32,
+    pub b: f32,
+}
+
+impl Constants {
+    /// A plausible fine-tuning regime for sanity tests.
+    pub fn example() -> Self {
+        Constants {
+            l_smooth: 10.0,
+            delta: 0.5,
+            r_eff: 20.0,
+            dim: 1e6,
+            n_spsa: 1.0,
+            c_g: 1.2,
+            sigma_g: 1.0,
+            c_h: 0.2,
+            sigma_h: 0.5,
+            alpha: 1.0,
+            k: 5.0,
+            b: 16.0,
+        }
+    }
+}
+
+/// Eq. 14: zeta = (d r + d - 2) / (n (d + 2)) + 1 — the dimension-free
+/// variance inflation of SPSA under low effective rank.
+pub fn zeta(c: &Constants) -> f32 {
+    (c.dim * c.r_eff + c.dim - 2.0) / (c.n_spsa * (c.dim + 2.0)) + 1.0
+}
+
+/// Per-step contraction rate A and floor constant C; the error floor is
+/// `C / A` and the loss gap shrinks as `(1 - A)^t` (Theorem 3.11).
+#[derive(Debug, Clone, Copy)]
+pub struct RateFloor {
+    pub a: f32,
+    pub c: f32,
+}
+
+impl RateFloor {
+    pub fn error_floor(&self) -> f32 {
+        if self.a <= 0.0 {
+            f32::INFINITY
+        } else {
+            self.c / self.a
+        }
+    }
+
+    /// Steps to bring the gap within `eps` of the floor from `gap0`
+    /// (Eq. 15 solved for t).
+    pub fn steps_to(&self, gap0: f32, eps: f32) -> f32 {
+        if self.a <= 0.0 || self.a >= 1.0 {
+            return f32::INFINITY;
+        }
+        ((gap0 - self.error_floor()).max(eps) / eps).ln() / -(1.0f32 - self.a).ln()
+    }
+
+    pub fn converges(&self) -> bool {
+        self.a > 0.0 && self.a < 1.0
+    }
+}
+
+/// Eq. 16 — FedSGD (first-order).
+pub fn fedsgd(c: &Constants, eta: f32) -> RateFloor {
+    let a = 2.0 * c.delta * eta
+        - c.l_smooth * c.delta * eta * eta * c.c_g * (1.0 + c.c_h)
+        - c.l_smooth * c.alpha * c.sigma_g * c.sigma_g * eta * eta / (c.k * c.b);
+    let cc = c.l_smooth * c.c_g * c.sigma_h * c.sigma_h * eta * eta / 2.0;
+    RateFloor { a, c: cc }
+}
+
+/// Eq. 17 — ZO-FedSGD: FedSGD with every quadratic term inflated by zeta.
+pub fn zo_fedsgd(c: &Constants, eta: f32) -> RateFloor {
+    let z = zeta(c);
+    let a = 2.0 * c.delta * eta
+        - c.l_smooth * z * c.delta * eta * eta * c.c_g * (1.0 + c.c_h)
+        - c.l_smooth * z * c.alpha * c.sigma_g * c.sigma_g * eta * eta / (c.k * c.b);
+    let cc = c.l_smooth * z * c.c_g * c.sigma_h * c.sigma_h * eta * eta / 2.0;
+    RateFloor { a, c: cc }
+}
+
+/// Eq. 18 — FeedSign: rate scales with (1 - 2 p_t); the floor `L r eta²/2`
+/// is **independent of the heterogeneity constants** (Remark 3.13).
+pub fn feedsign(c: &Constants, eta: f32, p_max: f32) -> RateFloor {
+    let a = 2.0 * (2.0 / std::f32::consts::PI).sqrt() * c.delta * eta * eta
+        * (1.0 - 2.0 * p_max);
+    let cc = c.l_smooth * c.r_eff * eta * eta / 2.0;
+    RateFloor { a, c: cc }
+}
+
+/// Proposition D.5: overall sign-reversing probability under Byzantine
+/// fraction `p_b` and inherent batch error `p_e`.
+pub fn byzantine_sign_error(p_e: f32, p_b: f32) -> f32 {
+    p_e + p_b - p_e * p_b
+}
+
+/// Proposition E.2 / Assumption 3.8: for a symmetric batch-projection
+/// distribution, the inherent sign-reversing probability is `F(0) <= 1/2`.
+/// Model the projection as N(true_proj, noise²) and return p_{t,e}.
+pub fn inherent_sign_error(true_projection: f32, batch_noise: f32) -> f32 {
+    if batch_noise <= 0.0 {
+        return if true_projection == 0.0 { 0.5 } else { 0.0 };
+    }
+    // P(sign flip) = P(p_hat has opposite sign) = Phi(-|mu|/sigma)
+    let zscore = true_projection.abs() / batch_noise;
+    0.5 * erfc_approx(zscore / std::f32::consts::SQRT_2)
+}
+
+/// Abramowitz–Stegun complementary error function (max err ~1.5e-7).
+fn erfc_approx(x: f32) -> f32 {
+    let t = 1.0 / (1.0 + 0.327_591_1 * x.abs());
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736
+                + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    let e = poly * (-x * x).exp();
+    if x >= 0.0 {
+        e
+    } else {
+        2.0 - e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeta_tracks_effective_rank_not_dim() {
+        // Lemma 3.9's point: zeta ~ O(r), not O(d)
+        let mut c = Constants::example();
+        c.dim = 1e6;
+        c.r_eff = 20.0;
+        let z1 = zeta(&c);
+        c.dim = 1e9;
+        let z2 = zeta(&c);
+        assert!((z1 - z2).abs() / z1 < 0.01, "zeta should be ~dim-free");
+        assert!(z1 > c.r_eff * 0.9 && z1 < c.r_eff * 1.3, "zeta ~ r: {z1}");
+    }
+
+    #[test]
+    fn fedsgd_converges_small_eta() {
+        let c = Constants::example();
+        let rf = fedsgd(&c, 1e-3);
+        assert!(rf.converges(), "A = {}", rf.a);
+        // floor = C/A shrinks linearly with eta for FO
+        assert!(rf.error_floor() < fedsgd(&c, 1e-2).error_floor());
+        assert!(rf.error_floor() < 0.01);
+    }
+
+    #[test]
+    fn zo_needs_smaller_eta_than_fo() {
+        // with zeta >> 1, the eta window for A > 0 shrinks by ~zeta
+        let c = Constants::example();
+        let eta = 0.05;
+        let fo = fedsgd(&c, eta);
+        let zo = zo_fedsgd(&c, eta);
+        assert!(fo.a > 0.0);
+        assert!(zo.a < 0.0, "ZO should diverge at FO's eta (zeta inflation)");
+        assert!(zo_fedsgd(&c, eta / zeta(&c)).a > 0.0);
+    }
+
+    #[test]
+    fn feedsign_floor_heterogeneity_independent() {
+        // Remark 3.13: crank sigma_h/c_g — ZO-FedSGD floor grows, FeedSign floor fixed
+        let mut c = Constants::example();
+        let eta = 1e-3;
+        let fs1 = feedsign(&c, eta, 0.2);
+        let zo1 = zo_fedsgd(&c, eta);
+        c.sigma_h = 10.0;
+        c.c_g = 3.0;
+        let fs2 = feedsign(&c, eta, 0.2);
+        let zo2 = zo_fedsgd(&c, eta);
+        assert_eq!(fs1.c, fs2.c, "FeedSign floor must ignore heterogeneity");
+        assert!(zo2.c > zo1.c * 10.0, "ZO floor must grow with heterogeneity");
+    }
+
+    #[test]
+    fn feedsign_rate_dies_at_p_half()
+    {
+        let c = Constants::example();
+        assert!(feedsign(&c, 1e-3, 0.5).a.abs() < 1e-12);
+        assert!(feedsign(&c, 1e-3, 0.2).a > 0.0);
+        assert!(feedsign(&c, 1e-3, 0.6).a < 0.0, "adversarial majority diverges");
+    }
+
+    #[test]
+    fn byzantine_composition_props() {
+        // no byzantine: p = p_e; all byzantine: p = 1 - ... monotone in both
+        assert_eq!(byzantine_sign_error(0.3, 0.0), 0.3);
+        assert_eq!(byzantine_sign_error(0.0, 0.2), 0.2);
+        let p1 = byzantine_sign_error(0.3, 0.2);
+        assert!(p1 > 0.3 && p1 < 0.5);
+        // exceeding 1/2 once p_b crosses the honest margin
+        assert!(byzantine_sign_error(0.3, 0.4) > 0.5);
+    }
+
+    #[test]
+    fn inherent_error_bounded_half() {
+        for &(p, s) in &[(0.5f32, 1.0f32), (0.1, 2.0), (3.0, 0.5), (0.0, 1.0)] {
+            let e = inherent_sign_error(p, s);
+            assert!((0.0..=0.5 + 1e-6).contains(&e), "p_e = {e}");
+        }
+        // strong signal: near 0; no signal: exactly 1/2
+        assert!(inherent_sign_error(5.0, 0.1) < 1e-6);
+        assert!((inherent_sign_error(0.0, 1.0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn steps_to_epsilon_decreasing_in_rate() {
+        let c = Constants::example();
+        let fast = fedsgd(&c, 2e-3);
+        let slow = fedsgd(&c, 5e-4);
+        assert!(fast.steps_to(1.0, 1e-2) < slow.steps_to(1.0, 1e-2));
+        // FeedSign: per Eq. 18 both A and C scale with eta^2, so the floor
+        // is eta-independent but the *rate* still improves with eta
+        assert!(feedsign(&c, 2e-3, 0.1).a > feedsign(&c, 1e-3, 0.1).a);
+    }
+
+    #[test]
+    fn erfc_sane() {
+        assert!((erfc_approx(0.0) - 1.0).abs() < 1e-5);
+        assert!(erfc_approx(3.0) < 1e-4);
+        assert!((erfc_approx(-3.0) - 2.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree replacements for crates the offline build environment lacks:
+//! a JSON parser/writer ([`json`]) for the artifacts manifest and metric
+//! dumps, a TOML-subset parser ([`toml_lite`]) for experiment configs, and
+//! a randomized property-testing harness ([`proptest_lite`]) built on the
+//! crate's own Philox RNG.
+
+pub mod json;
+pub mod proptest_lite;
+pub mod toml_lite;

@@ -1,0 +1,102 @@
+//! Randomized property testing on the crate's own Philox RNG (the offline
+//! environment has no proptest).  Each property runs `CASES` randomized
+//! cases; failures report the case seed so the exact input reproduces with
+//! `Gen::new(seed)`.
+
+use crate::simkit::prng::Rng;
+
+pub const CASES: u32 = 64;
+
+/// A deterministic random input generator for one test case.
+pub struct Gen {
+    pub rng: Rng,
+    pub case_seed: u32,
+}
+
+impl Gen {
+    pub fn new(case_seed: u32) -> Self {
+        Gen { rng: Rng::new(case_seed, 0x9E57), case_seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.rng.below(hi - lo)
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.uniform()
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal()).collect()
+    }
+
+    pub fn signs(&mut self, len: usize) -> Vec<i8> {
+        (0..len)
+            .map(|_| if self.rng.uniform() < 0.5 { 1 } else { -1 })
+            .collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.uniform() < 0.5
+    }
+}
+
+/// Run `property` for [`CASES`] deterministic cases; panics with the case
+/// seed on the first failure.
+pub fn check(name: &str, mut property: impl FnMut(&mut Gen)) {
+    for case in 0..CASES {
+        let seed = 0xABCD_0000 ^ case;
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut g);
+        }));
+        if let Err(payload) = result {
+            eprintln!("property {name:?} failed at case {case} (Gen seed {seed:#x})");
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_is_deterministic() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        assert_eq!(a.u32(), b.u32());
+        assert_eq!(a.vec_f32(5, 0.0, 1.0), b.vec_f32(5, 0.0, 1.0));
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        check("usize_in bounds", |g| {
+            let v = g.usize_in(3, 10);
+            assert!((3..10).contains(&v));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("always fails", |_| panic!("boom"));
+    }
+
+    #[test]
+    fn signs_are_pm_one() {
+        check("signs", |g| {
+            let s = g.signs(16);
+            assert!(s.iter().all(|&v| v == 1 || v == -1));
+        });
+    }
+}

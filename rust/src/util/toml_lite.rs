@@ -1,0 +1,242 @@
+//! A TOML subset for experiment configs: `[section]` headers and
+//! `key = value` pairs with string / integer / float / boolean values.
+//! Dotted keys inside sections are not needed — the config schema is flat
+//! per section (see `configs/*.toml`).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A scalar config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `sections[""]` holds top-level keys.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected `key = value`", lineno + 1);
+            };
+            let key = line[..eq].trim().to_string();
+            let value = parse_value(line[eq + 1..].trim())
+                .with_context(|| format!("line {}", lineno + 1))?;
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            doc.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn str(&self, section: &str, key: &str) -> Option<String> {
+        self.get(section, key).and_then(|v| v.as_str()).map(str::to_string)
+    }
+
+    pub fn int(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key).and_then(Value::as_i64)
+    }
+
+    pub fn float(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key).and_then(Value::as_f64)
+    }
+
+    pub fn bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key).and_then(Value::as_bool)
+    }
+
+    /// Serialize back to text (stable ordering).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if let Some(top) = self.sections.get("") {
+            for (k, v) in top {
+                out.push_str(&format!("{k} = {}\n", render_value(v)));
+            }
+        }
+        for (name, sec) in &self.sections {
+            if name.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("\n[{name}]\n"));
+            for (k, v) in sec {
+                out.push_str(&format!("{k} = {}\n", render_value(v)));
+            }
+        }
+        out
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, value: Value) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value);
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value> {
+    if let Some(rest) = text.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            bail!("unterminated string: {text:?}");
+        };
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if !text.contains(['.', 'e', 'E']) {
+        if let Ok(i) = text.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {text:?}")
+}
+
+fn render_value(v: &Value) -> String {
+    match v {
+        Value::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => {
+            if f.fract() == 0.0 {
+                format!("{f:.1}")
+            } else {
+                format!("{f}")
+            }
+        }
+        Value::Bool(b) => b.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+name = "exp1"   # a comment
+rounds = 2000
+eta = 2e-3
+verbose = true
+
+[model]
+kind = "linear-probe"
+dim = 128
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let d = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str("", "name").as_deref(), Some("exp1"));
+        assert_eq!(d.int("", "rounds"), Some(2000));
+        assert!((d.float("", "eta").unwrap() - 2e-3).abs() < 1e-12);
+        assert_eq!(d.bool("", "verbose"), Some(true));
+        assert_eq!(d.str("model", "kind").as_deref(), Some("linear-probe"));
+        assert_eq!(d.int("model", "dim"), Some(128));
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let d = Doc::parse(r##"s = "a#b" # trailing"##).unwrap();
+        assert_eq!(d.str("", "s").as_deref(), Some("a#b"));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let d = Doc::parse(SAMPLE).unwrap();
+        let text = d.render();
+        let d2 = Doc::parse(&text).unwrap();
+        assert_eq!(d.str("model", "kind"), d2.str("model", "kind"));
+        assert_eq!(d.int("", "rounds"), d2.int("", "rounds"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Doc::parse("[open").is_err());
+        assert!(Doc::parse("novalue").is_err());
+        assert!(Doc::parse("k = \"open").is_err());
+        assert!(Doc::parse("k = what").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let d = Doc::parse("a = 3\nb = 3.0\n").unwrap();
+        assert_eq!(d.get("", "a"), Some(&Value::Int(3)));
+        assert_eq!(d.get("", "b"), Some(&Value::Float(3.0)));
+        // floats readable as f64 from ints too
+        assert_eq!(d.float("", "a"), Some(3.0));
+    }
+}

@@ -1,0 +1,226 @@
+//! Cross-module integration tests: config -> session -> metrics -> orbit
+//! pipelines, algorithm behaviour contrasts, and protocol invariants that
+//! only show up when the whole coordinator runs.
+
+use feedsign::config::{quickstart, ExperimentConfig, ModelSpec, TaskSpec};
+use feedsign::coordinator::{Algorithm, Attack};
+use feedsign::orbit;
+
+fn vision_cfg(algorithm: &str, rounds: u64) -> ExperimentConfig {
+    let mut cfg = quickstart();
+    cfg.algorithm = algorithm.into();
+    cfg.rounds = rounds;
+    cfg.eval_every = 0;
+    cfg.verbose = false;
+    if algorithm == "mezo" {
+        cfg.clients = 1;
+    }
+    cfg
+}
+
+fn lm_cfg(algorithm: &str, rounds: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "itest-lm".into(),
+        model: ModelSpec::Transformer { vocab: 48, d_model: 16, n_layers: 1, n_heads: 2, seq_len: 12 },
+        task: TaskSpec::SynthLm { name: "synth-sst2".into(), train: 256, test: 128 },
+        algorithm: algorithm.into(),
+        clients: if algorithm == "mezo" { 1 } else { 3 },
+        rounds,
+        eta: 1e-3,
+        mu: 1e-3,
+        batch_size: 8,
+        eval_every: 0,
+        eval_batches: 2,
+        eval_batch_size: 32,
+        dirichlet_beta: None,
+        byzantine_count: 0,
+        attack: None,
+        c_g_noise: 0.0,
+        pretrain_rounds: 0,
+        seed: 1,
+        verbose: false,
+    }
+}
+
+#[test]
+fn every_algorithm_runs_and_learns_vision() {
+    for algo in ["feedsign", "zo-fedsgd", "mezo", "dp-feedsign:20.0"] {
+        let mut session = vision_cfg(algo, 800).build_session().unwrap();
+        let (l0, _) = session.evaluate();
+        let result = session.run();
+        assert!(
+            result.final_loss < l0,
+            "{algo} failed to learn: {l0} -> {}",
+            result.final_loss
+        );
+        assert!(session.replicas_synchronized(), "{algo} desynchronized replicas");
+    }
+}
+
+#[test]
+fn fedsgd_baseline_dominates_zo_in_few_rounds() {
+    // FO moves much faster per round (its comm budget is 32d bits/step)
+    let mut fo = vision_cfg("fedsgd", 150).build_session().unwrap();
+    fo.cfg.eta = 0.1;
+    let fo_result = fo.run();
+    let mut zo = vision_cfg("feedsign", 150).build_session().unwrap();
+    let zo_result = zo.run();
+    assert!(fo_result.final_acc > zo_result.final_acc, "FO should win at equal (tiny) round budget");
+}
+
+#[test]
+fn lm_pipeline_learns_task() {
+    let mut session = lm_cfg("feedsign", 1200).build_session().unwrap();
+    session.cfg.eta = 1e-3;
+    let (l0, a0) = session.evaluate();
+    let result = session.run();
+    assert!(result.final_loss < l0, "LM loss {l0} -> {}", result.final_loss);
+    let _ = a0;
+}
+
+#[test]
+fn comm_ledger_eq5_accounting_across_algorithms() {
+    // Eq. 5: FeedSign 1 bit, ZO-FedSGD 64 bits per client-step uplink
+    for (algo, per_step_up) in [("feedsign", 1u64), ("zo-fedsgd", 64u64)] {
+        let mut session = vision_cfg(algo, 50).build_session().unwrap();
+        for t in 0..50 {
+            session.step(t);
+        }
+        assert_eq!(session.ledger.uplink_bits, 50 * 5 * per_step_up, "{algo}");
+    }
+}
+
+#[test]
+fn orbit_roundtrips_through_disk_format_and_replays() {
+    let mut session = vision_cfg("feedsign", 300).build_session().unwrap();
+    let result = session.run();
+    let bytes = orbit::encode(&session.orbit);
+    // 300 signs bit-packed: well under 100 bytes + header
+    assert!(bytes.len() < 100, "orbit {} bytes", bytes.len());
+    let decoded = orbit::decode(&bytes).unwrap();
+    let mut w = session.clients[0].engine.init_params(session.cfg.seed);
+    decoded.replay(&mut w);
+    assert_eq!(w, session.clients[0].w, "disk-roundtripped orbit must replay exactly");
+    let _ = result;
+}
+
+#[test]
+fn zo_fedsgd_orbit_replays_exactly_too() {
+    let mut session = vision_cfg("zo-fedsgd", 200).build_session().unwrap();
+    session.run();
+    let decoded = orbit::decode(&orbit::encode(&session.orbit)).unwrap();
+    let mut w = session.clients[0].engine.init_params(session.cfg.seed);
+    decoded.replay(&mut w);
+    assert_eq!(w, session.clients[0].w);
+}
+
+#[test]
+fn byzantine_minority_cannot_stop_feedsign() {
+    // 2 of 5 sign-flippers: majority still honest, learning proceeds
+    let mut cfg = vision_cfg("feedsign", 1200);
+    cfg.byzantine_count = 2;
+    cfg.attack = Some("sign-flip".into());
+    let mut session = cfg.build_session().unwrap();
+    let (l0, _) = session.evaluate();
+    let result = session.run();
+    assert!(result.final_loss < l0, "2/5 byzantine should not stop FeedSign");
+}
+
+#[test]
+fn byzantine_majority_stops_feedsign() {
+    // 3 of 5 sign-flippers: p_t > 1/2, the model must NOT learn (Prop D.5)
+    let mut cfg = vision_cfg("feedsign", 800);
+    cfg.byzantine_count = 3;
+    cfg.attack = Some("sign-flip".into());
+    let mut session = cfg.build_session().unwrap();
+    let (l0, _) = session.evaluate();
+    let result = session.run();
+    assert!(
+        result.final_loss >= l0 - 0.05,
+        "adversarial majority should reverse/stall: {l0} -> {}",
+        result.final_loss
+    );
+}
+
+#[test]
+fn random_projection_attack_hurts_zo_more_than_sign_flip_hurts_feedsign() {
+    let rounds = 1500;
+    let run = |algo: &str, attack: Option<&str>| {
+        let mut cfg = vision_cfg(algo, rounds);
+        cfg.byzantine_count = usize::from(attack.is_some());
+        cfg.attack = attack.map(Into::into);
+        cfg.build_session().unwrap().run().final_acc
+    };
+    let zo_clean = run("zo-fedsgd", None);
+    let zo_attacked = run("zo-fedsgd", Some("random-projection:20.0"));
+    let fs_clean = run("feedsign", None);
+    let fs_attacked = run("feedsign", Some("sign-flip"));
+    let zo_drop = zo_clean - zo_attacked;
+    let fs_drop = fs_clean - fs_attacked;
+    assert!(
+        zo_drop > fs_drop,
+        "zo drop {zo_drop} should exceed feedsign drop {fs_drop}"
+    );
+}
+
+#[test]
+fn dp_epsilon_orders_convergence() {
+    // Remark D.3: smaller eps -> slower convergence (noisier votes)
+    let run = |eps: f32| {
+        let mut cfg = vision_cfg(&format!("dp-feedsign:{eps}"), 1000);
+        cfg.seed = 3;
+        cfg.build_session().unwrap().run().final_loss
+    };
+    let tight = run(0.05); // nearly a fair coin
+    let loose = run(20.0); // nearly the plain majority
+    assert!(loose < tight - 0.1, "eps=20 loss {loose} should beat eps=0.05 loss {tight}");
+}
+
+#[test]
+fn heterogeneity_degrades_zo_fedsgd() {
+    let run = |beta: Option<f32>, noise: f32| {
+        let mut cfg = vision_cfg("zo-fedsgd", 1200);
+        cfg.dirichlet_beta = beta;
+        cfg.c_g_noise = noise;
+        cfg.build_session().unwrap().run().final_loss
+    };
+    let iid = run(None, 0.0);
+    let skewed = run(Some(0.1), 2.0);
+    assert!(skewed > iid - 0.02, "high skew + projection noise should not improve ZO: {iid} vs {skewed}");
+}
+
+#[test]
+fn config_file_roundtrip_drives_identical_run() {
+    let cfg = vision_cfg("feedsign", 60);
+    let text = cfg.to_toml();
+    let parsed = ExperimentConfig::from_toml(&text).unwrap();
+    assert_eq!(parsed.algorithm(), Algorithm::FeedSign);
+    let r1 = cfg.build_session().unwrap().run();
+    let r2 = parsed.build_session().unwrap().run();
+    assert_eq!(r1.final_loss, r2.final_loss, "TOML roundtrip changed the run");
+    assert_eq!(r1.ledger.uplink_bits, r2.ledger.uplink_bits);
+}
+
+#[test]
+fn attack_parse_matrix() {
+    for (s, expect) in [
+        ("sign-flip", Attack::SignFlip),
+        ("random-projection:2.5", Attack::RandomProjection { scale: 2.5 }),
+        ("label-flip", Attack::LabelFlip),
+    ] {
+        assert_eq!(Attack::parse(s), Some(expect));
+    }
+}
+
+#[test]
+fn mezo_equals_k1_feedsign_with_projection_scaling() {
+    // structural check: a K=1 FeedSign vote is just Sign(p); the two runs
+    // differ only in step magnitude (eta vs eta*|p|), so both must learn.
+    let mut fs = vision_cfg("feedsign", 600);
+    fs.clients = 1;
+    let fs_result = fs.build_session().unwrap().run();
+    let mezo_result = vision_cfg("mezo", 600).build_session().unwrap().run();
+    let (init_loss, _) = vision_cfg("mezo", 1).build_session().unwrap().evaluate();
+    assert!(fs_result.final_loss < init_loss);
+    assert!(mezo_result.final_loss < init_loss);
+}

@@ -1,0 +1,173 @@
+//! PJRT <-> native-substrate parity: the two engines must agree on the
+//! protocol-critical quantities.  These tests exercise the full AOT
+//! artifact path (HLO text -> compile -> execute) and are skipped when
+//! `artifacts/` has not been built (`make artifacts`).
+
+use feedsign::data::{corpus, Batch};
+use feedsign::runtime::{artifacts_available, artifacts_dir, PjrtModel};
+use feedsign::simkit::nn::{Model, ModelCfg, TransformerSim};
+use feedsign::simkit::prng;
+
+fn load_tiny() -> Option<PjrtModel> {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(PjrtModel::load(&artifacts_dir(), "tiny").expect("load tiny"))
+}
+
+fn token_batch(model: &PjrtModel, rows: usize, seed: u32) -> Batch {
+    let cols = model.entry.seq_len + 1;
+    let d = corpus::generate(
+        &corpus::GrammarSpec::default(),
+        model.entry.vocab,
+        model.entry.seq_len,
+        rows,
+        seed,
+    );
+    d.gather(&(0..rows).collect::<Vec<_>>())
+}
+
+#[test]
+fn zvec_matches_rust_philox() {
+    let Some(model) = load_tiny() else { return };
+    for seed in [0u32, 1, 42, 9999] {
+        let z_pjrt = model.zvec(seed).expect("zvec");
+        let z_rust = prng::normals_vec(seed, model.entry.padded_size);
+        assert_eq!(z_pjrt.len(), z_rust.len());
+        let max_dev = z_pjrt
+            .iter()
+            .zip(&z_rust)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_dev < 1e-5, "seed {seed}: kernel z deviates by {max_dev}");
+    }
+}
+
+#[test]
+fn init_params_match_python_reference_stats() {
+    let Some(model) = load_tiny() else { return };
+    let w = model.init_params(0);
+    assert_eq!(w.len(), model.entry.padded_size);
+    // embedding block: std 0.02 normals
+    let embed = &w[..model.entry.vocab * model.entry.d_model];
+    let mean: f32 = embed.iter().sum::<f32>() / embed.len() as f32;
+    let var: f32 = embed.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / embed.len() as f32;
+    assert!(mean.abs() < 2e-3, "embed mean {mean}");
+    assert!((var.sqrt() - 0.02).abs() < 2e-3, "embed std {}", var.sqrt());
+    // pad tail zeros
+    assert!(w[model.entry.n_params..].iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn loss_matches_native_transformer() {
+    let Some(model) = load_tiny() else { return };
+    let e = &model.entry;
+    let cfg = ModelCfg::new(e.vocab, e.d_model, e.n_layers, e.n_heads, e.seq_len);
+    let mut native = TransformerSim::new(cfg);
+    let w = model.init_params(3);
+    let batch = token_batch(&model, e.batch_eval, 5);
+    let l_pjrt = model.loss(&w, &batch).expect("loss");
+    let l_native = native.loss(&w, &batch);
+    assert!(
+        (l_pjrt - l_native).abs() < 2e-3,
+        "loss mismatch: pjrt {l_pjrt} vs native {l_native}"
+    );
+}
+
+#[test]
+fn eval_accuracy_matches_native() {
+    let Some(model) = load_tiny() else { return };
+    let e = &model.entry;
+    let cfg = ModelCfg::new(e.vocab, e.d_model, e.n_layers, e.n_heads, e.seq_len);
+    let mut native = TransformerSim::new(cfg);
+    let w = model.init_params(1);
+    let batch = token_batch(&model, e.batch_eval, 6);
+    let (_, c_pjrt) = model.eval(&w, &batch).expect("eval");
+    let (_, c_native) = native.eval(&w, &batch);
+    assert_eq!(c_pjrt, c_native, "argmax accuracy must agree");
+}
+
+#[test]
+fn probe_sign_agrees_with_native() {
+    // The 1-bit vote is the protocol payload: both engines must produce
+    // the same sign for the same (w, batch, seed, mu) whenever the
+    // projection is not borderline.
+    let Some(model) = load_tiny() else { return };
+    let e = &model.entry;
+    let cfg = ModelCfg::new(e.vocab, e.d_model, e.n_layers, e.n_heads, e.seq_len);
+    let mut native = TransformerSim::new(cfg);
+    let w = model.init_params(2);
+    let batch = token_batch(&model, e.batch_probe, 7);
+    let mut agree = 0;
+    let mut checked = 0;
+    for seed in 0..12u32 {
+        let p_pjrt = model.spsa_probe(&w, &batch, seed, 1e-3).expect("probe");
+        let mut w_native = w.clone();
+        let p_native = feedsign::simkit::zo::spsa_probe(
+            &mut native,
+            &mut w_native,
+            &batch,
+            seed,
+            1e-3,
+        );
+        // relative agreement on the value...
+        assert!(
+            (p_pjrt - p_native).abs() < 0.05 * p_native.abs().max(0.5),
+            "seed {seed}: pjrt {p_pjrt} vs native {p_native}"
+        );
+        // ...and on the vote when not borderline
+        if p_native.abs() > 0.02 {
+            checked += 1;
+            if (p_pjrt >= 0.0) == (p_native >= 0.0) {
+                agree += 1;
+            }
+        }
+    }
+    assert!(checked >= 6, "too few decisive probes");
+    assert_eq!(agree, checked, "vote disagreement between engines");
+}
+
+#[test]
+fn update_matches_native_axpy() {
+    let Some(model) = load_tiny() else { return };
+    let mut w_pjrt = model.init_params(4);
+    let mut w_native = w_pjrt.clone();
+    model.update(&mut w_pjrt, 11, 5e-3).expect("update");
+    feedsign::simkit::zo::apply_update(&mut w_native, 11, 5e-3);
+    let max_dev = w_pjrt
+        .iter()
+        .zip(&w_native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dev < 1e-6, "update deviates by {max_dev}");
+}
+
+#[test]
+fn fo_step_reduces_loss_through_artifacts() {
+    let Some(model) = load_tiny() else { return };
+    let mut w = model.init_params(5);
+    let batch = token_batch(&model, model.entry.batch_probe, 8);
+    let l0 = model.fo_step(&mut w, &batch, 0.25).expect("fo");
+    for _ in 0..5 {
+        model.fo_step(&mut w, &batch, 0.25).expect("fo");
+    }
+    let l1 = model.fo_step(&mut w, &batch, 0.0).expect("fo");
+    assert!(l1 < l0, "FO through artifacts must descend: {l0} -> {l1}");
+}
+
+#[test]
+fn grad_proj_close_to_spsa_probe() {
+    // Lemma 3.9 territory: the probe converges to the jvp as mu -> 0
+    let Some(model) = load_tiny() else { return };
+    let w = model.init_params(6);
+    let batch = token_batch(&model, model.entry.batch_probe, 9);
+    for seed in [0u32, 3, 8] {
+        let exact = model.grad_proj(&w, &batch, seed).expect("jvp");
+        let probe = model.spsa_probe(&w, &batch, seed, 1e-4).expect("probe");
+        assert!(
+            (exact - probe).abs() < 0.05 * exact.abs().max(0.5),
+            "seed {seed}: jvp {exact} vs probe {probe}"
+        );
+    }
+}

@@ -1,0 +1,274 @@
+//! Randomized property tests (proptest_lite harness) over the protocol
+//! invariants the paper's guarantees rest on.
+
+use feedsign::comm::{Ledger, Message};
+use feedsign::coordinator::aggregation::{dp_vote, majority_sign, mean_projection};
+use feedsign::data::partition::{split, Partition};
+use feedsign::data::vision::{generate, SYNTH_CIFAR10};
+use feedsign::orbit::{decode, encode, Orbit, OrbitEntry};
+use feedsign::simkit::ops;
+use feedsign::simkit::prng::{normals_vec, philox4x32, Rng};
+use feedsign::simkit::zo;
+use feedsign::util::proptest_lite::{check, Gen};
+
+#[test]
+fn prop_majority_vote_permutation_invariant() {
+    check("vote permutation invariance", |g: &mut Gen| {
+        let k = g.usize_in(1, 30);
+        let mut signs = g.signs(k);
+        let before = majority_sign(&signs);
+        g.rng.shuffle(&mut signs);
+        assert_eq!(majority_sign(&signs), before);
+    });
+}
+
+#[test]
+fn prop_majority_vote_antisymmetric_on_odd_pools() {
+    check("vote antisymmetry", |g: &mut Gen| {
+        // odd K only: even K has the tie convention
+        let k = g.usize_in(0, 15) * 2 + 1;
+        let signs = g.signs(k);
+        let flipped: Vec<i8> = signs.iter().map(|s| -s).collect();
+        assert_eq!(majority_sign(&signs), -majority_sign(&flipped));
+    });
+}
+
+#[test]
+fn prop_mean_projection_linear_in_scale() {
+    check("mean projection scaling", |g: &mut Gen| {
+        let n = g.usize_in(1, 20);
+        let ps = g.vec_f32(n, -5.0, 5.0);
+        let scaled: Vec<f32> = ps.iter().map(|p| 2.0 * p).collect();
+        assert!((mean_projection(&scaled) - 2.0 * mean_projection(&ps)).abs() < 1e-4);
+    });
+}
+
+#[test]
+fn prop_orbit_encode_decode_roundtrip() {
+    check("orbit roundtrip", |g: &mut Gen| {
+        let mut orbit = Orbit::new(
+            if g.bool() { "feedsign" } else { "zo-fedsgd" },
+            g.u32(),
+            g.f32_in(1e-6, 1e-1),
+        );
+        let n = g.usize_in(0, 200);
+        let homogeneous = g.bool();
+        for _ in 0..n {
+            if homogeneous || g.bool() {
+                orbit.push_sign(if g.bool() { 1 } else { -1 });
+            } else {
+                let pairs = (0..g.usize_in(1, 6))
+                    .map(|_| (g.u32() & 0x7FFF_FFFF, g.f32_in(-3.0, 3.0)))
+                    .collect();
+                orbit.push_pairs(pairs);
+            }
+        }
+        let back = decode(&encode(&orbit)).expect("roundtrip");
+        assert_eq!(back.entries, orbit.entries);
+        assert_eq!(back.init_seed, orbit.init_seed);
+        assert_eq!(back.eta, orbit.eta);
+        assert_eq!(back.algorithm, orbit.algorithm);
+    });
+}
+
+#[test]
+fn prop_orbit_sign_entries_cost_one_bit() {
+    check("orbit 1 bit/step", |g: &mut Gen| {
+        let n = g.usize_in(1, 4000);
+        let mut orbit = Orbit::new("feedsign", 0, 1e-3);
+        for _ in 0..n {
+            orbit.push_sign(if g.bool() { 1 } else { -1 });
+        }
+        let bytes = encode(&orbit).len();
+        let header = 32; // magic+version+name+seed+eta+count+flag upper bound
+        assert!(bytes <= n.div_ceil(8) + header, "{n} steps -> {bytes} bytes");
+    });
+}
+
+#[test]
+fn prop_replay_matches_incremental_updates() {
+    check("orbit replay == live updates", |g: &mut Gen| {
+        let d = g.usize_in(8, 256) & !3;
+        let eta = g.f32_in(1e-4, 1e-2);
+        let mut w = g.vec_normal(d);
+        let w0 = w.clone();
+        let mut orbit = Orbit::new("feedsign", 0, eta);
+        for t in 0..g.usize_in(1, 60) {
+            let s = if g.bool() { 1i8 } else { -1 };
+            zo::apply_update(&mut w, t as u32, s as f32 * eta);
+            orbit.push_sign(s);
+        }
+        let mut replayed = w0;
+        orbit.replay(&mut replayed);
+        assert_eq!(replayed, w);
+    });
+}
+
+#[test]
+fn prop_orbit_mixed_replay_matches() {
+    check("mixed orbit replay", |g: &mut Gen| {
+        let d = 64usize;
+        let eta = 1e-3f32;
+        let mut w = g.vec_normal(d);
+        let w0 = w.clone();
+        let mut orbit = Orbit::new("zo-fedsgd", 0, eta);
+        for t in 0..20u32 {
+            if g.bool() {
+                let s = if g.bool() { 1i8 } else { -1 };
+                // NOTE: replay uses the entry *index* as the seed for signs
+                zo::apply_update(&mut w, orbit.entries.len() as u32, s as f32 * eta);
+                orbit.push_sign(s);
+            } else {
+                let pairs: Vec<(u32, f32)> = (0..g.usize_in(1, 4))
+                    .map(|_| (g.u32() & 0x7FFF_FFFF, g.f32_in(-2.0, 2.0)))
+                    .collect();
+                let k = pairs.len() as f32;
+                for &(seed, p) in &pairs {
+                    zo::apply_update(&mut w, seed, eta * p / k);
+                }
+                orbit.push_pairs(pairs);
+            }
+            let _ = t;
+        }
+        let mut replayed = w0;
+        orbit.replay(&mut replayed);
+        assert_eq!(replayed, w);
+    });
+}
+
+#[test]
+fn prop_dirichlet_split_is_partition() {
+    let data = generate(&SYNTH_CIFAR10, 400, 0);
+    check("dirichlet partition", |g: &mut Gen| {
+        let k = g.usize_in(2, 30);
+        let beta = g.f32_in(0.05, 20.0);
+        let shards = split(&data, k, Partition::Dirichlet { beta }, g.u32());
+        let mut seen = vec![false; data.len()];
+        for s in &shards {
+            assert!(!s.is_empty());
+            for &i in &s.indices {
+                assert!(!seen[i], "duplicate assignment");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "unassigned sample");
+    });
+}
+
+#[test]
+fn prop_philox_streams_reproducible_and_distinct() {
+    check("philox reproducibility", |g: &mut Gen| {
+        let seed = g.u32();
+        let ctr = g.u32();
+        assert_eq!(philox4x32(seed, ctr), philox4x32(seed, ctr));
+        assert_ne!(philox4x32(seed, ctr), philox4x32(seed ^ 1, ctr));
+    });
+}
+
+#[test]
+fn prop_axpy_into_matches_scalar_reference() {
+    check("axpy reference", |g: &mut Gen| {
+        let n = g.usize_in(4, 300);
+        let w = g.vec_normal(n);
+        let seed = g.u32() & 0x7FFF_FFFF;
+        let scale = g.f32_in(-2.0, 2.0);
+        let mut out = vec![0.0; n];
+        zo::axpy_into(&w, &mut out, seed, scale);
+        let z = normals_vec(seed, n);
+        for i in 0..n {
+            assert_eq!(out[i], w[i] + scale * z[i], "elem {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_ledger_additive_over_message_sequences() {
+    check("ledger additivity", |g: &mut Gen| {
+        let msgs: Vec<Message> = (0..g.usize_in(0, 40))
+            .map(|_| match g.usize_in(0, 4) {
+                0 => Message::SignVote { sign: 1 },
+                1 => Message::GlobalSign { sign: -1 },
+                2 => Message::Projection { seed: g.u32(), p: 0.5 },
+                _ => Message::GlobalProjections {
+                    pairs: (0..g.usize_in(1, 5)).map(|_| (g.u32(), 1.0f32)).collect(),
+                },
+            })
+            .collect();
+        let mut whole = Ledger::default();
+        for m in &msgs {
+            whole.record(m);
+        }
+        let cut = g.usize_in(0, msgs.len() + 1).min(msgs.len());
+        let (a_msgs, b_msgs) = msgs.split_at(cut);
+        let mut a = Ledger::default();
+        let mut b = Ledger::default();
+        for m in a_msgs {
+            a.record(m);
+        }
+        for m in b_msgs {
+            b.record(m);
+        }
+        a.merge(&b);
+        assert_eq!(a.uplink_bits, whole.uplink_bits);
+        assert_eq!(a.downlink_bits, whole.downlink_bits);
+        assert_eq!(a.uplink_msgs, whole.uplink_msgs);
+    });
+}
+
+#[test]
+fn prop_dp_vote_respects_unanimity_at_high_eps() {
+    check("dp vote unanimity", |g: &mut Gen| {
+        let k = g.usize_in(1, 20);
+        let sign = if g.bool() { 1i8 } else { -1 };
+        let signs = vec![sign; k];
+        let mut rng = Rng::new(g.u32(), 0);
+        assert_eq!(dp_vote(&signs, 500.0, &mut rng), sign);
+    });
+}
+
+#[test]
+fn prop_matmul_transpose_identities() {
+    check("matmul identities", |g: &mut Gen| {
+        let (m, k, n) = (g.usize_in(1, 8), g.usize_in(1, 8), g.usize_in(1, 8));
+        let a = g.vec_normal(m * k);
+        let b = g.vec_normal(k * n);
+        // c = a@b via matmul
+        let mut c1 = vec![0.0; m * n];
+        ops::matmul(&a, &b, &mut c1, m, k, n);
+        // c = a@(b^T)^T via matmul_bt on bt = b^T ([n,k])
+        let mut bt = vec![0.0; n * k];
+        for p in 0..k {
+            for j in 0..n {
+                bt[j * k + p] = b[p * n + j];
+            }
+        }
+        let mut c2 = vec![0.0; m * n];
+        ops::matmul_bt_acc(&a, &bt, &mut c2, m, k, n);
+        for i in 0..m * n {
+            assert!((c1[i] - c2[i]).abs() < 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_probe_never_mutates_params() {
+    check("probe purity", |g: &mut Gen| {
+        use feedsign::data::Batch;
+        use feedsign::simkit::nn::{LinearProbe, Model};
+        let dim = g.usize_in(2, 16);
+        let classes = g.usize_in(2, 5);
+        let mut model = LinearProbe::new(dim, classes);
+        let w = model.init(g.u32());
+        let rows = g.usize_in(1, 8);
+        let batch = Batch::Features {
+            x: g.vec_normal(rows * dim),
+            y: (0..rows).map(|_| g.usize_in(0, classes) as u32).collect(),
+            rows,
+            dim,
+        };
+        let mut w_probe = w.clone();
+        let mut scratch = Vec::new();
+        zo::spsa_probe_scratch(&mut model, &w_probe, &mut scratch, &batch, g.u32() & 0x7FFF_FFFF, 1e-3);
+        assert_eq!(w_probe, w);
+    });
+}
