@@ -30,6 +30,8 @@ fn cfg(algorithm: &str, rounds: u64) -> ExperimentConfig {
         byzantine_count: 0,
         attack: None,
         c_g_noise: 1.0, // the paper's high-c_g amplifier (Appendix H)
+        participation: "full".into(),
+        threads: 0,
         pretrain_rounds: 0,
         seed: 37,
         verbose: false,

@@ -34,6 +34,8 @@ fn cfg(algorithm: &str, byzantine: usize, rounds: u64) -> ExperimentConfig {
             "random-projection:20.0".into()
         }),
         c_g_noise: 0.0,
+        participation: "full".into(),
+        threads: 0,
         pretrain_rounds: 0,
         seed: 41,
         verbose: false,

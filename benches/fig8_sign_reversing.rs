@@ -42,6 +42,8 @@ fn main() {
         byzantine_count: 0,
         attack: None,
         c_g_noise: 0.0,
+        participation: "full".into(),
+        threads: 0,
         pretrain_rounds: 0,
         seed: 43,
         verbose: false,

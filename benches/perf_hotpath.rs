@@ -12,6 +12,7 @@
 mod common;
 
 use common::*;
+use feedsign::config::ExperimentConfig;
 use feedsign::data::{corpus, tasks, Dataset};
 use feedsign::simkit::nn::{LinearProbe, Model, ModelCfg, TransformerSim};
 use feedsign::simkit::prng;
@@ -35,10 +36,14 @@ fn main() {
     let mut v = Verdict::new();
     println!("== L3 native hot path ==");
 
-    // PRNG throughput (the shared-randomness substrate)
+    // PRNG throughput + fusion: single-core primitive costs.  These two
+    // sections pin a serial zone so the now chunk-parallel drivers stay on
+    // one thread — otherwise "fusion speedup" would silently measure
+    // multithreading (the parallel path is benched separately below).
     let n = 1 << 20;
+    let serial = prng::serial_zone();
     let mut buf = vec![0.0f32; n];
-    let per = bench("philox normals (1M elems)", 20, || {
+    let per = bench("philox normals (1M elems, 1 core)", 20, || {
         prng::normals_into(7, &mut buf);
     });
     let melems = n as f64 / per / 1e6;
@@ -48,7 +53,7 @@ fn main() {
     // fused axpy vs gen-then-add
     let w = prng::normals_vec(1, n);
     let mut out = vec![0.0f32; n];
-    let fused = bench("fused axpy_into (1M params)", 20, || {
+    let fused = bench("fused axpy_into (1M params, 1 core)", 20, || {
         zo::axpy_into(&w, &mut out, 3, 1e-3);
     });
     let unfused = bench("materialize z then axpy (1M params)", 20, || {
@@ -58,6 +63,7 @@ fn main() {
         }
     });
     println!("  -> fusion speedup: {:.2}x (plus zero transient allocation)", unfused / fused);
+    drop(serial);
 
     // transformer probe vs forward: the paper's "ZO = 2 inferences" claim
     let cfg = ModelCfg::new(64, 32, 2, 4, 16);
@@ -98,6 +104,55 @@ fn main() {
         tasks::generate(&tasks::OPT_TASKS[0], 48, 12, 512, 3);
     });
 
+    // chunk-parallel PRNG: explicit threads=1 vs threads=cores on the
+    // 1M-element fused AXPY (bit-identical outputs, wall-clock only)
+    let cores = std::thread::available_parallelism().map_or(1, |p| p.get());
+    println!("\n== chunk-parallel noise (counter-space split, {cores} cores) ==");
+    let w_axpy = prng::normals_vec(1, n);
+    let mut out_axpy = vec![0.0f32; n];
+    let axpy1 = bench("axpy_into 1M params, threads=1", 20, || {
+        zo::axpy_into_threads(&w_axpy, &mut out_axpy, 3, 1e-3, 1);
+    });
+    let axpyn = bench(&format!("axpy_into 1M params, threads={cores}"), 20, || {
+        zo::axpy_into_threads(&w_axpy, &mut out_axpy, 3, 1e-3, cores);
+    });
+    println!("  -> chunk-parallel speedup: {:.2}x", axpy1 / axpyn);
+
+    // parallel round engine: per-round wall-clock at K clients, sequential
+    // baseline vs scoped client fan-out (plan/execute/commit; bit-identical
+    // runs, pinned by rust/tests/parallel_parity.rs)
+    println!("\n== parallel round engine (K-client fan-out, {cores} cores) ==");
+    let mut speedup_k20 = 0.0f64;
+    for (k, rounds) in [(5usize, 40u64), (20, 16), (100, 4)] {
+        let seq = time_rounds(&round_cfg(k, 1), rounds);
+        let par = time_rounds(&round_cfg(k, cores), rounds);
+        let speedup = seq / par;
+        println!(
+            "K={k:<4} seq {:>8.2} ms/round | fan-out {:>8.2} ms/round | speedup {speedup:.2}x",
+            seq * 1e3,
+            par * 1e3
+        );
+        if k == 20 {
+            speedup_k20 = speedup;
+        }
+    }
+    // assert only on full-scale runs: FEEDSIGN_BENCH_SCALE < 1 marks a
+    // smoke run (e.g. the CI job on shared runners), where wall-clock
+    // ratios are too noisy for a hard exit-code gate
+    if cores >= 4 && scale() >= 1.0 {
+        v.check(
+            "round-engine-2x-at-k20",
+            speedup_k20 >= 2.0,
+            format!("{speedup_k20:.2}x at K=20 on {cores} cores"),
+        );
+    } else {
+        println!(
+            "(round-engine >=2x shape check needs >=4 cores and full scale; \
+             host has {cores}, scale {:.2})",
+            scale()
+        );
+    }
+
     // PJRT request path
     if std::env::var("FEEDSIGN_PERF_PJRT").as_deref() != Ok("0")
         && feedsign::runtime::artifacts_available()
@@ -127,4 +182,42 @@ fn main() {
         println!("\n(PJRT section skipped)");
     }
     v.finish()
+}
+
+/// Bench-LM FeedSign session config for the round-engine sweep.
+fn round_cfg(k: usize, threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("perf-round-k{k}-t{threads}"),
+        model: bench_lm(),
+        task: lm_task("synth-sst2"),
+        algorithm: "feedsign".into(),
+        clients: k,
+        rounds: 1,
+        eta: 1e-3,
+        mu: 1e-3,
+        batch_size: 8,
+        eval_every: 0,
+        eval_batches: 2,
+        eval_batch_size: 16,
+        dirichlet_beta: None,
+        byzantine_count: 0,
+        attack: None,
+        c_g_noise: 0.0,
+        participation: "full".into(),
+        threads,
+        pretrain_rounds: 0,
+        seed: 5,
+        verbose: false,
+    }
+}
+
+/// Mean seconds per round over `rounds` steps (after one warmup round).
+fn time_rounds(cfg: &ExperimentConfig, rounds: u64) -> f64 {
+    let mut s = cfg.build_session().expect("config builds");
+    s.step(0);
+    let t0 = std::time::Instant::now();
+    for t in 1..=rounds {
+        s.step(t);
+    }
+    t0.elapsed().as_secs_f64() / rounds as f64
 }

@@ -30,6 +30,8 @@ fn cfg(algorithm: &str) -> ExperimentConfig {
         byzantine_count: 0,
         attack: None,
         c_g_noise: 0.0,
+        participation: "full".into(),
+        threads: 0,
         pretrain_rounds: 0,
         seed: 3,
         verbose: false,

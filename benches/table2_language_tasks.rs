@@ -40,6 +40,8 @@ fn cfg(task: &str, algorithm: &str, rounds: u64, eta: f32) -> ExperimentConfig {
         byzantine_count: 0,
         attack: None,
         c_g_noise: 0.0,
+        participation: "full".into(),
+        threads: 0,
         pretrain_rounds: 300,
         seed: 11,
         verbose: false,

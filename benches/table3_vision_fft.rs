@@ -32,6 +32,8 @@ fn cfg(task: &str, algorithm: &str, rounds: u64) -> ExperimentConfig {
         byzantine_count: 0,
         attack: None,
         c_g_noise: 0.0,
+        participation: "full".into(),
+        threads: 0,
         pretrain_rounds: 0,
         seed: 13,
         verbose: false,

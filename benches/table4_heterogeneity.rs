@@ -34,6 +34,8 @@ fn cfg(task: &str, algorithm: &str, beta: Option<f32>, rounds: u64) -> Experimen
         byzantine_count: 0,
         attack: None,
         c_g_noise: 0.0,
+        participation: "full".into(),
+        threads: 0,
         pretrain_rounds: 300,
         seed: 17,
         verbose: false,

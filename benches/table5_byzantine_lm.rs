@@ -36,6 +36,8 @@ fn cfg(task: &str, algorithm: &str, byzantine: usize, rounds: u64) -> Experiment
             "random-projection:20.0".into() // paper's ZO-FedSGD attacker (severity calibrated)
         }),
         c_g_noise: 0.0,
+        participation: "full".into(),
+        threads: 0,
         pretrain_rounds: 300,
         seed: 23,
         verbose: false,

@@ -1,23 +1,31 @@
 //! Table 8 reproduction: effect of client-pool size (K = 5 vs 25) at a
-//! fixed perturbation budget.
+//! fixed perturbation budget — plus the partial-participation regime the
+//! coordinator's `participation` knob now expresses directly.
 //!
 //! Paper (OPT-125M, iid): with the number of perturbations held constant
 //! (K=25 runs 1/5 the rounds of K=5, Table 12), both methods stay in the
 //! same accuracy band; bigger pools buy fewer, better-averaged steps.
+//! The `fraction:0.2` row runs the *same* 25-client pool but samples ~5
+//! participants per round (`coordinator::participation`) — the realistic
+//! deployment regime, with the perturbation budget matched to K=5 — and
+//! must land in the same band too.
+//!
 //! Shape assertions: (a) every federated cell beats zero-shot;
 //! (b) at matched perturbations, |K=5 - K=25| is modest for FeedSign
-//! (vote averaging) — within 12 points on average.
+//! (vote averaging) — within 12 points on average; (c) partial
+//! participation of the big pool stays within the same band of K=5.
 
 mod common;
 
 use common::*;
 use feedsign::config::ExperimentConfig;
+use feedsign::coordinator::ParticipationCfg;
 
 const TASKS: [&str; 4] = ["synth-sst2", "synth-cb", "synth-copa", "synth-boolq"];
 
-fn cfg(task: &str, algorithm: &str, k: usize, rounds: u64) -> ExperimentConfig {
+fn cfg(task: &str, algorithm: &str, k: usize, rounds: u64, participation: &str) -> ExperimentConfig {
     ExperimentConfig {
-        name: format!("table8-{task}-{algorithm}-k{k}"),
+        name: format!("table8-{task}-{algorithm}-k{k}-{participation}"),
         model: bench_lm(),
         task: lm_task(task),
         algorithm: algorithm.into(),
@@ -33,6 +41,8 @@ fn cfg(task: &str, algorithm: &str, k: usize, rounds: u64) -> ExperimentConfig {
         byzantine_count: 0,
         attack: None,
         c_g_noise: 0.0,
+        participation: participation.into(),
+        threads: 0,
         pretrain_rounds: 300,
         seed: 29,
         verbose: false,
@@ -40,29 +50,38 @@ fn cfg(task: &str, algorithm: &str, k: usize, rounds: u64) -> ExperimentConfig {
 }
 
 fn main() {
-    // fixed perturbation budget: K * rounds = const (Table 12)
+    // fixed perturbation budget: (participants per round) * rounds = const
+    // (Table 12)
     let r5 = scaled(1500);
     let r25 = (r5 / 5).max(10);
+    // partial-participation row: rounds derived from the sampler's own
+    // expected participants so the probe budget matches the K=5 row
+    let frac = ParticipationCfg::Fraction(0.2);
+    let r_frac = ((5.0 * r5 as f32 / frac.expected_participants(25)) as u64).max(10);
     let n = repeats();
 
     let mut table = Table::new(
         "Table 8: client-pool size at fixed perturbation budget (synth substitute)",
         &TASKS.iter().map(|t| &t[6..]).collect::<Vec<_>>(),
     );
-    let zs: Vec<f32> = TASKS.iter().map(|t| zero_shot(&cfg(t, "feedsign", 5, 10))).collect();
+    let zs: Vec<f32> =
+        TASKS.iter().map(|t| zero_shot(&cfg(t, "feedsign", 5, 10, "full"))).collect();
     table.row("zero-shot", zs.iter().map(|a| format!("{a:.1}")).collect());
 
     let mut avg = std::collections::BTreeMap::new();
-    for (label, algo, k, rounds) in [
-        ("zo-fedsgd K=5", "zo-fedsgd", 5, r5),
-        ("zo-fedsgd K=25", "zo-fedsgd", 25, r25),
-        ("feedsign K=5", "feedsign", 5, r5),
-        ("feedsign K=25", "feedsign", 25, r25),
+    for (label, algo, k, rounds, participation) in [
+        ("zo-fedsgd K=5", "zo-fedsgd", 5, r5, "full"),
+        ("zo-fedsgd K=25", "zo-fedsgd", 25, r25, "full"),
+        ("feedsign K=5", "feedsign", 5, r5, "full"),
+        ("feedsign K=25", "feedsign", 25, r25, "full"),
+        // the participation knob: same 25-client pool, ~5 voters/round,
+        // budget matched to the K=5 row
+        ("feedsign K=25 frac=0.2", "feedsign", 25, r_frac, "fraction:0.2"),
     ] {
         let mut cells = Vec::new();
         let mut means = Vec::new();
         for task in TASKS {
-            let runs = run_repeats(&cfg(task, algo, k, rounds), n);
+            let runs = run_repeats(&cfg(task, algo, k, rounds, participation), n);
             let ms = best_accs(&runs);
             means.push(ms.mean);
             cells.push(format!("{ms}"));
@@ -85,5 +104,11 @@ fn main() {
     }
     let gap = (avg["feedsign K=5"] - avg["feedsign K=25"]).abs();
     v.check("feedsign-pool-size-stable", gap < 12.0, format!("|K5 - K25| = {gap:.1}"));
+    let frac_gap = (avg["feedsign K=5"] - avg["feedsign K=25 frac=0.2"]).abs();
+    v.check(
+        "feedsign-partial-participation-stable",
+        frac_gap < 12.0,
+        format!("|K5 - K25@0.2| = {frac_gap:.1}"),
+    );
     v.finish()
 }

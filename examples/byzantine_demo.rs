@@ -27,6 +27,8 @@ fn cfg(algorithm: &str, byzantine: usize) -> ExperimentConfig {
         // FeedSign the same attacker degenerates to a (worst-case) flip.
         attack: Some(if algorithm == "feedsign" { "sign-flip".into() } else { "random-projection:5.0".into() }),
         c_g_noise: 0.0,
+        participation: "full".into(),
+        threads: 0,
         pretrain_rounds: 0,
         seed: 5,
         verbose: false,

@@ -30,6 +30,8 @@ fn cfg(algorithm: &str, beta: Option<f32>, c_g: f32) -> ExperimentConfig {
         byzantine_count: 0,
         attack: None,
         c_g_noise: c_g,
+        participation: "full".into(),
+        threads: 0,
         pretrain_rounds: 0,
         seed: 9,
         verbose: false,

@@ -96,6 +96,27 @@ impl Ledger {
         self.uplink_msgs += other.uplink_msgs;
         self.downlink_msgs += other.downlink_msgs;
     }
+
+    /// Record a whole message sequence (sub-ledger building block for
+    /// parallel workers).
+    pub fn record_all<'a, I: IntoIterator<Item = &'a Message>>(&mut self, msgs: I) {
+        for m in msgs {
+            self.record(m);
+        }
+    }
+
+    /// Commit per-worker sub-ledgers into this (authoritative) ledger in
+    /// the order given.  The parallel round engine meters each client's
+    /// messages into a private sub-ledger during the fan-out and commits
+    /// them here in client-id order — totals are additive, so the result
+    /// is bit-identical to sequential metering (pinned by the
+    /// `prop_ledger_additive_over_message_sequences` property and the
+    /// cross-topology parity tests).
+    pub fn commit<I: IntoIterator<Item = Ledger>>(&mut self, subs: I) {
+        for sub in subs {
+            self.merge(&sub);
+        }
+    }
 }
 
 /// Analytic link model: projects ledger totals to wall-clock seconds for a
@@ -191,6 +212,29 @@ mod tests {
         assert_eq!(l.downlink_bits, 1);
         assert_eq!(l.uplink_msgs, 2);
         assert_eq!(l.total_bits(), 66);
+    }
+
+    #[test]
+    fn ledger_commit_matches_sequential_recording() {
+        let msgs = [
+            Message::SignVote { sign: 1 },
+            Message::SignVote { sign: -1 },
+            Message::Projection { seed: 3, p: 0.1 },
+            Message::GlobalSign { sign: 1 },
+        ];
+        let mut sequential = Ledger::default();
+        sequential.record_all(&msgs);
+        // same messages split over two worker sub-ledgers, then committed
+        let mut sub_a = Ledger::default();
+        sub_a.record_all(&msgs[..2]);
+        let mut sub_b = Ledger::default();
+        sub_b.record_all(&msgs[2..]);
+        let mut committed = Ledger::default();
+        committed.commit([sub_a, sub_b]);
+        assert_eq!(committed.uplink_bits, sequential.uplink_bits);
+        assert_eq!(committed.downlink_bits, sequential.downlink_bits);
+        assert_eq!(committed.uplink_msgs, sequential.uplink_msgs);
+        assert_eq!(committed.downlink_msgs, sequential.downlink_msgs);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! construct sessions through this module, so every experiment in
 //! EXPERIMENTS.md is reproducible from a checked-in config.
 
-use crate::coordinator::{Algorithm, Attack, Client, Session, SessionCfg};
+use crate::coordinator::{Algorithm, Attack, Client, ParticipationCfg, Session, SessionCfg};
 use crate::data::partition::{split, Partition};
 use crate::data::{corpus, tasks, vision, Dataset};
 use crate::engine::{Engine, NativeEngine};
@@ -81,6 +81,11 @@ pub struct ExperimentConfig {
     /// attack string: `sign-flip | random-projection[:s] | gauss-noise[:s] | label-flip`
     pub attack: Option<String>,
     pub c_g_noise: f32,
+    /// per-round client sampling: `full | fraction:F | bernoulli:P`
+    /// (synchronized ZO algorithms only)
+    pub participation: String,
+    /// round-engine worker threads (0 = auto, 1 = sequential baseline)
+    pub threads: usize,
     /// Central FO pretraining steps on a *format-matched but
     /// label-uninformative* dataset before federation begins.  This
     /// manufactures the "pretrained checkpoint" the paper's fine-tuning
@@ -139,6 +144,8 @@ impl ExperimentConfig {
             byzantine_count: doc.int("", "byzantine_count").unwrap_or(0) as usize,
             attack: doc.str("", "attack"),
             c_g_noise: doc.float("", "c_g_noise").unwrap_or(0.0) as f32,
+            participation: doc.str("", "participation").unwrap_or_else(|| "full".into()),
+            threads: doc.int("", "threads").unwrap_or(0) as usize,
             seed: doc.int("", "seed").unwrap_or(0) as u32,
             verbose: doc.bool("", "verbose").unwrap_or(false),
         };
@@ -173,6 +180,8 @@ impl ExperimentConfig {
             d.set("", "attack", s(a));
         }
         d.set("", "c_g_noise", Value::Float(self.c_g_noise as f64));
+        d.set("", "participation", s(&self.participation));
+        d.set("", "threads", Value::Int(self.threads as i64));
         d.set("", "pretrain_rounds", Value::Int(self.pretrain_rounds as i64));
         d.set("", "seed", Value::Int(self.seed as i64));
         d.set("", "verbose", Value::Bool(self.verbose));
@@ -239,6 +248,14 @@ impl ExperimentConfig {
                 bail!("unknown attack {a:?}");
             }
         }
+        let Some(participation) = ParticipationCfg::parse(&self.participation) else {
+            bail!("unknown participation {:?} (full | fraction:F | bernoulli:P)", self.participation);
+        };
+        if participation != ParticipationCfg::Full
+            && matches!(algo, Algorithm::FedSgd | Algorithm::Mezo)
+        {
+            bail!("partial participation applies to feedsign/dp-feedsign/zo-fedsgd only");
+        }
         // model/task compatibility
         match (&self.model, &self.task) {
             (ModelSpec::Transformer { vocab, seq_len, .. }, TaskSpec::SynthLm { name, .. }) => {
@@ -269,6 +286,10 @@ impl ExperimentConfig {
 
     pub fn algorithm(&self) -> Algorithm {
         Algorithm::parse(&self.algorithm).expect("validated")
+    }
+
+    pub fn participation_cfg(&self) -> ParticipationCfg {
+        ParticipationCfg::parse(&self.participation).expect("validated")
     }
 
     /// Generate the train/test datasets.
@@ -356,6 +377,8 @@ impl ExperimentConfig {
             eval_batches: self.eval_batches,
             eval_batch_size: self.eval_batch_size,
             c_g_noise: self.c_g_noise,
+            participation: self.participation_cfg(),
+            threads: self.threads,
             seed: self.seed,
             verbose: self.verbose,
         };
@@ -417,6 +440,8 @@ pub fn quickstart() -> ExperimentConfig {
         byzantine_count: 0,
         attack: None,
         c_g_noise: 0.0,
+        participation: "full".into(),
+        threads: 0,
         pretrain_rounds: 0,
         seed: 0,
         verbose: true,
@@ -494,6 +519,8 @@ mod tests {
             byzantine_count: 1,
             attack: Some("random-projection".into()),
             c_g_noise: 0.0,
+            participation: "full".into(),
+            threads: 0,
             pretrain_rounds: 0,
             seed: 1,
             verbose: false,
@@ -501,6 +528,37 @@ mod tests {
         let mut s = cfg.build_session().unwrap();
         s.step(0); // smoke: one LM round with an attacker
         assert!(s.ledger.uplink_bits > 0);
+    }
+
+    #[test]
+    fn participation_parses_and_roundtrips() {
+        let mut cfg = quickstart();
+        cfg.participation = "fraction:0.4".into();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.participation_cfg(), ParticipationCfg::Fraction(0.4));
+        let back = ExperimentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.participation, "fraction:0.4");
+        let mut s = cfg.build_session().unwrap();
+        s.step(0);
+        assert_eq!(s.ledger.uplink_bits, 2, "2 of 5 participants vote");
+    }
+
+    #[test]
+    fn rejects_bad_participation_and_fo_partial() {
+        let mut cfg = quickstart();
+        cfg.participation = "sometimes".into();
+        assert!(cfg.validate().is_err());
+        cfg.participation = "fraction:0.5".into();
+        cfg.algorithm = "fedsgd".into();
+        assert!(cfg.validate().is_err(), "FO baseline is full-participation only");
+    }
+
+    #[test]
+    fn threads_roundtrip_through_toml() {
+        let mut cfg = quickstart();
+        cfg.threads = 3;
+        let back = ExperimentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.threads, 3);
     }
 
     #[test]

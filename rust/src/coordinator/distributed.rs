@@ -13,12 +13,14 @@ use crate::coordinator::aggregation;
 use crate::coordinator::byzantine::Attack;
 use crate::data::{Dataset, Shard};
 use crate::engine::Engine;
-use crate::simkit::prng::Rng;
+use crate::simkit::prng::{self, Rng};
 use std::sync::Arc;
 
 /// Client task configuration.
 pub struct DistClient {
-    pub engine: Box<dyn Engine + Send>,
+    /// `Engine` carries a `Send` supertrait, so any boxed engine can move
+    /// onto the worker thread.
+    pub engine: Box<dyn Engine>,
     pub w: Vec<f32>,
     pub shard: Shard,
     pub attack: Attack,
@@ -57,12 +59,16 @@ pub fn run_feedsign(
         ps_links.push(duplex);
         let train = Arc::clone(&train);
         handles.push(std::thread::spawn(move || {
+            // one OS thread per client IS the fan-out here — keep the
+            // per-vector noise ops sequential inside it (same policy as
+            // the session round engine's workers)
+            let _serial = prng::serial_zone();
             while let Ok(msg) = port.from_ps.recv() {
                 match msg {
                     Message::RoundStart { round } => {
                         let seed = round as u32;
                         let batch = c.shard.next_batch(&train, batch_size, &mut c.rng);
-                        let p = c.engine.probe(&mut c.w, &batch, seed, mu);
+                        let p = c.engine.probe(&c.w, &batch, seed, mu);
                         let honest = if p >= 0.0 { 1i8 } else { -1 };
                         let sign = c.attack.mutate_sign(honest, &mut c.rng);
                         // upload the vote, then wait for the global direction
@@ -130,7 +136,7 @@ mod tests {
             .into_iter()
             .enumerate()
             .map(|(id, shard)| {
-                let engine: Box<dyn Engine + Send> =
+                let engine: Box<dyn Engine> =
                     Box::new(NativeEngine::new(LinearProbe::new(128, 10)));
                 let w = engine.init_params(7);
                 DistClient {

@@ -2,16 +2,21 @@
 //!
 //! * [`aggregation`] — the FeedSign / ZO-FedSGD / DP / FO update rules;
 //! * [`byzantine`] — attack models (sign flip, random projection, …);
-//! * [`session`] — the deterministic synchronous round loop that all
-//!   benches/examples drive;
-//! * [`distributed`] — the tokio leader/worker topology (same protocol,
+//! * [`participation`] — per-round client sampling (full / fixed-fraction
+//!   / Bernoulli availability);
+//! * [`session`] — the deterministic plan/execute/commit round engine that
+//!   all benches/examples drive (client fan-out over scoped threads,
+//!   commits in client-id order);
+//! * [`distributed`] — the threaded leader/worker topology (same protocol,
 //!   real message passing), pinned to the sync session by test.
 
 pub mod aggregation;
 pub mod byzantine;
 pub mod distributed;
+pub mod participation;
 pub mod session;
 
 pub use aggregation::Algorithm;
 pub use byzantine::Attack;
+pub use participation::ParticipationCfg;
 pub use session::{Client, Session, SessionCfg};

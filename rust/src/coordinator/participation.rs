@@ -1,0 +1,179 @@
+//! Per-round client sampling — the partial-participation regime that
+//! resource-constrained federated deployments actually run (most devices
+//! are offline, charging, or rate-limited in any given round; cf. the
+//! FedKSeed / resource-constrained ZO-FFT line).
+//!
+//! The sampler is part of the round **plan**: participants are drawn from
+//! a dedicated coordinator RNG stream *before* any client compute runs, so
+//! the draw is identical whether the round executes sequentially or fans
+//! out over worker threads.  [`ParticipationCfg::Full`] consumes no RNG
+//! draws at all, which keeps full-participation runs bit-identical to the
+//! pre-participation sequential engine.
+//!
+//! Synchronized algorithms (FeedSign, DP-FeedSign, ZO-FedSGD) still
+//! broadcast the aggregated direction to **every** client — non-participants
+//! skip the probe/vote (no uplink) but must apply the global update to keep
+//! all replicas bit-identical, so downlink is metered for all K clients.
+
+use crate::simkit::prng::Rng;
+
+/// Which clients take part in each aggregation round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ParticipationCfg {
+    /// Every client probes and votes every round (the paper's setting).
+    Full,
+    /// A fixed fraction of the pool, sampled without replacement each
+    /// round: `max(1, ceil(fraction * K))` distinct clients.
+    Fraction(f32),
+    /// Each client joins independently with probability `p` (device
+    /// availability model); an empty draw falls back to the round-robin
+    /// client `round % K` so every round makes progress.
+    Bernoulli(f32),
+}
+
+impl ParticipationCfg {
+    /// Parse a config/CLI spec: `full`, `fraction:0.2`, `bernoulli:0.3`.
+    pub fn parse(s: &str) -> Option<ParticipationCfg> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "full" {
+            return Some(ParticipationCfg::Full);
+        }
+        if let Some(f) = s.strip_prefix("fraction:") {
+            let f: f32 = f.parse().ok()?;
+            if f > 0.0 && f <= 1.0 {
+                return Some(ParticipationCfg::Fraction(f));
+            }
+            return None;
+        }
+        if let Some(p) = s.strip_prefix("bernoulli:") {
+            let p: f32 = p.parse().ok()?;
+            if p > 0.0 && p <= 1.0 {
+                return Some(ParticipationCfg::Bernoulli(p));
+            }
+            return None;
+        }
+        None
+    }
+
+    /// Render back to the config-string form [`parse`] accepts.
+    pub fn render(&self) -> String {
+        match self {
+            ParticipationCfg::Full => "full".to_string(),
+            ParticipationCfg::Fraction(f) => format!("fraction:{f}"),
+            ParticipationCfg::Bernoulli(p) => format!("bernoulli:{p}"),
+        }
+    }
+
+    /// Expected participants per round for a pool of `k` (bench/report
+    /// helper for matched-perturbation budgets).
+    pub fn expected_participants(&self, k: usize) -> f32 {
+        match self {
+            ParticipationCfg::Full => k as f32,
+            ParticipationCfg::Fraction(f) => (f * k as f32).ceil().max(1.0).min(k as f32),
+            ParticipationCfg::Bernoulli(p) => (p * k as f32).max(1.0),
+        }
+    }
+
+    /// Draw this round's participant set: sorted, distinct client ids in
+    /// `[0, k)`, never empty.  `Full` consumes no draws from `rng`; the
+    /// other modes consume a round-count-independent number of draws so
+    /// runs with the same seed stay reproducible.
+    pub fn sample(&self, k: usize, round: u64, rng: &mut Rng) -> Vec<usize> {
+        assert!(k > 0);
+        match *self {
+            ParticipationCfg::Full => (0..k).collect(),
+            ParticipationCfg::Fraction(f) => {
+                let m = ((f * k as f32).ceil() as usize).clamp(1, k);
+                if m == k {
+                    return (0..k).collect();
+                }
+                // partial Fisher-Yates: first m entries are a uniform
+                // m-subset
+                let mut ids: Vec<usize> = (0..k).collect();
+                for i in 0..m {
+                    let j = i + rng.below(k - i);
+                    ids.swap(i, j);
+                }
+                ids.truncate(m);
+                ids.sort_unstable();
+                ids
+            }
+            ParticipationCfg::Bernoulli(p) => {
+                let mut ids: Vec<usize> =
+                    (0..k).filter(|_| rng.uniform() < p).collect();
+                if ids.is_empty() {
+                    ids.push((round % k as u64) as usize);
+                }
+                ids
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_selects_everyone_without_rng_draws() {
+        let mut rng = Rng::new(1, 0);
+        let before = rng.clone();
+        assert_eq!(ParticipationCfg::Full.sample(7, 3, &mut rng), (0..7).collect::<Vec<_>>());
+        // no draws consumed: the next word matches the untouched clone
+        let mut untouched = before;
+        assert_eq!(rng.next_u32(), untouched.next_u32());
+    }
+
+    #[test]
+    fn fraction_sizes_and_bounds() {
+        let mut rng = Rng::new(2, 0);
+        for (f, k, expect) in [(0.2f32, 10usize, 2usize), (0.5, 5, 3), (0.01, 4, 1), (1.0, 6, 6)] {
+            let ids = ParticipationCfg::Fraction(f).sample(k, 0, &mut rng);
+            assert_eq!(ids.len(), expect, "fraction {f} of {k}");
+            assert!(ids.windows(2).all(|p| p[0] < p[1]), "sorted distinct");
+            assert!(ids.iter().all(|&i| i < k));
+        }
+    }
+
+    #[test]
+    fn fraction_varies_across_rounds() {
+        let mut rng = Rng::new(3, 0);
+        let cfg = ParticipationCfg::Fraction(0.3);
+        let draws: Vec<Vec<usize>> = (0..20).map(|t| cfg.sample(20, t, &mut rng)).collect();
+        assert!(draws.windows(2).any(|p| p[0] != p[1]), "sampling should move");
+    }
+
+    #[test]
+    fn bernoulli_never_empty_and_deterministic() {
+        let cfg = ParticipationCfg::Bernoulli(0.05);
+        let mut a = Rng::new(4, 0);
+        let mut b = Rng::new(4, 0);
+        for t in 0..50 {
+            let ia = cfg.sample(6, t, &mut a);
+            let ib = cfg.sample(6, t, &mut b);
+            assert_eq!(ia, ib, "same stream, same draw");
+            assert!(!ia.is_empty());
+            assert!(ia.iter().all(|&i| i < 6));
+        }
+    }
+
+    #[test]
+    fn parse_render_roundtrip() {
+        for s in ["full", "fraction:0.25", "bernoulli:0.5"] {
+            let cfg = ParticipationCfg::parse(s).unwrap();
+            assert_eq!(ParticipationCfg::parse(&cfg.render()), Some(cfg));
+        }
+        assert_eq!(ParticipationCfg::parse("FULL"), Some(ParticipationCfg::Full));
+        assert!(ParticipationCfg::parse("fraction:0").is_none());
+        assert!(ParticipationCfg::parse("fraction:1.5").is_none());
+        assert!(ParticipationCfg::parse("bernoulli:-1").is_none());
+        assert!(ParticipationCfg::parse("sometimes").is_none());
+    }
+
+    #[test]
+    fn expected_participants_shapes() {
+        assert_eq!(ParticipationCfg::Full.expected_participants(8), 8.0);
+        assert_eq!(ParticipationCfg::Fraction(0.25).expected_participants(8), 2.0);
+        assert_eq!(ParticipationCfg::Bernoulli(0.5).expected_participants(8), 4.0);
+    }
+}

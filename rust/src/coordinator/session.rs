@@ -1,24 +1,38 @@
-//! The federated session: PS round loop + client pool (Algorithm 1).
+//! The federated session: PS round loop + client pool (Algorithm 1),
+//! organised as a **plan / execute / commit** round engine.
 //!
 //! One `Session` owns the K clients (each with its own parameter vector,
 //! engine, data shard and attack model) and drives T aggregation rounds of
 //! the configured algorithm, metering every protocol message through the
-//! [`crate::comm::Ledger`] and recording the orbit as it goes.
+//! [`crate::comm::Ledger`] and recording the orbit as it goes.  Each round:
 //!
-//! The loop is deterministic: FeedSign's step seed is the round index
-//! (`seed = t`, §I.1), client-private randomness comes from per-client
-//! Philox streams, and eval cadence is fixed — so two sessions with the
-//! same config produce identical runs, which the cross-topology test in
-//! `rust/tests/` (sync vs tokio-distributed) relies on.
+//! 1. **plan** — the participant set is drawn from a dedicated coordinator
+//!    RNG stream ([`ParticipationCfg`]), before any client compute runs;
+//! 2. **execute** — per-client probe work (batch draw → SPSA probe →
+//!    attack mutation) fans out over `std::thread::scope` workers, each
+//!    metering its uplink into a private sub-ledger;
+//! 3. **commit** — outcomes are committed **in client-id order** (votes,
+//!    sub-ledgers, orbit entries), the vote is aggregated, and the global
+//!    update is broadcast to every client.
+//!
+//! **Determinism contract:** commit order is client id, every client's
+//! randomness lives in its own Philox stream, and coordinator randomness
+//! (participation, DP vote, eval) lives in dedicated streams — so a run is
+//! bit-identical for *every* worker-thread count, including the sequential
+//! `threads = 1` baseline (pinned by `rust/tests/parallel_parity.rs`), and
+//! FeedSign's step seed remains the round index (`seed = t`, §I.1).  The
+//! cross-topology test in `rust/tests/` (sync vs threaded-distributed)
+//! relies on the same schedule.
 
 use crate::comm::{Ledger, Message};
 use crate::coordinator::aggregation::{self, Algorithm};
 use crate::coordinator::byzantine::Attack;
+use crate::coordinator::participation::ParticipationCfg;
 use crate::data::{Batch, Dataset, Shard};
 use crate::engine::Engine;
 use crate::metrics::{RoundRecord, RunResult};
 use crate::orbit::Orbit;
-use crate::simkit::prng::Rng;
+use crate::simkit::prng::{self, Rng};
 
 /// One federated client: local parameters + compute engine + data shard.
 pub struct Client {
@@ -72,6 +86,13 @@ pub struct SessionCfg {
     /// extra multiplicative projection noise `1 + c_g_noise*N(0,1)` — the
     /// paper's Figure 2 heterogeneity amplifier (Appendix H)
     pub c_g_noise: f32,
+    /// which clients probe and vote each round (synchronized algorithms
+    /// only; the FO baseline and MeZO always run full participation)
+    pub participation: ParticipationCfg,
+    /// round-engine worker threads: 0 = auto (machine parallelism),
+    /// 1 = sequential baseline, N = exactly N workers.  Every setting
+    /// produces the same bits; this only trades wall-clock.
+    pub threads: usize,
     pub seed: u32,
     /// print progress to stderr
     pub verbose: bool,
@@ -89,10 +110,135 @@ impl Default for SessionCfg {
             eval_batches: 4,
             eval_batch_size: 32,
             c_g_noise: 0.0,
+            participation: ParticipationCfg::Full,
+            threads: 0,
             seed: 0,
             verbose: false,
         }
     }
+}
+
+/// The immutable description of one aggregation round, fixed in the plan
+/// phase before any client compute runs.
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    pub round: u64,
+    /// sorted ids of the clients that probe and vote this round
+    pub participants: Vec<usize>,
+}
+
+/// A participant's round contribution, produced in the execute phase.
+enum Contribution {
+    Sign(i8),
+    Pair { seed: u32, p: f32 },
+}
+
+/// Execute-phase output for one participant: contribution + the uplink
+/// messages metered into a private sub-ledger, committed in id order.
+struct ProbeOutcome {
+    client: usize,
+    contribution: Contribution,
+    ledger: Ledger,
+}
+
+fn run_probe_job<F>(round: u64, c: &mut Client, job: &F) -> ProbeOutcome
+where
+    F: Fn(&mut Client, &mut Ledger) -> Contribution,
+{
+    let mut ledger = Ledger::default();
+    // RoundStart carries the implicit seed schedule (0 payload bits)
+    ledger.record(&Message::RoundStart { round });
+    let contribution = job(c, &mut ledger);
+    ProbeOutcome { client: c.id, contribution, ledger }
+}
+
+/// Execute phase: run `job` on every participant, fanning contiguous
+/// id-ordered chunks out over `threads` scoped workers.  The returned
+/// outcomes are in client-id order regardless of worker interleaving
+/// (chunks are contiguous and joined in spawn order), which is what makes
+/// the commit phase bit-identical to the sequential baseline.
+fn execute_probes<F>(
+    clients: &mut [Client],
+    plan: &RoundPlan,
+    threads: usize,
+    pin_serial: bool,
+    job: F,
+) -> Vec<ProbeOutcome>
+where
+    F: Fn(&mut Client, &mut Ledger) -> Contribution + Sync,
+{
+    let mut selected: Vec<&mut Client> = Vec::with_capacity(plan.participants.len());
+    {
+        let mut want = plan.participants.iter().copied().peekable();
+        for (id, c) in clients.iter_mut().enumerate() {
+            if want.peek() == Some(&id) {
+                selected.push(c);
+                want.next();
+            }
+        }
+    }
+    assert_eq!(
+        selected.len(),
+        plan.participants.len(),
+        "participant ids must be sorted, distinct and in range"
+    );
+    let round = plan.round;
+    if threads <= 1 || selected.len() <= 1 {
+        // `pin_serial` marks an explicitly requested sequential baseline
+        // (cfg.threads == 1): keep the inner noise ops single-threaded
+        // too, so "threads = 1" means exactly one thread.  A fan-out
+        // that merely degenerated to one job (e.g. K = 1) keeps inner
+        // chunk-parallelism — it is the only parallelism available.
+        let _serial = pin_serial.then(prng::serial_zone);
+        return selected.into_iter().map(|c| run_probe_job(round, c, &job)).collect();
+    }
+    let chunk = selected.len().div_ceil(threads);
+    let mut out = Vec::with_capacity(selected.len());
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for ch in selected.chunks_mut(chunk) {
+            let job = &job;
+            handles.push(s.spawn(move || {
+                // client-level parallelism is the outer fan-out; keep the
+                // per-vector noise ops sequential inside each worker
+                let _serial = prng::serial_zone();
+                ch.iter_mut()
+                    .map(|c| run_probe_job(round, &mut **c, job))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            out.extend(h.join().expect("round worker panicked"));
+        }
+    });
+    out
+}
+
+/// Run `job` on every client, chunk-parallel over `threads` workers (used
+/// by the commit phase to apply the broadcast update).
+fn for_each_client_parallel<F>(clients: &mut [Client], threads: usize, pin_serial: bool, job: F)
+where
+    F: Fn(&mut Client) + Sync,
+{
+    if threads <= 1 || clients.len() <= 1 {
+        let _serial = pin_serial.then(prng::serial_zone);
+        for c in clients {
+            job(c);
+        }
+        return;
+    }
+    let chunk = clients.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for ch in clients.chunks_mut(chunk) {
+            let job = &job;
+            s.spawn(move || {
+                let _serial = prng::serial_zone();
+                for c in ch {
+                    job(c);
+                }
+            });
+        }
+    });
 }
 
 /// The federated runtime.
@@ -105,6 +251,7 @@ pub struct Session {
     pub orbit: Orbit,
     dp_rng: Rng,
     eval_rng: Rng,
+    part_rng: Rng,
 }
 
 impl Session {
@@ -116,7 +263,18 @@ impl Session {
         let orbit = Orbit::new(cfg.algorithm.name(), cfg.seed, cfg.eta);
         let dp_rng = Rng::new(cfg.seed ^ 0xD9, 0xD9);
         let eval_rng = Rng::new(cfg.seed ^ 0xEE, 0xEE);
-        Session { cfg, clients, train, test, ledger: Ledger::default(), orbit, dp_rng, eval_rng }
+        let part_rng = Rng::new(cfg.seed ^ 0x9A, 0x9A);
+        Session {
+            cfg,
+            clients,
+            train,
+            test,
+            ledger: Ledger::default(),
+            orbit,
+            dp_rng,
+            eval_rng,
+            part_rng,
+        }
     }
 
     /// Drive all rounds; returns the run record.
@@ -163,74 +321,129 @@ impl Session {
         match self.cfg.algorithm {
             Algorithm::FeedSign => self.step_feedsign(t, None),
             Algorithm::DpFeedSign { epsilon } => self.step_feedsign(t, Some(epsilon)),
-            Algorithm::ZoFedSgd => self.step_zo_fedsgd(),
+            Algorithm::ZoFedSgd => self.step_zo_fedsgd(t),
             Algorithm::FedSgd => self.step_fedsgd(),
             Algorithm::Mezo => self.step_mezo(t),
         }
     }
 
+    /// Plan phase: fix the participant set before any client compute.
+    fn plan_round(&mut self, t: u64) -> RoundPlan {
+        let participants =
+            self.cfg.participation.sample(self.clients.len(), t, &mut self.part_rng);
+        RoundPlan { round: t, participants }
+    }
+
+    /// Worker count for a fan-out over `jobs` independent units.
+    fn worker_threads(&self, jobs: usize) -> usize {
+        let t = if self.cfg.threads > 0 {
+            self.cfg.threads
+        } else {
+            std::thread::available_parallelism().map_or(1, |p| p.get())
+        };
+        t.min(jobs.max(1))
+    }
 
     /// FeedSign (Algorithm 1, FeedSign branch): shared seed = t, 1-bit
     /// votes up, 1-bit majority (or DP vote) down, synchronized update.
     fn step_feedsign(&mut self, t: u64, dp_epsilon: Option<f32>) {
+        let plan = self.plan_round(t);
+        let threads = self.worker_threads(plan.participants.len());
         let seed = t as u32;
         let (mu, bs, c_g) = (self.cfg.mu, self.cfg.batch_size, self.cfg.c_g_noise);
-        let mut signs = Vec::with_capacity(self.clients.len());
-        for c in &mut self.clients {
-            // RoundStart carries the implicit seed schedule (0 payload bits)
-            self.ledger.record(&Message::RoundStart { round: t });
-            let batch = c.shard.next_batch(&self.train, bs, &mut c.rng);
-            let mut p = c.engine.probe(&mut c.w, &batch, seed, mu);
+        let pin_serial = self.cfg.threads == 1;
+        let train = &self.train;
+        // execute: fan the probes out; each worker meters its own uplink
+        let outcomes = execute_probes(&mut self.clients, &plan, threads, pin_serial, |c, ledger| {
+            let batch = c.shard.next_batch(train, bs, &mut c.rng);
+            let mut p = c.engine.probe(&c.w, &batch, seed, mu);
             if c_g > 0.0 {
                 p *= 1.0 + c_g * c.rng.normal();
             }
             let honest = if p >= 0.0 { 1i8 } else { -1 };
             let sign = c.attack.mutate_sign(honest, &mut c.rng);
-            let msg = Message::SignVote { sign };
-            self.ledger.record(&msg);
-            signs.push(sign);
+            ledger.record(&Message::SignVote { sign });
+            Contribution::Sign(sign)
+        });
+        // commit: votes and sub-ledgers in client-id order
+        let mut signs = Vec::with_capacity(outcomes.len());
+        let mut subs = Vec::with_capacity(outcomes.len());
+        for (o, &id) in outcomes.into_iter().zip(&plan.participants) {
+            debug_assert_eq!(o.client, id, "commit order must be client-id order");
+            let Contribution::Sign(s) = o.contribution else {
+                unreachable!("feedsign job yields sign votes");
+            };
+            signs.push(s);
+            subs.push(o.ledger);
         }
+        self.ledger.commit(subs);
         let f = match dp_epsilon {
             None => aggregation::majority_sign(&signs),
             Some(eps) => aggregation::dp_vote(&signs, eps, &mut self.dp_rng),
         };
         let step = f as f32 * self.cfg.eta;
-        for c in &mut self.clients {
-            self.ledger.record(&Message::GlobalSign { sign: f });
-            c.engine.update(&mut c.w, seed, step);
+        // broadcast to every client (non-participants too: the 1-bit
+        // downlink is what keeps all replicas synchronized)
+        let msg = Message::GlobalSign { sign: f };
+        for _ in 0..self.clients.len() {
+            self.ledger.record(&msg);
         }
+        let threads_all = self.worker_threads(self.clients.len());
+        for_each_client_parallel(&mut self.clients, threads_all, pin_serial, |c| {
+            c.engine.update(&mut c.w, seed, step);
+        });
         self.orbit.push_sign(f);
     }
 
-    /// ZO-FedSGD (FwdLLM/FedKSeed-style): each client samples its own seed,
-    /// uploads a 64-bit seed-projection pair; everyone downloads all K
+    /// ZO-FedSGD (FwdLLM/FedKSeed-style): each participant samples its own
+    /// seed, uploads a 64-bit seed-projection pair; everyone downloads all
     /// pairs and applies the mean update.
-    fn step_zo_fedsgd(&mut self) {
+    fn step_zo_fedsgd(&mut self, t: u64) {
+        let plan = self.plan_round(t);
+        let threads = self.worker_threads(plan.participants.len());
         let (mu, bs, c_g) = (self.cfg.mu, self.cfg.batch_size, self.cfg.c_g_noise);
-        let k = self.clients.len();
-        let mut pairs = Vec::with_capacity(k);
-        for c in &mut self.clients {
+        let pin_serial = self.cfg.threads == 1;
+        let train = &self.train;
+        let outcomes = execute_probes(&mut self.clients, &plan, threads, pin_serial, |c, ledger| {
             let seed = c.rng.next_u32() & 0x7FFF_FFFF; // direction counters < 2^31
-            let batch = c.shard.next_batch(&self.train, bs, &mut c.rng);
-            let mut p = c.engine.probe(&mut c.w, &batch, seed, mu);
+            let batch = c.shard.next_batch(train, bs, &mut c.rng);
+            let mut p = c.engine.probe(&c.w, &batch, seed, mu);
             if c_g > 0.0 {
                 p *= 1.0 + c_g * c.rng.normal();
             }
             let p = c.attack.mutate_projection(p, &mut c.rng);
-            let msg = Message::Projection { seed, p };
-            self.ledger.record(&msg);
+            ledger.record(&Message::Projection { seed, p });
+            Contribution::Pair { seed, p }
+        });
+        let mut pairs = Vec::with_capacity(outcomes.len());
+        let mut subs = Vec::with_capacity(outcomes.len());
+        for (o, &id) in outcomes.into_iter().zip(&plan.participants) {
+            debug_assert_eq!(o.client, id, "commit order must be client-id order");
+            let Contribution::Pair { seed, p } = o.contribution else {
+                unreachable!("zo-fedsgd job yields seed-projection pairs");
+            };
             pairs.push((seed, p));
+            subs.push(o.ledger);
         }
-        for c in &mut self.clients {
-            self.ledger.record(&Message::GlobalProjections { pairs: pairs.clone() });
-            for &(seed, p) in &pairs {
-                c.engine.update(&mut c.w, seed, self.cfg.eta * p / k as f32);
+        self.ledger.commit(subs);
+        let k = pairs.len();
+        let eta = self.cfg.eta;
+        let msg = Message::GlobalProjections { pairs: pairs.clone() };
+        for _ in 0..self.clients.len() {
+            self.ledger.record(&msg);
+        }
+        let threads_all = self.worker_threads(self.clients.len());
+        let pairs_ref = &pairs;
+        for_each_client_parallel(&mut self.clients, threads_all, pin_serial, |c| {
+            for &(seed, p) in pairs_ref {
+                c.engine.update(&mut c.w, seed, eta * p / k as f32);
             }
-        }
+        });
         self.orbit.push_pairs(pairs);
     }
 
-    /// FedSGD first-order baseline: dense gradient exchange.
+    /// FedSGD first-order baseline: dense gradient exchange (always full
+    /// participation; partial regimes are a ZO-side study).
     fn step_fedsgd(&mut self) {
         let bs = self.cfg.batch_size;
         let d = self.clients[0].engine.n_params();
@@ -260,7 +473,7 @@ impl Session {
         let (mu, bs) = (self.cfg.mu, self.cfg.batch_size);
         let c = &mut self.clients[0];
         let batch = c.shard.next_batch(&self.train, bs, &mut c.rng);
-        let p = c.engine.probe(&mut c.w, &batch, seed, mu);
+        let p = c.engine.probe(&c.w, &batch, seed, mu);
         c.engine.update(&mut c.w, seed, self.cfg.eta * p);
         self.orbit.push_pairs(vec![(seed, p)]);
     }
@@ -274,7 +487,8 @@ impl Session {
         let mut total = 0u32;
         let mut eval_shard = Shard::new((0..self.test.len()).collect());
         for _ in 0..self.cfg.eval_batches {
-            let batch = eval_shard.next_batch(&self.test, self.cfg.eval_batch_size, &mut self.eval_rng);
+            let batch =
+                eval_shard.next_batch(&self.test, self.cfg.eval_batch_size, &mut self.eval_rng);
             let rows = batch.rows() as u32;
             let (l, corr) = c.engine.eval(&mut c.w, &batch);
             loss_sum += l as f64;
@@ -436,6 +650,59 @@ mod tests {
         let r2 = make_session(Algorithm::FeedSign, 3, 30).run();
         assert_eq!(r1.final_loss, r2.final_loss);
         assert_eq!(r1.final_acc, r2.final_acc);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_run() {
+        let mut seq = make_session(Algorithm::FeedSign, 5, 0);
+        seq.cfg.threads = 1;
+        let mut par = make_session(Algorithm::FeedSign, 5, 0);
+        par.cfg.threads = 4;
+        for t in 0..60 {
+            seq.step(t);
+            par.step(t);
+        }
+        assert_eq!(seq.clients[0].w, par.clients[0].w, "bit-identical across thread counts");
+        assert_eq!(seq.ledger.uplink_bits, par.ledger.uplink_bits);
+    }
+
+    #[test]
+    fn partial_participation_keeps_replicas_synchronized_and_meters_uplink() {
+        let mut s = make_session(Algorithm::FeedSign, 5, 0);
+        s.cfg.participation = ParticipationCfg::Fraction(0.4); // 2 of 5 per round
+        for t in 0..100 {
+            s.step(t);
+        }
+        assert!(s.replicas_synchronized(), "non-participants must track the broadcast");
+        // uplink: only participants vote; downlink: everyone gets the bit
+        assert_eq!(s.ledger.uplink_bits, 100 * 2);
+        assert_eq!(s.ledger.downlink_bits, 100 * 5);
+        assert_eq!(s.orbit.len(), 100);
+    }
+
+    #[test]
+    fn partial_participation_still_learns() {
+        let mut s = make_session(Algorithm::FeedSign, 5, 0);
+        s.cfg.participation = ParticipationCfg::Bernoulli(0.6);
+        let (l0, _) = s.evaluate();
+        for t in 0..800 {
+            s.step(t);
+        }
+        let (l1, _) = s.evaluate();
+        assert!(l1 < l0, "partial participation should still learn: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn zo_fedsgd_partial_participation_divides_by_participants() {
+        let mut s = make_session(Algorithm::ZoFedSgd, 5, 0);
+        s.cfg.participation = ParticipationCfg::Fraction(0.4); // 2 of 5
+        for t in 0..10 {
+            s.step(t);
+        }
+        assert!(s.replicas_synchronized());
+        // 64 bits per participant up; all K download the 2-pair bundle
+        assert_eq!(s.ledger.uplink_bits, 10 * 2 * 64);
+        assert_eq!(s.ledger.downlink_bits, 10 * 5 * 2 * 64);
     }
 
     #[test]

@@ -12,14 +12,20 @@ use crate::simkit::zo;
 /// first-order baseline.  `w` is the client's own flat parameter vector —
 /// the engine holds no model state (the paper's PS/parameter-privacy story
 /// depends on parameters living only with clients).
-pub trait Engine {
+///
+/// `Send` is a supertrait: the parallel round engine
+/// ([`crate::coordinator::session::Session`]) fans per-client probe work
+/// out over scoped threads, each worker owning its clients' engines
+/// exclusively for the duration of the round.
+pub trait Engine: Send {
     /// Length of the flat (padded) parameter vector.
     fn n_params(&self) -> usize;
 
     /// SPSA projection `p = (L(w+mu z) - L(w-mu z)) / 2mu` for direction
-    /// `z(seed)`.  `w` is unchanged on return (in-place engines perturb and
-    /// restore; functional engines never mutate).
-    fn probe(&mut self, w: &mut [f32], batch: &Batch, seed: u32, mu: f32) -> f32;
+    /// `z(seed)`.  Takes `w` by shared reference — the probe contract has
+    /// always been "replica unchanged on return"; the signature now
+    /// enforces it (perturbed views are regenerated into engine scratch).
+    fn probe(&mut self, w: &[f32], batch: &Batch, seed: u32, mu: f32) -> f32;
 
     /// Apply the aggregated update `w -= step * z(seed)`.
     fn update(&mut self, w: &mut [f32], seed: u32, step: f32);
@@ -67,7 +73,7 @@ impl<M: Model> Engine for NativeEngine<M> {
         self.model.n_params()
     }
 
-    fn probe(&mut self, w: &mut [f32], batch: &Batch, seed: u32, mu: f32) -> f32 {
+    fn probe(&mut self, w: &[f32], batch: &Batch, seed: u32, mu: f32) -> f32 {
         let mut scratch = std::mem::take(&mut self.probe_buf);
         let p = zo::spsa_probe_scratch(&mut self.model, w, &mut scratch, batch, seed, mu);
         self.probe_buf = scratch;
@@ -125,10 +131,18 @@ mod tests {
     #[test]
     fn probe_preserves_params() {
         let mut e = engine();
-        let mut w = e.init_params(0);
+        let w = e.init_params(0);
         let w0 = w.clone();
-        e.probe(&mut w, &batch(1), 5, 1e-3);
+        e.probe(&w, &batch(1), 5, 1e-3);
         assert_eq!(w, w0);
+    }
+
+    #[test]
+    fn engines_are_send() {
+        fn assert_send<T: Send>(_: T) {}
+        assert_send(engine());
+        let boxed: Box<dyn Engine> = Box::new(engine());
+        assert_send(boxed);
     }
 
     #[test]

@@ -16,10 +16,20 @@
 //!   on the request path.
 //!
 //! Two interchangeable [`engine::Engine`] backends drive client compute:
-//! [`runtime::PjrtEngine`] executes the AOT artifacts through the PJRT C
-//! API, and [`simkit`] is a pure-rust NN substrate (own Philox PRNG,
-//! bit-compatible with the Pallas kernel at the u32 level) that makes the
-//! paper's 10^4–10^5-step sweeps tractable on this testbed.
+//! [`runtime::SharedPjrtEngine`] executes the AOT artifacts through the
+//! PJRT C API, and [`simkit`] is a pure-rust NN substrate (own Philox
+//! PRNG, bit-compatible with the Pallas kernel at the u32 level) that
+//! makes the paper's 10^4–10^5-step sweeps tractable on this testbed.
+//!
+//! The coordinator runs a **parallel round engine**: each round is
+//! planned (participant sampling via
+//! [`coordinator::participation::ParticipationCfg`] — full,
+//! fixed-fraction, or Bernoulli availability), executed (per-client SPSA
+//! probes fan out over scoped threads; `Engine: Send` and the chunk-
+//! parallel Philox AXPYs in [`simkit::zo`] exist for this), and committed
+//! **in client-id order**, so every run is bit-identical for every worker
+//! thread count — the determinism contract pinned by
+//! `rust/tests/parallel_parity.rs`.
 //!
 //! Entry points: [`coordinator::session::Session`] for programmatic use,
 //! the `feedsign` binary for the CLI, `examples/` for runnable scenarios

@@ -27,7 +27,8 @@ USAGE: feedsign <command> [options]
 
 COMMANDS:
   run          --config exp.toml [--csv curve.csv] [--orbit run.orbit]
-  quickstart   [--rounds 2000]
+               [--threads N] [--participation full|fraction:F|bernoulli:P]
+  quickstart   [--rounds 2000] [--threads N] [--participation SPEC]
   init-config
   theory       [--eta 1e-3] [--p-max 0.1]
   replay       --input run.orbit --n-params D
@@ -62,8 +63,21 @@ fn main() -> Result<()> {
     }
 }
 
+/// Apply the round-engine CLI overrides (`--threads`, `--participation`)
+/// on top of a loaded config, re-validating afterwards.
+fn apply_engine_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
+    if let Some(t) = args.str("threads") {
+        cfg.threads = t.parse().context("parsing --threads")?;
+    }
+    if let Some(p) = args.str("participation") {
+        cfg.participation = p.to_string();
+    }
+    cfg.validate()
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
-    let cfg = ExperimentConfig::load(&PathBuf::from(args.req("config")?))?;
+    let mut cfg = ExperimentConfig::load(&PathBuf::from(args.req("config")?))?;
+    apply_engine_overrides(&mut cfg, args)?;
     println!("experiment: {}", cfg.name);
     let mut session = cfg.build_session()?;
     let result = session.run();
@@ -83,6 +97,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_quickstart(args: &Args) -> Result<()> {
     let mut cfg = config::quickstart();
     cfg.rounds = args.u64_or("rounds", 2000)?;
+    apply_engine_overrides(&mut cfg, args)?;
     let mut session = cfg.build_session()?;
     let result = session.run();
     print_result(&result);

@@ -9,6 +9,12 @@
 
 pub mod manifest;
 
+/// PJRT bindings: the offline build links a vendored stub that mirrors the
+/// `xla` crate's API and errors at runtime; swap this declaration for the
+/// real crate to run on hardware (see `xla_stub.rs`).
+#[path = "xla_stub.rs"]
+mod xla;
+
 use crate::data::Batch;
 use crate::engine::Engine;
 use anyhow::{bail, Context, Result};
@@ -198,22 +204,27 @@ impl PjrtModel {
 }
 
 /// [`Engine`] adapter over a shared loaded model (one compile, many
-/// clients).  The xla crate's handles are not thread-safe, so PJRT-backed
-/// clients run on the synchronous [`crate::coordinator::Session`] only;
-/// the threaded distributed topology is native-engine only (the `Engine`
-/// trait deliberately has no `Send` supertrait for this reason).
+/// clients).  `Engine` carries a `Send` supertrait (the parallel round
+/// engine fans client probes out over scoped threads), so the shared
+/// model is held behind an `Arc`.  With the vendored stub this is
+/// trivially sound (stateless placeholder types).  **Re-enabling the real
+/// `xla` crate needs more than a swap here**: K clients share one
+/// `PjrtModel`, so a `threads > 1` session would drive the same
+/// loaded-executable handles from several workers at once — wrap the
+/// model in a `Mutex`, give each client its own executables, or pin
+/// PJRT-backed sessions to `threads = 1` before doing so.
 pub struct SharedPjrtEngine {
-    model: std::rc::Rc<PjrtModel>,
+    model: std::sync::Arc<PjrtModel>,
 }
 
 impl SharedPjrtEngine {
-    pub fn new(model: std::rc::Rc<PjrtModel>) -> Self {
+    pub fn new(model: std::sync::Arc<PjrtModel>) -> Self {
         SharedPjrtEngine { model }
     }
 
     /// Load a variant and wrap it for K clients.
-    pub fn load_shared(dir: &Path, variant: &str) -> Result<std::rc::Rc<PjrtModel>> {
-        Ok(std::rc::Rc::new(PjrtModel::load(dir, variant)?))
+    pub fn load_shared(dir: &Path, variant: &str) -> Result<std::sync::Arc<PjrtModel>> {
+        Ok(std::sync::Arc::new(PjrtModel::load(dir, variant)?))
     }
 }
 
@@ -222,7 +233,7 @@ impl Engine for SharedPjrtEngine {
         self.model.n_params()
     }
 
-    fn probe(&mut self, w: &mut [f32], batch: &Batch, seed: u32, mu: f32) -> f32 {
+    fn probe(&mut self, w: &[f32], batch: &Batch, seed: u32, mu: f32) -> f32 {
         self.model.spsa_probe(w, batch, seed, mu).expect("pjrt probe")
     }
 

@@ -1,0 +1,118 @@
+//! Compile-time stand-in for the `xla` PJRT bindings.
+//!
+//! The offline build environment cannot fetch the real `xla` crate, so this
+//! module mirrors exactly the API surface `runtime::mod` consumes and fails
+//! at *runtime* (from [`PjRtClient::cpu`] / [`HloModuleProto::from_text_file`]
+//! onward) with a descriptive error.  Everything downstream of those entry
+//! points only needs to typecheck: the PJRT request path is exercised solely
+//! when AOT artifacts exist, and all tests/benches gate on
+//! [`crate::runtime::artifacts_available`] first.  Swapping this module for
+//! the real crate restores the hardware path without touching callers.
+
+use std::fmt;
+
+/// Error type standing in for `xla::Error`; converts into `anyhow::Error`
+/// through the std-error blanket impl.
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "{what}: XLA/PJRT backend not linked in this build (offline vendored stub); \
+         build against the real `xla` crate to execute AOT artifacts"
+    )))
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub (no PJRT)".to_string()
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("Literal::decompose_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+impl From<i32> for Literal {
+    fn from(_v: i32) -> Self {
+        Literal
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(_v: f32) -> Self {
+        Literal
+    }
+}

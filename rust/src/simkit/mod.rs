@@ -5,9 +5,9 @@
 //! K clients × 5 repeats, which per-call PJRT dispatch cannot sustain on
 //! this testbed.  It provides bit-compatible shared randomness
 //! ([`prng`], pinned to the Pallas kernel), dense kernels ([`ops`]),
-//! models with hand-written backprop ([`nn`]) and the in-place SPSA walker
-//! ([`zo`]).  `coordinator` code is engine-agnostic: the same session runs
-//! on either backend through [`crate::engine::Engine`].
+//! models with hand-written backprop ([`nn`]) and the chunk-parallel SPSA
+//! AXPYs ([`zo`]).  `coordinator` code is engine-agnostic: the same
+//! session runs on either backend through [`crate::engine::Engine`].
 
 pub mod nn;
 pub mod ops;

@@ -11,8 +11,10 @@
 //!
 //! Counter-based generation is what lets FeedSign ship a *direction in R^d*
 //! as a 32-bit seed: element `i` of `z` is a pure function of `(seed, i)`,
-//! so any tile of `z` can be regenerated wherever it is consumed — the
-//! in-place SPSA walker in [`crate::simkit::zo`] exploits exactly that.
+//! so any tile of `z` can be regenerated wherever it is consumed — both
+//! the streaming SPSA AXPYs in [`crate::simkit::zo`] and their
+//! chunk-parallel split of the counter space across worker threads
+//! (exact, not approximate) exploit exactly that.
 
 /// Philox multiplier constants (Salmon et al., SC'11).
 pub const PHILOX_M0: u32 = 0xD251_1F53;
@@ -74,11 +76,27 @@ pub fn normals4(seed: u32, ctr: u32) -> [f32; 4] {
     [za, zb, zc, zd]
 }
 
-/// Fill `out` with the leading `out.len()` elements of `z(seed)`.
-pub fn normals_into(seed: u32, out: &mut [f32]) {
+/// Fill `out` with elements `z[start .. start + out.len()]` of the
+/// direction `z(seed)` — `start` may be **any** element offset, not just a
+/// lane boundary.  This is the primitive the chunk-parallel noise ops hand
+/// to each worker thread: counter-based Philox makes element `i` a pure
+/// function of `(seed, i)`, so any split of the counter space reproduces
+/// the sequential stream bit-exactly.
+pub fn normals_into_span(seed: u32, start: usize, out: &mut [f32]) {
     let n = out.len();
+    if n == 0 {
+        return;
+    }
     let mut i = 0usize;
-    let mut ctr = 0u32;
+    let mut ctr = (start / 4) as u32;
+    let phase = start % 4;
+    if phase != 0 {
+        let z = normals4(seed, ctr);
+        let take = (4 - phase).min(n);
+        out[..take].copy_from_slice(&z[phase..phase + take]);
+        i = take;
+        ctr += 1;
+    }
     while i + 4 <= n {
         out[i..i + 4].copy_from_slice(&normals4(seed, ctr));
         i += 4;
@@ -88,6 +106,79 @@ pub fn normals_into(seed: u32, out: &mut [f32]) {
         let z = normals4(seed, ctr);
         out[i..].copy_from_slice(&z[..n - i]);
     }
+}
+
+/// Fill `out` with the leading `out.len()` elements of `z(seed)`,
+/// fanning the counter space out over worker threads for large vectors
+/// (bit-identical to the sequential fill for every thread count).
+pub fn normals_into(seed: u32, out: &mut [f32]) {
+    let threads = noise_threads(out.len());
+    if threads <= 1 {
+        normals_into_span(seed, 0, out);
+        return;
+    }
+    let chunk = chunk_size(out.len(), threads);
+    std::thread::scope(|s| {
+        for (i, c) in out.chunks_mut(chunk).enumerate() {
+            s.spawn(move || normals_into_span(seed, i * chunk, c));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Chunk-parallelism policy (shared by this module and `simkit::zo`)
+// ---------------------------------------------------------------------------
+
+/// Minimum element count before chunk-parallel noise generation pays for
+/// its thread spawns (scoped threads cost ~10us each; a Philox lane is
+/// ~10ns, so below this the sequential loop always wins).
+pub const PAR_MIN_ELEMS: usize = 1 << 16;
+
+thread_local! {
+    static SERIAL_ZONE: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+/// RAII guard marking the current thread as already inside a parallel
+/// region: nested noise ops stay sequential while it lives, so the round
+/// engine's per-client fan-out does not multiply with the per-chunk
+/// fan-out into thread oversubscription.
+pub struct SerialZone {
+    prev: bool,
+}
+
+/// Enter a serial zone on this thread (see [`SerialZone`]).
+pub fn serial_zone() -> SerialZone {
+    let prev = SERIAL_ZONE.with(|c| c.replace(true));
+    SerialZone { prev }
+}
+
+impl Drop for SerialZone {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        SERIAL_ZONE.with(|c| c.set(prev));
+    }
+}
+
+/// Worker threads for a chunk-parallel noise op over `n` elements: 1 when
+/// inside a [`serial_zone`] or below [`PAR_MIN_ELEMS`], else the
+/// `FEEDSIGN_ZO_THREADS` override or the machine's available parallelism.
+pub fn noise_threads(n: usize) -> usize {
+    if n < PAR_MIN_ELEMS || SERIAL_ZONE.with(|c| c.get()) {
+        return 1;
+    }
+    std::env::var("FEEDSIGN_ZO_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |p| p.get()))
+}
+
+/// Per-worker chunk length for an even split of `n` over `threads`,
+/// rounded up to a whole Philox lane so only the final chunk can end
+/// mid-lane.
+pub fn chunk_size(n: usize, threads: usize) -> usize {
+    let per = n.div_ceil(threads.max(1));
+    (per.div_ceil(4) * 4).max(4)
 }
 
 /// Allocate-and-fill convenience for [`normals_into`].
@@ -350,6 +441,44 @@ mod tests {
         assert!(w[32..40].iter().all(|&v| v == 1.0));
         assert!(w[40..48].iter().all(|&v| v == 0.0));
         assert!(w[48..].iter().all(|&v| v == 0.0)); // pad tail
+    }
+
+    #[test]
+    fn span_fill_matches_full_stream_at_any_offset() {
+        let full = normals_vec(21, 64);
+        for start in [0usize, 1, 2, 3, 4, 5, 7, 8, 13, 30, 61] {
+            let len = 64 - start;
+            let mut span = vec![0.0f32; len];
+            normals_into_span(21, start, &mut span);
+            assert_eq!(&span, &full[start..], "offset {start}");
+        }
+    }
+
+    #[test]
+    fn parallel_fill_bit_identical_to_sequential() {
+        let n = PAR_MIN_ELEMS + 37; // crosses the parallel threshold, ragged tail
+        let mut seq = vec![0.0f32; n];
+        normals_into_span(33, 0, &mut seq);
+        let mut par = vec![0.0f32; n];
+        normals_into(33, &mut par);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn serial_zone_forces_single_thread() {
+        let _guard = serial_zone();
+        assert_eq!(noise_threads(PAR_MIN_ELEMS * 4), 1);
+        drop(_guard);
+        assert!(noise_threads(4) == 1, "tiny fills stay sequential");
+    }
+
+    #[test]
+    fn chunk_size_lane_aligned_and_covers() {
+        for (n, t) in [(100usize, 3usize), (1 << 20, 7), (17, 16), (4, 1)] {
+            let c = chunk_size(n, t);
+            assert_eq!(c % 4, 0, "chunk must end on a lane boundary");
+            assert!(c * t >= n, "chunks must cover the vector");
+        }
     }
 
     #[test]

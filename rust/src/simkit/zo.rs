@@ -1,22 +1,41 @@
 //! Zeroth-order SPSA in flat parameter space — the client-side compute of
 //! FeedSign and ZO-FedSGD (Definition 3.1 with n = 1).
 //!
-//! The walker is **in-place**: `w` is perturbed by `+mu z`, evaluated,
-//! shifted by `-2 mu z`, evaluated, then restored by `+mu z`, regenerating
-//! the Philox stream on each pass instead of materialising `z`.  That is
-//! MeZO's "Approach 2" (Appendix I.2) and the source of the paper's
-//! inference-level memory claim: peak extra memory is O(1), not O(d).
-//! It is the exact rust analogue of the fused `spsa_axpy` Pallas kernel.
+//! The probe regenerates each perturbed view `w ± mu z` from the pristine
+//! replica into a scratch buffer with a fused AXPY (never materialising
+//! `z`), so the protocol invariant "probe leaves the replica bit-identical"
+//! holds exactly; see [`spsa_probe_scratch`] for why the in-place
+//! `+mu, -2mu, +mu` telescope is *not* used.  The AXPYs themselves are
+//! **chunk-parallel**: counter-based Philox makes element `i` of `z(seed)`
+//! a pure function of `(seed, i)`, so [`axpy_into`] / [`perturb_in_place`]
+//! split the counter space across worker threads and stay bit-identical to
+//! the sequential loop for every thread count (the rust analogue of the
+//! grid-parallel `spsa_axpy` Pallas kernel).
 
 use super::nn::Model;
 use super::prng;
 use crate::data::Batch;
 
-/// In-place `w += scale * z(seed)` with streaming noise regeneration.
-pub fn perturb_in_place(w: &mut [f32], seed: u32, scale: f32) {
+/// In-place `w[j] += scale * z_{start+j}(seed)` for a span beginning at
+/// absolute element offset `start` of the direction stream.  `start` may
+/// land mid-lane; the partial head lane is regenerated and sliced.
+pub fn perturb_span(w: &mut [f32], seed: u32, scale: f32, start: usize) {
     let n = w.len();
+    if n == 0 {
+        return;
+    }
     let mut i = 0usize;
-    let mut ctr = 0u32;
+    let mut ctr = (start / 4) as u32;
+    let phase = start % 4;
+    if phase != 0 {
+        let z = prng::normals4(seed, ctr);
+        let take = (4 - phase).min(n);
+        for (j, wj) in w[..take].iter_mut().enumerate() {
+            *wj += scale * z[phase + j];
+        }
+        i = take;
+        ctr += 1;
+    }
     while i + 4 <= n {
         let z = prng::normals4(seed, ctr);
         w[i] += scale * z[0];
@@ -34,13 +53,27 @@ pub fn perturb_in_place(w: &mut [f32], seed: u32, scale: f32) {
     }
 }
 
-/// Fused `out[i] = w[i] + scale * z_i(seed)` (the rust analogue of the
-/// `spsa_axpy` Pallas kernel's out-of-place form).
-pub fn axpy_into(w: &[f32], out: &mut [f32], seed: u32, scale: f32) {
+/// Fused `out[j] = w[j] + scale * z_{start+j}(seed)` for a span beginning
+/// at absolute element offset `start` (out-of-place form of
+/// [`perturb_span`]).
+pub fn axpy_span(w: &[f32], out: &mut [f32], seed: u32, scale: f32, start: usize) {
     debug_assert_eq!(w.len(), out.len());
     let n = w.len();
+    if n == 0 {
+        return;
+    }
     let mut i = 0usize;
-    let mut ctr = 0u32;
+    let mut ctr = (start / 4) as u32;
+    let phase = start % 4;
+    if phase != 0 {
+        let z = prng::normals4(seed, ctr);
+        let take = (4 - phase).min(n);
+        for j in 0..take {
+            out[j] = w[j] + scale * z[phase + j];
+        }
+        i = take;
+        ctr += 1;
+    }
     while i + 4 <= n {
         let z = prng::normals4(seed, ctr);
         out[i] = w[i] + scale * z[0];
@@ -56,6 +89,52 @@ pub fn axpy_into(w: &[f32], out: &mut [f32], seed: u32, scale: f32) {
             out[j] = w[j] + scale * z[j - i];
         }
     }
+}
+
+/// In-place `w += scale * z(seed)` with streaming noise regeneration,
+/// chunk-parallel over [`prng::noise_threads`] workers (bit-identical to
+/// the sequential walk for every thread count).
+pub fn perturb_in_place(w: &mut [f32], seed: u32, scale: f32) {
+    let threads = prng::noise_threads(w.len());
+    perturb_in_place_threads(w, seed, scale, threads);
+}
+
+/// [`perturb_in_place`] with an explicit worker count (benches and the
+/// parity tests pin `threads` instead of relying on the auto policy).
+pub fn perturb_in_place_threads(w: &mut [f32], seed: u32, scale: f32, threads: usize) {
+    if threads <= 1 || w.len() <= 4 {
+        perturb_span(w, seed, scale, 0);
+        return;
+    }
+    let chunk = prng::chunk_size(w.len(), threads);
+    std::thread::scope(|s| {
+        for (i, c) in w.chunks_mut(chunk).enumerate() {
+            s.spawn(move || perturb_span(c, seed, scale, i * chunk));
+        }
+    });
+}
+
+/// Fused `out[i] = w[i] + scale * z_i(seed)`, chunk-parallel over
+/// [`prng::noise_threads`] workers (the rust analogue of the `spsa_axpy`
+/// Pallas kernel's out-of-place form).
+pub fn axpy_into(w: &[f32], out: &mut [f32], seed: u32, scale: f32) {
+    let threads = prng::noise_threads(w.len());
+    axpy_into_threads(w, out, seed, scale, threads);
+}
+
+/// [`axpy_into`] with an explicit worker count.
+pub fn axpy_into_threads(w: &[f32], out: &mut [f32], seed: u32, scale: f32, threads: usize) {
+    debug_assert_eq!(w.len(), out.len());
+    if threads <= 1 || w.len() <= 4 {
+        axpy_span(w, out, seed, scale, 0);
+        return;
+    }
+    let chunk = prng::chunk_size(w.len(), threads);
+    std::thread::scope(|s| {
+        for (i, (wc, oc)) in w.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate() {
+            s.spawn(move || axpy_span(wc, oc, seed, scale, i * chunk));
+        }
+    });
 }
 
 /// SPSA gradient projection
@@ -85,10 +164,10 @@ pub fn spsa_probe_scratch<M: Model + ?Sized>(
 }
 
 /// Allocation-per-call convenience wrapper around
-/// [`spsa_probe_scratch`].
+/// [`spsa_probe_scratch`]; like it, never mutates `w`.
 pub fn spsa_probe<M: Model + ?Sized>(
     model: &mut M,
-    w: &mut [f32],
+    w: &[f32],
     batch: &Batch,
     seed: u32,
     mu: f32,
@@ -122,6 +201,7 @@ mod tests {
     use super::*;
     use crate::simkit::nn::{LinearProbe, Model, ModelCfg, TransformerSim};
     use crate::simkit::prng::Rng;
+    use crate::util::proptest_lite::{check, Gen};
 
     /// Linearly separable features: class c has +2 planted on coordinate c.
     fn feature_batch(dim: usize, classes: usize, rows: usize, seed: u32) -> Batch {
@@ -149,24 +229,76 @@ mod tests {
     }
 
     #[test]
+    fn spans_reproduce_full_stream_at_arbitrary_splits() {
+        // the proptest-lite property the chunk-parallel engine rests on:
+        // cutting the AXPY at ANY split points reproduces the reference
+        // stream bit-exactly.
+        check("axpy split points", |g: &mut Gen| {
+            let n = g.usize_in(5, 400);
+            let w = g.vec_normal(n);
+            let seed = g.u32() & 0x7FFF_FFFF;
+            let scale = g.f32_in(-2.0, 2.0);
+            // reference: scalar formula from the materialised stream
+            let z = prng::normals_vec(seed, n);
+            let expect: Vec<f32> = w.iter().zip(&z).map(|(wi, zi)| wi + scale * zi).collect();
+            // cut [0, n) into 1..=4 spans at arbitrary (unsorted draws,
+            // then sorted) boundaries, including mid-lane ones
+            let mut cuts = vec![0usize, n];
+            for _ in 0..g.usize_in(0, 3) {
+                cuts.push(g.usize_in(0, n + 1));
+            }
+            cuts.sort_unstable();
+            let mut out = vec![0.0f32; n];
+            for pair in cuts.windows(2) {
+                let (a, b) = (pair[0], pair[1]);
+                axpy_span(&w[a..b], &mut out[a..b], seed, scale, a);
+            }
+            assert_eq!(out, expect);
+            // and the perturb form over the same cuts
+            let mut wp = w.clone();
+            for pair in cuts.windows(2) {
+                let (a, b) = (pair[0], pair[1]);
+                perturb_span(&mut wp[a..b], seed, scale, a);
+            }
+            assert_eq!(wp, expect);
+        });
+    }
+
+    #[test]
+    fn explicit_thread_counts_bit_identical() {
+        let n = 4099; // ragged: not a lane multiple, not a chunk multiple
+        let w = prng::normals_vec(2, n);
+        let mut reference = vec![0.0f32; n];
+        axpy_into_threads(&w, &mut reference, 77, 0.3, 1);
+        for threads in [2usize, 3, 4, 8] {
+            let mut out = vec![0.0f32; n];
+            axpy_into_threads(&w, &mut out, 77, 0.3, threads);
+            assert_eq!(out, reference, "axpy with {threads} threads");
+            let mut wp = w.clone();
+            perturb_in_place_threads(&mut wp, 77, 0.3, threads);
+            assert_eq!(wp, reference, "perturb with {threads} threads");
+        }
+    }
+
+    #[test]
     fn probe_restores_w() {
         let mut model = LinearProbe::new(16, 4);
         let w0 = model.init(0);
-        let mut w = w0.clone();
+        let w = w0.clone();
         let batch = feature_batch(16, 4, 8, 1);
-        spsa_probe(&mut model, &mut w, &batch, 7, 1e-3);
+        spsa_probe(&mut model, &w, &batch, 7, 1e-3);
         assert_eq!(w, w0, "probe must leave the replica bit-identical");
     }
 
     #[test]
     fn probe_approximates_gradient_projection() {
         let mut model = LinearProbe::new(8, 3);
-        let mut w = model.init(0);
+        let w = model.init(0);
         let batch = feature_batch(8, 3, 16, 2);
         let mut grad = vec![0.0; w.len()];
         model.loss_and_grad(&w.clone(), &batch, &mut grad);
         for seed in 0..8u32 {
-            let p = spsa_probe(&mut model, &mut w, &batch, seed, 1e-4);
+            let p = spsa_probe(&mut model, &w, &batch, seed, 1e-4);
             let z = prng::normals_vec(seed, w.len());
             let exact = crate::simkit::ops::dot(&z, &grad);
             assert!(

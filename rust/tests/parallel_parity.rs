@@ -1,0 +1,168 @@
+//! Parallel round-engine parity: for every synchronized algorithm, a
+//! session fanned out over N worker threads must be **bit-identical** to
+//! the sequential baseline (`threads = 1`) — final replicas, ledger
+//! totals, orbit entries and orbit replay.  This is the determinism
+//! contract of the plan/execute/commit engine (commit order = client id);
+//! if any of these assertions ever loosens to a tolerance, the protocol's
+//! replica-synchronization story is broken.
+
+use feedsign::coordinator::participation::ParticipationCfg;
+use feedsign::coordinator::{Algorithm, Attack, Client, Session, SessionCfg};
+use feedsign::data::partition::{split, Partition};
+use feedsign::data::vision::{generate, SYNTH_CIFAR10};
+use feedsign::data::Dataset;
+use feedsign::engine::NativeEngine;
+use feedsign::simkit::nn::LinearProbe;
+
+fn build_session(
+    algo: Algorithm,
+    k: usize,
+    threads: usize,
+    participation: ParticipationCfg,
+    byzantine: usize,
+) -> Session {
+    let train: Dataset = generate(&SYNTH_CIFAR10, 400, 0);
+    let test: Dataset = generate(&SYNTH_CIFAR10, 150, 1);
+    let shards = split(&train, k, Partition::Iid, 0);
+    let clients: Vec<Client> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            let c = Client::new(
+                id,
+                Box::new(NativeEngine::new(LinearProbe::new(128, 10))),
+                shard,
+                11,
+            );
+            if id < byzantine {
+                c.with_attack(Attack::SignFlip)
+            } else {
+                c
+            }
+        })
+        .collect();
+    let cfg = SessionCfg {
+        algorithm: algo,
+        rounds: 0,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 16,
+        eval_every: 0,
+        participation,
+        threads,
+        seed: 11,
+        ..Default::default()
+    };
+    Session::new(cfg, clients, train, test)
+}
+
+/// Step both sessions `rounds` times and assert complete bitwise parity.
+fn assert_parity(mut seq: Session, mut par: Session, rounds: u64, label: &str) {
+    for t in 0..rounds {
+        seq.step(t);
+        par.step(t);
+    }
+    // 1. final replicas: every client, bit-identical
+    assert_eq!(seq.clients.len(), par.clients.len());
+    for (a, b) in seq.clients.iter().zip(&par.clients) {
+        assert_eq!(a.w, b.w, "{label}: replica {} diverged", a.id);
+    }
+    assert!(seq.replicas_synchronized(), "{label}: sequential replicas desynced");
+    assert!(par.replicas_synchronized(), "{label}: parallel replicas desynced");
+    // 2. ledger: bit counts AND message counts
+    assert_eq!(seq.ledger.uplink_bits, par.ledger.uplink_bits, "{label}: uplink bits");
+    assert_eq!(seq.ledger.downlink_bits, par.ledger.downlink_bits, "{label}: downlink bits");
+    assert_eq!(seq.ledger.uplink_msgs, par.ledger.uplink_msgs, "{label}: uplink msgs");
+    assert_eq!(seq.ledger.downlink_msgs, par.ledger.downlink_msgs, "{label}: downlink msgs");
+    // 3. orbit: identical entries, and replay reconstructs the parallel
+    //    session's final replica exactly from the shared init
+    assert_eq!(seq.orbit.entries, par.orbit.entries, "{label}: orbit entries");
+    let mut w = par.clients[0].engine.init_params(11);
+    par.orbit.replay(&mut w);
+    assert_eq!(w, par.clients[0].w, "{label}: orbit replay must reconstruct exactly");
+}
+
+#[test]
+fn feedsign_parallel_matches_sequential() {
+    let seq = build_session(Algorithm::FeedSign, 5, 1, ParticipationCfg::Full, 0);
+    let par = build_session(Algorithm::FeedSign, 5, 4, ParticipationCfg::Full, 0);
+    assert_parity(seq, par, 120, "feedsign");
+}
+
+#[test]
+fn dp_feedsign_parallel_matches_sequential() {
+    let algo = Algorithm::DpFeedSign { epsilon: 4.0 };
+    let seq = build_session(algo, 5, 1, ParticipationCfg::Full, 0);
+    let par = build_session(algo, 5, 4, ParticipationCfg::Full, 0);
+    assert_parity(seq, par, 120, "dp-feedsign");
+}
+
+#[test]
+fn zo_fedsgd_parallel_matches_sequential() {
+    let seq = build_session(Algorithm::ZoFedSgd, 4, 1, ParticipationCfg::Full, 0);
+    let par = build_session(Algorithm::ZoFedSgd, 4, 4, ParticipationCfg::Full, 0);
+    assert_parity(seq, par, 80, "zo-fedsgd");
+}
+
+#[test]
+fn parity_holds_under_byzantine_attack() {
+    // attack mutations draw from per-client RNG streams; fan-out must not
+    // perturb them
+    let seq = build_session(Algorithm::FeedSign, 5, 1, ParticipationCfg::Full, 2);
+    let par = build_session(Algorithm::FeedSign, 5, 4, ParticipationCfg::Full, 2);
+    assert_parity(seq, par, 100, "feedsign+byzantine");
+}
+
+#[test]
+fn parity_holds_under_partial_participation() {
+    for participation in [ParticipationCfg::Fraction(0.4), ParticipationCfg::Bernoulli(0.5)] {
+        let seq = build_session(Algorithm::FeedSign, 5, 1, participation, 0);
+        let par = build_session(Algorithm::FeedSign, 5, 4, participation, 0);
+        assert_parity(seq, par, 100, &format!("feedsign+{}", participation.render()));
+        let seq = build_session(Algorithm::ZoFedSgd, 5, 1, participation, 0);
+        let par = build_session(Algorithm::ZoFedSgd, 5, 4, participation, 0);
+        assert_parity(seq, par, 60, &format!("zo-fedsgd+{}", participation.render()));
+    }
+}
+
+#[test]
+fn parity_across_many_thread_counts() {
+    // odd worker counts exercise ragged chunking of the participant list
+    let mut reference = build_session(Algorithm::FeedSign, 7, 1, ParticipationCfg::Full, 0);
+    for t in 0..60 {
+        reference.step(t);
+    }
+    for threads in [2usize, 3, 5, 8, 16] {
+        let mut s = build_session(Algorithm::FeedSign, 7, threads, ParticipationCfg::Full, 0);
+        for t in 0..60 {
+            s.step(t);
+        }
+        assert_eq!(
+            s.clients[0].w, reference.clients[0].w,
+            "threads={threads} diverged from sequential"
+        );
+        assert_eq!(s.ledger.uplink_bits, reference.ledger.uplink_bits);
+        assert_eq!(s.orbit.entries, reference.orbit.entries);
+    }
+}
+
+#[test]
+fn auto_threads_matches_sequential_run_results() {
+    // cfg.threads = 0 (auto) goes through whatever parallelism the machine
+    // has; the run-level metrics must still be identical
+    let mut seq = build_session(Algorithm::FeedSign, 5, 1, ParticipationCfg::Full, 0);
+    seq.cfg.rounds = 50;
+    seq.cfg.eval_every = 10;
+    let mut auto = build_session(Algorithm::FeedSign, 5, 0, ParticipationCfg::Full, 0);
+    auto.cfg.rounds = 50;
+    auto.cfg.eval_every = 10;
+    let r_seq = seq.run();
+    let r_auto = auto.run();
+    assert_eq!(r_seq.final_loss, r_auto.final_loss);
+    assert_eq!(r_seq.final_acc, r_auto.final_acc);
+    assert_eq!(r_seq.ledger.uplink_bits, r_auto.ledger.uplink_bits);
+    for (a, b) in r_seq.records.iter().zip(&r_auto.records) {
+        assert_eq!(a.eval_loss, b.eval_loss);
+        assert_eq!(a.eval_acc, b.eval_acc);
+    }
+}

@@ -182,6 +182,32 @@ fn prop_axpy_into_matches_scalar_reference() {
 }
 
 #[test]
+fn prop_chunk_parallel_axpy_matches_reference_for_any_split() {
+    // the chunk-parallel engine's soundness claim: splitting the Philox
+    // counter space at ANY point — arbitrary span offsets or any worker
+    // count — reproduces w + scale * z(seed) bit-exactly
+    check("chunk-parallel axpy", |g: &mut Gen| {
+        let n = g.usize_in(5, 600);
+        let w = g.vec_normal(n);
+        let seed = g.u32() & 0x7FFF_FFFF;
+        let scale = g.f32_in(-3.0, 3.0);
+        let z = normals_vec(seed, n);
+        let expect: Vec<f32> = w.iter().zip(&z).map(|(wi, zi)| wi + scale * zi).collect();
+        // arbitrary split point, including mid-lane
+        let cut = g.usize_in(0, n + 1).min(n);
+        let mut out = vec![0.0f32; n];
+        zo::axpy_span(&w[..cut], &mut out[..cut], seed, scale, 0);
+        zo::axpy_span(&w[cut..], &mut out[cut..], seed, scale, cut);
+        assert_eq!(out, expect, "split at {cut}");
+        // explicit worker counts, ragged chunking included
+        let threads = g.usize_in(1, 9);
+        let mut out_par = vec![0.0f32; n];
+        zo::axpy_into_threads(&w, &mut out_par, seed, scale, threads);
+        assert_eq!(out_par, expect, "{threads} workers");
+    });
+}
+
+#[test]
 fn prop_ledger_additive_over_message_sequences() {
     check("ledger additivity", |g: &mut Gen| {
         let msgs: Vec<Message> = (0..g.usize_in(0, 40))
