@@ -31,6 +31,7 @@ fn cfg(algorithm: &str, rounds: u64) -> ExperimentConfig {
         attack: None,
         c_g_noise: 1.0, // the paper's high-c_g amplifier (Appendix H)
         participation: "full".into(),
+        catchup: "off".into(),
         threads: 0,
         pretrain_rounds: 0,
         seed: 37,

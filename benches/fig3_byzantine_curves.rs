@@ -35,6 +35,7 @@ fn cfg(algorithm: &str, byzantine: usize, rounds: u64) -> ExperimentConfig {
         }),
         c_g_noise: 0.0,
         participation: "full".into(),
+        catchup: "off".into(),
         threads: 0,
         pretrain_rounds: 0,
         seed: 41,

@@ -43,6 +43,7 @@ fn main() {
         attack: None,
         c_g_noise: 0.0,
         participation: "full".into(),
+        catchup: "off".into(),
         threads: 0,
         pretrain_rounds: 0,
         seed: 43,

@@ -204,6 +204,7 @@ fn round_cfg(k: usize, threads: usize) -> ExperimentConfig {
         attack: None,
         c_g_noise: 0.0,
         participation: "full".into(),
+        catchup: "off".into(),
         threads,
         pretrain_rounds: 0,
         seed: 5,

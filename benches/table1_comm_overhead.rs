@@ -31,6 +31,7 @@ fn cfg(algorithm: &str) -> ExperimentConfig {
         attack: None,
         c_g_noise: 0.0,
         participation: "full".into(),
+        catchup: "off".into(),
         threads: 0,
         pretrain_rounds: 0,
         seed: 3,

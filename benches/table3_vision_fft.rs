@@ -33,6 +33,7 @@ fn cfg(task: &str, algorithm: &str, rounds: u64) -> ExperimentConfig {
         attack: None,
         c_g_noise: 0.0,
         participation: "full".into(),
+        catchup: "off".into(),
         threads: 0,
         pretrain_rounds: 0,
         seed: 13,

@@ -35,6 +35,7 @@ fn cfg(task: &str, algorithm: &str, beta: Option<f32>, rounds: u64) -> Experimen
         attack: None,
         c_g_noise: 0.0,
         participation: "full".into(),
+        catchup: "off".into(),
         threads: 0,
         pretrain_rounds: 300,
         seed: 17,

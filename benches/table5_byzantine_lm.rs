@@ -37,6 +37,7 @@ fn cfg(task: &str, algorithm: &str, byzantine: usize, rounds: u64) -> Experiment
         }),
         c_g_noise: 0.0,
         participation: "full".into(),
+        catchup: "off".into(),
         threads: 0,
         pretrain_rounds: 300,
         seed: 23,

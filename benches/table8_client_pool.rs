@@ -14,6 +14,13 @@
 //! (b) at matched perturbations, |K=5 - K=25| is modest for FeedSign
 //! (vote averaging) — within 12 points on average; (c) partial
 //! participation of the big pool stays within the same band of K=5.
+//!
+//! The run also reports a **replay-cost column**: total downlink for
+//! `catchup = off | replay | rebroadcast` on the fraction:0.2 pool.
+//! Replay must bill exactly the broadcast-to-everyone baseline's bits
+//! (each (client, round) pair billed once, live or replayed) while a
+//! dense rebroadcast pays 32·d per rejoin — the FedKSeed-style byproduct
+//! `coordinator::catchup` exists to capture.
 
 mod common;
 
@@ -23,9 +30,16 @@ use feedsign::coordinator::ParticipationCfg;
 
 const TASKS: [&str; 4] = ["synth-sst2", "synth-cb", "synth-copa", "synth-boolq"];
 
-fn cfg(task: &str, algorithm: &str, k: usize, rounds: u64, participation: &str) -> ExperimentConfig {
+fn cfg(
+    task: &str,
+    algorithm: &str,
+    k: usize,
+    rounds: u64,
+    participation: &str,
+    catchup: &str,
+) -> ExperimentConfig {
     ExperimentConfig {
-        name: format!("table8-{task}-{algorithm}-k{k}-{participation}"),
+        name: format!("table8-{task}-{algorithm}-k{k}-{participation}-{catchup}"),
         model: bench_lm(),
         task: lm_task(task),
         algorithm: algorithm.into(),
@@ -42,6 +56,7 @@ fn cfg(task: &str, algorithm: &str, k: usize, rounds: u64, participation: &str) 
         attack: None,
         c_g_noise: 0.0,
         participation: participation.into(),
+        catchup: catchup.into(),
         threads: 0,
         pretrain_rounds: 300,
         seed: 29,
@@ -65,7 +80,7 @@ fn main() {
         &TASKS.iter().map(|t| &t[6..]).collect::<Vec<_>>(),
     );
     let zs: Vec<f32> =
-        TASKS.iter().map(|t| zero_shot(&cfg(t, "feedsign", 5, 10, "full"))).collect();
+        TASKS.iter().map(|t| zero_shot(&cfg(t, "feedsign", 5, 10, "full", "off"))).collect();
     table.row("zero-shot", zs.iter().map(|a| format!("{a:.1}")).collect());
 
     let mut avg = std::collections::BTreeMap::new();
@@ -81,7 +96,7 @@ fn main() {
         let mut cells = Vec::new();
         let mut means = Vec::new();
         for task in TASKS {
-            let runs = run_repeats(&cfg(task, algo, k, rounds, participation), n);
+            let runs = run_repeats(&cfg(task, algo, k, rounds, participation, "off"), n);
             let ms = best_accs(&runs);
             means.push(ms.mean);
             cells.push(format!("{ms}"));
@@ -109,6 +124,34 @@ fn main() {
         "feedsign-partial-participation-stable",
         frac_gap < 12.0,
         format!("|K5 - K25@0.2| = {frac_gap:.1}"),
+    );
+
+    // replay-cost column: what does keeping stragglers current cost?  The
+    // same 25-client pool at fraction:0.2, with offline clients caught up
+    // by seed-history replay vs a dense-model rebroadcast (FedKSeed-style
+    // byproduct), against the paper's broadcast-to-everyone baseline.
+    let r_cost = scaled(200);
+    let mut cost_rows = Vec::new();
+    for catchup in ["off", "replay", "rebroadcast"] {
+        let c = cfg(TASKS[0], "feedsign", 25, r_cost, "fraction:0.2", catchup);
+        let run = run_repeats(&c, 1).remove(0);
+        cost_rows.push((catchup, run.ledger.downlink_bits));
+    }
+    println!("\nstraggler catch-up downlink ({r_cost} rounds, K=25, fraction:0.2):");
+    for (catchup, bits) in &cost_rows {
+        println!("  catchup={catchup:<12} {bits:>12} bits ({:.1} kB)", *bits as f64 / 8e3);
+    }
+    let (off_bits, replay_bits, rebroadcast_bits) =
+        (cost_rows[0].1, cost_rows[1].1, cost_rows[2].1);
+    v.check(
+        "replay-bills-each-pair-once",
+        replay_bits == off_bits,
+        format!("replay {replay_bits} vs broadcast-to-everyone {off_bits} bits"),
+    );
+    v.check(
+        "replay-beats-dense-rebroadcast",
+        replay_bits * 10 <= rebroadcast_bits,
+        format!("replay {replay_bits} vs rebroadcast {rebroadcast_bits} bits"),
     );
     v.finish()
 }

@@ -28,6 +28,7 @@ fn cfg(algorithm: &str, byzantine: usize) -> ExperimentConfig {
         attack: Some(if algorithm == "feedsign" { "sign-flip".into() } else { "random-projection:5.0".into() }),
         c_g_noise: 0.0,
         participation: "full".into(),
+        catchup: "off".into(),
         threads: 0,
         pretrain_rounds: 0,
         seed: 5,

@@ -31,6 +31,7 @@ fn cfg(algorithm: &str, beta: Option<f32>, c_g: f32) -> ExperimentConfig {
         attack: None,
         c_g_noise: c_g,
         participation: "full".into(),
+        catchup: "off".into(),
         threads: 0,
         pretrain_rounds: 0,
         seed: 9,

@@ -15,6 +15,21 @@
 //! bench and the per-run metrics report.  The in-process transport is a
 //! tokio mpsc pair per client — the same topology a real deployment would
 //! have, with the network link swapped for a channel.
+//!
+//! ## Seed history (offline-client catch-up)
+//!
+//! Partial participation breaks the broadcast-to-everyone assumption: a
+//! client skipped for rounds `t..t+k` can no longer apply round `t+k`'s
+//! update, because FeedSign replicas are synchronized *by construction*,
+//! one seed-sign pair at a time.  [`SeedHistory`] is the FedKSeed-style
+//! fix: the PS appends every committed [`SeedRecord`] in round order, and
+//! a returning client downloads just the missed span and replays it
+//! locally (see `coordinator::catchup`).  Replay order equals commit
+//! order — f32 accumulation is order-sensitive, so this is what keeps a
+//! rejoining replica bit-identical to an always-on one.  The history is a
+//! bounded ring: a compaction watermark (the slowest tracked client's
+//! synced round) gates what the ring may drop, so a record is never
+//! discarded while some tracked client still needs it.
 
 /// A protocol message.  Payload bits follow the paper's accounting
 /// (Eq. 5): float projections are 32 bits, seeds 32 bits, signs 1 bit.
@@ -38,6 +53,15 @@ pub enum Message {
     /// it models the same round-trigger a deployment piggybacks on the
     /// previous downlink).
     RoundStart { round: u64 },
+    /// PS -> client: the committed-update span a rejoining client missed
+    /// (`catchup = "replay"`).  Each record prices itself: 1 bit when the
+    /// seed is derivable from the round (FeedSign / DP-FeedSign), 64 bits
+    /// for an explicit seed-coefficient pair (ZO-FedSGD).
+    ReplayHistory { records: Vec<SeedRecord> },
+    /// PS -> client: dense-checkpoint rebroadcast for a rejoining client
+    /// (`catchup = "rebroadcast"` — the cost baseline replay is compared
+    /// against; 32·d bits).
+    Rebroadcast { n_params: usize },
 }
 
 impl Message {
@@ -49,6 +73,10 @@ impl Message {
             Message::Gradient { g } | Message::GlobalGradient { g } => 32 * g.len() as u64,
             Message::GlobalProjections { pairs } => 64 * pairs.len() as u64,
             Message::RoundStart { .. } => 0,
+            Message::ReplayHistory { records } => {
+                records.iter().map(SeedRecord::payload_bits).sum()
+            }
+            Message::Rebroadcast { n_params } => 32 * *n_params as u64,
         }
     }
 
@@ -57,6 +85,184 @@ impl Message {
             self,
             Message::SignVote { .. } | Message::Projection { .. } | Message::Gradient { .. }
         )
+    }
+}
+
+/// One committed global update, as the PS remembers it for offline-client
+/// catch-up: replaying the record applies `w -= sign · lr_scale · z(seed)`
+/// — exactly the update every participant applied when round `round`
+/// committed.  FeedSign/DP-FeedSign rounds commit one record with
+/// `seed = round` and `lr_scale = eta`; a ZO-FedSGD round commits one
+/// record per participant pair with the mean-projection coefficient
+/// folded into `(sign, lr_scale)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeedRecord {
+    /// Round index this update committed at (replay order = round order).
+    pub round: u64,
+    /// Philox direction seed of the update.
+    pub seed: u32,
+    /// Global direction sign (0 marks a zero-participant no-op round).
+    pub sign: i8,
+    /// Non-negative step magnitude; the applied step is `sign · lr_scale`.
+    pub lr_scale: f32,
+    /// Whether the protocol derives `seed` from `round` (the FeedSign /
+    /// DP-FeedSign schedule `seed = t`, §I.1), set at commit time by the
+    /// engine that knows the protocol — pricing must not be inferred from
+    /// a `seed == round` coincidence, which a randomly sampled ZO seed
+    /// can produce.
+    pub seed_from_round: bool,
+}
+
+impl SeedRecord {
+    /// A FeedSign/DP-FeedSign round commit: `seed = round`, derivable.
+    pub fn sign_step(round: u64, sign: i8, lr_scale: f32) -> SeedRecord {
+        SeedRecord { round, seed: round as u32, sign, lr_scale, seed_from_round: true }
+    }
+
+    /// A ZO-FedSGD pair commit: explicit seed, coefficient folded into
+    /// `(sign, lr_scale)` so replay applies `sign · lr_scale` bit-exactly.
+    pub fn pair_step(round: u64, seed: u32, coeff: f32) -> SeedRecord {
+        SeedRecord {
+            round,
+            seed,
+            sign: if coeff < 0.0 { -1 } else { 1 },
+            lr_scale: coeff.abs(),
+            seed_from_round: false,
+        }
+    }
+
+    /// Step coefficient for `zo::apply_update` / `Engine::update`.  Built
+    /// as `sign · |coefficient|`, it reproduces the committed coefficient
+    /// bit-exactly (a `±0.0` coefficient is a no-op either way).
+    pub fn step(&self) -> f32 {
+        self.sign as f32 * self.lr_scale
+    }
+
+    /// Paper-accounting bits to ship this record to a rejoining client:
+    /// 1 bit when the seed is derivable from the round index (only the
+    /// sign travels), else 32-bit seed + 32-bit coefficient (the
+    /// ZO-FedSGD pair format).
+    pub fn payload_bits(&self) -> u64 {
+        if self.seed_from_round {
+            1
+        } else {
+            64
+        }
+    }
+}
+
+/// Default soft bound on retained history records (a FeedSign record is
+/// 16 bytes, so the default ring is well under a memory page per client
+/// pool even before compaction).
+pub const DEFAULT_HISTORY_CAPACITY: usize = 4096;
+
+/// Append-only per-round history of committed updates, stored as a
+/// bounded ring with checkpoint-watermark compaction.
+///
+/// Invariants:
+/// * rounds commit **in order** ([`SeedHistory::commit_round`] asserts
+///   `round == head_round`), mirroring the session's deterministic commit
+///   phase — replay order must equal commit order for bit-exactness;
+/// * a round may commit zero records (a zero-participant no-op round);
+///   round indices stay dense either way;
+/// * compaction ([`SeedHistory::compact_to`]) only drops *whole rounds*
+///   strictly below the caller's watermark, and only while the ring is
+///   over capacity — a record still needed by the slowest tracked client
+///   (watermark = min synced round) is never dropped, even if that holds
+///   the ring above its soft capacity.
+#[derive(Debug, Clone)]
+pub struct SeedHistory {
+    records: std::collections::VecDeque<SeedRecord>,
+    /// Oldest round still fully retained (rounds below are compacted).
+    tail_round: u64,
+    /// Next round to commit (== number of rounds committed so far).
+    head_round: u64,
+    /// Soft record-count bound; see [`SeedHistory::compact_to`].
+    capacity: usize,
+}
+
+impl Default for SeedHistory {
+    fn default() -> Self {
+        SeedHistory::new(DEFAULT_HISTORY_CAPACITY)
+    }
+}
+
+impl SeedHistory {
+    pub fn new(capacity: usize) -> Self {
+        SeedHistory {
+            records: std::collections::VecDeque::new(),
+            tail_round: 0,
+            head_round: 0,
+            capacity,
+        }
+    }
+
+    /// Adjust the soft capacity (tests pin tiny rings to exercise the
+    /// watermark guarantee).
+    pub fn set_capacity(&mut self, capacity: usize) {
+        self.capacity = capacity;
+    }
+
+    /// Next round to be committed.
+    pub fn head_round(&self) -> u64 {
+        self.head_round
+    }
+
+    /// Oldest round a replay span may start at.
+    pub fn tail_round(&self) -> u64 {
+        self.tail_round
+    }
+
+    /// Retained record count (≥ the soft capacity only while pinned by a
+    /// slow client's watermark).
+    pub fn records_len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Commit round `round`'s records (possibly none).  Must be called in
+    /// round order; every record must carry the committing round.
+    pub fn commit_round<I: IntoIterator<Item = SeedRecord>>(&mut self, round: u64, records: I) {
+        assert_eq!(
+            round, self.head_round,
+            "seed history must be committed in round order (commit order = replay order)"
+        );
+        for r in records {
+            assert_eq!(r.round, round, "record round must match the committing round");
+            self.records.push_back(r);
+        }
+        self.head_round = round + 1;
+    }
+
+    /// The records a client synced through round `from` (exclusive of
+    /// `to`) must replay, in commit order.  `None` when the span reaches
+    /// below the compaction tail (the caller must fall back to a dense
+    /// rebroadcast) or beyond the committed head.
+    pub fn replay_span(&self, from: u64, to: u64) -> Option<Vec<SeedRecord>> {
+        if from < self.tail_round || to > self.head_round || from > to {
+            return None;
+        }
+        // records are stored in ascending round order, so the span is a
+        // contiguous range locatable by binary search (rejoins after long
+        // gaps must not pay a full-ring scan)
+        let lo = self.records.partition_point(|r| r.round < from);
+        let hi = self.records.partition_point(|r| r.round < to);
+        Some(self.records.range(lo..hi).copied().collect())
+    }
+
+    /// Ring compaction: drop whole rounds from the tail while the ring is
+    /// over its soft capacity **and** the tail round is strictly below
+    /// `watermark` (the slowest tracked client's synced round).  Records
+    /// at or above the watermark are never dropped, whatever the
+    /// capacity — the guarantee `rust/tests/catchup_parity.rs` pins.
+    pub fn compact_to(&mut self, watermark: u64) {
+        let wm = watermark.min(self.head_round);
+        while self.records.len() > self.capacity && self.tail_round < wm {
+            let r = self.tail_round;
+            while matches!(self.records.front(), Some(rec) if rec.round == r) {
+                self.records.pop_front();
+            }
+            self.tail_round += 1;
+        }
     }
 }
 
@@ -252,6 +458,85 @@ mod tests {
         let l = Ledger { uplink_bits: 1_000_000, downlink_bits: 2_000_000, uplink_msgs: 1, downlink_msgs: 1 };
         let s = lm.seconds(&l);
         assert!((s - (1.0 + 1.0 + 0.02)).abs() < 1e-9);
+    }
+
+    fn fs_record(round: u64) -> SeedRecord {
+        SeedRecord::sign_step(round, if round % 2 == 0 { 1 } else { -1 }, 1e-3)
+    }
+
+    #[test]
+    fn seed_record_pricing_follows_seed_derivability() {
+        // FeedSign schedule: seed derivable from the round -> only the
+        // sign travels
+        assert_eq!(fs_record(7).payload_bits(), 1);
+        // ZO pair: explicit seed + coefficient
+        let zo = SeedRecord::pair_step(3, 0x5EED, -0.25);
+        assert_eq!(zo.payload_bits(), 64);
+        assert_eq!(zo.step(), -0.25);
+        // pricing is set by the protocol, NOT by a seed == round
+        // coincidence: a random ZO seed that collides with the round
+        // index still ships the full 64-bit pair
+        let collision = SeedRecord::pair_step(3, 3, 0.5);
+        assert_eq!(collision.payload_bits(), 64);
+        let m = Message::ReplayHistory { records: vec![fs_record(0), fs_record(1), zo] };
+        assert_eq!(m.payload_bits(), 1 + 1 + 64);
+        assert!(!m.is_uplink());
+    }
+
+    #[test]
+    fn rebroadcast_costs_dense_checkpoint() {
+        assert_eq!(Message::Rebroadcast { n_params: 1000 }.payload_bits(), 32_000);
+    }
+
+    #[test]
+    fn history_commits_in_round_order_and_replays_spans() {
+        let mut h = SeedHistory::default();
+        h.commit_round(0, [fs_record(0)]);
+        h.commit_round(1, []); // zero-participant no-op round
+        h.commit_round(2, [fs_record(2)]);
+        assert_eq!(h.head_round(), 3);
+        let span = h.replay_span(0, 3).unwrap();
+        assert_eq!(span, vec![fs_record(0), fs_record(2)]);
+        assert_eq!(h.replay_span(1, 3).unwrap(), vec![fs_record(2)]);
+        assert_eq!(h.replay_span(2, 2).unwrap(), vec![]);
+        assert!(h.replay_span(0, 4).is_none(), "beyond the committed head");
+    }
+
+    #[test]
+    #[should_panic(expected = "round order")]
+    fn history_rejects_out_of_order_commits() {
+        let mut h = SeedHistory::default();
+        h.commit_round(1, [fs_record(1)]);
+    }
+
+    #[test]
+    fn compaction_respects_capacity_and_watermark() {
+        let mut h = SeedHistory::new(4);
+        for t in 0..10 {
+            h.commit_round(t, [fs_record(t)]);
+        }
+        // watermark 3: only rounds 0..3 may go, and only down to capacity
+        h.compact_to(3);
+        assert_eq!(h.tail_round(), 3);
+        assert_eq!(h.records_len(), 7, "records >= watermark are pinned");
+        assert!(h.replay_span(0, 10).is_none(), "compacted span must refuse");
+        assert_eq!(h.replay_span(3, 10).unwrap().len(), 7);
+        // watermark 10: free to trim to the soft capacity
+        h.compact_to(10);
+        assert_eq!(h.records_len(), 4);
+        assert_eq!(h.tail_round(), 6);
+        assert_eq!(h.replay_span(6, 10).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn compaction_never_drops_pinned_records_even_over_capacity() {
+        let mut h = SeedHistory::new(2);
+        for t in 0..50 {
+            h.commit_round(t, [fs_record(t)]);
+            h.compact_to(5); // slowest client stuck at round 5
+        }
+        assert!(h.records_len() >= 45, "rounds 5..50 must all be retained");
+        assert_eq!(h.replay_span(5, 50).unwrap().len(), 45);
     }
 
     #[test]

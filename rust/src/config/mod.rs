@@ -5,7 +5,9 @@
 //! construct sessions through this module, so every experiment in
 //! EXPERIMENTS.md is reproducible from a checked-in config.
 
-use crate::coordinator::{Algorithm, Attack, Client, ParticipationCfg, Session, SessionCfg};
+use crate::coordinator::{
+    Algorithm, Attack, CatchupCfg, Client, ParticipationCfg, Session, SessionCfg,
+};
 use crate::data::partition::{split, Partition};
 use crate::data::{corpus, tasks, vision, Dataset};
 use crate::engine::{Engine, NativeEngine};
@@ -84,6 +86,9 @@ pub struct ExperimentConfig {
     /// per-round client sampling: `full | fraction:F | bernoulli:P`
     /// (synchronized ZO algorithms only)
     pub participation: String,
+    /// offline-client catch-up policy: `off | replay | rebroadcast`
+    /// (synchronized ZO algorithms only; see `coordinator::catchup`)
+    pub catchup: String,
     /// round-engine worker threads (0 = auto, 1 = sequential baseline)
     pub threads: usize,
     /// Central FO pretraining steps on a *format-matched but
@@ -145,6 +150,7 @@ impl ExperimentConfig {
             attack: doc.str("", "attack"),
             c_g_noise: doc.float("", "c_g_noise").unwrap_or(0.0) as f32,
             participation: doc.str("", "participation").unwrap_or_else(|| "full".into()),
+            catchup: doc.str("", "catchup").unwrap_or_else(|| "off".into()),
             threads: doc.int("", "threads").unwrap_or(0) as usize,
             seed: doc.int("", "seed").unwrap_or(0) as u32,
             verbose: doc.bool("", "verbose").unwrap_or(false),
@@ -181,6 +187,7 @@ impl ExperimentConfig {
         }
         d.set("", "c_g_noise", Value::Float(self.c_g_noise as f64));
         d.set("", "participation", s(&self.participation));
+        d.set("", "catchup", s(&self.catchup));
         d.set("", "threads", Value::Int(self.threads as i64));
         d.set("", "pretrain_rounds", Value::Int(self.pretrain_rounds as i64));
         d.set("", "seed", Value::Int(self.seed as i64));
@@ -256,6 +263,12 @@ impl ExperimentConfig {
         {
             bail!("partial participation applies to feedsign/dp-feedsign/zo-fedsgd only");
         }
+        let Some(catchup) = CatchupCfg::parse(&self.catchup) else {
+            bail!("unknown catchup {:?} (off | replay | rebroadcast)", self.catchup);
+        };
+        if catchup.is_on() && matches!(algo, Algorithm::FedSgd | Algorithm::Mezo) {
+            bail!("catch-up applies to feedsign/dp-feedsign/zo-fedsgd only");
+        }
         // model/task compatibility
         match (&self.model, &self.task) {
             (ModelSpec::Transformer { vocab, seq_len, .. }, TaskSpec::SynthLm { name, .. }) => {
@@ -290,6 +303,10 @@ impl ExperimentConfig {
 
     pub fn participation_cfg(&self) -> ParticipationCfg {
         ParticipationCfg::parse(&self.participation).expect("validated")
+    }
+
+    pub fn catchup_cfg(&self) -> CatchupCfg {
+        CatchupCfg::parse(&self.catchup).expect("validated")
     }
 
     /// Generate the train/test datasets.
@@ -378,6 +395,7 @@ impl ExperimentConfig {
             eval_batch_size: self.eval_batch_size,
             c_g_noise: self.c_g_noise,
             participation: self.participation_cfg(),
+            catchup: self.catchup_cfg(),
             threads: self.threads,
             seed: self.seed,
             verbose: self.verbose,
@@ -441,6 +459,7 @@ pub fn quickstart() -> ExperimentConfig {
         attack: None,
         c_g_noise: 0.0,
         participation: "full".into(),
+        catchup: "off".into(),
         threads: 0,
         pretrain_rounds: 0,
         seed: 0,
@@ -520,6 +539,7 @@ mod tests {
             attack: Some("random-projection".into()),
             c_g_noise: 0.0,
             participation: "full".into(),
+            catchup: "off".into(),
             threads: 0,
             pretrain_rounds: 0,
             seed: 1,
@@ -551,6 +571,41 @@ mod tests {
         cfg.participation = "fraction:0.5".into();
         cfg.algorithm = "fedsgd".into();
         assert!(cfg.validate().is_err(), "FO baseline is full-participation only");
+    }
+
+    #[test]
+    fn catchup_parses_roundtrips_and_gates() {
+        let mut cfg = quickstart();
+        cfg.participation = "fraction:0.4".into();
+        cfg.catchup = "replay".into();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.catchup_cfg(), CatchupCfg::Replay);
+        let back = ExperimentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.catchup, "replay");
+        let mut s = cfg.build_session().unwrap();
+        s.step(0);
+        // 2 of 5 participate: with catch-up on, only they hear the bit
+        assert_eq!(s.ledger.downlink_bits, 2);
+        // bad spec and FO/MeZO gating
+        cfg.catchup = "resend".into();
+        assert!(cfg.validate().is_err());
+        cfg.catchup = "replay".into();
+        cfg.participation = "full".into();
+        cfg.algorithm = "fedsgd".into();
+        assert!(cfg.validate().is_err(), "catch-up is a seed-protocol feature");
+    }
+
+    #[test]
+    fn omitted_catchup_defaults_off() {
+        let cfg = quickstart();
+        let mut text = cfg.to_toml();
+        text = text
+            .lines()
+            .filter(|l| !l.starts_with("catchup"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(back.catchup_cfg(), CatchupCfg::Off);
     }
 
     #[test]

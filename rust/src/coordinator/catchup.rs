@@ -1,0 +1,167 @@
+//! Offline-client catch-up: the bookkeeping that lets partial
+//! participation drop the broadcast-to-everyone assumption.
+//!
+//! FeedSign's 1-bit protocol only works while every client holds an
+//! identical replica, so the seed-history design (FedKSeed-style) keeps a
+//! compact PS-side record of every committed update
+//! ([`crate::comm::SeedHistory`]) and replays the missed span to a client
+//! the moment it rejoins — *before* it probes, so its vote is computed on
+//! the current model.  This module holds the two pieces the session
+//! engine threads through its plan/execute/commit phases:
+//!
+//! * [`CatchupCfg`] — the `catchup = "replay" | "rebroadcast" | "off"`
+//!   knob (config TOML + `--catchup` CLI): `replay` ships the missed
+//!   seed-sign records (1 bit per missed FeedSign round), `rebroadcast`
+//!   ships a dense 32·d-bit checkpoint (the cost baseline the Table 8
+//!   replay column compares against), `off` keeps the paper's
+//!   every-round broadcast.
+//! * [`CatchupTracker`] — per-client `last_synced_round` watermarks.  The
+//!   minimum over all clients ([`CatchupTracker::watermark`]) is the
+//!   compaction floor handed to [`crate::comm::SeedHistory::compact_to`],
+//!   which is what guarantees a record is never dropped while the slowest
+//!   tracked client still needs it.
+//!
+//! Exactness invariant: replay applies the recorded updates **in commit
+//! order** through the same chunk-parallel AXPY path
+//! ([`crate::simkit::zo::apply_update`]) every participant used when the
+//! round committed, so a client offline for arbitrarily many rounds
+//! rejoins with a replica bit-identical to an always-on client's (pinned
+//! by `rust/tests/catchup_parity.rs` for k ∈ {1, 7, 50} missed rounds).
+
+/// How a client that missed rounds is brought current when it rejoins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CatchupCfg {
+    /// Every round is broadcast to every client (the paper's assumption);
+    /// no history is kept.
+    #[default]
+    Off,
+    /// Rejoining clients download and replay the missed
+    /// `(round, seed, sign, lr_scale)` records — communication scales
+    /// with rounds missed, not with model size.
+    Replay,
+    /// Rejoining clients download a dense 32·d-bit checkpoint — the
+    /// classical fallback replay is benchmarked against.  (The threaded
+    /// `coordinator::distributed` topology cannot run this mode: its PS
+    /// holds no parameters, per the paper's §D.2 privacy property.)
+    Rebroadcast,
+}
+
+impl CatchupCfg {
+    /// Parse a config/CLI spec: `off`, `replay`, `rebroadcast`.
+    pub fn parse(s: &str) -> Option<CatchupCfg> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" => Some(CatchupCfg::Off),
+            "replay" => Some(CatchupCfg::Replay),
+            "rebroadcast" => Some(CatchupCfg::Rebroadcast),
+            _ => None,
+        }
+    }
+
+    /// Render back to the config-string form [`CatchupCfg::parse`]
+    /// accepts.
+    pub fn render(&self) -> &'static str {
+        match self {
+            CatchupCfg::Off => "off",
+            CatchupCfg::Replay => "replay",
+            CatchupCfg::Rebroadcast => "rebroadcast",
+        }
+    }
+
+    /// Whether the session maintains a seed history and per-client sync
+    /// watermarks (both catch-up modes do; `off` skips the bookkeeping
+    /// entirely).
+    pub fn is_on(&self) -> bool {
+        !matches!(self, CatchupCfg::Off)
+    }
+}
+
+/// Per-client sync watermarks: `last_synced[id]` is the first round
+/// client `id` has **not** yet applied, i.e. it holds the replica an
+/// always-on client held when round `last_synced[id]` was planned.
+#[derive(Debug, Clone)]
+pub struct CatchupTracker {
+    last_synced: Vec<u64>,
+}
+
+impl CatchupTracker {
+    /// All `k` clients start at the shared checkpoint (round 0).
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        CatchupTracker { last_synced: vec![0; k] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.last_synced.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.last_synced.is_empty()
+    }
+
+    /// First round client `id` has not applied yet.
+    pub fn last_synced(&self, id: usize) -> u64 {
+        self.last_synced[id]
+    }
+
+    /// Record that client `id` has applied every round below `round`.
+    /// Sync never moves backwards.
+    pub fn mark_synced(&mut self, id: usize, round: u64) {
+        assert!(
+            round >= self.last_synced[id],
+            "client {id} sync watermark must be monotone ({} -> {round})",
+            self.last_synced[id]
+        );
+        self.last_synced[id] = round;
+    }
+
+    /// The compaction floor: the slowest client's synced round.  History
+    /// records at or above this round must be retained.
+    pub fn watermark(&self) -> u64 {
+        self.last_synced.iter().copied().min().unwrap_or(0)
+    }
+
+    /// The replay span client `id` must apply to be current through
+    /// round `now` (empty when already synced).
+    pub fn span(&self, id: usize, now: u64) -> std::ops::Range<u64> {
+        self.last_synced[id]..now.max(self.last_synced[id])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_render_roundtrip() {
+        for s in ["off", "replay", "rebroadcast"] {
+            let cfg = CatchupCfg::parse(s).unwrap();
+            assert_eq!(CatchupCfg::parse(cfg.render()), Some(cfg));
+        }
+        assert_eq!(CatchupCfg::parse("REPLAY"), Some(CatchupCfg::Replay));
+        assert!(CatchupCfg::parse("resend").is_none());
+        assert!(!CatchupCfg::Off.is_on());
+        assert!(CatchupCfg::Replay.is_on());
+        assert!(CatchupCfg::Rebroadcast.is_on());
+    }
+
+    #[test]
+    fn tracker_watermark_is_slowest_client() {
+        let mut t = CatchupTracker::new(3);
+        assert_eq!(t.watermark(), 0);
+        t.mark_synced(0, 5);
+        t.mark_synced(1, 9);
+        assert_eq!(t.watermark(), 0, "client 2 pins the floor");
+        t.mark_synced(2, 4);
+        assert_eq!(t.watermark(), 4);
+        assert_eq!(t.span(2, 9), 4..9);
+        assert_eq!(t.span(1, 9), 9..9);
+    }
+
+    #[test]
+    #[should_panic(expected = "monotone")]
+    fn tracker_rejects_regressing_sync() {
+        let mut t = CatchupTracker::new(2);
+        t.mark_synced(0, 5);
+        t.mark_synced(0, 3);
+    }
+}

@@ -4,13 +4,28 @@
 //! channels — the deployment shape of Figure 1.
 //!
 //! The PS thread holds **no model parameters** (the paper's §D.2
-//! property): it sees only 1-bit votes and emits 1-bit directions.  A
-//! cross-topology test pins this runtime against the synchronous session:
-//! identical seeds must produce bit-identical final models.
+//! property): it sees only 1-bit votes and emits 1-bit directions plus
+//! seed-history records.  That property is also why this topology
+//! supports `catchup = "replay"` but not `"rebroadcast"` — a dense
+//! checkpoint rebroadcast would require a PS-side replica, so the dense
+//! baseline lives only in the synchronous session's cost model.
+//!
+//! Partial participation works here exactly as in the session engine:
+//! the participant set is drawn per round from the same dedicated
+//! coordinator stream (`seed ^ 0x9A`), participants run the
+//! probe → vote → update exchange, and non-participants are kept current
+//! either by an immediate one-record [`Message::ReplayHistory`] push
+//! (`catchup = "off"` — bit-for-bit the same downlink cost as the
+//! session's broadcast) or lazily on rejoin from the PS-side
+//! [`crate::comm::SeedHistory`] (`catchup = "replay"`).  Cross-topology
+//! tests pin this runtime against the synchronous session: identical
+//! seeds must produce bit-identical final models and ledgers.
 
-use crate::comm::{self, Ledger, Message};
+use crate::comm::{self, Ledger, Message, SeedHistory, SeedRecord};
 use crate::coordinator::aggregation;
 use crate::coordinator::byzantine::Attack;
+use crate::coordinator::catchup::{CatchupCfg, CatchupTracker};
+use crate::coordinator::participation::ParticipationCfg;
 use crate::data::{Dataset, Shard};
 use crate::engine::Engine;
 use crate::simkit::prng::{self, Rng};
@@ -27,32 +42,71 @@ pub struct DistClient {
     pub rng: Rng,
 }
 
+/// Run configuration for the threaded topology.
+#[derive(Debug, Clone)]
+pub struct DistCfg {
+    pub rounds: u64,
+    pub eta: f32,
+    pub mu: f32,
+    pub batch_size: usize,
+    /// Per-round client sampling, drawn from the same dedicated
+    /// coordinator stream construction as the sync session (`seed ^
+    /// 0x9A`) so cross-topology runs share one schedule.
+    pub participation: ParticipationCfg,
+    /// `Off` pushes every committed round to non-participants
+    /// immediately; `Replay` defers to a rejoin-time history replay.
+    /// `Rebroadcast` is rejected: the PS holds no parameters (§D.2).
+    pub catchup: CatchupCfg,
+    /// Coordinator seed (must match the sync session's `cfg.seed` for
+    /// cross-topology parity).
+    pub seed: u32,
+}
+
+impl DistCfg {
+    /// Full-participation run with catch-up off — the original topology.
+    pub fn full(rounds: u64, eta: f32, mu: f32, batch_size: usize) -> Self {
+        DistCfg {
+            rounds,
+            eta,
+            mu,
+            batch_size,
+            participation: ParticipationCfg::Full,
+            catchup: CatchupCfg::Off,
+            seed: 0,
+        }
+    }
+}
+
 /// Outcome of a distributed FeedSign run.
 pub struct DistResult {
     /// final parameter replicas, one per client (must all be equal)
     pub finals: Vec<Vec<f32>>,
     pub ledger: Ledger,
+    /// per-round participant votes, in client-id order
     pub votes_per_round: Vec<Vec<i8>>,
 }
 
-/// Run `rounds` of distributed FeedSign over worker threads.
+/// Run distributed FeedSign over worker threads.
 ///
-/// Protocol per round `t`: PS broadcasts `RoundStart` (seed = t is
-/// implicit), each client probes its shard and uploads `SignVote`, the PS
-/// majority-votes and broadcasts `GlobalSign`, each client applies the
-/// update locally.
-pub fn run_feedsign(
-    clients: Vec<DistClient>,
-    train: Dataset,
-    rounds: u64,
-    eta: f32,
-    mu: f32,
-    batch_size: usize,
-) -> DistResult {
+/// Protocol per round `t`: the PS draws the participant set, replays any
+/// missed history span to stale participants (`catchup = "replay"`),
+/// broadcasts `RoundStart` to them (seed = t is implicit), collects
+/// `SignVote`s in client-id order, majority-votes, and returns
+/// `GlobalSign` to the participants, who apply the update locally.
+/// Non-participants receive either the round's single committed record
+/// immediately (`catchup = "off"`) or nothing until they rejoin.  After
+/// the last round every stale client is caught up, so the returned
+/// replicas are always identical.
+pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> DistResult {
+    assert!(
+        cfg.catchup != CatchupCfg::Rebroadcast,
+        "the threaded PS holds no parameters (§D.2); only replay catch-up is possible here"
+    );
     let k = clients.len();
     let train = Arc::new(train);
     let mut ps_links = Vec::with_capacity(k);
     let mut handles = Vec::with_capacity(k);
+    let (eta, mu, batch_size) = (cfg.eta, cfg.mu, cfg.batch_size);
 
     for mut c in clients {
         let (duplex, port) = comm::link();
@@ -65,6 +119,14 @@ pub fn run_feedsign(
             let _serial = prng::serial_zone();
             while let Ok(msg) = port.from_ps.recv() {
                 match msg {
+                    Message::ReplayHistory { records } => {
+                        // catch-up span (or the single-record push a
+                        // non-participant gets in "off" mode): apply in
+                        // commit order, seeds are explicit
+                        for r in &records {
+                            c.engine.update(&mut c.w, r.seed, r.step());
+                        }
+                    }
                     Message::RoundStart { round } => {
                         let seed = round as u32;
                         let batch = c.shard.next_batch(&train, batch_size, &mut c.rng);
@@ -87,18 +149,46 @@ pub fn run_feedsign(
         }));
     }
 
-    // PS loop (this thread): drives rounds, meters the ledger, holds no w.
+    // PS loop (this thread): drives rounds, meters the ledger, keeps the
+    // seed history — and still holds no parameter vector.
     let mut ledger = Ledger::default();
-    let mut votes_per_round = Vec::with_capacity(rounds as usize);
-    for t in 0..rounds {
-        for link in &ps_links {
+    let mut history = SeedHistory::default();
+    let mut tracker = CatchupTracker::new(k);
+    let mut part_rng = Rng::new(cfg.seed ^ 0x9A, 0x9A);
+    let mut votes_per_round = Vec::with_capacity(cfg.rounds as usize);
+    for t in 0..cfg.rounds {
+        let participants = cfg.participation.sample(k, t, &mut part_rng);
+        if participants.is_empty() {
+            // zero-participant no-op round: keep round indices dense
+            if cfg.catchup.is_on() {
+                history.commit_round(t, []);
+            }
+            votes_per_round.push(Vec::new());
+            continue;
+        }
+        if cfg.catchup.is_on() {
+            for &id in &participants {
+                let span = tracker.span(id, t);
+                if span.is_empty() {
+                    continue;
+                }
+                let records = history
+                    .replay_span(span.start, span.end)
+                    .expect("compaction must respect the slowest client");
+                let msg = Message::ReplayHistory { records };
+                ledger.record(&msg);
+                ps_links[id].to_client.send(msg).expect("client alive");
+                tracker.mark_synced(id, t);
+            }
+        }
+        for &id in &participants {
             let msg = Message::RoundStart { round: t };
             ledger.record(&msg);
-            link.to_client.send(msg).expect("client alive");
+            ps_links[id].to_client.send(msg).expect("client alive");
         }
-        let mut signs = Vec::with_capacity(k);
-        for link in &ps_links {
-            let msg = link.from_client.recv().expect("client alive");
+        let mut signs = Vec::with_capacity(participants.len());
+        for &id in &participants {
+            let msg = ps_links[id].from_client.recv().expect("client alive");
             let Message::SignVote { sign } = msg else {
                 panic!("protocol violation: expected SignVote");
             };
@@ -107,10 +197,51 @@ pub fn run_feedsign(
         }
         let f = aggregation::majority_sign(&signs);
         votes_per_round.push(signs);
-        for link in &ps_links {
+        for &id in &participants {
             let msg = Message::GlobalSign { sign: f };
             ledger.record(&msg);
-            link.to_client.send(msg).expect("client alive");
+            ps_links[id].to_client.send(msg).expect("client alive");
+            if cfg.catchup.is_on() {
+                tracker.mark_synced(id, t + 1);
+            }
+        }
+        let record = SeedRecord::sign_step(t, f, eta);
+        if cfg.catchup.is_on() {
+            history.commit_round(t, [record]);
+            history.compact_to(tracker.watermark());
+        } else {
+            // immediate one-record push keeps non-participants current —
+            // the same 1-bit-per-client downlink the session broadcast
+            // meters, with the seed explicit instead of counter-implied
+            let mut is_participant = vec![false; k];
+            for &id in &participants {
+                is_participant[id] = true;
+            }
+            for (id, link) in ps_links.iter().enumerate() {
+                if !is_participant[id] {
+                    let msg = Message::ReplayHistory { records: vec![record] };
+                    ledger.record(&msg);
+                    link.to_client.send(msg).expect("client alive");
+                }
+            }
+        }
+    }
+    // run end: every straggler rejoins (metered), so finals are identical
+    if cfg.catchup.is_on() {
+        for (id, link) in ps_links.iter().enumerate() {
+            let span = tracker.span(id, cfg.rounds);
+            if span.is_empty() {
+                continue;
+            }
+            let records = history
+                .replay_span(span.start, span.end)
+                .expect("compaction must respect the slowest client");
+            if !records.is_empty() {
+                let msg = Message::ReplayHistory { records };
+                ledger.record(&msg);
+                link.to_client.send(msg).expect("client alive");
+            }
+            tracker.mark_synced(id, cfg.rounds);
         }
     }
     drop(ps_links); // closes channels; clients exit their loops
@@ -154,7 +285,7 @@ mod tests {
     fn distributed_replicas_converge_identically() {
         let train = generate(&SYNTH_CIFAR10, 300, 0);
         let clients = dist_clients(4, &train);
-        let res = run_feedsign(clients, train, 50, 2e-3, 1e-3, 16);
+        let res = run_feedsign(clients, train, DistCfg::full(50, 2e-3, 1e-3, 16));
         for w in &res.finals[1..] {
             assert_eq!(w, &res.finals[0], "replica drift in distributed topology");
         }
@@ -194,10 +325,78 @@ mod tests {
 
         // distributed run with identical seeds
         let dclients = dist_clients(3, &train);
-        let res = run_feedsign(dclients, train, 40, 2e-3, 1e-3, 16);
+        let res = run_feedsign(dclients, train, DistCfg::full(40, 2e-3, 1e-3, 16));
         assert_eq!(
             res.finals[0], sync.clients[0].w,
             "topologies diverged despite identical seeds"
         );
+    }
+
+    #[test]
+    fn distributed_partial_participation_matches_session_for_both_catchup_modes() {
+        use crate::coordinator::session::{Client, Session, SessionCfg};
+        for catchup in [CatchupCfg::Off, CatchupCfg::Replay] {
+            let train = generate(&SYNTH_CIFAR10, 300, 0);
+            let test = generate(&SYNTH_CIFAR10, 100, 1);
+            let shards = split(&train, 4, Partition::Iid, 0);
+            let clients: Vec<Client> = shards
+                .into_iter()
+                .enumerate()
+                .map(|(id, shard)| {
+                    Client::new(
+                        id,
+                        Box::new(NativeEngine::new(LinearProbe::new(128, 10))),
+                        shard,
+                        7,
+                    )
+                })
+                .collect();
+            let cfg = SessionCfg {
+                rounds: 60,
+                eta: 2e-3,
+                mu: 1e-3,
+                batch_size: 16,
+                eval_every: 0,
+                participation: ParticipationCfg::Fraction(0.5),
+                catchup,
+                seed: 7,
+                ..Default::default()
+            };
+            let mut sync = Session::new(cfg, clients, train.clone(), test);
+            for t in 0..60 {
+                sync.step(t);
+            }
+            sync.catch_up_all();
+
+            let dclients = dist_clients(4, &train);
+            let dcfg = DistCfg {
+                rounds: 60,
+                eta: 2e-3,
+                mu: 1e-3,
+                batch_size: 16,
+                participation: ParticipationCfg::Fraction(0.5),
+                catchup,
+                seed: 7,
+            };
+            let res = run_feedsign(dclients, train, dcfg);
+            for (id, w) in res.finals.iter().enumerate() {
+                assert_eq!(
+                    w, &sync.clients[id].w,
+                    "catchup={catchup:?}: client {id} diverged across topologies"
+                );
+            }
+            assert_eq!(res.ledger.uplink_bits, sync.ledger.uplink_bits, "{catchup:?}");
+            assert_eq!(res.ledger.downlink_bits, sync.ledger.downlink_bits, "{catchup:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "holds no parameters")]
+    fn distributed_rejects_rebroadcast() {
+        let train = generate(&SYNTH_CIFAR10, 60, 0);
+        let clients = dist_clients(2, &train);
+        let mut cfg = DistCfg::full(5, 2e-3, 1e-3, 8);
+        cfg.catchup = CatchupCfg::Rebroadcast;
+        run_feedsign(clients, train, cfg);
     }
 }

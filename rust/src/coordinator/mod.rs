@@ -4,6 +4,8 @@
 //! * [`byzantine`] — attack models (sign flip, random projection, …);
 //! * [`participation`] — per-round client sampling (full / fixed-fraction
 //!   / Bernoulli availability);
+//! * [`catchup`] — seed-history catch-up for clients that missed rounds
+//!   (replay / rebroadcast policies + per-client sync watermarks);
 //! * [`session`] — the deterministic plan/execute/commit round engine that
 //!   all benches/examples drive (client fan-out over scoped threads,
 //!   commits in client-id order);
@@ -12,11 +14,13 @@
 
 pub mod aggregation;
 pub mod byzantine;
+pub mod catchup;
 pub mod distributed;
 pub mod participation;
 pub mod session;
 
 pub use aggregation::Algorithm;
 pub use byzantine::Attack;
+pub use catchup::{CatchupCfg, CatchupTracker};
 pub use participation::ParticipationCfg;
 pub use session::{Client, Session, SessionCfg};

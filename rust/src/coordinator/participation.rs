@@ -10,10 +10,18 @@
 //! draws at all, which keeps full-participation runs bit-identical to the
 //! pre-participation sequential engine.
 //!
-//! Synchronized algorithms (FeedSign, DP-FeedSign, ZO-FedSGD) still
-//! broadcast the aggregated direction to **every** client — non-participants
-//! skip the probe/vote (no uplink) but must apply the global update to keep
-//! all replicas bit-identical, so downlink is metered for all K clients.
+//! With `catchup = "off"` the synchronized algorithms (FeedSign,
+//! DP-FeedSign, ZO-FedSGD) still broadcast the aggregated direction to
+//! **every** client — non-participants skip the probe/vote (no uplink) but
+//! must apply the global update to keep all replicas bit-identical, so
+//! downlink is metered for all K clients.  With a
+//! [`crate::coordinator::catchup`] policy on, only participants hear the
+//! broadcast and everyone else replays the missed seed history on rejoin.
+//!
+//! A draw may legitimately be **empty** (`fraction:0`, useful as an
+//! availability floor in sweeps): the round engine commits such a round as
+//! a no-op rather than panicking.  `bernoulli:P` keeps its round-robin
+//! fallback (`round % K`) so availability-model runs always make progress.
 
 use crate::simkit::prng::Rng;
 
@@ -23,7 +31,8 @@ pub enum ParticipationCfg {
     /// Every client probes and votes every round (the paper's setting).
     Full,
     /// A fixed fraction of the pool, sampled without replacement each
-    /// round: `max(1, ceil(fraction * K))` distinct clients.
+    /// round: `ceil(fraction * K)` distinct clients (`fraction:0` draws
+    /// nobody — every round commits as a no-op).
     Fraction(f32),
     /// Each client joins independently with probability `p` (device
     /// availability model); an empty draw falls back to the round-robin
@@ -40,7 +49,7 @@ impl ParticipationCfg {
         }
         if let Some(f) = s.strip_prefix("fraction:") {
             let f: f32 = f.parse().ok()?;
-            if f > 0.0 && f <= 1.0 {
+            if (0.0..=1.0).contains(&f) {
                 return Some(ParticipationCfg::Fraction(f));
             }
             return None;
@@ -55,7 +64,8 @@ impl ParticipationCfg {
         None
     }
 
-    /// Render back to the config-string form [`parse`] accepts.
+    /// Render back to the config-string form [`ParticipationCfg::parse`]
+    /// accepts.
     pub fn render(&self) -> String {
         match self {
             ParticipationCfg::Full => "full".to_string(),
@@ -69,21 +79,27 @@ impl ParticipationCfg {
     pub fn expected_participants(&self, k: usize) -> f32 {
         match self {
             ParticipationCfg::Full => k as f32,
-            ParticipationCfg::Fraction(f) => (f * k as f32).ceil().max(1.0).min(k as f32),
+            ParticipationCfg::Fraction(f) => (f * k as f32).ceil().min(k as f32),
             ParticipationCfg::Bernoulli(p) => (p * k as f32).max(1.0),
         }
     }
 
     /// Draw this round's participant set: sorted, distinct client ids in
-    /// `[0, k)`, never empty.  `Full` consumes no draws from `rng`; the
-    /// other modes consume a round-count-independent number of draws so
-    /// runs with the same seed stay reproducible.
+    /// `[0, k)`.  Only `Fraction(0.0)` can draw an empty set (the round
+    /// engine commits such rounds as no-ops); `Bernoulli` falls back to
+    /// round-robin on an empty draw.  `Full` and `Fraction(0.0)` consume
+    /// no draws from `rng`; the other modes consume a
+    /// round-count-independent number of draws so runs with the same seed
+    /// stay reproducible.
     pub fn sample(&self, k: usize, round: u64, rng: &mut Rng) -> Vec<usize> {
         assert!(k > 0);
         match *self {
             ParticipationCfg::Full => (0..k).collect(),
             ParticipationCfg::Fraction(f) => {
-                let m = ((f * k as f32).ceil() as usize).clamp(1, k);
+                let m = (((f * k as f32).ceil()) as usize).min(k);
+                if m == 0 {
+                    return Vec::new();
+                }
                 if m == k {
                     return (0..k).collect();
                 }
@@ -159,14 +175,16 @@ mod tests {
 
     #[test]
     fn parse_render_roundtrip() {
-        for s in ["full", "fraction:0.25", "bernoulli:0.5"] {
+        for s in ["full", "fraction:0.25", "bernoulli:0.5", "fraction:0"] {
             let cfg = ParticipationCfg::parse(s).unwrap();
             assert_eq!(ParticipationCfg::parse(&cfg.render()), Some(cfg));
         }
         assert_eq!(ParticipationCfg::parse("FULL"), Some(ParticipationCfg::Full));
-        assert!(ParticipationCfg::parse("fraction:0").is_none());
+        assert_eq!(ParticipationCfg::parse("fraction:0"), Some(ParticipationCfg::Fraction(0.0)));
         assert!(ParticipationCfg::parse("fraction:1.5").is_none());
+        assert!(ParticipationCfg::parse("fraction:-0.1").is_none());
         assert!(ParticipationCfg::parse("bernoulli:-1").is_none());
+        assert!(ParticipationCfg::parse("bernoulli:0").is_none());
         assert!(ParticipationCfg::parse("sometimes").is_none());
     }
 
@@ -174,6 +192,44 @@ mod tests {
     fn expected_participants_shapes() {
         assert_eq!(ParticipationCfg::Full.expected_participants(8), 8.0);
         assert_eq!(ParticipationCfg::Fraction(0.25).expected_participants(8), 2.0);
+        assert_eq!(ParticipationCfg::Fraction(0.0).expected_participants(8), 0.0);
         assert_eq!(ParticipationCfg::Bernoulli(0.5).expected_participants(8), 4.0);
+    }
+
+    #[test]
+    fn fraction_zero_draws_nobody_and_consumes_no_rng() {
+        let mut rng = Rng::new(9, 0);
+        let before = rng.clone();
+        for t in 0..10 {
+            assert!(ParticipationCfg::Fraction(0.0).sample(5, t, &mut rng).is_empty());
+        }
+        let mut untouched = before;
+        assert_eq!(rng.next_u32(), untouched.next_u32(), "empty draws must not move the stream");
+    }
+
+    #[test]
+    fn bernoulli_empty_draw_falls_back_round_robin() {
+        // p below the uniform draw's resolution floor (2^-25), so every
+        // draw comes up empty; the fallback must walk `round % k`
+        let cfg = ParticipationCfg::Bernoulli(1e-8);
+        let mut rng = Rng::new(10, 0);
+        for t in 0..12u64 {
+            let ids = cfg.sample(3, t, &mut rng);
+            assert_eq!(ids, vec![(t % 3) as usize], "round {t}");
+        }
+    }
+
+    #[test]
+    fn one_client_pool_every_mode() {
+        let mut rng = Rng::new(11, 0);
+        assert_eq!(ParticipationCfg::Full.sample(1, 0, &mut rng), vec![0]);
+        assert_eq!(ParticipationCfg::Fraction(1.0).sample(1, 0, &mut rng), vec![0]);
+        assert_eq!(ParticipationCfg::Fraction(0.01).sample(1, 0, &mut rng), vec![0]);
+        assert!(ParticipationCfg::Fraction(0.0).sample(1, 0, &mut rng).is_empty());
+        // bernoulli on one client: either it draws in, or the fallback
+        // selects it — always exactly client 0
+        for t in 0..20 {
+            assert_eq!(ParticipationCfg::Bernoulli(0.3).sample(1, t, &mut rng), vec![0]);
+        }
     }
 }

@@ -8,12 +8,23 @@
 //!
 //! 1. **plan** — the participant set is drawn from a dedicated coordinator
 //!    RNG stream ([`ParticipationCfg`]), before any client compute runs;
+//!    when catch-up is on ([`CatchupCfg`]), stale participants then replay
+//!    their missed seed history *before* probing, so every vote is cast on
+//!    the current model;
 //! 2. **execute** — per-client probe work (batch draw → SPSA probe →
 //!    attack mutation) fans out over `std::thread::scope` workers, each
 //!    metering its uplink into a private sub-ledger;
 //! 3. **commit** — outcomes are committed **in client-id order** (votes,
-//!    sub-ledgers, orbit entries), the vote is aggregated, and the global
-//!    update is broadcast to every client.
+//!    sub-ledgers, orbit entries, seed-history records), the vote is
+//!    aggregated, and the global update is broadcast — to every client
+//!    when `catchup = "off"` (the paper's assumption), or to this round's
+//!    participants only when catch-up is on (everyone else recovers the
+//!    round from the [`crate::comm::SeedHistory`] on rejoin).
+//!
+//! A plan with **zero participants** (e.g. `fraction:0`) commits a no-op:
+//! no votes, no broadcast, a 0-sign orbit entry and an empty history
+//! round — round indices stay dense so both orbit replay and catch-up
+//! replay keep working.
 //!
 //! **Determinism contract:** commit order is client id, every client's
 //! randomness lives in its own Philox stream, and coordinator randomness
@@ -22,11 +33,15 @@
 //! `threads = 1` baseline (pinned by `rust/tests/parallel_parity.rs`), and
 //! FeedSign's step seed remains the round index (`seed = t`, §I.1).  The
 //! cross-topology test in `rust/tests/` (sync vs threaded-distributed)
-//! relies on the same schedule.
+//! relies on the same schedule.  Catch-up replay preserves the contract
+//! because replay order equals commit order and every replayed record
+//! goes through the same exact chunk-parallel AXPY the participants used
+//! (pinned by `rust/tests/catchup_parity.rs`).
 
-use crate::comm::{Ledger, Message};
+use crate::comm::{Ledger, Message, SeedHistory, SeedRecord};
 use crate::coordinator::aggregation::{self, Algorithm};
 use crate::coordinator::byzantine::Attack;
+use crate::coordinator::catchup::{CatchupCfg, CatchupTracker};
 use crate::coordinator::participation::ParticipationCfg;
 use crate::data::{Batch, Dataset, Shard};
 use crate::engine::Engine;
@@ -89,6 +104,10 @@ pub struct SessionCfg {
     /// which clients probe and vote each round (synchronized algorithms
     /// only; the FO baseline and MeZO always run full participation)
     pub participation: ParticipationCfg,
+    /// how clients that missed rounds are brought current on rejoin:
+    /// `replay` ships the missed seed-sign history, `rebroadcast` ships a
+    /// dense checkpoint, `off` broadcasts every round to every client
+    pub catchup: CatchupCfg,
     /// round-engine worker threads: 0 = auto (machine parallelism),
     /// 1 = sequential baseline, N = exactly N workers.  Every setting
     /// produces the same bits; this only trades wall-clock.
@@ -111,6 +130,7 @@ impl Default for SessionCfg {
             eval_batch_size: 32,
             c_g_noise: 0.0,
             participation: ParticipationCfg::Full,
+            catchup: CatchupCfg::Off,
             threads: 0,
             seed: 0,
             verbose: false,
@@ -249,6 +269,12 @@ pub struct Session {
     pub test: Dataset,
     pub ledger: Ledger,
     pub orbit: Orbit,
+    /// Per-round committed-update history (maintained only while
+    /// [`SessionCfg::catchup`] is on; the compaction watermark is the
+    /// slowest client in [`Session::tracker`]).
+    pub history: SeedHistory,
+    /// Per-client `last_synced_round` watermarks for catch-up.
+    pub tracker: CatchupTracker,
     dp_rng: Rng,
     eval_rng: Rng,
     part_rng: Rng,
@@ -260,6 +286,16 @@ impl Session {
         if matches!(cfg.algorithm, Algorithm::Mezo) {
             assert_eq!(clients.len(), 1, "MeZO is centralized (K = 1)");
         }
+        if cfg.catchup.is_on() {
+            assert!(
+                matches!(
+                    cfg.algorithm,
+                    Algorithm::FeedSign | Algorithm::DpFeedSign { .. } | Algorithm::ZoFedSgd
+                ),
+                "catch-up applies to the synchronized seed-based algorithms only"
+            );
+        }
+        let tracker = CatchupTracker::new(clients.len());
         let orbit = Orbit::new(cfg.algorithm.name(), cfg.seed, cfg.eta);
         let dp_rng = Rng::new(cfg.seed ^ 0xD9, 0xD9);
         let eval_rng = Rng::new(cfg.seed ^ 0xEE, 0xEE);
@@ -271,6 +307,8 @@ impl Session {
             test,
             ledger: Ledger::default(),
             orbit,
+            history: SeedHistory::default(),
+            tracker,
             dp_rng,
             eval_rng,
             part_rng,
@@ -304,6 +342,9 @@ impl Session {
                 });
             }
         }
+        // run end: every straggler performs its (metered) rejoin so the
+        // final model is distributed to the whole pool
+        self.catch_up_all();
         let (final_loss, final_acc) = self.evaluate();
         RunResult {
             algorithm: self.cfg.algorithm.name().to_string(),
@@ -319,11 +360,29 @@ impl Session {
     /// One aggregation round.
     pub fn step(&mut self, t: u64) {
         match self.cfg.algorithm {
-            Algorithm::FeedSign => self.step_feedsign(t, None),
-            Algorithm::DpFeedSign { epsilon } => self.step_feedsign(t, Some(epsilon)),
-            Algorithm::ZoFedSgd => self.step_zo_fedsgd(t),
             Algorithm::FedSgd => self.step_fedsgd(),
             Algorithm::Mezo => self.step_mezo(t),
+            _ => {
+                let plan = self.plan_round(t);
+                self.step_with_plan(plan);
+            }
+        }
+    }
+
+    /// One synchronized round driven by an externally fixed plan — the
+    /// plan-phase output made injectable so tests (and schedulers) can pin
+    /// a deterministic participation schedule, e.g. forcing a client
+    /// offline for exactly k rounds (`rust/tests/catchup_parity.rs`).
+    /// Plans must arrive in round order when catch-up is on (the seed
+    /// history commits in round order).
+    pub fn step_with_plan(&mut self, plan: RoundPlan) {
+        match self.cfg.algorithm {
+            Algorithm::FeedSign => self.step_feedsign(plan, None),
+            Algorithm::DpFeedSign { epsilon } => self.step_feedsign(plan, Some(epsilon)),
+            Algorithm::ZoFedSgd => self.step_zo_fedsgd(plan),
+            Algorithm::FedSgd | Algorithm::Mezo => {
+                panic!("step_with_plan drives the synchronized seed-based algorithms only")
+            }
         }
     }
 
@@ -332,6 +391,82 @@ impl Session {
         let participants =
             self.cfg.participation.sample(self.clients.len(), t, &mut self.part_rng);
         RoundPlan { round: t, participants }
+    }
+
+    /// Replay (or dense-rebroadcast) the committed history to every client
+    /// in `ids` that is stale relative to `to_round`, metering the
+    /// downlink per [`CatchupCfg`].  Updates go through the same exact
+    /// chunk-parallel AXPY path ([`crate::engine::Engine::update`] →
+    /// `zo::apply_update`) the participants used when each round
+    /// committed, in commit order — which is why a rejoining replica is
+    /// bit-identical to an always-on one.
+    fn catch_up_clients(&mut self, ids: &[usize], to_round: u64) {
+        debug_assert!(self.cfg.catchup.is_on());
+        let d = self.clients[0].engine.n_params();
+        // honor the explicitly requested sequential baseline
+        let _serial = (self.cfg.threads == 1).then(prng::serial_zone);
+        for &id in ids {
+            let span = self.tracker.span(id, to_round);
+            if span.is_empty() {
+                continue;
+            }
+            let records = self.history.replay_span(span.start, span.end).unwrap_or_else(|| {
+                panic!(
+                    "catch-up span {span:?} for client {id} was compacted away; \
+                     compaction must respect the tracker watermark"
+                )
+            });
+            if records.is_empty() {
+                // the missed span held only zero-participant no-op
+                // rounds: nothing to apply, nothing to bill (mirrors the
+                // distributed topology's empty-replay guard)
+                self.tracker.mark_synced(id, to_round);
+                continue;
+            }
+            let records = match self.cfg.catchup {
+                CatchupCfg::Replay => {
+                    // meter through the actual message, then take the
+                    // records back for the update loop (no span clone)
+                    let msg = Message::ReplayHistory { records };
+                    self.ledger.record(&msg);
+                    let Message::ReplayHistory { records } = msg else { unreachable!() };
+                    records
+                }
+                CatchupCfg::Rebroadcast => {
+                    self.ledger.record(&Message::Rebroadcast { n_params: d });
+                    records
+                }
+                CatchupCfg::Off => unreachable!(),
+            };
+            let c = &mut self.clients[id];
+            for r in &records {
+                c.engine.update(&mut c.w, r.seed, r.step());
+            }
+            self.tracker.mark_synced(id, to_round);
+        }
+    }
+
+    /// Bring every client current with the committed history — the
+    /// metered rejoin all stragglers perform when a run ends (no-op with
+    /// catch-up off, where every client is always current).
+    pub fn catch_up_all(&mut self) {
+        if !self.cfg.catchup.is_on() {
+            return;
+        }
+        let ids: Vec<usize> = (0..self.clients.len()).collect();
+        let to = self.history.head_round();
+        self.catch_up_clients(&ids, to);
+        self.history.compact_to(self.tracker.watermark());
+    }
+
+    /// Commit-phase history bookkeeping: append this round's records and
+    /// compact the ring down to the slowest client's watermark.
+    fn commit_history(&mut self, round: u64, records: Vec<SeedRecord>) {
+        if !self.cfg.catchup.is_on() {
+            return;
+        }
+        self.history.commit_round(round, records);
+        self.history.compact_to(self.tracker.watermark());
     }
 
     /// Worker count for a fan-out over `jobs` independent units.
@@ -346,8 +481,22 @@ impl Session {
 
     /// FeedSign (Algorithm 1, FeedSign branch): shared seed = t, 1-bit
     /// votes up, 1-bit majority (or DP vote) down, synchronized update.
-    fn step_feedsign(&mut self, t: u64, dp_epsilon: Option<f32>) {
-        let plan = self.plan_round(t);
+    fn step_feedsign(&mut self, plan: RoundPlan, dp_epsilon: Option<f32>) {
+        let t = plan.round;
+        // catch-up: stale participants replay their missed span *before*
+        // probing, so every vote is cast on the current model
+        if self.cfg.catchup.is_on() {
+            let ids = plan.participants.clone();
+            self.catch_up_clients(&ids, t);
+        }
+        if plan.participants.is_empty() {
+            // zero-participant round: commit a no-op (no votes, no
+            // broadcast); the 0-sign orbit entry and the empty history
+            // round keep round indices dense for both replay paths
+            self.orbit.push_sign(0);
+            self.commit_history(t, Vec::new());
+            return;
+        }
         let threads = self.worker_threads(plan.participants.len());
         let seed = t as u32;
         let (mu, bs, c_g) = (self.cfg.mu, self.cfg.batch_size, self.cfg.c_g_noise);
@@ -382,24 +531,46 @@ impl Session {
             Some(eps) => aggregation::dp_vote(&signs, eps, &mut self.dp_rng),
         };
         let step = f as f32 * self.cfg.eta;
-        // broadcast to every client (non-participants too: the 1-bit
-        // downlink is what keeps all replicas synchronized)
         let msg = Message::GlobalSign { sign: f };
-        for _ in 0..self.clients.len() {
-            self.ledger.record(&msg);
+        if self.cfg.catchup.is_on() {
+            // only this round's participants hear the broadcast; everyone
+            // else recovers the round from the seed history on rejoin
+            let _serial = pin_serial.then(prng::serial_zone);
+            for &id in &plan.participants {
+                self.ledger.record(&msg);
+                let c = &mut self.clients[id];
+                c.engine.update(&mut c.w, seed, step);
+                self.tracker.mark_synced(id, t + 1);
+            }
+        } else {
+            // broadcast to every client (non-participants too: the 1-bit
+            // downlink is what keeps all replicas synchronized)
+            for _ in 0..self.clients.len() {
+                self.ledger.record(&msg);
+            }
+            let threads_all = self.worker_threads(self.clients.len());
+            for_each_client_parallel(&mut self.clients, threads_all, pin_serial, |c| {
+                c.engine.update(&mut c.w, seed, step);
+            });
         }
-        let threads_all = self.worker_threads(self.clients.len());
-        for_each_client_parallel(&mut self.clients, threads_all, pin_serial, |c| {
-            c.engine.update(&mut c.w, seed, step);
-        });
         self.orbit.push_sign(f);
+        self.commit_history(t, vec![SeedRecord::sign_step(t, f, self.cfg.eta)]);
     }
 
     /// ZO-FedSGD (FwdLLM/FedKSeed-style): each participant samples its own
     /// seed, uploads a 64-bit seed-projection pair; everyone downloads all
     /// pairs and applies the mean update.
-    fn step_zo_fedsgd(&mut self, t: u64) {
-        let plan = self.plan_round(t);
+    fn step_zo_fedsgd(&mut self, plan: RoundPlan) {
+        let t = plan.round;
+        if self.cfg.catchup.is_on() {
+            let ids = plan.participants.clone();
+            self.catch_up_clients(&ids, t);
+        }
+        if plan.participants.is_empty() {
+            self.orbit.push_pairs(Vec::new());
+            self.commit_history(t, Vec::new());
+            return;
+        }
         let threads = self.worker_threads(plan.participants.len());
         let (mu, bs, c_g) = (self.cfg.mu, self.cfg.batch_size, self.cfg.c_g_noise);
         let pin_serial = self.cfg.threads == 1;
@@ -429,17 +600,37 @@ impl Session {
         let k = pairs.len();
         let eta = self.cfg.eta;
         let msg = Message::GlobalProjections { pairs: pairs.clone() };
-        for _ in 0..self.clients.len() {
-            self.ledger.record(&msg);
-        }
-        let threads_all = self.worker_threads(self.clients.len());
-        let pairs_ref = &pairs;
-        for_each_client_parallel(&mut self.clients, threads_all, pin_serial, |c| {
-            for &(seed, p) in pairs_ref {
-                c.engine.update(&mut c.w, seed, eta * p / k as f32);
+        if self.cfg.catchup.is_on() {
+            let _serial = pin_serial.then(prng::serial_zone);
+            for &id in &plan.participants {
+                self.ledger.record(&msg);
+                let c = &mut self.clients[id];
+                for &(seed, p) in &pairs {
+                    c.engine.update(&mut c.w, seed, eta * p / k as f32);
+                }
+                self.tracker.mark_synced(id, t + 1);
             }
-        });
+        } else {
+            for _ in 0..self.clients.len() {
+                self.ledger.record(&msg);
+            }
+            let threads_all = self.worker_threads(self.clients.len());
+            let pairs_ref = &pairs;
+            for_each_client_parallel(&mut self.clients, threads_all, pin_serial, |c| {
+                for &(seed, p) in pairs_ref {
+                    c.engine.update(&mut c.w, seed, eta * p / k as f32);
+                }
+            });
+        }
+        // history: one record per pair, the mean-projection coefficient
+        // folded into (sign, lr_scale) so replay applies `sign·lr_scale`
+        // == `eta·p/k` bit-exactly
+        let records: Vec<SeedRecord> = pairs
+            .iter()
+            .map(|&(seed, p)| SeedRecord::pair_step(t, seed, eta * p / k as f32))
+            .collect();
         self.orbit.push_pairs(pairs);
+        self.commit_history(t, records);
     }
 
     /// FedSGD first-order baseline: dense gradient exchange (always full
@@ -478,10 +669,24 @@ impl Session {
         self.orbit.push_pairs(vec![(seed, p)]);
     }
 
-    /// Evaluate the global model (client 0's replica — identical across
-    /// clients for every synchronized algorithm) on the test set.
+    /// Evaluate the global model on the test set.  With catch-up off this
+    /// is client 0's replica (identical across clients for every
+    /// synchronized algorithm); with catch-up on, replicas legitimately
+    /// differ mid-run, so the freshest replica (lowest id among the
+    /// most-synced clients) stands in for the global model.
     pub fn evaluate(&mut self) -> (f32, f32) {
-        let c = &mut self.clients[0];
+        let mut idx = 0usize;
+        if self.cfg.catchup.is_on() {
+            let mut best = self.tracker.last_synced(0);
+            for i in 1..self.clients.len() {
+                let s = self.tracker.last_synced(i);
+                if s > best {
+                    best = s;
+                    idx = i;
+                }
+            }
+        }
+        let c = &mut self.clients[idx];
         let mut loss_sum = 0.0f64;
         let mut correct = 0u32;
         let mut total = 0u32;
@@ -502,7 +707,9 @@ impl Session {
     }
 
     /// Checksum of client replicas — synchronized algorithms must keep all
-    /// replicas identical (`assert_synchronized` test hook).
+    /// replicas identical (`assert_synchronized` test hook).  With
+    /// catch-up on this holds only once every client is current (e.g.
+    /// after [`Session::catch_up_all`]), not mid-run.
     pub fn replicas_synchronized(&self) -> bool {
         let w0 = &self.clients[0].w;
         self.clients.iter().all(|c| &c.w == w0)
@@ -703,6 +910,41 @@ mod tests {
         // 64 bits per participant up; all K download the 2-pair bundle
         assert_eq!(s.ledger.uplink_bits, 10 * 2 * 64);
         assert_eq!(s.ledger.downlink_bits, 10 * 5 * 2 * 64);
+    }
+
+    #[test]
+    fn zero_participant_round_commits_noop() {
+        let mut s = make_session(Algorithm::FeedSign, 3, 0);
+        s.cfg.participation = ParticipationCfg::Fraction(0.0);
+        let w0 = s.clients[0].w.clone();
+        for t in 0..5 {
+            s.step(t);
+        }
+        assert_eq!(s.clients[0].w, w0, "no participants, no update");
+        assert_eq!(s.ledger.total_bits(), 0, "no votes, no broadcast");
+        assert_eq!(s.orbit.len(), 5, "round indices stay dense");
+        assert!(s.replicas_synchronized());
+        // the 0-sign entries replay as no-ops, so the orbit still
+        // reconstructs exactly
+        let mut w = s.clients[0].engine.init_params(7);
+        s.orbit.replay(&mut w);
+        assert_eq!(w, s.clients[0].w);
+    }
+
+    #[test]
+    fn catchup_replay_still_learns_and_resynchronizes() {
+        let mut s = make_session(Algorithm::FeedSign, 5, 0);
+        s.cfg.participation = ParticipationCfg::Fraction(0.4);
+        s.cfg.catchup = CatchupCfg::Replay;
+        let (l0, _) = s.evaluate();
+        for t in 0..800 {
+            s.step(t);
+        }
+        assert_eq!(s.history.head_round(), 800);
+        s.catch_up_all();
+        assert!(s.replicas_synchronized(), "rejoin must restore replica equality");
+        let (l1, _) = s.evaluate();
+        assert!(l1 < l0, "replay catch-up should still learn: {l0} -> {l1}");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! The client compute abstraction: everything a federated client does to
 //! its local model, behind one trait so the coordinator is agnostic to
 //! whether the math runs through AOT-compiled XLA artifacts
-//! ([`crate::runtime::PjrtEngine`]) or the native substrate
+//! ([`crate::runtime::SharedPjrtEngine`]) or the native substrate
 //! ([`NativeEngine`]).
 
 use crate::data::Batch;

@@ -31,9 +31,18 @@
 //! thread count — the determinism contract pinned by
 //! `rust/tests/parallel_parity.rs`.
 //!
+//! Partial participation no longer assumes broadcast-to-everyone: the
+//! PS keeps a FedKSeed-style [`comm::SeedHistory`] of every committed
+//! `(round, seed, sign, lr_scale)` record, and a client that missed
+//! rounds replays the span on rejoin ([`coordinator::catchup`], the
+//! `catchup = "replay" | "rebroadcast" | "off"` knob) — bit-identically
+//! to an always-on client, as pinned by `rust/tests/catchup_parity.rs`.
+//!
 //! Entry points: [`coordinator::session::Session`] for programmatic use,
 //! the `feedsign` binary for the CLI, `examples/` for runnable scenarios
-//! and `benches/` for the per-table/figure reproduction harnesses.
+//! and `benches/` for the per-table/figure reproduction harnesses.  The
+//! round engine itself is documented end to end in
+//! `docs/ARCHITECTURE.md`.
 
 pub mod comm;
 pub mod config;

@@ -28,7 +28,9 @@ USAGE: feedsign <command> [options]
 COMMANDS:
   run          --config exp.toml [--csv curve.csv] [--orbit run.orbit]
                [--threads N] [--participation full|fraction:F|bernoulli:P]
+               [--catchup off|replay|rebroadcast]
   quickstart   [--rounds 2000] [--threads N] [--participation SPEC]
+               [--catchup SPEC]
   init-config
   theory       [--eta 1e-3] [--p-max 0.1]
   replay       --input run.orbit --n-params D
@@ -63,14 +65,17 @@ fn main() -> Result<()> {
     }
 }
 
-/// Apply the round-engine CLI overrides (`--threads`, `--participation`)
-/// on top of a loaded config, re-validating afterwards.
+/// Apply the round-engine CLI overrides (`--threads`, `--participation`,
+/// `--catchup`) on top of a loaded config, re-validating afterwards.
 fn apply_engine_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     if let Some(t) = args.str("threads") {
         cfg.threads = t.parse().context("parsing --threads")?;
     }
     if let Some(p) = args.str("participation") {
         cfg.participation = p.to_string();
+    }
+    if let Some(c) = args.str("catchup") {
+        cfg.catchup = c.to_string();
     }
     cfg.validate()
 }

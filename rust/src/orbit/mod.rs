@@ -59,7 +59,9 @@ impl Orbit {
 
     /// Replay the orbit onto a parameter vector (which must be the
     /// checkpoint the orbit started from).  FeedSign steps use
-    /// `seed = step index`, exactly the protocol's seed schedule.
+    /// `seed = step index`, exactly the protocol's seed schedule; 0-sign
+    /// entries (zero-participant no-op rounds) replay as no-ops while
+    /// keeping the seed schedule dense.
     pub fn replay(&self, w: &mut [f32]) {
         for (t, entry) in self.entries.iter().enumerate() {
             match entry {
@@ -91,8 +93,10 @@ pub fn encode(orbit: &Orbit) -> Vec<u8> {
     out.extend_from_slice(&orbit.eta.to_le_bytes());
     out.extend_from_slice(&(orbit.entries.len() as u64).to_le_bytes());
 
-    // homogeneous fast path: all Sign entries -> bit-packed
-    let all_signs = orbit.entries.iter().all(|e| matches!(e, OrbitEntry::Sign(_)));
+    // homogeneous fast path: all non-zero Sign entries -> bit-packed.
+    // Sign(0) (a zero-participant no-op round) has no bit encoding, so
+    // orbits containing one fall back to the tagged form.
+    let all_signs = orbit.entries.iter().all(|e| matches!(e, OrbitEntry::Sign(s) if *s != 0));
     out.push(all_signs as u8);
     if all_signs {
         let mut byte = 0u8;
@@ -294,6 +298,24 @@ mod tests {
         let mut w_replay = w0;
         o.replay(&mut w_replay);
         assert_eq!(w, w_replay);
+    }
+
+    #[test]
+    fn zero_sign_noop_entries_roundtrip_and_replay() {
+        // Sign(0) has no bit-packed form; the encoder must take the
+        // tagged path and the entry must replay as a no-op
+        let mut o = Orbit::new("feedsign", 0, 0.01);
+        o.push_sign(1);
+        o.push_sign(0);
+        o.push_sign(-1);
+        let back = decode(&encode(&o)).unwrap();
+        assert_eq!(o.entries, back.entries);
+        let mut w = normals_vec(5, 128);
+        let mut expect = w.clone();
+        crate::simkit::zo::apply_update(&mut expect, 0, 0.01);
+        crate::simkit::zo::apply_update(&mut expect, 2, -0.01);
+        o.replay(&mut w);
+        assert_eq!(w, expect, "0-sign entry must not move parameters or shift seeds");
     }
 
     #[test]

@@ -10,11 +10,21 @@
 //! normals agree to ~1e-6 (libm vs XLA transcendentals).
 //!
 //! Counter-based generation is what lets FeedSign ship a *direction in R^d*
-//! as a 32-bit seed: element `i` of `z` is a pure function of `(seed, i)`,
-//! so any tile of `z` can be regenerated wherever it is consumed — both
-//! the streaming SPSA AXPYs in [`crate::simkit::zo`] and their
+//! as a 32-bit seed: element `i` of `z` is a pure function of `(seed, i)`
+//! — **counter-space purity**, the exactness invariant every consumer in
+//! this crate leans on.  Any tile of `z` can be regenerated wherever it
+//! is consumed: the streaming SPSA AXPYs in [`crate::simkit::zo`], their
 //! chunk-parallel split of the counter space across worker threads
-//! (exact, not approximate) exploit exactly that.
+//! (exact, not approximate), and the seed-history catch-up replay all
+//! exploit exactly that.  The fused span consumers share one walker,
+//! [`for_each_span_lane`].
+//!
+//! The second invariant here is the **serial-zone policy**
+//! ([`serial_zone`] / [`SerialZone`]): a thread already inside a
+//! parallel region (a round-engine worker, a distributed client thread)
+//! marks itself serial so nested noise ops do not multiply client-level
+//! and chunk-level fan-out into oversubscription.  The zone changes
+//! wall-clock only — bits are identical either way.
 
 /// Philox multiplier constants (Salmon et al., SC'11).
 pub const PHILOX_M0: u32 = 0xD251_1F53;
@@ -76,15 +86,26 @@ pub fn normals4(seed: u32, ctr: u32) -> [f32; 4] {
     [za, zb, zc, zd]
 }
 
-/// Fill `out` with elements `z[start .. start + out.len()]` of the
-/// direction `z(seed)` — `start` may be **any** element offset, not just a
-/// lane boundary.  This is the primitive the chunk-parallel noise ops hand
-/// to each worker thread: counter-based Philox makes element `i` a pure
-/// function of `(seed, i)`, so any split of the counter space reproduces
-/// the sequential stream bit-exactly.
-pub fn normals_into_span(seed: u32, start: usize, out: &mut [f32]) {
-    let n = out.len();
-    if n == 0 {
+/// Walk the counter lanes covering elements `[start, start + len)` of the
+/// direction `z(seed)`, calling `f(i, z)` with the span-relative element
+/// offset `i` and the lane normals for elements `i .. i + z.len()`.
+///
+/// This is **the one** head/body/tail walker behind every fused
+/// counter-space consumer — [`normals_into_span`],
+/// [`crate::simkit::zo::perturb_span`] and
+/// [`crate::simkit::zo::axpy_span`] are thin per-lane closures over it
+/// (they used to be three hand-fused copies of this loop).  `start` may
+/// be **any** element offset, not just a lane boundary: the partial head
+/// lane is regenerated in full and sliced, which is what lets the
+/// chunk-parallel drivers cut the counter space anywhere and still
+/// reproduce the sequential stream bit-exactly (counter-space purity:
+/// element `i` of `z(seed)` is a pure function of `(seed, i)`).
+/// `#[inline(always)]` + closure specialization keep the full-lane body
+/// as tight as the hand-fused originals (the Philox block dominates
+/// either way; `perf_hotpath`'s PRNG-throughput shape check pins it).
+#[inline(always)]
+pub fn for_each_span_lane<F: FnMut(usize, &[f32])>(seed: u32, start: usize, len: usize, mut f: F) {
+    if len == 0 {
         return;
     }
     let mut i = 0usize;
@@ -92,20 +113,31 @@ pub fn normals_into_span(seed: u32, start: usize, out: &mut [f32]) {
     let phase = start % 4;
     if phase != 0 {
         let z = normals4(seed, ctr);
-        let take = (4 - phase).min(n);
-        out[..take].copy_from_slice(&z[phase..phase + take]);
+        let take = (4 - phase).min(len);
+        f(0, &z[phase..phase + take]);
         i = take;
         ctr += 1;
     }
-    while i + 4 <= n {
-        out[i..i + 4].copy_from_slice(&normals4(seed, ctr));
+    while i + 4 <= len {
+        let z = normals4(seed, ctr);
+        f(i, &z);
         i += 4;
         ctr += 1;
     }
-    if i < n {
+    if i < len {
         let z = normals4(seed, ctr);
-        out[i..].copy_from_slice(&z[..n - i]);
+        f(i, &z[..len - i]);
     }
+}
+
+/// Fill `out` with elements `z[start .. start + out.len()]` of the
+/// direction `z(seed)` — the copy instance of [`for_each_span_lane`],
+/// and the primitive the chunk-parallel noise ops hand to each worker
+/// thread.
+pub fn normals_into_span(seed: u32, start: usize, out: &mut [f32]) {
+    for_each_span_lane(seed, start, out.len(), |i, z| {
+        out[i..i + z.len()].copy_from_slice(z);
+    });
 }
 
 /// Fill `out` with the leading `out.len()` elements of `z(seed)`,

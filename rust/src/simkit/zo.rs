@@ -7,88 +7,46 @@
 //! holds exactly; see [`spsa_probe_scratch`] for why the in-place
 //! `+mu, -2mu, +mu` telescope is *not* used.  The AXPYs themselves are
 //! **chunk-parallel**: counter-based Philox makes element `i` of `z(seed)`
-//! a pure function of `(seed, i)`, so [`axpy_into`] / [`perturb_in_place`]
-//! split the counter space across worker threads and stay bit-identical to
-//! the sequential loop for every thread count (the rust analogue of the
-//! grid-parallel `spsa_axpy` Pallas kernel).
+//! a pure function of `(seed, i)` (counter-space purity), so
+//! [`axpy_into`] / [`perturb_in_place`] split the counter space across
+//! worker threads and stay bit-identical to the sequential loop for every
+//! thread count (the rust analogue of the grid-parallel `spsa_axpy`
+//! Pallas kernel).  All span variants are per-lane closures over the one
+//! shared walker, [`prng::for_each_span_lane`].
+//!
+//! [`apply_update`] is also the replay primitive of the seed-history
+//! catch-up path (`coordinator::catchup`): a rejoining client applies its
+//! missed `(seed, sign·lr)` records through exactly this code, in commit
+//! order, which is what makes the replayed replica bit-identical to an
+//! always-on client's.
 
 use super::nn::Model;
 use super::prng;
 use crate::data::Batch;
 
 /// In-place `w[j] += scale * z_{start+j}(seed)` for a span beginning at
-/// absolute element offset `start` of the direction stream.  `start` may
+/// absolute element offset `start` of the direction stream — the
+/// accumulate instance of [`prng::for_each_span_lane`].  `start` may
 /// land mid-lane; the partial head lane is regenerated and sliced.
 pub fn perturb_span(w: &mut [f32], seed: u32, scale: f32, start: usize) {
-    let n = w.len();
-    if n == 0 {
-        return;
-    }
-    let mut i = 0usize;
-    let mut ctr = (start / 4) as u32;
-    let phase = start % 4;
-    if phase != 0 {
-        let z = prng::normals4(seed, ctr);
-        let take = (4 - phase).min(n);
-        for (j, wj) in w[..take].iter_mut().enumerate() {
-            *wj += scale * z[phase + j];
+    prng::for_each_span_lane(seed, start, w.len(), |i, z| {
+        for (wj, zj) in w[i..i + z.len()].iter_mut().zip(z) {
+            *wj += scale * zj;
         }
-        i = take;
-        ctr += 1;
-    }
-    while i + 4 <= n {
-        let z = prng::normals4(seed, ctr);
-        w[i] += scale * z[0];
-        w[i + 1] += scale * z[1];
-        w[i + 2] += scale * z[2];
-        w[i + 3] += scale * z[3];
-        i += 4;
-        ctr += 1;
-    }
-    if i < n {
-        let z = prng::normals4(seed, ctr);
-        for (j, wj) in w[i..].iter_mut().enumerate() {
-            *wj += scale * z[j];
-        }
-    }
+    });
 }
 
 /// Fused `out[j] = w[j] + scale * z_{start+j}(seed)` for a span beginning
 /// at absolute element offset `start` (out-of-place form of
-/// [`perturb_span`]).
+/// [`perturb_span`]; the write instance of
+/// [`prng::for_each_span_lane`]).
 pub fn axpy_span(w: &[f32], out: &mut [f32], seed: u32, scale: f32, start: usize) {
     debug_assert_eq!(w.len(), out.len());
-    let n = w.len();
-    if n == 0 {
-        return;
-    }
-    let mut i = 0usize;
-    let mut ctr = (start / 4) as u32;
-    let phase = start % 4;
-    if phase != 0 {
-        let z = prng::normals4(seed, ctr);
-        let take = (4 - phase).min(n);
-        for j in 0..take {
-            out[j] = w[j] + scale * z[phase + j];
+    prng::for_each_span_lane(seed, start, w.len(), |i, z| {
+        for (j, zj) in z.iter().enumerate() {
+            out[i + j] = w[i + j] + scale * zj;
         }
-        i = take;
-        ctr += 1;
-    }
-    while i + 4 <= n {
-        let z = prng::normals4(seed, ctr);
-        out[i] = w[i] + scale * z[0];
-        out[i + 1] = w[i + 1] + scale * z[1];
-        out[i + 2] = w[i + 2] + scale * z[2];
-        out[i + 3] = w[i + 3] + scale * z[3];
-        i += 4;
-        ctr += 1;
-    }
-    if i < n {
-        let z = prng::normals4(seed, ctr);
-        for j in i..n {
-            out[j] = w[j] + scale * z[j - i];
-        }
-    }
+    });
 }
 
 /// In-place `w += scale * z(seed)` with streaming noise regeneration,
@@ -177,8 +135,14 @@ pub fn spsa_probe<M: Model + ?Sized>(
 }
 
 /// Apply the aggregated update `w -= step * z(seed)`; `step` folds the
-/// global sign/projection and the learning rate.
+/// global sign/projection and the learning rate.  A `±0.0` step (a
+/// zero-participant no-op round) returns without touching `w` — adding
+/// `-0.0 · z` could flip the sign bit of `-0.0` parameters, and a no-op
+/// must be bit-exact too.
 pub fn apply_update(w: &mut [f32], seed: u32, step: f32) {
+    if step == 0.0 {
+        return;
+    }
     perturb_in_place(w, seed, -step);
 }
 

@@ -1,0 +1,214 @@
+//! Seed-history catch-up parity: a client excluded from k rounds under
+//! `catchup = "replay"` must rejoin with a replica **bit-identical** to an
+//! always-participating client's, for every synchronized engine — this is
+//! what removes the correctness asterisk from partial participation
+//! (`fraction:F` / `bernoulli:P`).  The tests pin:
+//!
+//! * rejoin parity for k ∈ {1, 7, 50} missed rounds, for FeedSign,
+//!   DP-FeedSign and ZO-FedSGD;
+//! * exact replay-bit accounting (1 bit per missed FeedSign round) and the
+//!   dense-rebroadcast cost baseline (32·d bits);
+//! * the bill-each-pair-once invariant: a full replay run spends exactly
+//!   the downlink bits of the broadcast-to-everyone baseline, in fewer
+//!   messages;
+//! * ledger compaction never drops a record the slowest tracked client
+//!   still needs, however small the ring's soft capacity.
+
+use feedsign::coordinator::catchup::CatchupCfg;
+use feedsign::coordinator::participation::ParticipationCfg;
+use feedsign::coordinator::session::RoundPlan;
+use feedsign::coordinator::{Algorithm, Client, Session, SessionCfg};
+use feedsign::data::partition::{split, Partition};
+use feedsign::data::vision::{generate, SYNTH_CIFAR10};
+use feedsign::engine::NativeEngine;
+use feedsign::simkit::nn::LinearProbe;
+
+fn build_session(algo: Algorithm, k: usize, catchup: CatchupCfg) -> Session {
+    let train = generate(&SYNTH_CIFAR10, 400, 0);
+    let test = generate(&SYNTH_CIFAR10, 150, 1);
+    let shards = split(&train, k, Partition::Iid, 0);
+    let clients: Vec<Client> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            Client::new(id, Box::new(NativeEngine::new(LinearProbe::new(128, 10))), shard, 13)
+        })
+        .collect();
+    let cfg = SessionCfg {
+        algorithm: algo,
+        rounds: 0,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 16,
+        eval_every: 0,
+        catchup,
+        seed: 13,
+        ..Default::default()
+    };
+    Session::new(cfg, clients, train, test)
+}
+
+fn plan_full(t: u64, k: usize) -> RoundPlan {
+    RoundPlan { round: t, participants: (0..k).collect() }
+}
+
+fn plan_without(t: u64, k: usize, skip: usize) -> RoundPlan {
+    RoundPlan { round: t, participants: (0..k).filter(|&i| i != skip).collect() }
+}
+
+#[test]
+fn rejoin_is_bit_identical_for_every_engine_and_gap() {
+    let engines =
+        [Algorithm::FeedSign, Algorithm::DpFeedSign { epsilon: 4.0 }, Algorithm::ZoFedSgd];
+    for algo in engines {
+        for gap in [1usize, 7, 50] {
+            let mut s = build_session(algo, 4, CatchupCfg::Replay);
+            let mut t = 0u64;
+            for _ in 0..3 {
+                s.step_with_plan(plan_full(t, 4));
+                t += 1;
+            }
+            // client 2 goes offline for `gap` rounds
+            for _ in 0..gap {
+                s.step_with_plan(plan_without(t, 4, 2));
+                t += 1;
+            }
+            // rejoin: the engine replays the missed span before client 2
+            // probes, then two more full rounds run
+            for _ in 0..2 {
+                s.step_with_plan(plan_full(t, 4));
+                t += 1;
+            }
+            assert_eq!(
+                s.clients[2].w, s.clients[0].w,
+                "{}: client offline for {gap} rounds rejoined with a drifted replica",
+                algo.name()
+            );
+            s.catch_up_all();
+            assert!(
+                s.replicas_synchronized(),
+                "{}: pool not synchronized after catch_up_all (gap {gap})",
+                algo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn replay_bits_are_one_per_missed_feedsign_round() {
+    let mut s = build_session(Algorithm::FeedSign, 4, CatchupCfg::Replay);
+    let mut t = 0u64;
+    for _ in 0..2 {
+        s.step_with_plan(plan_full(t, 4));
+        t += 1;
+    }
+    for _ in 0..3 {
+        s.step_with_plan(plan_without(t, 4, 3));
+        t += 1;
+    }
+    s.step_with_plan(plan_full(t, 4));
+    // uplink: every participant votes 1 bit
+    assert_eq!(s.ledger.uplink_bits, 2 * 4 + 3 * 3 + 4);
+    // downlink: participants hear 1 bit per round; the rejoin replays the
+    // 3 missed rounds at 1 bit each (seed = round is derivable, §I.1)
+    assert_eq!(s.ledger.downlink_bits, (2 * 4 + 3 * 3 + 4) + 3);
+}
+
+#[test]
+fn rebroadcast_pays_dense_checkpoint_and_stays_exact() {
+    let schedule = |catchup: CatchupCfg| {
+        let mut s = build_session(Algorithm::FeedSign, 4, catchup);
+        let mut t = 0u64;
+        for _ in 0..2 {
+            s.step_with_plan(plan_full(t, 4));
+            t += 1;
+        }
+        for _ in 0..3 {
+            s.step_with_plan(plan_without(t, 4, 3));
+            t += 1;
+        }
+        s.step_with_plan(plan_full(t, 4));
+        s
+    };
+    let replay = schedule(CatchupCfg::Replay);
+    let rebroadcast = schedule(CatchupCfg::Rebroadcast);
+    // both rejoin exactly...
+    assert_eq!(replay.clients[3].w, replay.clients[0].w);
+    assert_eq!(rebroadcast.clients[3].w, rebroadcast.clients[0].w);
+    assert_eq!(rebroadcast.clients[3].w, replay.clients[3].w, "policies must agree on bits");
+    // ...but the dense fallback pays 32·d where replay paid 3 bits
+    let d = replay.clients[0].engine.n_params() as u64;
+    assert_eq!(
+        rebroadcast.ledger.downlink_bits - replay.ledger.downlink_bits,
+        32 * d - 3,
+        "rebroadcast must cost a dense checkpoint where replay cost 3 bits"
+    );
+}
+
+#[test]
+fn full_replay_run_matches_broadcast_run_bit_for_bit() {
+    // The bill-each-(client, round)-pair-once invariant: with replay, a
+    // pair is billed either as the round's live broadcast or as a replay
+    // record later — never both, never neither — so total downlink bits
+    // equal the broadcast-to-everyone baseline while message count drops,
+    // and the final replicas are identical because stale participants are
+    // caught up *before* they probe.
+    for algo in [Algorithm::FeedSign, Algorithm::ZoFedSgd] {
+        let mut off = build_session(algo, 5, CatchupCfg::Off);
+        off.cfg.participation = ParticipationCfg::Fraction(0.4);
+        let mut rep = build_session(algo, 5, CatchupCfg::Replay);
+        rep.cfg.participation = ParticipationCfg::Fraction(0.4);
+        for t in 0..80 {
+            off.step(t);
+            rep.step(t);
+        }
+        rep.catch_up_all();
+        for (a, b) in off.clients.iter().zip(&rep.clients) {
+            assert_eq!(a.w, b.w, "{}: replica {} diverged across catch-up modes", algo.name(), a.id);
+        }
+        assert_eq!(off.ledger.uplink_bits, rep.ledger.uplink_bits, "{}", algo.name());
+        assert_eq!(
+            off.ledger.downlink_bits,
+            rep.ledger.downlink_bits,
+            "{}: replay must bill each (client, round) pair exactly once",
+            algo.name()
+        );
+        assert!(
+            rep.ledger.downlink_msgs < off.ledger.downlink_msgs,
+            "{}: replay batches missed rounds into fewer messages",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn compaction_never_drops_records_the_slowest_client_needs() {
+    let mut s = build_session(Algorithm::FeedSign, 3, CatchupCfg::Replay);
+    s.history.set_capacity(4);
+    let mut t = 0u64;
+    for _ in 0..2 {
+        s.step_with_plan(plan_full(t, 3));
+        t += 1;
+    }
+    // client 2 offline for 50 rounds: the ring must blow straight past
+    // its soft capacity rather than drop a record client 2 still needs
+    for _ in 0..50 {
+        s.step_with_plan(plan_without(t, 3, 2));
+        t += 1;
+    }
+    assert_eq!(s.tracker.last_synced(2), 2);
+    assert_eq!(
+        s.history.records_len(),
+        50,
+        "rounds 2..52 are pinned by client 2's watermark (rounds 0..2 compacted)"
+    );
+    // rejoin: the span must be fully servable and exact
+    s.step_with_plan(plan_full(t, 3));
+    assert_eq!(s.clients[2].w, s.clients[0].w, "rejoin after 50 rounds must be bit-identical");
+    // with everyone synced, the very next compaction trims to capacity
+    assert!(
+        s.history.records_len() <= 4,
+        "ring must shrink to its soft capacity once the watermark advances ({} records)",
+        s.history.records_len()
+    );
+}

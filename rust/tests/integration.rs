@@ -37,6 +37,7 @@ fn lm_cfg(algorithm: &str, rounds: u64) -> ExperimentConfig {
         attack: None,
         c_g_noise: 0.0,
         participation: "full".into(),
+        catchup: "off".into(),
         threads: 0,
         pretrain_rounds: 0,
         seed: 1,
