@@ -32,6 +32,10 @@ fn cfg(algorithm: &str, rounds: u64) -> ExperimentConfig {
         c_g_noise: 1.0, // the paper's high-c_g amplifier (Appendix H)
         participation: "full".into(),
         catchup: "off".into(),
+        channel: "ideal".into(),
+        link: "mobile".into(),
+        deadline: 0.0,
+        channel_seed: 0,
         threads: 0,
         pretrain_rounds: 0,
         seed: 37,

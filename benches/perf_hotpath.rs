@@ -205,6 +205,10 @@ fn round_cfg(k: usize, threads: usize) -> ExperimentConfig {
         c_g_noise: 0.0,
         participation: "full".into(),
         catchup: "off".into(),
+        channel: "ideal".into(),
+        link: "mobile".into(),
+        deadline: 0.0,
+        channel_seed: 0,
         threads,
         pretrain_rounds: 0,
         seed: 5,

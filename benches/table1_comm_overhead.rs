@@ -32,6 +32,10 @@ fn cfg(algorithm: &str) -> ExperimentConfig {
         c_g_noise: 0.0,
         participation: "full".into(),
         catchup: "off".into(),
+        channel: "ideal".into(),
+        link: "mobile".into(),
+        deadline: 0.0,
+        channel_seed: 0,
         threads: 0,
         pretrain_rounds: 0,
         seed: 3,

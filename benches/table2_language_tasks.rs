@@ -42,6 +42,10 @@ fn cfg(task: &str, algorithm: &str, rounds: u64, eta: f32) -> ExperimentConfig {
         c_g_noise: 0.0,
         participation: "full".into(),
         catchup: "off".into(),
+        channel: "ideal".into(),
+        link: "mobile".into(),
+        deadline: 0.0,
+        channel_seed: 0,
         threads: 0,
         pretrain_rounds: 300,
         seed: 11,

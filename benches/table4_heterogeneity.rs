@@ -36,6 +36,10 @@ fn cfg(task: &str, algorithm: &str, beta: Option<f32>, rounds: u64) -> Experimen
         c_g_noise: 0.0,
         participation: "full".into(),
         catchup: "off".into(),
+        channel: "ideal".into(),
+        link: "mobile".into(),
+        deadline: 0.0,
+        channel_seed: 0,
         threads: 0,
         pretrain_rounds: 300,
         seed: 17,

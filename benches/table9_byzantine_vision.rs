@@ -41,6 +41,10 @@ fn cfg(task: &str, algorithm: &str, byzantine: usize, rounds: u64) -> Experiment
         c_g_noise: 0.0,
         participation: "full".into(),
         catchup: "off".into(),
+        channel: "ideal".into(),
+        link: "mobile".into(),
+        deadline: 0.0,
+        channel_seed: 0,
         threads: 0,
         pretrain_rounds: 0,
         seed: 31,

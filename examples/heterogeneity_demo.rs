@@ -32,6 +32,10 @@ fn cfg(algorithm: &str, beta: Option<f32>, c_g: f32) -> ExperimentConfig {
         c_g_noise: c_g,
         participation: "full".into(),
         catchup: "off".into(),
+        channel: "ideal".into(),
+        link: "mobile".into(),
+        deadline: 0.0,
+        channel_seed: 0,
         threads: 0,
         pretrain_rounds: 0,
         seed: 9,

@@ -13,8 +13,12 @@
 //! Every message the coordinator sends is constructed here and carries its
 //! own payload size; [`Ledger`] accumulates the totals that the Table 1
 //! bench and the per-run metrics report.  The in-process transport is a
-//! tokio mpsc pair per client — the same topology a real deployment would
-//! have, with the network link swapped for a channel.
+//! `std::sync::mpsc` pair per client ([`link`]) — the same topology a
+//! real deployment would have, with the physical link swapped for a
+//! process-local channel.  The link itself is lossless; impairment
+//! (bit flips, drops, latency, deadlines) is the job of the
+//! [`crate::net`] simulator, which sits between the coordinator and
+//! these channels and corrupts messages *semantically*.
 //!
 //! ## Seed history (offline-client catch-up)
 //!
@@ -329,6 +333,12 @@ impl Ledger {
 /// given uplink/downlink bandwidth and per-message latency — how the
 /// "48 MB ≈ 4 minutes of FHD video per round" style comparisons in §1 are
 /// regenerated without a real testbed.
+///
+/// This is the *closed-form* projection over one global link; its
+/// executable counterpart is the [`crate::net`] simulator, which
+/// generalizes to heterogeneous per-client [`crate::net::LinkProfile`]s
+/// with jitter, impairs messages in flight, and drives a virtual event
+/// clock with round deadlines.
 #[derive(Debug, Clone, Copy)]
 pub struct LinkModel {
     /// uplink bandwidth, bits/s
@@ -526,6 +536,66 @@ mod tests {
         assert_eq!(h.records_len(), 4);
         assert_eq!(h.tail_round(), 6);
         assert_eq!(h.replay_span(6, 10).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn compaction_watermark_exactly_at_ring_capacity() {
+        // 8 rounds in a capacity-4 ring, watermark exactly at the round
+        // that brings the ring down to capacity: both gates release at
+        // the same instant, and neither may overshoot
+        let mut h = SeedHistory::new(4);
+        for t in 0..8 {
+            h.commit_round(t, [fs_record(t)]);
+        }
+        h.compact_to(4);
+        assert_eq!(h.tail_round(), 4);
+        assert_eq!(h.records_len(), 4, "trimmed to capacity, not past the watermark");
+        assert_eq!(h.replay_span(4, 8).unwrap().len(), 4);
+        // raising the watermark to the head changes nothing: the ring is
+        // no longer over capacity, so the capacity gate holds the rest
+        h.compact_to(8);
+        assert_eq!(h.tail_round(), 4);
+        assert_eq!(h.records_len(), 4);
+    }
+
+    #[test]
+    fn untracked_client_joining_after_compaction_is_refused_the_span() {
+        // a client the tracker never knew about (it joined the pool
+        // after compaction already ran) asks for a span starting below
+        // the tail: replay must refuse — `None` is the caller's signal
+        // to fall back to a dense rebroadcast, never to replay a
+        // silently truncated span
+        let mut h = SeedHistory::new(2);
+        for t in 0..10 {
+            h.commit_round(t, [fs_record(t)]);
+        }
+        h.compact_to(6);
+        assert_eq!(h.tail_round(), 6);
+        assert!(h.replay_span(0, 10).is_none(), "fresh-join span reaches below the tail");
+        assert!(h.replay_span(5, 10).is_none(), "partially compacted span refuses too");
+        assert_eq!(h.replay_span(6, 10).unwrap().len(), 4, "tracked clients unaffected");
+    }
+
+    #[test]
+    fn zero_capacity_ring_retains_only_watermark_pinned_records() {
+        // capacity 0: every record is over-capacity the moment it
+        // commits, so retention is governed by the watermark alone
+        let mut h = SeedHistory::new(0);
+        for t in 0..5 {
+            h.commit_round(t, [fs_record(t)]);
+            h.compact_to(3); // slowest client stuck at round 3
+        }
+        assert_eq!(h.tail_round(), 3);
+        assert_eq!(h.records_len(), 2, "rounds 3..5 pinned by the watermark");
+        assert_eq!(h.replay_span(3, 5).unwrap().len(), 2);
+        assert!(h.replay_span(2, 5).is_none());
+        // watermark at the head: a zero-capacity ring may drop everything
+        h.compact_to(5);
+        assert_eq!(h.records_len(), 0);
+        assert_eq!(h.tail_round(), 5);
+        // ...and still accepts the next in-order commit afterwards
+        h.commit_round(5, [fs_record(5)]);
+        assert_eq!(h.replay_span(5, 6).unwrap(), vec![fs_record(5)]);
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::coordinator::{
 use crate::data::partition::{split, Partition};
 use crate::data::{corpus, tasks, vision, Dataset};
 use crate::engine::{Engine, NativeEngine};
+use crate::net::{ChannelModel, LinkAssignment, NetCfg};
 use crate::simkit::nn::{LinearProbe, ModelCfg, TransformerSim};
 use crate::util::toml_lite::{Doc, Value};
 use anyhow::{bail, Context, Result};
@@ -89,6 +90,17 @@ pub struct ExperimentConfig {
     /// offline-client catch-up policy: `off | replay | rebroadcast`
     /// (synchronized ZO algorithms only; see `coordinator::catchup`)
     pub catchup: String,
+    /// impaired-channel model: `ideal | ber:P | drop:P` (see `net`)
+    pub channel: String,
+    /// per-client link profiles: `mobile | wifi | iot | mixed`
+    pub link: String,
+    /// round deadline in virtual seconds (0 = no straggler cut;
+    /// synchronized ZO algorithms only)
+    pub deadline: f64,
+    /// seed of the impairment draw streams (keyed with
+    /// `(round, client, direction)`; independent of the run seed so
+    /// channel sweeps can hold the learning trajectory fixed)
+    pub channel_seed: u32,
     /// round-engine worker threads (0 = auto, 1 = sequential baseline)
     pub threads: usize,
     /// Central FO pretraining steps on a *format-matched but
@@ -151,6 +163,10 @@ impl ExperimentConfig {
             c_g_noise: doc.float("", "c_g_noise").unwrap_or(0.0) as f32,
             participation: doc.str("", "participation").unwrap_or_else(|| "full".into()),
             catchup: doc.str("", "catchup").unwrap_or_else(|| "off".into()),
+            channel: doc.str("", "channel").unwrap_or_else(|| "ideal".into()),
+            link: doc.str("", "link").unwrap_or_else(|| "mobile".into()),
+            deadline: doc.float("", "deadline").unwrap_or(0.0),
+            channel_seed: doc.int("", "channel_seed").unwrap_or(0) as u32,
             threads: doc.int("", "threads").unwrap_or(0) as usize,
             seed: doc.int("", "seed").unwrap_or(0) as u32,
             verbose: doc.bool("", "verbose").unwrap_or(false),
@@ -188,6 +204,10 @@ impl ExperimentConfig {
         d.set("", "c_g_noise", Value::Float(self.c_g_noise as f64));
         d.set("", "participation", s(&self.participation));
         d.set("", "catchup", s(&self.catchup));
+        d.set("", "channel", s(&self.channel));
+        d.set("", "link", s(&self.link));
+        d.set("", "deadline", Value::Float(self.deadline));
+        d.set("", "channel_seed", Value::Int(self.channel_seed as i64));
         d.set("", "threads", Value::Int(self.threads as i64));
         d.set("", "pretrain_rounds", Value::Int(self.pretrain_rounds as i64));
         d.set("", "seed", Value::Int(self.seed as i64));
@@ -269,6 +289,24 @@ impl ExperimentConfig {
         if catchup.is_on() && matches!(algo, Algorithm::FedSgd | Algorithm::Mezo) {
             bail!("catch-up applies to feedsign/dp-feedsign/zo-fedsgd only");
         }
+        let Some(channel) = ChannelModel::parse(&self.channel) else {
+            bail!("unknown channel {:?} (ideal | ber:P | drop:P)", self.channel);
+        };
+        let Some(link) = LinkAssignment::parse(&self.link) else {
+            bail!("unknown link profile {:?} (mobile | wifi | iot | mixed)", self.link);
+        };
+        if !self.deadline.is_finite() || self.deadline < 0.0 {
+            bail!("deadline must be a non-negative number of virtual seconds");
+        }
+        if self.deadline > 0.0 && matches!(algo, Algorithm::FedSgd | Algorithm::Mezo) {
+            bail!("the round deadline applies to feedsign/dp-feedsign/zo-fedsgd only");
+        }
+        if matches!(algo, Algorithm::Mezo) && !channel.is_ideal() {
+            bail!("mezo is centralized: there is no channel to impair");
+        }
+        if matches!(algo, Algorithm::Mezo) && !link.is_default() {
+            bail!("mezo is centralized: there is no client link to simulate");
+        }
         // model/task compatibility
         match (&self.model, &self.task) {
             (ModelSpec::Transformer { vocab, seq_len, .. }, TaskSpec::SynthLm { name, .. }) => {
@@ -307,6 +345,15 @@ impl ExperimentConfig {
 
     pub fn catchup_cfg(&self) -> CatchupCfg {
         CatchupCfg::parse(&self.catchup).expect("validated")
+    }
+
+    pub fn net_cfg(&self) -> NetCfg {
+        NetCfg {
+            channel: ChannelModel::parse(&self.channel).expect("validated"),
+            links: LinkAssignment::parse(&self.link).expect("validated"),
+            deadline_s: self.deadline,
+            channel_seed: self.channel_seed,
+        }
     }
 
     /// Generate the train/test datasets.
@@ -397,6 +444,7 @@ impl ExperimentConfig {
             participation: self.participation_cfg(),
             catchup: self.catchup_cfg(),
             threads: self.threads,
+            net: self.net_cfg(),
             seed: self.seed,
             verbose: self.verbose,
         };
@@ -460,6 +508,10 @@ pub fn quickstart() -> ExperimentConfig {
         c_g_noise: 0.0,
         participation: "full".into(),
         catchup: "off".into(),
+        channel: "ideal".into(),
+        link: "mobile".into(),
+        deadline: 0.0,
+        channel_seed: 0,
         threads: 0,
         pretrain_rounds: 0,
         seed: 0,
@@ -540,6 +592,10 @@ mod tests {
             c_g_noise: 0.0,
             participation: "full".into(),
             catchup: "off".into(),
+            channel: "ideal".into(),
+            link: "mobile".into(),
+            deadline: 0.0,
+            channel_seed: 0,
             threads: 0,
             pretrain_rounds: 0,
             seed: 1,
@@ -606,6 +662,81 @@ mod tests {
             .join("\n");
         let back = ExperimentConfig::from_toml(&text).unwrap();
         assert_eq!(back.catchup_cfg(), CatchupCfg::Off);
+    }
+
+    #[test]
+    fn channel_parses_roundtrips_and_gates() {
+        let mut cfg = quickstart();
+        cfg.channel = "ber:0.001".into();
+        cfg.link = "mixed".into();
+        cfg.deadline = 0.5;
+        cfg.channel_seed = 7;
+        cfg.validate().unwrap();
+        let net = cfg.net_cfg();
+        assert_eq!(net.channel, crate::net::ChannelModel::BitFlip { ber: 0.001 });
+        assert!((net.deadline_s - 0.5).abs() < 1e-12);
+        assert_eq!(net.channel_seed, 7);
+        assert!(net.is_active());
+        let back = ExperimentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.channel, "ber:0.001");
+        assert_eq!(back.link, "mixed");
+        assert!((back.deadline - 0.5).abs() < 1e-12);
+        assert_eq!(back.channel_seed, 7);
+        // bad specs
+        cfg.channel = "lossy".into();
+        assert!(cfg.validate().is_err());
+        cfg.channel = "drop:0.1".into();
+        cfg.link = "carrier-pigeon".into();
+        assert!(cfg.validate().is_err());
+        cfg.link = "mobile".into();
+        cfg.deadline = -1.0;
+        assert!(cfg.validate().is_err());
+        // gating: FO has no plan phase to cut, MeZO has no channel
+        cfg.deadline = 0.5;
+        cfg.algorithm = "fedsgd".into();
+        assert!(cfg.validate().is_err(), "deadline is a synchronized-round feature");
+        cfg.deadline = 0.0;
+        cfg.validate().unwrap();
+        cfg.algorithm = "mezo".into();
+        cfg.clients = 1;
+        assert!(cfg.validate().is_err(), "mezo has no channel to impair");
+        cfg.channel = "ideal".into();
+        cfg.link = "mixed".into();
+        assert!(cfg.validate().is_err(), "mezo has no client links to simulate");
+        cfg.link = "mobile".into();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn omitted_channel_defaults_ideal_and_inactive() {
+        let cfg = quickstart();
+        let text: String = cfg
+            .to_toml()
+            .lines()
+            .filter(|l| {
+                !l.starts_with("channel")
+                    && !l.starts_with("link")
+                    && !l.starts_with("deadline")
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        let back = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(back.channel, "ideal");
+        assert_eq!(back.link, "mobile");
+        assert!(!back.net_cfg().is_active());
+    }
+
+    #[test]
+    fn ber_channel_session_builds_and_steps() {
+        let mut cfg = quickstart();
+        cfg.channel = "ber:0.5".into();
+        cfg.rounds = 5;
+        let mut s = cfg.build_session().unwrap();
+        for t in 0..5 {
+            s.step(t);
+        }
+        assert!(s.net.stats.flipped_bits > 0, "half the votes should flip");
+        assert!(s.replicas_synchronized(), "flips corrupt votes, not replicas");
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::coordinator::catchup::{CatchupCfg, CatchupTracker};
 use crate::coordinator::participation::ParticipationCfg;
 use crate::data::{Dataset, Shard};
 use crate::engine::Engine;
+use crate::net::{NetCfg, NetSim, NetStats};
 use crate::simkit::prng::{self, Rng};
 use std::sync::Arc;
 
@@ -57,6 +58,12 @@ pub struct DistCfg {
     /// immediately; `Replay` defers to a rejoin-time history replay.
     /// `Rebroadcast` is rejected: the PS holds no parameters (§D.2).
     pub catchup: CatchupCfg,
+    /// Impaired-channel simulation ([`crate::net`]).  Draws are keyed by
+    /// `(channel_seed, round, client, direction)`, so an impaired run
+    /// here observes exactly the trace the synchronous session observes
+    /// for the same configuration — the cross-topology parity tests pin
+    /// this with flips, drops and deadline stragglers in flight.
+    pub net: NetCfg,
     /// Coordinator seed (must match the sync session's `cfg.seed` for
     /// cross-topology parity).
     pub seed: u32,
@@ -72,6 +79,7 @@ impl DistCfg {
             batch_size,
             participation: ParticipationCfg::Full,
             catchup: CatchupCfg::Off,
+            net: NetCfg::ideal(),
             seed: 0,
         }
     }
@@ -82,21 +90,26 @@ pub struct DistResult {
     /// final parameter replicas, one per client (must all be equal)
     pub finals: Vec<Vec<f32>>,
     pub ledger: Ledger,
-    /// per-round participant votes, in client-id order
+    /// per-round votes **as the PS received them** (delivered, possibly
+    /// flipped), in client-id order
     pub votes_per_round: Vec<Vec<i8>>,
+    /// impaired-channel counters (all zero on an ideal channel)
+    pub net: NetStats,
 }
 
 /// Run distributed FeedSign over worker threads.
 ///
-/// Protocol per round `t`: the PS draws the participant set, replays any
-/// missed history span to stale participants (`catchup = "replay"`),
-/// broadcasts `RoundStart` to them (seed = t is implicit), collects
-/// `SignVote`s in client-id order, majority-votes, and returns
-/// `GlobalSign` to the participants, who apply the update locally.
-/// Non-participants receive either the round's single committed record
-/// immediately (`catchup = "off"`) or nothing until they rejoin.  After
-/// the last round every stale client is caught up, so the returned
-/// replicas are always identical.
+/// Protocol per round `t`: the PS draws the participant set (minus any
+/// deadline stragglers the virtual clock cut), replays any missed
+/// history span to stale participants (`catchup = "replay"`), broadcasts
+/// `RoundStart` to them (seed = t is implicit), collects `SignVote`s in
+/// client-id order — each crossing the impaired uplink — majority-votes
+/// over the *delivered* signs, and returns `GlobalSign` to the clients
+/// it heard from, who apply the update locally.  Everyone else receives
+/// either the round's single committed record immediately
+/// (`catchup = "off"`) or nothing until they rejoin.  After the last
+/// round every stale client is caught up, so the returned replicas are
+/// always identical.
 pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> DistResult {
     assert!(
         cfg.catchup != CatchupCfg::Rebroadcast,
@@ -117,6 +130,15 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
             // per-vector noise ops sequential inside it (same policy as
             // the session round engine's workers)
             let _serial = prng::serial_zone();
+            // The loop is event-driven rather than strict request/
+            // response: after voting, the client does NOT block on a
+            // GlobalSign — over an impaired uplink its vote may never
+            // reach the PS, in which case the next message is simply the
+            // next round's trigger (or a catch-up replay).  `round_seed`
+            // remembers the seed the most recent RoundStart announced;
+            // the PS never interleaves rounds, so a GlobalSign always
+            // applies along it.
+            let mut round_seed = 0u32;
             while let Ok(msg) = port.from_ps.recv() {
                 match msg {
                     Message::ReplayHistory { records } => {
@@ -128,19 +150,17 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
                         }
                     }
                     Message::RoundStart { round } => {
-                        let seed = round as u32;
+                        round_seed = round as u32;
                         let batch = c.shard.next_batch(&train, batch_size, &mut c.rng);
-                        let p = c.engine.probe(&c.w, &batch, seed, mu);
+                        let p = c.engine.probe(&c.w, &batch, round_seed, mu);
                         let honest = if p >= 0.0 { 1i8 } else { -1 };
                         let sign = c.attack.mutate_sign(honest, &mut c.rng);
-                        // upload the vote, then wait for the global direction
                         if port.to_ps.send(Message::SignVote { sign }).is_err() {
                             break;
                         }
-                        let Ok(Message::GlobalSign { sign: f }) = port.from_ps.recv() else {
-                            break;
-                        };
-                        c.engine.update(&mut c.w, seed, f as f32 * eta);
+                    }
+                    Message::GlobalSign { sign: f } => {
+                        c.engine.update(&mut c.w, round_seed, f as f32 * eta);
                     }
                     _ => break,
                 }
@@ -154,10 +174,16 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
     let mut ledger = Ledger::default();
     let mut history = SeedHistory::default();
     let mut tracker = CatchupTracker::new(k);
+    let mut net = NetSim::new(cfg.net.clone());
     let mut part_rng = Rng::new(cfg.seed ^ 0x9A, 0x9A);
     let mut votes_per_round = Vec::with_capacity(cfg.rounds as usize);
     for t in 0..cfg.rounds {
-        let participants = cfg.participation.sample(k, t, &mut part_rng);
+        let mut participants = cfg.participation.sample(k, t, &mut part_rng);
+        if net.is_active() {
+            // virtual-clock admission, same keyed draws as the session's
+            // plan phase: deadline stragglers never get a RoundStart
+            participants = net.admit(t, participants, 1, 1);
+        }
         if participants.is_empty() {
             // zero-participant no-op round: keep round indices dense
             if cfg.catchup.is_on() {
@@ -186,18 +212,36 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
             ledger.record(&msg);
             ps_links[id].to_client.send(msg).expect("client alive");
         }
+        // collect votes in client-id order; each one then crosses the
+        // impaired uplink (transmission billed either way — the bits
+        // were sent; a drop means the PS treats the voter as absent)
         let mut signs = Vec::with_capacity(participants.len());
+        let mut voters = Vec::with_capacity(participants.len());
         for &id in &participants {
             let msg = ps_links[id].from_client.recv().expect("client alive");
             let Message::SignVote { sign } = msg else {
                 panic!("protocol violation: expected SignVote");
             };
             ledger.record(&Message::SignVote { sign });
-            signs.push(sign);
+            if let Some(sign) = net.deliver_sign(t, id, sign) {
+                signs.push(sign);
+                voters.push(id);
+            }
+        }
+        if signs.is_empty() {
+            // every vote was lost in transit: the round commits as a
+            // no-op; the voters' pending GlobalSign never arrives and
+            // their event loops simply see the next round's trigger
+            if cfg.catchup.is_on() {
+                history.commit_round(t, []);
+                history.compact_to(tracker.watermark());
+            }
+            votes_per_round.push(Vec::new());
+            continue;
         }
         let f = aggregation::majority_sign(&signs);
         votes_per_round.push(signs);
-        for &id in &participants {
+        for &id in &voters {
             let msg = Message::GlobalSign { sign: f };
             ledger.record(&msg);
             ps_links[id].to_client.send(msg).expect("client alive");
@@ -210,15 +254,17 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
             history.commit_round(t, [record]);
             history.compact_to(tracker.watermark());
         } else {
-            // immediate one-record push keeps non-participants current —
-            // the same 1-bit-per-client downlink the session broadcast
-            // meters, with the seed explicit instead of counter-implied
-            let mut is_participant = vec![false; k];
-            for &id in &participants {
-                is_participant[id] = true;
+            // immediate one-record push keeps everyone the PS did not
+            // hear from current (non-participants, deadline stragglers,
+            // dropped voters) — the same 1-bit-per-client downlink the
+            // session broadcast meters, seed explicit instead of
+            // counter-implied
+            let mut heard = vec![false; k];
+            for &id in &voters {
+                heard[id] = true;
             }
             for (id, link) in ps_links.iter().enumerate() {
-                if !is_participant[id] {
+                if !heard[id] {
                     let msg = Message::ReplayHistory { records: vec![record] };
                     ledger.record(&msg);
                     link.to_client.send(msg).expect("client alive");
@@ -250,7 +296,7 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
     for h in handles {
         finals.push(h.join().expect("client thread panicked"));
     }
-    DistResult { finals, ledger, votes_per_round }
+    DistResult { finals, ledger, votes_per_round, net: net.stats }
 }
 
 #[cfg(test)]
@@ -376,6 +422,7 @@ mod tests {
                 batch_size: 16,
                 participation: ParticipationCfg::Fraction(0.5),
                 catchup,
+                net: NetCfg::ideal(),
                 seed: 7,
             };
             let res = run_feedsign(dclients, train, dcfg);

@@ -11,6 +11,11 @@
 //!   commits in client-id order);
 //! * [`distributed`] — the threaded leader/worker topology (same protocol,
 //!   real message passing), pinned to the sync session by test.
+//!
+//! Both round engines consult the [`crate::net`] impaired-channel
+//! simulator: deadline stragglers are cut in the plan phase, uplink
+//! contributions cross the (possibly flipped/dropped) channel before
+//! aggregation, and absence feeds the participation/catch-up machinery.
 
 pub mod aggregation;
 pub mod byzantine;

@@ -8,18 +8,23 @@
 //!
 //! 1. **plan** — the participant set is drawn from a dedicated coordinator
 //!    RNG stream ([`ParticipationCfg`]), before any client compute runs;
-//!    when catch-up is on ([`CatchupCfg`]), stale participants then replay
-//!    their missed seed history *before* probing, so every vote is cast on
-//!    the current model;
+//!    with an active [`crate::net`] simulation the virtual event clock
+//!    then cuts deadline stragglers from the plan (they resync later via
+//!    catch-up); when catch-up is on ([`CatchupCfg`]), stale participants
+//!    replay their missed seed history *before* probing, so every vote is
+//!    cast on the current model;
 //! 2. **execute** — per-client probe work (batch draw → SPSA probe →
 //!    attack mutation) fans out over `std::thread::scope` workers, each
 //!    metering its uplink into a private sub-ledger;
 //! 3. **commit** — outcomes are committed **in client-id order** (votes,
-//!    sub-ledgers, orbit entries, seed-history records), the vote is
-//!    aggregated, and the global update is broadcast — to every client
-//!    when `catchup = "off"` (the paper's assumption), or to this round's
-//!    participants only when catch-up is on (everyone else recovers the
-//!    round from the [`crate::comm::SeedHistory`] on rejoin).
+//!    sub-ledgers, orbit entries, seed-history records); each uplink
+//!    contribution crosses the (possibly impaired) channel — flips
+//!    corrupt it, drops make the PS treat the sender as absent — then
+//!    the vote is aggregated and the global update is broadcast: to
+//!    every client when `catchup = "off"` (the paper's assumption), or
+//!    to the clients the PS heard from when catch-up is on (everyone
+//!    else recovers the round from the [`crate::comm::SeedHistory`] on
+//!    rejoin).
 //!
 //! A plan with **zero participants** (e.g. `fraction:0`) commits a no-op:
 //! no votes, no broadcast, a 0-sign orbit entry and an empty history
@@ -46,6 +51,7 @@ use crate::coordinator::participation::ParticipationCfg;
 use crate::data::{Batch, Dataset, Shard};
 use crate::engine::Engine;
 use crate::metrics::{RoundRecord, RunResult};
+use crate::net::{NetCfg, NetSim};
 use crate::orbit::Orbit;
 use crate::simkit::prng::{self, Rng};
 
@@ -112,6 +118,11 @@ pub struct SessionCfg {
     /// 1 = sequential baseline, N = exactly N workers.  Every setting
     /// produces the same bits; this only trades wall-clock.
     pub threads: usize,
+    /// impaired-channel simulation ([`crate::net`]): bit-flip / erasure
+    /// uplinks, per-client link profiles and a round deadline.  The
+    /// default ([`NetCfg::ideal`]) takes exactly the pre-`net` code
+    /// paths — pinned bit-identical by `rust/tests/net_parity.rs`.
+    pub net: NetCfg,
     pub seed: u32,
     /// print progress to stderr
     pub verbose: bool,
@@ -132,6 +143,7 @@ impl Default for SessionCfg {
             participation: ParticipationCfg::Full,
             catchup: CatchupCfg::Off,
             threads: 0,
+            net: NetCfg::ideal(),
             seed: 0,
             verbose: false,
         }
@@ -275,6 +287,10 @@ pub struct Session {
     pub history: SeedHistory,
     /// Per-client `last_synced_round` watermarks for catch-up.
     pub tracker: CatchupTracker,
+    /// Impaired-channel simulator (a no-op shell when
+    /// [`SessionCfg::net`] is the ideal default); `net.stats` holds the
+    /// run's impairment counters.
+    pub net: NetSim,
     dp_rng: Rng,
     eval_rng: Rng,
     part_rng: Rng,
@@ -297,6 +313,7 @@ impl Session {
         }
         let tracker = CatchupTracker::new(clients.len());
         let orbit = Orbit::new(cfg.algorithm.name(), cfg.seed, cfg.eta);
+        let net = NetSim::new(cfg.net.clone());
         let dp_rng = Rng::new(cfg.seed ^ 0xD9, 0xD9);
         let eval_rng = Rng::new(cfg.seed ^ 0xEE, 0xEE);
         let part_rng = Rng::new(cfg.seed ^ 0x9A, 0x9A);
@@ -309,6 +326,7 @@ impl Session {
             orbit,
             history: SeedHistory::default(),
             tracker,
+            net,
             dp_rng,
             eval_rng,
             part_rng,
@@ -354,13 +372,14 @@ impl Session {
             final_acc,
             rounds: self.cfg.rounds,
             wall_s: start.elapsed().as_secs_f64(),
+            net: self.net.stats.clone(),
         }
     }
 
     /// One aggregation round.
     pub fn step(&mut self, t: u64) {
         match self.cfg.algorithm {
-            Algorithm::FedSgd => self.step_fedsgd(),
+            Algorithm::FedSgd => self.step_fedsgd(t),
             Algorithm::Mezo => self.step_mezo(t),
             _ => {
                 let plan = self.plan_round(t);
@@ -386,11 +405,32 @@ impl Session {
         }
     }
 
-    /// Plan phase: fix the participant set before any client compute.
+    /// Plan phase: fix the participant set before any client compute —
+    /// the participation draw, then (with an active [`SessionCfg::net`])
+    /// the virtual-clock admission: stragglers whose link latency blows
+    /// the round deadline are excluded here, before they probe, and
+    /// resync later through the catch-up machinery.
     fn plan_round(&mut self, t: u64) -> RoundPlan {
-        let participants =
+        let mut participants =
             self.cfg.participation.sample(self.clients.len(), t, &mut self.part_rng);
+        if self.net.is_active() {
+            let (up, down) = self.round_payload_bits(participants.len());
+            participants = self.net.admit(t, participants, up, down);
+        }
         RoundPlan { round: t, participants }
+    }
+
+    /// Paper-accounting payload bits one participant moves in a round
+    /// (uplink, downlink) — what the virtual event clock charges to the
+    /// link.
+    fn round_payload_bits(&self, participants: usize) -> (u64, u64) {
+        let d = self.clients[0].engine.n_params() as u64;
+        match self.cfg.algorithm {
+            Algorithm::FeedSign | Algorithm::DpFeedSign { .. } => (1, 1),
+            Algorithm::ZoFedSgd => (64, 64 * participants.max(1) as u64),
+            Algorithm::FedSgd => (32 * d, 32 * d),
+            Algorithm::Mezo => (0, 0),
+        }
     }
 
     /// Replay (or dense-rebroadcast) the committed history to every client
@@ -514,18 +554,32 @@ impl Session {
             ledger.record(&Message::SignVote { sign });
             Contribution::Sign(sign)
         });
-        // commit: votes and sub-ledgers in client-id order
+        // commit: votes and sub-ledgers in client-id order; each vote
+        // then crosses the (possibly impaired) uplink — a flip lands in
+        // the vote, a drop makes the PS treat the voter as absent this
+        // round (the transmission is still billed: the bits were sent)
         let mut signs = Vec::with_capacity(outcomes.len());
+        let mut voters = Vec::with_capacity(outcomes.len());
         let mut subs = Vec::with_capacity(outcomes.len());
         for (o, &id) in outcomes.into_iter().zip(&plan.participants) {
             debug_assert_eq!(o.client, id, "commit order must be client-id order");
             let Contribution::Sign(s) = o.contribution else {
                 unreachable!("feedsign job yields sign votes");
             };
-            signs.push(s);
             subs.push(o.ledger);
+            if let Some(s) = self.net.deliver_sign(t, id, s) {
+                signs.push(s);
+                voters.push(id);
+            }
         }
         self.ledger.commit(subs);
+        if signs.is_empty() {
+            // every vote was lost in transit: the round aborts to a no-op
+            // commit, exactly like a zero-participant plan
+            self.orbit.push_sign(0);
+            self.commit_history(t, Vec::new());
+            return;
+        }
         let f = match dp_epsilon {
             None => aggregation::majority_sign(&signs),
             Some(eps) => aggregation::dp_vote(&signs, eps, &mut self.dp_rng),
@@ -533,10 +587,11 @@ impl Session {
         let step = f as f32 * self.cfg.eta;
         let msg = Message::GlobalSign { sign: f };
         if self.cfg.catchup.is_on() {
-            // only this round's participants hear the broadcast; everyone
-            // else recovers the round from the seed history on rejoin
+            // only the clients the PS heard from hear the broadcast;
+            // everyone else (sampled out, deadline-cut, or dropped on the
+            // uplink) recovers the round from the seed history on rejoin
             let _serial = pin_serial.then(prng::serial_zone);
-            for &id in &plan.participants {
+            for &id in &voters {
                 self.ledger.record(&msg);
                 let c = &mut self.clients[id];
                 c.engine.update(&mut c.w, seed, step);
@@ -586,23 +641,37 @@ impl Session {
             ledger.record(&Message::Projection { seed, p });
             Contribution::Pair { seed, p }
         });
+        // commit in client-id order; each 64-bit pair crosses the uplink
+        // (flipped seed bits pick a different-but-valid direction,
+        // flipped projection bits corrupt the coefficient, a drop makes
+        // the PS treat the client as absent — transmission still billed)
         let mut pairs = Vec::with_capacity(outcomes.len());
+        let mut voters = Vec::with_capacity(outcomes.len());
         let mut subs = Vec::with_capacity(outcomes.len());
         for (o, &id) in outcomes.into_iter().zip(&plan.participants) {
             debug_assert_eq!(o.client, id, "commit order must be client-id order");
             let Contribution::Pair { seed, p } = o.contribution else {
                 unreachable!("zo-fedsgd job yields seed-projection pairs");
             };
-            pairs.push((seed, p));
             subs.push(o.ledger);
+            if let Some((seed, p)) = self.net.deliver_pair(t, id, seed, p) {
+                pairs.push((seed, p));
+                voters.push(id);
+            }
         }
         self.ledger.commit(subs);
+        if pairs.is_empty() {
+            // every pair was lost in transit: no-op round
+            self.orbit.push_pairs(Vec::new());
+            self.commit_history(t, Vec::new());
+            return;
+        }
         let k = pairs.len();
         let eta = self.cfg.eta;
         let msg = Message::GlobalProjections { pairs: pairs.clone() };
         if self.cfg.catchup.is_on() {
             let _serial = pin_serial.then(prng::serial_zone);
-            for &id in &plan.participants {
+            for &id in &voters {
                 self.ledger.record(&msg);
                 let c = &mut self.clients[id];
                 for &(seed, p) in &pairs {
@@ -634,21 +703,41 @@ impl Session {
     }
 
     /// FedSGD first-order baseline: dense gradient exchange (always full
-    /// participation; partial regimes are a ZO-side study).
-    fn step_fedsgd(&mut self) {
+    /// participation; partial regimes are a ZO-side study).  Each 32·d-bit
+    /// gradient crosses the impaired uplink like every other message —
+    /// which is where the dense baseline pays for its payload: one
+    /// flipped exponent bit blows a gradient entry up by orders of
+    /// magnitude, the fragility the BER robustness bench measures.
+    fn step_fedsgd(&mut self, t: u64) {
         let bs = self.cfg.batch_size;
         let d = self.clients[0].engine.n_params();
+        // virtual clock: a dense round still costs wall-clock on every
+        // link (there is no plan phase here, so the deadline cut does not
+        // apply — the config layer rejects deadline+fedsgd)
+        if self.net.is_active() {
+            let (up, down) = self.round_payload_bits(self.clients.len());
+            let everyone: Vec<usize> = (0..self.clients.len()).collect();
+            let _ = self.net.admit(t, everyone, up, down);
+        }
         let mut acc = vec![0.0f32; d];
         let mut g = vec![0.0f32; d];
+        let mut delivered = 0usize;
         for c in &mut self.clients {
             let batch = c.shard.next_batch(&self.train, bs, &mut c.rng);
             c.engine.grad(&mut c.w, &batch, &mut g);
             c.attack.mutate_gradient(&mut g, &mut c.rng);
             self.ledger.record(&Message::Gradient { g: Vec::new() }); // meter below
             self.ledger.uplink_bits += 32 * d as u64;
-            aggregation::accumulate(&mut acc, &g);
+            if self.net.deliver_gradient(t, c.id, &mut g) {
+                aggregation::accumulate(&mut acc, &g);
+                delivered += 1;
+            }
         }
-        aggregation::finish_mean(&mut acc, self.clients.len());
+        if delivered == 0 {
+            // every gradient was lost in transit: no update, no broadcast
+            return;
+        }
+        aggregation::finish_mean(&mut acc, delivered);
         for c in &mut self.clients {
             self.ledger.record(&Message::GlobalGradient { g: Vec::new() });
             self.ledger.downlink_bits += 32 * d as u64;
@@ -958,6 +1047,85 @@ mod tests {
         }
         let (l1, _) = s.evaluate();
         assert!(l1 < l0, "FeedSign under 1/5 Byzantine should still learn");
+    }
+
+    #[test]
+    fn drop_channel_voters_feed_catchup_and_resync() {
+        use crate::net::{ChannelModel, NetCfg, NetSim};
+        let mut s = make_session(Algorithm::FeedSign, 5, 0);
+        s.cfg.catchup = CatchupCfg::Replay;
+        s.net = NetSim::new(NetCfg {
+            channel: ChannelModel::Erasure { p: 0.4 },
+            ..NetCfg::ideal()
+        });
+        for t in 0..200 {
+            s.step(t);
+        }
+        assert!(s.net.stats.dropped_msgs > 0, "erasure channel must drop votes");
+        // dropped voters were left stale; the end-of-run rejoin replays
+        // their missed spans and restores replica equality
+        s.catch_up_all();
+        assert!(s.replicas_synchronized());
+    }
+
+    #[test]
+    fn deadline_cuts_iot_stragglers_from_the_plan() {
+        use crate::net::{LinkAssignment, NetCfg, NetSim};
+        let mut s = make_session(Algorithm::FeedSign, 6, 0);
+        s.net = NetSim::new(NetCfg {
+            links: LinkAssignment::parse("mixed").unwrap(),
+            deadline_s: 0.1,
+            ..NetCfg::ideal()
+        });
+        for t in 0..20 {
+            s.step(t);
+        }
+        // mixed cycle: ids 2 and 5 ride the iot profile (0.4 s RTT, over
+        // the 0.1 s deadline every round) — cut at plan time, every round
+        assert_eq!(s.net.stats.stragglers, 2 * 20);
+        assert_eq!(s.ledger.uplink_bits, 20 * 4, "only on-time clients vote");
+        // catch-up off: the broadcast still reaches everyone, so replicas
+        // stay synchronized even though stragglers never probe
+        assert_eq!(s.ledger.downlink_bits, 20 * 6);
+        assert!(s.replicas_synchronized());
+        assert!(s.net.stats.virtual_s > 0.0);
+    }
+
+    #[test]
+    fn ber_corrupts_zo_pairs_but_replicas_stay_synchronized() {
+        use crate::net::{ChannelModel, NetCfg, NetSim};
+        let mut s = make_session(Algorithm::ZoFedSgd, 4, 0);
+        s.net = NetSim::new(NetCfg {
+            channel: ChannelModel::BitFlip { ber: 0.02 },
+            ..NetCfg::ideal()
+        });
+        for t in 0..50 {
+            s.step(t);
+        }
+        assert!(s.net.stats.flipped_bits > 0, "2% BER over 64-bit pairs must flip");
+        // everyone applies the same delivered (possibly corrupted) pairs;
+        // compare replicas as bit patterns — corruption can drive weights
+        // non-finite, where f32 equality would lie
+        let w0: Vec<u32> = s.clients[0].w.iter().map(|v| v.to_bits()).collect();
+        for c in &s.clients[1..] {
+            let wi: Vec<u32> = c.w.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wi, w0, "client {} diverged", c.id);
+        }
+    }
+
+    #[test]
+    fn fedsgd_drop_channel_averages_only_delivered_gradients() {
+        use crate::net::{ChannelModel, NetCfg, NetSim};
+        let mut s = make_session(Algorithm::FedSgd, 3, 0);
+        s.net = NetSim::new(NetCfg {
+            channel: ChannelModel::Erasure { p: 0.5 },
+            ..NetCfg::ideal()
+        });
+        for t in 0..10 {
+            s.step(t);
+        }
+        assert!(s.net.stats.dropped_msgs > 0);
+        assert!(s.replicas_synchronized(), "the averaged broadcast reaches everyone");
     }
 
     #[test]

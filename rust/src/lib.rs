@@ -38,6 +38,14 @@
 //! `catchup = "replay" | "rebroadcast" | "off"` knob) — bit-identically
 //! to an always-on client, as pinned by `rust/tests/catchup_parity.rs`.
 //!
+//! The protocol's robustness story has an executable surface in [`net`]:
+//! a deterministic impaired-channel simulator (bit-flip / erasure
+//! channels, heterogeneous per-client link profiles, a virtual event
+//! clock and a round deadline) sits between the coordinator and the
+//! clients, keyed off the same Philox substrate so every impairment
+//! trace is reproducible — and `--channel ideal` stays bit-identical to
+//! a run without it (`rust/tests/net_parity.rs`).
+//!
 //! Entry points: [`coordinator::session::Session`] for programmatic use,
 //! the `feedsign` binary for the CLI, `examples/` for runnable scenarios
 //! and `benches/` for the per-table/figure reproduction harnesses.  The
@@ -51,6 +59,7 @@ pub mod data;
 pub mod dp;
 pub mod engine;
 pub mod metrics;
+pub mod net;
 pub mod orbit;
 pub mod runtime;
 pub mod simkit;

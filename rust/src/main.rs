@@ -29,8 +29,11 @@ COMMANDS:
   run          --config exp.toml [--csv curve.csv] [--orbit run.orbit]
                [--threads N] [--participation full|fraction:F|bernoulli:P]
                [--catchup off|replay|rebroadcast]
+               [--channel ideal|ber:P|drop:P] [--link mobile|wifi|iot|mixed]
+               [--deadline T] [--channel-seed S]
   quickstart   [--rounds 2000] [--threads N] [--participation SPEC]
-               [--catchup SPEC]
+               [--catchup SPEC] [--channel SPEC] [--link SPEC]
+               [--deadline T] [--channel-seed S]
   init-config
   theory       [--eta 1e-3] [--p-max 0.1]
   replay       --input run.orbit --n-params D
@@ -66,7 +69,8 @@ fn main() -> Result<()> {
 }
 
 /// Apply the round-engine CLI overrides (`--threads`, `--participation`,
-/// `--catchup`) on top of a loaded config, re-validating afterwards.
+/// `--catchup`, `--channel`, `--link`, `--deadline`, `--channel-seed`)
+/// on top of a loaded config, re-validating afterwards.
 fn apply_engine_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     if let Some(t) = args.str("threads") {
         cfg.threads = t.parse().context("parsing --threads")?;
@@ -76,6 +80,18 @@ fn apply_engine_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()>
     }
     if let Some(c) = args.str("catchup") {
         cfg.catchup = c.to_string();
+    }
+    if let Some(c) = args.str("channel") {
+        cfg.channel = c.to_string();
+    }
+    if let Some(l) = args.str("link") {
+        cfg.link = l.to_string();
+    }
+    if let Some(d) = args.str("deadline") {
+        cfg.deadline = d.parse().context("parsing --deadline")?;
+    }
+    if let Some(s) = args.str("channel-seed") {
+        cfg.channel_seed = s.parse().context("parsing --channel-seed")?;
     }
     cfg.validate()
 }
@@ -214,6 +230,17 @@ fn print_result(result: &metrics::RunResult) {
         result.ledger.downlink_bits,
         result.ledger.uplink_msgs + result.ledger.downlink_msgs
     );
+    if result.net != feedsign::net::NetStats::default() {
+        println!(
+            "channel: {} dropped, {} corrupted ({} bits flipped), \
+             {} straggler exclusions, {:.1}s virtual wall-clock",
+            result.net.dropped_msgs,
+            result.net.corrupted_msgs,
+            result.net.flipped_bits,
+            result.net.stragglers,
+            result.net.virtual_s
+        );
+    }
     let algo = Algorithm::parse(&result.algorithm);
     if matches!(algo, Some(Algorithm::FeedSign | Algorithm::DpFeedSign { .. })) {
         let lm = feedsign::comm::LinkModel::mobile();

@@ -23,6 +23,9 @@ pub struct RunResult {
     pub final_acc: f32,
     pub rounds: u64,
     pub wall_s: f64,
+    /// Impaired-channel counters ([`crate::net`]); all zero on a run
+    /// without an active simulation.
+    pub net: crate::net::NetStats,
 }
 
 impl RunResult {
@@ -121,6 +124,7 @@ mod tests {
             final_acc: accs.last().copied().unwrap_or(0.0),
             rounds: accs.len() as u64,
             wall_s: 0.0,
+            net: Default::default(),
         }
     }
 

@@ -1,0 +1,818 @@
+//! Deterministic impaired-channel simulator — the executable counterpart
+//! of the analytic [`crate::comm::LinkModel`].
+//!
+//! The paper's headline is not just "1 bit per step" but that the 1-bit
+//! design is *robust*: a corrupted sign is bounded-impact by the same
+//! argument that bounds a Byzantine client (§ Byzantine robustness),
+//! which is exactly the property you want over unreliable links — the
+//! regime of the wireless ZO-FL follow-ups.  This module makes that
+//! claim executable: it sits between the coordinator and the clients and
+//! impairs [`crate::comm::Message`]s **semantically** —
+//!
+//! * a flipped [`Message::SignVote`] becomes the opposite sign;
+//! * a flipped bit in a [`Message::Projection`] / [`Message::Gradient`]
+//!   corrupts that field (seed bits pick a different-but-valid Philox
+//!   direction; f32 bits can blow a projection or gradient entry up by
+//!   orders of magnitude — the fragility the dense baselines pay);
+//! * a dropped uplink makes the PS treat the client as **absent** that
+//!   round, feeding the existing participation / catch-up machinery;
+//! * heterogeneous per-client [`LinkProfile`]s plus a virtual event
+//!   clock turn ledger bits into per-round wall-clock, and a round
+//!   `deadline` excludes stragglers at plan time — they resync later
+//!   via [`crate::coordinator::catchup`].
+//!
+//! ## Determinism contract
+//!
+//! Every impairment draw comes from the crate's Philox PRNG keyed by
+//! `(channel_seed, round, client, direction)` — a *fresh* stream per
+//! message, never shared state — so the impairment trace is a pure
+//! function of the key: identical across worker-thread counts, across
+//! the synchronous session and the threaded distributed topology, and
+//! across reruns.  The `ideal` channel takes the exact code paths of a
+//! run without the simulator (zero draws), pinned bit-identical by
+//! `rust/tests/net_parity.rs`.
+//!
+//! Scope note: the coordinator applies channel impairment to the
+//! **uplink** (client → PS), where the protocol's 1-bit votes travel
+//! uncoded.  The PS → client broadcast and the catch-up bulk transfers
+//! are modeled reliable-in-round (a deployment protects them with ARQ /
+//! repetition — they are the cheap direction), while *missing* the
+//! downlink is expressed through absence: drops and deadline stragglers
+//! leave a client stale, and the seed history brings it back.
+//!
+//! [`Message::SignVote`]: crate::comm::Message::SignVote
+//! [`Message::Projection`]: crate::comm::Message::Projection
+//! [`Message::Gradient`]: crate::comm::Message::Gradient
+
+use crate::comm::Message;
+use crate::simkit::prng::{self, Rng};
+
+/// Impairment draw keying: which way the message travels.
+pub const DIR_UP: u32 = 0;
+/// Downlink direction key (used by [`NetSim::deliver`] for PS → client
+/// messages; the coordinator wiring keeps the downlink reliable).
+pub const DIR_DOWN: u32 = 1;
+/// Latency/jitter draw key (one draw per `(round, client)`).
+pub const DIR_LATENCY: u32 = 2;
+
+/// Participant count above which the per-link latency draw loop fans out
+/// over scoped workers (the fourth user of [`prng::scoped_spawn`]); below
+/// it the serial loop always wins.
+pub const PAR_MIN_LINKS: usize = 64;
+
+/// How the channel treats payload bits in flight.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChannelModel {
+    /// Every bit arrives as sent — pinned bit-identical to a run without
+    /// the simulator.
+    Ideal,
+    /// Binary-symmetric channel: each payload bit flips independently
+    /// with probability `ber`.
+    BitFlip { ber: f64 },
+    /// Erasure channel: the whole message is lost with probability `p`.
+    Erasure { p: f64 },
+}
+
+impl ChannelModel {
+    /// Parse a config/CLI spec: `ideal`, `ber:1e-3`, `drop:0.05`.
+    pub fn parse(s: &str) -> Option<ChannelModel> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "ideal" {
+            return Some(ChannelModel::Ideal);
+        }
+        if let Some(v) = s.strip_prefix("ber:") {
+            let ber: f64 = v.parse().ok()?;
+            if (0.0..=1.0).contains(&ber) {
+                return Some(ChannelModel::BitFlip { ber });
+            }
+            return None;
+        }
+        if let Some(v) = s.strip_prefix("drop:") {
+            let p: f64 = v.parse().ok()?;
+            if (0.0..=1.0).contains(&p) {
+                return Some(ChannelModel::Erasure { p });
+            }
+            return None;
+        }
+        None
+    }
+
+    /// Render back to the config-string form [`ChannelModel::parse`]
+    /// accepts.
+    pub fn render(&self) -> String {
+        match self {
+            ChannelModel::Ideal => "ideal".to_string(),
+            ChannelModel::BitFlip { ber } => format!("ber:{ber}"),
+            ChannelModel::Erasure { p } => format!("drop:{p}"),
+        }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        matches!(self, ChannelModel::Ideal)
+    }
+}
+
+/// One client's physical link: bandwidth, fixed latency and jitter —
+/// the per-client generalization of the single global
+/// [`crate::comm::LinkModel`] the analytic projections use.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkProfile {
+    /// uplink bandwidth, bits/s
+    pub up_bps: f64,
+    /// downlink bandwidth, bits/s
+    pub down_bps: f64,
+    /// fixed per-round latency, seconds
+    pub rtt_s: f64,
+    /// extra uniform per-round delay in `[0, jitter_s)`
+    pub jitter_s: f64,
+}
+
+impl LinkProfile {
+    /// A conservative mobile uplink: 20 Mbps up / 100 Mbps down / 30 ms
+    /// RTT (the [`crate::comm::LinkModel::mobile`] numbers, plus jitter).
+    pub fn mobile() -> Self {
+        LinkProfile { up_bps: 20e6, down_bps: 100e6, rtt_s: 0.03, jitter_s: 0.02 }
+    }
+
+    /// A wired/WLAN client: fast and tight.
+    pub fn wifi() -> Self {
+        LinkProfile { up_bps: 100e6, down_bps: 400e6, rtt_s: 0.005, jitter_s: 0.005 }
+    }
+
+    /// A LoRa-class constrained device: slow, high-latency, jittery —
+    /// the straggler archetype a round deadline cuts.
+    pub fn iot() -> Self {
+        LinkProfile { up_bps: 50e3, down_bps: 250e3, rtt_s: 0.4, jitter_s: 0.6 }
+    }
+
+    /// Seconds one round costs this link for the given payload, with the
+    /// jitter draw already resolved.
+    pub fn round_seconds(&self, up_bits: u64, down_bits: u64, jitter_s: f64) -> f64 {
+        self.rtt_s
+            + jitter_s
+            + up_bits as f64 / self.up_bps
+            + down_bits as f64 / self.down_bps
+    }
+}
+
+/// How link profiles map onto the client pool.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LinkAssignment {
+    /// Every client shares one profile (the pre-`net` assumption).
+    Uniform(LinkProfile),
+    /// Client `id` gets `profiles[id % len]` — a deterministic
+    /// heterogeneous pool.
+    Cycle(Vec<LinkProfile>),
+}
+
+impl LinkAssignment {
+    /// Parse a config/CLI spec: `mobile`, `wifi`, `iot`, or `mixed`
+    /// (a wifi/mobile/iot cycle).
+    pub fn parse(s: &str) -> Option<LinkAssignment> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "mobile" => Some(LinkAssignment::Uniform(LinkProfile::mobile())),
+            "wifi" => Some(LinkAssignment::Uniform(LinkProfile::wifi())),
+            "iot" => Some(LinkAssignment::Uniform(LinkProfile::iot())),
+            "mixed" => Some(LinkAssignment::Cycle(vec![
+                LinkProfile::wifi(),
+                LinkProfile::mobile(),
+                LinkProfile::iot(),
+            ])),
+            _ => None,
+        }
+    }
+
+    /// The profile client `id` is attached to.
+    pub fn profile(&self, id: usize) -> LinkProfile {
+        match self {
+            LinkAssignment::Uniform(p) => *p,
+            LinkAssignment::Cycle(ps) => ps[id % ps.len()],
+        }
+    }
+
+    /// Whether this is the pre-`net` assumption — one global mobile link
+    /// (the analytic [`crate::comm::LinkModel::mobile`] numbers).
+    /// Anything else asks for per-client link simulation and activates
+    /// the virtual event clock.
+    pub fn is_default(&self) -> bool {
+        matches!(self, LinkAssignment::Uniform(p) if *p == LinkProfile::mobile())
+    }
+}
+
+/// Full network-simulation configuration, threaded through
+/// `SessionCfg` / the experiment TOML / the CLI (`--channel`, `--link`,
+/// `--deadline`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetCfg {
+    pub channel: ChannelModel,
+    pub links: LinkAssignment,
+    /// Round deadline in virtual seconds; a planned participant whose
+    /// round latency exceeds it is excluded before any compute runs
+    /// (`0` disables the cut).
+    pub deadline_s: f64,
+    /// Seed of the impairment draw streams (keyed with
+    /// `(round, client, direction)`).
+    pub channel_seed: u32,
+}
+
+impl NetCfg {
+    /// The do-nothing configuration: ideal channel, no deadline.
+    pub fn ideal() -> Self {
+        NetCfg {
+            channel: ChannelModel::Ideal,
+            links: LinkAssignment::Uniform(LinkProfile::mobile()),
+            deadline_s: 0.0,
+            channel_seed: 0,
+        }
+    }
+
+    /// Whether the simulator engages at all.  When false, the session
+    /// takes exactly the pre-`net` code paths (zero draws, zero stats).
+    /// A non-default link assignment engages the virtual clock even over
+    /// an ideal channel — asking for `--link mixed` must never be
+    /// silently ignored — but an ideal channel still delivers every
+    /// message untouched, so replicas and ledgers stay bit-identical to
+    /// the no-`net` baseline (only the clock stats tick).
+    pub fn is_active(&self) -> bool {
+        !self.channel.is_ideal() || self.deadline_s > 0.0 || !self.links.is_default()
+    }
+}
+
+impl Default for NetCfg {
+    fn default() -> Self {
+        NetCfg::ideal()
+    }
+}
+
+/// Per-run impairment counters — the observable summary of the
+/// impairment trace (identical across worker-thread counts and
+/// topologies for the same `(channel_seed, cfg)`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NetStats {
+    /// rounds the virtual clock observed
+    pub rounds: u64,
+    /// virtual wall-clock elapsed over those rounds, seconds
+    pub virtual_s: f64,
+    /// planned participants excluded by the round deadline
+    pub stragglers: u64,
+    /// uplink messages lost to the erasure channel
+    pub dropped_msgs: u64,
+    /// uplink messages delivered with at least one flipped bit
+    pub corrupted_msgs: u64,
+    /// total payload bits flipped in delivered messages
+    pub flipped_bits: u64,
+}
+
+/// The simulator: configuration + accumulated stats.  One lives in the
+/// synchronous [`crate::coordinator::session::Session`] and one on the
+/// PS side of the threaded [`crate::coordinator::distributed`] topology;
+/// because draws are keyed, both observe the same trace.
+pub struct NetSim {
+    pub cfg: NetCfg,
+    pub stats: NetStats,
+}
+
+/// Positions of Bernoulli(`ber`) successes over `n_bits` trials, via
+/// geometric inter-arrival sampling — O(flips) draws, not O(bits), so a
+/// dense-gradient payload at a low BER stays cheap.
+fn flipped_bit_positions(n_bits: u64, ber: f64, rng: &mut Rng) -> Vec<u64> {
+    let mut out = Vec::new();
+    if ber <= 0.0 || n_bits == 0 {
+        return out;
+    }
+    if ber >= 1.0 {
+        return (0..n_bits).collect();
+    }
+    let ln_q = (1.0 - ber).ln();
+    let mut pos = 0u64;
+    loop {
+        // uniform() is in (0, 1]: ln(u) <= 0 and ln_q < 0, so the skip is
+        // a non-negative geometric draw
+        let skip = ((rng.uniform() as f64).ln() / ln_q) as u64;
+        pos = pos.saturating_add(skip);
+        if pos >= n_bits {
+            return out;
+        }
+        out.push(pos);
+        pos += 1;
+    }
+}
+
+/// XOR a flip mask over a 32-bit field given positions within it.
+fn flip_u32(x: u32, flips: &[u64], base: u64) -> u32 {
+    let mut out = x;
+    for &b in flips {
+        if (base..base + 32).contains(&b) {
+            out ^= 1u32 << (b - base) as u32;
+        }
+    }
+    out
+}
+
+/// Apply flip positions to an f32 array (bit `b` lands in element
+/// `b / 32`).
+fn flip_f32s(g: &mut [f32], flips: &[u64]) {
+    for &b in flips {
+        let (i, bit) = ((b / 32) as usize, (b % 32) as u32);
+        g[i] = f32::from_bits(g[i].to_bits() ^ (1u32 << bit));
+    }
+}
+
+/// Corrupt one 64-bit seed-projection pair at bit offset `base` of the
+/// flip mask: seed bits first, then the f32 coefficient, with the seed's
+/// reserved MSB masked back into the 31-bit direction space.
+fn corrupt_pair(seed: u32, p: f32, flips: &[u64], base: u64) -> (u32, f32) {
+    let seed = flip_u32(seed, flips, base) & 0x7FFF_FFFF;
+    let p = f32::from_bits(flip_u32(p.to_bits(), flips, base + 32));
+    (seed, p)
+}
+
+impl NetSim {
+    pub fn new(cfg: NetCfg) -> Self {
+        NetSim { cfg, stats: NetStats::default() }
+    }
+
+    /// See [`NetCfg::is_active`].
+    pub fn is_active(&self) -> bool {
+        self.cfg.is_active()
+    }
+
+    /// The fresh draw stream for one `(round, client, direction)` key —
+    /// avalanched so nearby keys land in unrelated Philox streams.
+    fn draw_stream(&self, round: u64, client: usize, dir: u32) -> Rng {
+        let mut h = (round as u32).wrapping_mul(0x9E37_79B9);
+        h ^= (client as u32).wrapping_mul(0x85EB_CA6B).rotate_left(13);
+        h ^= dir.wrapping_mul(0xC2B2_AE35).rotate_left(27);
+        Rng::new(self.cfg.channel_seed ^ h, h ^ 0x0C0F_FEE0)
+    }
+
+    /// One `n_bits`-payload message crossing the channel: `None` = lost
+    /// to erasure, `Some(flips)` = delivered with the given payload-bit
+    /// positions flipped (empty on a clean arrival).
+    fn transmit(&mut self, round: u64, client: usize, dir: u32, n_bits: u64) -> Option<Vec<u64>> {
+        match self.cfg.channel {
+            ChannelModel::Ideal => Some(Vec::new()),
+            ChannelModel::Erasure { p } => {
+                // p >= 1 drops deterministically: uniform() can land on
+                // exactly 1.0, which would otherwise leak ~1-in-2^24
+                // deliveries through a `drop:1` channel
+                let lost =
+                    p >= 1.0 || (self.draw_stream(round, client, dir).uniform() as f64) < p;
+                if lost {
+                    self.stats.dropped_msgs += 1;
+                    None
+                } else {
+                    Some(Vec::new())
+                }
+            }
+            ChannelModel::BitFlip { ber } => {
+                let mut rng = self.draw_stream(round, client, dir);
+                let flips = flipped_bit_positions(n_bits, ber, &mut rng);
+                if !flips.is_empty() {
+                    self.stats.corrupted_msgs += 1;
+                    self.stats.flipped_bits += flips.len() as u64;
+                }
+                Some(flips)
+            }
+        }
+    }
+
+    /// Dir-parametric core of [`NetSim::deliver_sign`]: a flip is the
+    /// opposite sign.
+    fn sign_through(&mut self, round: u64, client: usize, dir: u32, sign: i8) -> Option<i8> {
+        if self.cfg.channel.is_ideal() {
+            return Some(sign);
+        }
+        let flips = self.transmit(round, client, dir, 1)?;
+        Some(if flips.is_empty() { sign } else { -sign })
+    }
+
+    /// Dir-parametric core of [`NetSim::deliver_pair`].  Flipped seed
+    /// bits select a different-but-valid Philox direction (the seed space
+    /// is the 31-bit counter region, so the reserved MSB is masked on
+    /// receive); flipped projection bits corrupt the f32 coefficient.
+    fn pair_through(
+        &mut self,
+        round: u64,
+        client: usize,
+        dir: u32,
+        seed: u32,
+        p: f32,
+    ) -> Option<(u32, f32)> {
+        if self.cfg.channel.is_ideal() {
+            return Some((seed, p));
+        }
+        let flips = self.transmit(round, client, dir, 64)?;
+        Some(corrupt_pair(seed, p, &flips, 0))
+    }
+
+    /// Dir-parametric core of [`NetSim::deliver_gradient`], corrupting
+    /// `g` in place; `false` = the whole message was lost.
+    fn f32s_through(&mut self, round: u64, client: usize, dir: u32, g: &mut [f32]) -> bool {
+        if self.cfg.channel.is_ideal() {
+            return true;
+        }
+        match self.transmit(round, client, dir, 32 * g.len() as u64) {
+            None => false,
+            Some(flips) => {
+                flip_f32s(g, &flips);
+                true
+            }
+        }
+    }
+
+    /// A 1-bit sign vote crossing the uplink: `None` = the PS treats the
+    /// voter as absent this round; a flip is the opposite sign.
+    pub fn deliver_sign(&mut self, round: u64, client: usize, sign: i8) -> Option<i8> {
+        self.sign_through(round, client, DIR_UP, sign)
+    }
+
+    /// A 64-bit seed-projection pair crossing the uplink (see
+    /// [`NetSim::pair_through`] for the corruption semantics).
+    pub fn deliver_pair(
+        &mut self,
+        round: u64,
+        client: usize,
+        seed: u32,
+        p: f32,
+    ) -> Option<(u32, f32)> {
+        self.pair_through(round, client, DIR_UP, seed, p)
+    }
+
+    /// A dense `32·d`-bit gradient crossing the uplink, corrupted in
+    /// place; `false` = the whole message was lost.
+    pub fn deliver_gradient(&mut self, round: u64, client: usize, g: &mut [f32]) -> bool {
+        self.f32s_through(round, client, DIR_UP, g)
+    }
+
+    /// Generic semantic impairment of a protocol message (`dir` keys the
+    /// draw stream): `None` = lost.  Delegates to the same cores the
+    /// coordinator's typed paths use, so the two APIs cannot drift.
+    /// Zero-payload and bulk-transfer messages (`RoundStart`,
+    /// `ReplayHistory`, `Rebroadcast`) pass through unimpaired — they
+    /// model ARQ-protected control/bulk traffic.
+    pub fn deliver(
+        &mut self,
+        round: u64,
+        client: usize,
+        dir: u32,
+        msg: Message,
+    ) -> Option<Message> {
+        match msg {
+            Message::SignVote { sign } => {
+                let sign = self.sign_through(round, client, dir, sign)?;
+                Some(Message::SignVote { sign })
+            }
+            Message::GlobalSign { sign } => {
+                let sign = self.sign_through(round, client, dir, sign)?;
+                Some(Message::GlobalSign { sign })
+            }
+            Message::Projection { seed, p } => {
+                let (seed, p) = self.pair_through(round, client, dir, seed, p)?;
+                Some(Message::Projection { seed, p })
+            }
+            Message::Gradient { mut g } => {
+                self.f32s_through(round, client, dir, &mut g).then_some(Message::Gradient { g })
+            }
+            Message::GlobalGradient { mut g } => {
+                self.f32s_through(round, client, dir, &mut g)
+                    .then_some(Message::GlobalGradient { g })
+            }
+            Message::GlobalProjections { pairs } => {
+                if self.cfg.channel.is_ideal() {
+                    return Some(Message::GlobalProjections { pairs });
+                }
+                let flips = self.transmit(round, client, dir, 64 * pairs.len() as u64)?;
+                let pairs = pairs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(seed, p))| corrupt_pair(seed, p, &flips, 64 * i as u64))
+                    .collect();
+                Some(Message::GlobalProjections { pairs })
+            }
+            passthrough => Some(passthrough),
+        }
+    }
+
+    /// Round latency for one client at the given payload (jitter draw
+    /// resolved from the `(round, client)` latency stream).
+    pub fn link_latency(&self, round: u64, client: usize, up_bits: u64, down_bits: u64) -> f64 {
+        let prof = self.cfg.links.profile(client);
+        let jitter = if prof.jitter_s > 0.0 {
+            let mut rng = self.draw_stream(round, client, DIR_LATENCY);
+            rng.uniform() as f64 * prof.jitter_s
+        } else {
+            0.0
+        };
+        prof.round_seconds(up_bits, down_bits, jitter)
+    }
+
+    /// Per-link latency draws for a participant set — independent pure
+    /// functions of `(channel_seed, round, client)`, so the loop
+    /// chunk-parallelizes over [`prng::scoped_spawn`] for large pools
+    /// (the fourth chunked-spawn user the ROADMAP anticipated) and stays
+    /// bit-identical to the serial walk.
+    fn fill_latencies(
+        &self,
+        round: u64,
+        ids: &[usize],
+        up_bits: u64,
+        down_bits: u64,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(ids.len(), out.len());
+        let threads = if ids.len() < PAR_MIN_LINKS { 1 } else { prng::worker_threads() };
+        if threads <= 1 {
+            for (o, &id) in out.iter_mut().zip(ids) {
+                *o = self.link_latency(round, id, up_bits, down_bits);
+            }
+            return;
+        }
+        let chunk = ids.len().div_ceil(threads);
+        prng::scoped_spawn(out.chunks_mut(chunk).zip(ids.chunks(chunk)), |_, (oc, idc)| {
+            for (o, &id) in oc.iter_mut().zip(idc) {
+                *o = self.link_latency(round, id, up_bits, down_bits);
+            }
+        });
+    }
+
+    /// Plan-phase admission: advance the virtual clock and apply the
+    /// round deadline.  Returns the on-time participants (id order
+    /// preserved); excluded stragglers never probe this round and resync
+    /// later through the catch-up machinery.  The round's virtual
+    /// duration is the slowest admitted client's latency — or the full
+    /// deadline when the PS had to wait it out to conclude a straggler
+    /// missed the cut.
+    pub fn admit(
+        &mut self,
+        round: u64,
+        participants: Vec<usize>,
+        up_bits: u64,
+        down_bits: u64,
+    ) -> Vec<usize> {
+        self.stats.rounds += 1;
+        if participants.is_empty() {
+            return participants;
+        }
+        let mut latencies = vec![0.0f64; participants.len()];
+        self.fill_latencies(round, &participants, up_bits, down_bits, &mut latencies);
+        let deadline = self.cfg.deadline_s;
+        let mut kept = Vec::with_capacity(participants.len());
+        let mut round_s = 0.0f64;
+        let mut cut = false;
+        for (&id, &lat) in participants.iter().zip(&latencies) {
+            if deadline > 0.0 && lat > deadline {
+                cut = true;
+                self.stats.stragglers += 1;
+            } else {
+                round_s = round_s.max(lat);
+                kept.push(id);
+            }
+        }
+        if cut {
+            round_s = deadline;
+        }
+        self.stats.virtual_s += round_s;
+        kept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(channel: &str, deadline_s: f64) -> NetSim {
+        NetSim::new(NetCfg {
+            channel: ChannelModel::parse(channel).unwrap(),
+            links: LinkAssignment::parse("mixed").unwrap(),
+            deadline_s,
+            channel_seed: 42,
+        })
+    }
+
+    #[test]
+    fn channel_spec_parse_render_roundtrip() {
+        for s in ["ideal", "ber:0.001", "drop:0.05", "ber:0", "drop:1"] {
+            let c = ChannelModel::parse(s).unwrap();
+            assert_eq!(ChannelModel::parse(&c.render()), Some(c), "{s}");
+        }
+        assert_eq!(ChannelModel::parse("ber:1e-3"), Some(ChannelModel::BitFlip { ber: 1e-3 }));
+        assert_eq!(ChannelModel::parse("IDEAL"), Some(ChannelModel::Ideal));
+        assert!(ChannelModel::parse("ber:1.5").is_none());
+        assert!(ChannelModel::parse("drop:-0.1").is_none());
+        assert!(ChannelModel::parse("lossy").is_none());
+    }
+
+    #[test]
+    fn link_spec_parses_and_cycles() {
+        for s in ["mobile", "wifi", "iot", "mixed"] {
+            assert!(LinkAssignment::parse(s).is_some(), "{s}");
+        }
+        assert!(LinkAssignment::parse("carrier-pigeon").is_none());
+        let mixed = LinkAssignment::parse("mixed").unwrap();
+        assert_eq!(mixed.profile(0), LinkProfile::wifi());
+        assert_eq!(mixed.profile(1), LinkProfile::mobile());
+        assert_eq!(mixed.profile(2), LinkProfile::iot());
+        assert_eq!(mixed.profile(3), LinkProfile::wifi(), "cycles by id");
+        let uni = LinkAssignment::parse("mobile").unwrap();
+        assert_eq!(uni.profile(7), LinkProfile::mobile());
+    }
+
+    #[test]
+    fn ideal_cfg_is_inactive_and_draw_free() {
+        let cfg = NetCfg::ideal();
+        assert!(!cfg.is_active());
+        let mut sim = NetSim::new(cfg);
+        assert_eq!(sim.deliver_sign(3, 1, -1), Some(-1));
+        assert_eq!(sim.deliver_pair(3, 1, 7, 0.5), Some((7, 0.5)));
+        let mut g = vec![1.0f32, -2.0];
+        assert!(sim.deliver_gradient(3, 1, &mut g));
+        assert_eq!(g, vec![1.0, -2.0]);
+        assert_eq!(sim.stats, NetStats::default());
+    }
+
+    #[test]
+    fn deadline_alone_activates_the_simulator() {
+        let mut cfg = NetCfg::ideal();
+        cfg.deadline_s = 0.5;
+        assert!(cfg.is_active());
+    }
+
+    #[test]
+    fn non_default_link_alone_activates_the_clock() {
+        // asking for --link wifi/mixed must never be silently ignored:
+        // the virtual clock engages even over an ideal channel
+        let mut cfg = NetCfg::ideal();
+        cfg.links = LinkAssignment::parse("mixed").unwrap();
+        assert!(cfg.is_active());
+        cfg.links = LinkAssignment::Uniform(LinkProfile::mobile());
+        assert!(!cfg.is_active(), "the default mobile link is the pre-net assumption");
+        assert!(LinkAssignment::parse("mobile").unwrap().is_default());
+        assert!(!LinkAssignment::parse("iot").unwrap().is_default());
+    }
+
+    #[test]
+    fn sign_flip_is_the_opposite_sign() {
+        // at ber = 1 every bit flips: the vote always inverts but is
+        // never lost
+        let mut s = sim("ber:1", 0.0);
+        for round in 0..8u64 {
+            assert_eq!(s.deliver_sign(round, 0, 1), Some(-1));
+            assert_eq!(s.deliver_sign(round, 1, -1), Some(1));
+        }
+        assert_eq!(s.stats.flipped_bits, 16);
+        assert_eq!(s.stats.corrupted_msgs, 16);
+        assert_eq!(s.stats.dropped_msgs, 0);
+    }
+
+    #[test]
+    fn drop_one_loses_every_message() {
+        let mut s = sim("drop:1", 0.0);
+        for round in 0..64u64 {
+            assert!(s.deliver_sign(round, 0, 1).is_none(), "round {round} leaked through");
+        }
+        assert_eq!(s.stats.dropped_msgs, 64);
+    }
+
+    #[test]
+    fn erasure_drops_at_the_configured_rate() {
+        let mut s = sim("drop:0.3", 0.0);
+        let n = 4000u64;
+        let mut lost = 0u64;
+        for round in 0..n {
+            if s.deliver_sign(round, 0, 1).is_none() {
+                lost += 1;
+            }
+        }
+        let rate = lost as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.03, "drop rate {rate}");
+        assert_eq!(s.stats.dropped_msgs, lost);
+        assert_eq!(s.stats.flipped_bits, 0, "erasure never corrupts");
+    }
+
+    #[test]
+    fn bit_flips_land_at_the_configured_rate() {
+        let mut s = sim("ber:0.01", 0.0);
+        let mut g = vec![0.0f32; 1000]; // 32_000 bits per message
+        let mut total = 0u64;
+        for round in 0..50u64 {
+            g.fill(0.0);
+            assert!(s.deliver_gradient(round, 2, &mut g));
+            total += g.iter().map(|v| v.to_bits().count_ones() as u64).sum::<u64>();
+        }
+        // 50 rounds x 32_000 bits x 0.01 = 16_000 expected flips
+        let expect = 16_000.0;
+        assert!((total as f64 - expect).abs() < 0.1 * expect, "flips {total}");
+        assert_eq!(s.stats.flipped_bits, total, "stats count the applied mask");
+    }
+
+    #[test]
+    fn pair_corruption_masks_the_reserved_seed_msb() {
+        let mut s = sim("ber:1", 0.0);
+        // every one of the 64 bits flips: seed = !seed masked to 31 bits,
+        // p = bitwise-not p
+        let (seed, p) = s.deliver_pair(0, 0, 0, 1.0f32).unwrap();
+        assert_eq!(seed, 0x7FFF_FFFF, "MSB stays out of the direction-seed space");
+        assert_eq!(p.to_bits(), !1.0f32.to_bits());
+    }
+
+    #[test]
+    fn draws_are_keyed_not_sequenced() {
+        // the impairment of (round, client) must not depend on what was
+        // transmitted before it — the property that makes the trace
+        // identical across worker-thread counts and topologies
+        let mut a = sim("drop:0.5", 0.0);
+        let mut b = sim("drop:0.5", 0.0);
+        let direct = a.deliver_sign(9, 3, 1);
+        for round in 0..9u64 {
+            for client in 0..4usize {
+                let _ = b.deliver_sign(round, client, 1);
+            }
+        }
+        assert_eq!(b.deliver_sign(9, 3, 1), direct);
+    }
+
+    #[test]
+    fn different_channel_seeds_give_different_traces() {
+        let mut a = sim("drop:0.5", 0.0);
+        let mut b = sim("drop:0.5", 0.0);
+        b.cfg.channel_seed = 43;
+        let pat_a: Vec<bool> =
+            (0..64u64).map(|r| a.deliver_sign(r, 0, 1).is_some()).collect();
+        let pat_b: Vec<bool> =
+            (0..64u64).map(|r| b.deliver_sign(r, 0, 1).is_some()).collect();
+        assert_ne!(pat_a, pat_b);
+    }
+
+    #[test]
+    fn message_level_impairment_matches_typed_paths() {
+        let mut typed = sim("ber:0.4", 0.0);
+        let mut msg = sim("ber:0.4", 0.0);
+        for round in 0..32u64 {
+            let t = typed.deliver_pair(round, 5, 1234, -0.75);
+            let m = msg.deliver(round, 5, DIR_UP, Message::Projection { seed: 1234, p: -0.75 });
+            match (t, m) {
+                (Some((seed, p)), Some(Message::Projection { seed: s2, p: p2 })) => {
+                    assert_eq!(seed, s2);
+                    assert_eq!(p.to_bits(), p2.to_bits());
+                }
+                (None, None) => {}
+                other => panic!("typed and message paths diverged: {other:?}"),
+            }
+        }
+        // control/bulk messages pass through
+        let m = msg.deliver(0, 0, DIR_DOWN, Message::RoundStart { round: 0 });
+        assert_eq!(m, Some(Message::RoundStart { round: 0 }));
+    }
+
+    #[test]
+    fn deadline_cuts_slow_links_and_charges_the_wait() {
+        // mixed cycle: id 2 is iot (rtt 0.4 > deadline), ids 0/1 are fast
+        let mut s = sim("ideal", 0.1);
+        let kept = s.admit(0, vec![0, 1, 2], 1, 1);
+        assert_eq!(kept, vec![0, 1]);
+        assert_eq!(s.stats.stragglers, 1);
+        // the PS waited out the full deadline to conclude the cut
+        assert!((s.stats.virtual_s - 0.1).abs() < 1e-12);
+        // without a cut the round costs the slowest admitted latency
+        let before = s.stats.virtual_s;
+        let kept = s.admit(1, vec![0, 1], 1, 1);
+        assert_eq!(kept, vec![0, 1]);
+        let dt = s.stats.virtual_s - before;
+        assert!(dt > 0.0 && dt < 0.1, "round time {dt}");
+    }
+
+    #[test]
+    fn admit_without_deadline_just_tracks_the_clock() {
+        let mut s = sim("ideal", 0.0);
+        let kept = s.admit(0, vec![0, 1, 2, 3], 64, 640);
+        assert_eq!(kept, vec![0, 1, 2, 3]);
+        assert_eq!(s.stats.stragglers, 0);
+        // slowest link is iot (id 2): rtt 0.4 + jitter [0, 0.6)
+        assert!(s.stats.virtual_s >= 0.4 && s.stats.virtual_s < 1.1);
+    }
+
+    #[test]
+    fn latency_fill_chunk_parallel_matches_serial() {
+        let s = sim("ideal", 0.0);
+        let ids: Vec<usize> = (0..PAR_MIN_LINKS * 2 + 7).collect();
+        let mut serial = vec![0.0f64; ids.len()];
+        for (o, &id) in serial.iter_mut().zip(&ids) {
+            *o = s.link_latency(11, id, 64, 64);
+        }
+        let mut par = vec![0.0f64; ids.len()];
+        s.fill_latencies(11, &ids, 64, 64, &mut par);
+        assert_eq!(serial, par, "per-link draws are keyed, so splits are exact");
+    }
+
+    #[test]
+    fn geometric_flip_positions_edge_cases() {
+        let mut rng = Rng::new(1, 1);
+        assert!(flipped_bit_positions(0, 0.5, &mut rng).is_empty());
+        assert!(flipped_bit_positions(100, 0.0, &mut rng).is_empty());
+        assert_eq!(flipped_bit_positions(5, 1.0, &mut rng), vec![0, 1, 2, 3, 4]);
+        let flips = flipped_bit_positions(1000, 0.05, &mut rng);
+        assert!(flips.windows(2).all(|w| w[0] < w[1]), "strictly increasing");
+        assert!(flips.iter().all(|&b| b < 1000));
+    }
+}

@@ -199,10 +199,13 @@ impl Model for LinearProbe {
         let mut correct = 0u32;
         for r in 0..*rows {
             let row = &logits[r * self.classes..(r + 1) * self.classes];
+            // total under NaN logits: an impaired channel (`net`) can
+            // legitimately drive a replica non-finite, and eval must
+            // still return a (chance-level) accuracy rather than panic
             let argmax = row
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
                 .unwrap()
                 .0;
             if argmax as u32 == y[r] {
@@ -543,10 +546,11 @@ impl Model for TransformerSim {
         let mut correct = 0u32;
         for bi in 0..b {
             let row = &self.logits[(bi * t + t - 1) * v..(bi * t + t) * v];
+            // total under NaN logits (see LinearProbe::eval)
             let argmax = row
                 .iter()
                 .enumerate()
-                .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+                .max_by(|a, c| a.1.partial_cmp(c.1).unwrap_or(std::cmp::Ordering::Equal))
                 .unwrap()
                 .0 as u32;
             if argmax == tokens[bi * (t + 1) + t] {

@@ -150,11 +150,7 @@ pub fn normals_into(seed: u32, out: &mut [f32]) {
         return;
     }
     let chunk = chunk_size(out.len(), threads);
-    std::thread::scope(|s| {
-        for (i, c) in out.chunks_mut(chunk).enumerate() {
-            s.spawn(move || normals_into_span(seed, i * chunk, c));
-        }
-    });
+    scoped_spawn(out.chunks_mut(chunk), |i, c| normals_into_span(seed, i * chunk, c));
 }
 
 // ---------------------------------------------------------------------------
@@ -191,11 +187,13 @@ impl Drop for SerialZone {
     }
 }
 
-/// Worker threads for a chunk-parallel noise op over `n` elements: 1 when
-/// inside a [`serial_zone`] or below [`PAR_MIN_ELEMS`], else the
-/// `FEEDSIGN_ZO_THREADS` override or the machine's available parallelism.
-pub fn noise_threads(n: usize) -> usize {
-    if n < PAR_MIN_ELEMS || SERIAL_ZONE.with(|c| c.get()) {
+/// Worker threads a chunk-parallel driver may use on this thread: 1
+/// inside a [`serial_zone`], else the `FEEDSIGN_ZO_THREADS` override or
+/// the machine's available parallelism.  Callers that have a workload
+/// size should prefer [`noise_threads`], which also applies the
+/// [`PAR_MIN_ELEMS`] threshold.
+pub fn worker_threads() -> usize {
+    if SERIAL_ZONE.with(|c| c.get()) {
         return 1;
     }
     std::env::var("FEEDSIGN_ZO_THREADS")
@@ -203,6 +201,43 @@ pub fn noise_threads(n: usize) -> usize {
         .and_then(|v| v.parse::<usize>().ok())
         .filter(|&t| t >= 1)
         .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |p| p.get()))
+}
+
+/// Worker threads for a chunk-parallel noise op over `n` elements: 1 when
+/// inside a [`serial_zone`] or below [`PAR_MIN_ELEMS`], else
+/// [`worker_threads`].
+pub fn noise_threads(n: usize) -> usize {
+    if n < PAR_MIN_ELEMS {
+        return 1;
+    }
+    worker_threads()
+}
+
+/// The one scoped chunked-spawn driver behind every chunk-parallel
+/// fan-out in the crate: the noise fill ([`normals_into`]), the SPSA
+/// perturb/AXPY drivers in [`crate::simkit::zo`], and the net
+/// simulator's per-link draw loop (`net`).  Spawns one scoped worker per
+/// item — callers pre-chunk their workload into the desired worker count
+/// — and joins in spawn order; `f` receives `(item_index, item)`.
+///
+/// The driver adds no policy of its own: exactness comes from the
+/// *items* being independent pure functions of their index (counter-
+/// space purity for the noise ops, keyed draws for the net simulator),
+/// so any chunking reproduces the sequential walk bit-identically.
+/// These three used to be copy-shaped `thread::scope` loops; the
+/// ROADMAP flagged the dedup for when a fourth user appeared.
+pub fn scoped_spawn<I, F>(items: I, f: F)
+where
+    I: IntoIterator,
+    I::Item: Send,
+    F: Fn(usize, I::Item) + Sync,
+{
+    std::thread::scope(|s| {
+        for (i, item) in items.into_iter().enumerate() {
+            let f = &f;
+            s.spawn(move || f(i, item));
+        }
+    });
 }
 
 /// Per-worker chunk length for an even split of `n` over `threads`,
@@ -494,6 +529,19 @@ mod tests {
         let mut par = vec![0.0f32; n];
         normals_into(33, &mut par);
         assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn scoped_spawn_joins_all_items_in_index_order() {
+        let mut out = vec![0usize; 9];
+        scoped_spawn(out.chunks_mut(2), |i, c| {
+            for (j, v) in c.iter_mut().enumerate() {
+                *v = i * 2 + j + 1;
+            }
+        });
+        assert_eq!(out, (1..=9).collect::<Vec<_>>());
+        // empty workloads are a no-op
+        scoped_spawn(std::iter::empty::<&mut [usize]>(), |_, _| {});
     }
 
     #[test]

@@ -65,11 +65,7 @@ pub fn perturb_in_place_threads(w: &mut [f32], seed: u32, scale: f32, threads: u
         return;
     }
     let chunk = prng::chunk_size(w.len(), threads);
-    std::thread::scope(|s| {
-        for (i, c) in w.chunks_mut(chunk).enumerate() {
-            s.spawn(move || perturb_span(c, seed, scale, i * chunk));
-        }
-    });
+    prng::scoped_spawn(w.chunks_mut(chunk), |i, c| perturb_span(c, seed, scale, i * chunk));
 }
 
 /// Fused `out[i] = w[i] + scale * z_i(seed)`, chunk-parallel over
@@ -88,10 +84,8 @@ pub fn axpy_into_threads(w: &[f32], out: &mut [f32], seed: u32, scale: f32, thre
         return;
     }
     let chunk = prng::chunk_size(w.len(), threads);
-    std::thread::scope(|s| {
-        for (i, (wc, oc)) in w.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate() {
-            s.spawn(move || axpy_span(wc, oc, seed, scale, i * chunk));
-        }
+    prng::scoped_spawn(w.chunks(chunk).zip(out.chunks_mut(chunk)), |i, (wc, oc)| {
+        axpy_span(wc, oc, seed, scale, i * chunk)
     });
 }
 

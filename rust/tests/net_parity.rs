@@ -1,0 +1,328 @@
+//! Impaired-channel determinism: the three contracts `crate::net` ships
+//! with.
+//!
+//! 1. **Ideal parity** — a session configured with `--channel ideal`
+//!    (even with exotic link profiles and a nonzero channel seed) is
+//!    **bit-identical** to a session that never heard of the simulator:
+//!    replicas, ledger, orbit.
+//! 2. **Thread parity** — an *impaired* run (flips, drops, deadline
+//!    stragglers) produces an identical impairment trace, replicas and
+//!    ledger for every worker-thread count, because draws are keyed by
+//!    `(channel_seed, round, client, direction)` rather than sequenced.
+//! 3. **Cross-topology parity** — the threaded distributed topology
+//!    observes the same trace as the synchronous session for the same
+//!    configuration, with impairments in flight.
+//!
+//! Replicas are compared as `u32` bit patterns: corruption can push
+//! weights non-finite, and NaN-blind f32 equality must not hide a
+//! divergence.
+
+use feedsign::coordinator::catchup::CatchupCfg;
+use feedsign::coordinator::distributed::{run_feedsign, DistClient, DistCfg};
+use feedsign::coordinator::participation::ParticipationCfg;
+use feedsign::coordinator::{Algorithm, Attack, Client, Session, SessionCfg};
+use feedsign::data::partition::{split, Partition};
+use feedsign::data::vision::{generate, SYNTH_CIFAR10};
+use feedsign::data::Dataset;
+use feedsign::engine::NativeEngine;
+use feedsign::net::{ChannelModel, LinkAssignment, LinkProfile, NetCfg};
+use feedsign::simkit::nn::LinearProbe;
+use feedsign::simkit::prng::Rng;
+
+fn bits(w: &[f32]) -> Vec<u32> {
+    w.iter().map(|v| v.to_bits()).collect()
+}
+
+fn build_session(algo: Algorithm, k: usize, cfg_mut: impl FnOnce(&mut SessionCfg)) -> Session {
+    let train: Dataset = generate(&SYNTH_CIFAR10, 400, 0);
+    let test: Dataset = generate(&SYNTH_CIFAR10, 150, 1);
+    let shards = split(&train, k, Partition::Iid, 0);
+    let clients: Vec<Client> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            Client::new(id, Box::new(NativeEngine::new(LinearProbe::new(128, 10))), shard, 11)
+        })
+        .collect();
+    let mut cfg = SessionCfg {
+        algorithm: algo,
+        rounds: 0,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 16,
+        eval_every: 0,
+        seed: 11,
+        ..Default::default()
+    };
+    cfg_mut(&mut cfg);
+    Session::new(cfg, clients, train, test)
+}
+
+fn dist_clients(k: usize, train: &Dataset) -> Vec<DistClient> {
+    let shards = split(train, k, Partition::Iid, 0);
+    shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            let engine: Box<dyn feedsign::engine::Engine> =
+                Box::new(NativeEngine::new(LinearProbe::new(128, 10)));
+            let w = engine.init_params(11);
+            DistClient {
+                engine,
+                w,
+                shard,
+                attack: Attack::None,
+                rng: Rng::new(11 ^ 0xC11E_17, id as u32 + 1),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn ideal_channel_is_bit_identical_to_the_no_net_baseline() {
+    let mut baseline = build_session(Algorithm::FeedSign, 5, |_| {});
+    // plain `--channel ideal` with the default link: fully inactive,
+    // zero draws, zero stats
+    let mut ideal = build_session(Algorithm::FeedSign, 5, |cfg| {
+        cfg.net = NetCfg { channel_seed: 99, ..NetCfg::ideal() };
+    });
+    // ideal channel but exotic links: the virtual clock engages (the
+    // knob must not be silently ignored), yet every message still
+    // arrives untouched — replicas and ledgers may not drift a bit
+    let mut clocked = build_session(Algorithm::FeedSign, 5, |cfg| {
+        cfg.net = NetCfg {
+            channel: ChannelModel::Ideal,
+            links: LinkAssignment::Uniform(LinkProfile::iot()),
+            deadline_s: 0.0,
+            channel_seed: 99,
+        };
+    });
+    for t in 0..80 {
+        baseline.step(t);
+        ideal.step(t);
+        clocked.step(t);
+    }
+    for s in [&ideal, &clocked] {
+        for (b, i) in baseline.clients.iter().zip(&s.clients) {
+            assert_eq!(bits(&b.w), bits(&i.w), "client {} replica drifted", b.id);
+        }
+        assert_eq!(baseline.ledger.uplink_bits, s.ledger.uplink_bits);
+        assert_eq!(baseline.ledger.downlink_bits, s.ledger.downlink_bits);
+        assert_eq!(baseline.ledger.uplink_msgs, s.ledger.uplink_msgs);
+        assert_eq!(baseline.orbit.len(), s.orbit.len());
+    }
+    assert_eq!(ideal.net.stats, Default::default(), "ideal runs draw nothing");
+    assert_eq!(clocked.net.stats.rounds, 80, "exotic links tick the clock");
+    assert!(clocked.net.stats.virtual_s > 0.0);
+    assert_eq!(clocked.net.stats.stragglers, 0);
+    assert_eq!(clocked.net.stats.dropped_msgs, 0);
+    assert_eq!(clocked.net.stats.flipped_bits, 0);
+}
+
+fn impaired_net(channel: ChannelModel, deadline_s: f64) -> NetCfg {
+    NetCfg {
+        channel,
+        links: LinkAssignment::parse("mixed").unwrap(),
+        deadline_s,
+        channel_seed: 5,
+    }
+}
+
+#[test]
+fn impaired_runs_are_identical_across_worker_thread_counts() {
+    for (channel, catchup) in [
+        (ChannelModel::BitFlip { ber: 0.05 }, CatchupCfg::Off),
+        (ChannelModel::Erasure { p: 0.3 }, CatchupCfg::Replay),
+    ] {
+        let build = |threads: usize| {
+            build_session(Algorithm::FeedSign, 5, |cfg| {
+                cfg.threads = threads;
+                cfg.participation = ParticipationCfg::Fraction(0.6);
+                cfg.catchup = catchup;
+                cfg.net = impaired_net(channel, 0.0);
+            })
+        };
+        let mut seq = build(1);
+        let mut par = build(4);
+        for t in 0..100 {
+            seq.step(t);
+            par.step(t);
+        }
+        seq.catch_up_all();
+        par.catch_up_all();
+        for (a, b) in seq.clients.iter().zip(&par.clients) {
+            assert_eq!(bits(&a.w), bits(&b.w), "{channel:?}: client {} diverged", a.id);
+        }
+        assert_eq!(seq.ledger.uplink_bits, par.ledger.uplink_bits, "{channel:?}");
+        assert_eq!(seq.ledger.downlink_bits, par.ledger.downlink_bits, "{channel:?}");
+        assert_eq!(seq.net.stats, par.net.stats, "{channel:?}: impairment trace diverged");
+    }
+}
+
+#[test]
+fn impaired_zo_runs_are_identical_across_worker_thread_counts() {
+    // ZO pairs corrupt semantically (seed and coefficient bits); even if
+    // a blown coefficient drives replicas non-finite, the bit patterns
+    // must match across thread counts
+    let build = |threads: usize| {
+        build_session(Algorithm::ZoFedSgd, 4, |cfg| {
+            cfg.threads = threads;
+            cfg.net = impaired_net(ChannelModel::BitFlip { ber: 0.01 }, 0.0);
+        })
+    };
+    let mut seq = build(1);
+    let mut par = build(3);
+    for t in 0..60 {
+        seq.step(t);
+        par.step(t);
+    }
+    for (a, b) in seq.clients.iter().zip(&par.clients) {
+        assert_eq!(bits(&a.w), bits(&b.w), "client {} diverged", a.id);
+    }
+    assert_eq!(seq.net.stats, par.net.stats);
+}
+
+#[test]
+fn same_channel_seed_reproduces_different_channel_seed_diverges() {
+    let build = |channel_seed: u32| {
+        let mut s = build_session(Algorithm::FeedSign, 5, |cfg| {
+            cfg.participation = ParticipationCfg::Fraction(0.6);
+            cfg.catchup = CatchupCfg::Replay;
+            cfg.net = NetCfg {
+                channel: ChannelModel::Erasure { p: 0.5 },
+                links: LinkAssignment::Uniform(LinkProfile::mobile()),
+                deadline_s: 0.0,
+                channel_seed,
+            };
+        });
+        for t in 0..200 {
+            s.step(t);
+        }
+        s.catch_up_all();
+        s
+    };
+    let a = build(5);
+    let b = build(5);
+    assert_eq!(bits(&a.clients[0].w), bits(&b.clients[0].w), "same seed must reproduce");
+    assert_eq!(a.net.stats, b.net.stats);
+    let c = build(6);
+    assert_ne!(
+        bits(&a.clients[0].w),
+        bits(&c.clients[0].w),
+        "a different channel seed draws a different drop pattern"
+    );
+}
+
+#[test]
+fn deadline_stragglers_resync_through_replay() {
+    let mut s = build_session(Algorithm::FeedSign, 6, |cfg| {
+        cfg.catchup = CatchupCfg::Replay;
+        cfg.net = impaired_net(ChannelModel::Ideal, 0.1);
+    });
+    for t in 0..60 {
+        s.step(t);
+    }
+    // mixed cycle: ids 2 and 5 are iot-class (0.4 s RTT > 0.1 s deadline)
+    assert_eq!(s.net.stats.stragglers, 2 * 60, "iot clients miss every deadline");
+    assert!(!s.replicas_synchronized(), "stragglers are stale mid-run");
+    s.catch_up_all();
+    assert!(s.replicas_synchronized(), "replay brings stragglers current");
+}
+
+#[test]
+fn impaired_cross_topology_parity() {
+    // the distributed PS and the synchronous session must observe the
+    // same keyed impairment trace: identical finals, ledgers and stats —
+    // under flips, drops, and deadline stragglers, for both catch-up
+    // modes the threaded topology supports
+    let cases = [
+        (ChannelModel::BitFlip { ber: 0.2 }, 0.0, CatchupCfg::Off),
+        (ChannelModel::BitFlip { ber: 0.2 }, 0.0, CatchupCfg::Replay),
+        (ChannelModel::Erasure { p: 0.3 }, 0.0, CatchupCfg::Off),
+        (ChannelModel::Erasure { p: 0.3 }, 0.1, CatchupCfg::Replay),
+    ];
+    for (channel, deadline_s, catchup) in cases {
+        let label = format!("{channel:?}/deadline={deadline_s}/{catchup:?}");
+        let net = impaired_net(channel, deadline_s);
+        let train: Dataset = generate(&SYNTH_CIFAR10, 300, 0);
+        let test: Dataset = generate(&SYNTH_CIFAR10, 100, 1);
+        let shards = split(&train, 4, Partition::Iid, 0);
+        let clients: Vec<Client> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| {
+                Client::new(
+                    id,
+                    Box::new(NativeEngine::new(LinearProbe::new(128, 10))),
+                    shard,
+                    11,
+                )
+            })
+            .collect();
+        let cfg = SessionCfg {
+            rounds: 60,
+            eta: 2e-3,
+            mu: 1e-3,
+            batch_size: 16,
+            eval_every: 0,
+            participation: ParticipationCfg::Fraction(0.5),
+            catchup,
+            net: net.clone(),
+            seed: 11,
+            ..Default::default()
+        };
+        let mut sync = Session::new(cfg, clients, train.clone(), test);
+        for t in 0..60 {
+            sync.step(t);
+        }
+        sync.catch_up_all();
+
+        let dcfg = DistCfg {
+            rounds: 60,
+            eta: 2e-3,
+            mu: 1e-3,
+            batch_size: 16,
+            participation: ParticipationCfg::Fraction(0.5),
+            catchup,
+            net,
+            seed: 11,
+        };
+        let res = run_feedsign(dist_clients(4, &train), train, dcfg);
+        for (id, w) in res.finals.iter().enumerate() {
+            assert_eq!(
+                bits(w),
+                bits(&sync.clients[id].w),
+                "{label}: client {id} diverged across topologies"
+            );
+        }
+        assert_eq!(res.ledger.uplink_bits, sync.ledger.uplink_bits, "{label}");
+        assert_eq!(res.ledger.downlink_bits, sync.ledger.downlink_bits, "{label}");
+        assert_eq!(res.ledger.uplink_msgs, sync.ledger.uplink_msgs, "{label}");
+        assert_eq!(res.ledger.downlink_msgs, sync.ledger.downlink_msgs, "{label}");
+        assert_eq!(res.net, sync.net.stats, "{label}: impairment trace diverged");
+    }
+}
+
+#[test]
+fn ber_zero_bitflip_channel_matches_ideal_replicas() {
+    // `ber:0` engages the simulator (stats tick) but flips nothing: the
+    // learning trajectory must equal the ideal channel's exactly — the
+    // property that makes the BER-sweep bench's 0 column a true baseline
+    let mut ideal = build_session(Algorithm::FeedSign, 5, |_| {});
+    let mut zero = build_session(Algorithm::FeedSign, 5, |cfg| {
+        cfg.net = NetCfg {
+            channel: ChannelModel::BitFlip { ber: 0.0 },
+            links: LinkAssignment::Uniform(LinkProfile::mobile()),
+            deadline_s: 0.0,
+            channel_seed: 3,
+        };
+    });
+    for t in 0..80 {
+        ideal.step(t);
+        zero.step(t);
+    }
+    assert_eq!(bits(&ideal.clients[0].w), bits(&zero.clients[0].w));
+    assert_eq!(ideal.ledger.uplink_bits, zero.ledger.uplink_bits);
+    assert_eq!(zero.net.stats.flipped_bits, 0);
+    assert_eq!(zero.net.stats.rounds, 80, "the virtual clock still observed the run");
+}
