@@ -37,6 +37,7 @@ fn cfg(algorithm: &str, rounds: u64) -> ExperimentConfig {
         deadline: 0.0,
         channel_seed: 0,
         threads: 0,
+        replica_cache: 4,
         pretrain_rounds: 0,
         seed: 37,
         verbose: false,

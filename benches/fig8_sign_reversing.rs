@@ -49,6 +49,7 @@ fn main() {
         deadline: 0.0,
         channel_seed: 0,
         threads: 0,
+        replica_cache: 4,
         pretrain_rounds: 0,
         seed: 43,
         verbose: false,
@@ -57,7 +58,7 @@ fn main() {
     for t in 0..exp.rounds {
         session.step(t);
     }
-    let w = session.clients[0].w.clone();
+    let w = session.replica(0).into_owned();
     let (train, _) = exp.datasets().expect("data");
 
     // full-data gradient

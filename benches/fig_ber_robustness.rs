@@ -57,6 +57,7 @@ fn cfg(algorithm: &str, ber: f64, rounds: u64) -> ExperimentConfig {
         deadline: 0.0,
         channel_seed: 17,
         threads: 0,
+        replica_cache: 4,
         pretrain_rounds: 0,
         seed: 41,
         verbose: false,

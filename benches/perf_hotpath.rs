@@ -153,6 +153,48 @@ fn main() {
         );
     }
 
+    // replica-plane commit: the dense layout applied the aggregated
+    // update K times (once per client replica); the copy-on-write store
+    // applies it once to the canonical buffer.  Measured single-core so
+    // the ratio is the algorithmic K-fold saving, not multithreading.
+    println!("\n== replica-plane commit (once vs K dense AXPYs) ==");
+    let serial2 = prng::serial_zone();
+    let d_commit = 1 << 16;
+    let k_commit = 100usize;
+    let mut canonical = prng::normals_vec(4, d_commit);
+    let once = bench("commit once: canonical AXPY (65k params)", 50, || {
+        zo::apply_update(&mut canonical, 9, 1e-3);
+    });
+    let mut dense: Vec<Vec<f32>> = (0..k_commit).map(|_| canonical.clone()).collect();
+    let dense_t = bench(&format!("commit dense: K={k_commit} per-client AXPYs"), 5, || {
+        for w in &mut dense {
+            zo::apply_update(w, 9, 1e-3);
+        }
+    });
+    drop(serial2);
+    let commit_speedup = dense_t / once;
+    println!("  -> once-vs-K commit speedup: {commit_speedup:.1}x (theoretical {k_commit}x)");
+    v.check(
+        "replica-commit-once-beats-dense",
+        commit_speedup >= k_commit as f64 / 4.0,
+        format!("{commit_speedup:.1}x at K={k_commit}"),
+    );
+    // end-to-end contract: a live session commits exactly one canonical
+    // AXPY per round and holds one d-float buffer for the whole pool
+    let mut s = round_cfg(20, 0).build_session().expect("config builds");
+    for t in 0..5 {
+        s.step(t);
+    }
+    let st = s.replica_stats();
+    v.check(
+        "replica-commit-once-per-round",
+        st.canonical_commits == 5 && st.peak_bytes == 4 * st.d,
+        format!(
+            "{} commits over 5 rounds; peak {} B vs dense {} B (K=20)",
+            st.canonical_commits, st.peak_bytes, st.dense_bytes
+        ),
+    );
+
     // PJRT request path
     if std::env::var("FEEDSIGN_PERF_PJRT").as_deref() != Ok("0")
         && feedsign::runtime::artifacts_available()
@@ -210,6 +252,7 @@ fn round_cfg(k: usize, threads: usize) -> ExperimentConfig {
         deadline: 0.0,
         channel_seed: 0,
         threads,
+        replica_cache: 4,
         pretrain_rounds: 0,
         seed: 5,
         verbose: false,

@@ -77,5 +77,46 @@ fn main() {
     println!("(paper Table 10, OPT-1.3B: 4027 MB / 10222 MB / 46583 MB — same ordering)");
     println!("note: at paper scale activations dwarf the probe view, pushing the FO:ZO ratio to ~11.6x;");
     println!("      our models are small enough that parameters dominate, so the ratio is smaller but the ordering is identical.");
+
+    // coordinator-side counterpart: the client memory story above is
+    // per-device; the session coordinator used to pay K dense replicas
+    // on top of it.  The copy-on-write replica plane
+    // (`coordinator::replica`) collapses an all-synced pool to one
+    // canonical d-float buffer, flat in K.
+    let mut coord = Table::new(
+        "Coordinator replica memory (FeedSign, 10 rounds, measured bytes)",
+        &["dense K*d", "cow peak", "ratio"],
+    );
+    for k in [5usize, 25, 200] {
+        let mut cfg = feedsign::config::quickstart();
+        cfg.clients = k;
+        cfg.rounds = 10;
+        cfg.eval_every = 0;
+        cfg.verbose = false;
+        let mut s = cfg.build_session().expect("config builds");
+        for t in 0..10 {
+            s.step(t);
+        }
+        let st = s.replica_stats();
+        coord.row(
+            &format!("K={k}"),
+            vec![
+                format!("{}", st.dense_bytes),
+                format!("{}", st.peak_bytes),
+                format!("{:.0}x", st.dense_bytes as f64 / st.peak_bytes.max(1) as f64),
+            ],
+        );
+        v.check(
+            &format!("coordinator-k{k}-cow-peak-is-o-d"),
+            st.peak_bytes <= 2 * 4 * st.d && st.owned_clients == 0,
+            format!(
+                "peak {} B vs 2·d = {} B (dense would be {} B)",
+                st.peak_bytes,
+                2 * 4 * st.d,
+                st.dense_bytes
+            ),
+        );
+    }
+    coord.print();
     v.finish()
 }

@@ -47,6 +47,7 @@ fn cfg(task: &str, algorithm: &str, rounds: u64, eta: f32) -> ExperimentConfig {
         deadline: 0.0,
         channel_seed: 0,
         threads: 0,
+        replica_cache: 4,
         pretrain_rounds: 300,
         seed: 11,
         verbose: false,

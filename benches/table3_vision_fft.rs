@@ -39,6 +39,7 @@ fn cfg(task: &str, algorithm: &str, rounds: u64) -> ExperimentConfig {
         deadline: 0.0,
         channel_seed: 0,
         threads: 0,
+        replica_cache: 4,
         pretrain_rounds: 0,
         seed: 13,
         verbose: false,

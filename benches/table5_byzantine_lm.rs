@@ -43,6 +43,7 @@ fn cfg(task: &str, algorithm: &str, byzantine: usize, rounds: u64) -> Experiment
         deadline: 0.0,
         channel_seed: 0,
         threads: 0,
+        replica_cache: 4,
         pretrain_rounds: 300,
         seed: 23,
         verbose: false,

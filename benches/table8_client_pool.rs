@@ -67,13 +67,63 @@ fn cfg(
         deadline: 0.0,
         channel_seed: 0,
         threads: 0,
+        replica_cache: 4,
         pretrain_rounds: 300,
         seed: 29,
         verbose: false,
     }
 }
 
+/// The large-pool scenario the replica plane unlocks: K = 200 clients,
+/// full participation.  The dense layout would hold 200 parameter
+/// buffers; the copy-on-write store holds one, flat in K, and commits
+/// each round with a single canonical AXPY.  Runs standalone in the CI
+/// perf-smoke job via `FEEDSIGN_TABLE8_K200_ONLY=1`.
+fn k200_scenario(v: &mut Verdict) {
+    let rounds = scaled(60);
+    let mut c = cfg(TASKS[0], "feedsign", 200, rounds, "full", "off");
+    // measure the round engine, not the warm start (pretraining is a
+    // K-independent one-off)
+    c.pretrain_rounds = 0;
+    let run = timed("K=200 pool", || run_repeats(&c, 1).remove(0));
+    println!(
+        "\nlarge-pool scenario (K=200, full participation, {rounds} rounds): \
+         replica peak {} B vs dense {} B, {} canonical commits, {} bits up",
+        run.replica.peak_bytes,
+        run.replica.dense_bytes,
+        run.replica.canonical_commits,
+        run.ledger.uplink_bits
+    );
+    v.check(
+        "k200-replica-peak-below-2d",
+        run.replica.peak_bytes <= 2 * 4 * run.replica.d && run.replica.owned_clients == 0,
+        format!(
+            "peak {} B vs 2·d = {} B (dense layout: {} B)",
+            run.replica.peak_bytes,
+            2 * 4 * run.replica.d,
+            run.replica.dense_bytes
+        ),
+    );
+    v.check(
+        "k200-one-canonical-axpy-per-round",
+        run.replica.canonical_commits == rounds,
+        format!("{} commits over {rounds} rounds", run.replica.canonical_commits),
+    );
+    v.check(
+        "k200-uplink-is-one-bit-per-client",
+        run.ledger.uplink_bits == rounds * 200,
+        format!("{} bits over {rounds} rounds x 200 clients", run.ledger.uplink_bits),
+    );
+}
+
 fn main() {
+    // CI perf-smoke runs only the pool-scale scenario (the full grid is
+    // a long haul at any scale)
+    if std::env::var("FEEDSIGN_TABLE8_K200_ONLY").as_deref() == Ok("1") {
+        let mut v = Verdict::new();
+        k200_scenario(&mut v);
+        v.finish();
+    }
     // fixed perturbation budget: (participants per round) * rounds = const
     // (Table 12)
     let r5 = scaled(1500);
@@ -188,5 +238,8 @@ fn main() {
         run.best_acc() * 100.0 >= zs[0] - 5.0,
         format!("{:.1}% vs zero-shot {:.1}%", run.best_acc() * 100.0, zs[0]),
     );
+
+    // the pool the replica plane unlocks
+    k200_scenario(&mut v);
     v.finish()
 }

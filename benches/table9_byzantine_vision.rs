@@ -46,6 +46,7 @@ fn cfg(task: &str, algorithm: &str, byzantine: usize, rounds: u64) -> Experiment
         deadline: 0.0,
         channel_seed: 0,
         threads: 0,
+        replica_cache: 4,
         pretrain_rounds: 0,
         seed: 31,
         verbose: false,

@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let orbit = decode(&std::fs::read(&path)?)?;
     let mut w = session.clients[0].engine.init_params(cfg.seed);
     orbit.replay(&mut w);
-    assert_eq!(w, session.clients[0].w, "replay must be bit-exact");
+    assert_eq!(w.as_slice(), &*session.replica(0), "replay must be bit-exact");
     println!("replayed {} steps -> bit-identical to the trained model", orbit.len());
 
     // the storage ledger, at our scale and projected to the paper's

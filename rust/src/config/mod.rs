@@ -103,6 +103,13 @@ pub struct ExperimentConfig {
     pub channel_seed: u32,
     /// round-engine worker threads (0 = auto, 1 = sequential baseline)
     pub threads: usize,
+    /// replica-plane snapshot cache capacity (`coordinator::replica`):
+    /// how many pre-commit canonical buffers the coordinator retains so
+    /// stale logical replicas stay readable without a history
+    /// reconstruction.  Memory bound `replica_cache · d` floats, spent
+    /// only while stragglers exist; 0 disables the cache.  Never
+    /// affects the computed bits.
+    pub replica_cache: usize,
     /// Central FO pretraining steps on a *format-matched but
     /// label-uninformative* dataset before federation begins.  This
     /// manufactures the "pretrained checkpoint" the paper's fine-tuning
@@ -168,6 +175,7 @@ impl ExperimentConfig {
             deadline: doc.float("", "deadline").unwrap_or(0.0),
             channel_seed: doc.int("", "channel_seed").unwrap_or(0) as u32,
             threads: doc.int("", "threads").unwrap_or(0) as usize,
+            replica_cache: doc.int("", "replica_cache").unwrap_or(4) as usize,
             seed: doc.int("", "seed").unwrap_or(0) as u32,
             verbose: doc.bool("", "verbose").unwrap_or(false),
         };
@@ -209,6 +217,7 @@ impl ExperimentConfig {
         d.set("", "deadline", Value::Float(self.deadline));
         d.set("", "channel_seed", Value::Int(self.channel_seed as i64));
         d.set("", "threads", Value::Int(self.threads as i64));
+        d.set("", "replica_cache", Value::Int(self.replica_cache as i64));
         d.set("", "pretrain_rounds", Value::Int(self.pretrain_rounds as i64));
         d.set("", "seed", Value::Int(self.seed as i64));
         d.set("", "verbose", Value::Bool(self.verbose));
@@ -422,7 +431,11 @@ impl ExperimentConfig {
             .map(|(id, shard)| {
                 let mut c = Client::new(id, self.model.build(), shard, self.seed);
                 if let Some(w) = &checkpoint {
-                    c = c.with_checkpoint(w);
+                    // the pool shares one pretrained start: client 0
+                    // carries the dense buffer, everyone else declares
+                    // bit-equality to it — the replica plane then holds a
+                    // single canonical copy instead of K
+                    c = if id == 0 { c.with_checkpoint(w) } else { c.with_session_checkpoint() };
                 }
                 if id < self.byzantine_count {
                     c.with_attack(attack)
@@ -445,6 +458,7 @@ impl ExperimentConfig {
             catchup: self.catchup_cfg(),
             threads: self.threads,
             net: self.net_cfg(),
+            replica_cache: self.replica_cache,
             seed: self.seed,
             verbose: self.verbose,
         };
@@ -513,6 +527,7 @@ pub fn quickstart() -> ExperimentConfig {
         deadline: 0.0,
         channel_seed: 0,
         threads: 0,
+        replica_cache: 4,
         pretrain_rounds: 0,
         seed: 0,
         verbose: true,
@@ -597,6 +612,7 @@ mod tests {
             deadline: 0.0,
             channel_seed: 0,
             threads: 0,
+            replica_cache: 4,
             pretrain_rounds: 0,
             seed: 1,
             verbose: false,
@@ -745,6 +761,41 @@ mod tests {
         cfg.threads = 3;
         let back = ExperimentConfig::from_toml(&cfg.to_toml()).unwrap();
         assert_eq!(back.threads, 3);
+    }
+
+    #[test]
+    fn replica_cache_roundtrips_and_defaults() {
+        let mut cfg = quickstart();
+        cfg.replica_cache = 9;
+        let back = ExperimentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.replica_cache, 9);
+        // omitted key falls back to the default capacity
+        let text: String = cfg
+            .to_toml()
+            .lines()
+            .filter(|l| !l.starts_with("replica_cache"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert_eq!(ExperimentConfig::from_toml(&text).unwrap().replica_cache, 4);
+        // and the knob reaches the session
+        cfg.replica_cache = 0;
+        let s = cfg.build_session().unwrap();
+        assert_eq!(s.cfg.replica_cache, 0);
+    }
+
+    #[test]
+    fn pretrained_pool_shares_one_checkpoint_buffer() {
+        let mut cfg = quickstart();
+        cfg.rounds = 5;
+        cfg.pretrain_rounds = 10;
+        let mut s = cfg.build_session().unwrap();
+        // all K clients start bit-identical to the pretrained canonical:
+        // nobody is promoted to an owned replica, so the coordinator
+        // holds one d-float buffer, not K
+        assert_eq!(s.replica_stats().owned_clients, 0);
+        assert_eq!(s.replica_stats().peak_bytes, 4 * s.replicas.d());
+        s.step(0);
+        assert!(s.replicas_synchronized());
     }
 
     #[test]

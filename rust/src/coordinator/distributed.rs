@@ -10,6 +10,14 @@
 //! checkpoint rebroadcast would require a PS-side replica, so the dense
 //! baseline lives only in the synchronous session's cost model.
 //!
+//! Unlike the synchronous session — whose [`super::replica`] plane
+//! shares one canonical buffer across the pool — every client thread
+//! here owns a real dense replica: this topology *is* the deployment
+//! shape, so per-client memory is the client device's, not the
+//! coordinator's.  The cross-topology parity tests double as the
+//! replica plane's strongest check: K independently-updated dense
+//! buffers must land bit-for-bit on the session's single canonical one.
+//!
 //! Partial participation works here exactly as in the session engine:
 //! the participant set is drawn per round from the same dedicated
 //! coordinator stream (`seed ^ 0x9A`), participants run the
@@ -373,7 +381,8 @@ mod tests {
         let dclients = dist_clients(3, &train);
         let res = run_feedsign(dclients, train, DistCfg::full(40, 2e-3, 1e-3, 16));
         assert_eq!(
-            res.finals[0], sync.clients[0].w,
+            res.finals[0].as_slice(),
+            &*sync.replica(0),
             "topologies diverged despite identical seeds"
         );
     }
@@ -428,7 +437,8 @@ mod tests {
             let res = run_feedsign(dclients, train, dcfg);
             for (id, w) in res.finals.iter().enumerate() {
                 assert_eq!(
-                    w, &sync.clients[id].w,
+                    w.as_slice(),
+                    &*sync.replica(id),
                     "catchup={catchup:?}: client {id} diverged across topologies"
                 );
             }

@@ -6,9 +6,13 @@
 //!   / Bernoulli availability);
 //! * [`catchup`] — seed-history catch-up for clients that missed rounds
 //!   (replay / rebroadcast policies + per-client sync watermarks);
+//! * [`replica`] — the copy-on-write shared parameter store (one
+//!   canonical buffer + per-client `Shared`/`Owned` logical replicas),
+//!   which is what lets a pool of hundreds of clients cost `O(d)`
+//!   coordinator memory instead of `K·d`;
 //! * [`session`] — the deterministic plan/execute/commit round engine that
-//!   all benches/examples drive (client fan-out over scoped threads,
-//!   commits in client-id order);
+//!   all benches/examples drive (size-aware client fan-out over scoped
+//!   threads, commits in client-id order);
 //! * [`distributed`] — the threaded leader/worker topology (same protocol,
 //!   real message passing), pinned to the sync session by test.
 //!
@@ -22,10 +26,12 @@ pub mod byzantine;
 pub mod catchup;
 pub mod distributed;
 pub mod participation;
+pub mod replica;
 pub mod session;
 
 pub use aggregation::Algorithm;
 pub use byzantine::Attack;
 pub use catchup::{CatchupCfg, CatchupTracker};
 pub use participation::ParticipationCfg;
+pub use replica::{ReplicaStats, ReplicaStore};
 pub use session::{Client, Session, SessionCfg};

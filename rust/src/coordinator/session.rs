@@ -1,80 +1,123 @@
 //! The federated session: PS round loop + client pool (Algorithm 1),
-//! organised as a **plan / execute / commit** round engine.
+//! organised as a **plan / execute / commit** round engine over a
+//! copy-on-write **replica plane** ([`crate::coordinator::replica`]).
 //!
-//! One `Session` owns the K clients (each with its own parameter vector,
-//! engine, data shard and attack model) and drives T aggregation rounds of
-//! the configured algorithm, metering every protocol message through the
-//! [`crate::comm::Ledger`] and recording the orbit as it goes.  Each round:
+//! One `Session` owns the K clients (engine, data shard, RNG stream and
+//! attack model each) plus a single [`ReplicaStore`]: FeedSign's replica
+//! invariant means every synchronized client holds bit-identical
+//! parameters, so the pool shares **one canonical buffer** instead of
+//! K dense copies — `O(d)` coordinator memory for arbitrarily large
+//! pools, and one canonical AXPY per committed round where the dense
+//! layout applied K.  Each round:
 //!
 //! 1. **plan** — the participant set is drawn from a dedicated coordinator
 //!    RNG stream ([`ParticipationCfg`]), before any client compute runs;
 //!    with an active [`crate::net`] simulation the virtual event clock
 //!    then cuts deadline stragglers from the plan (they resync later via
 //!    catch-up); when catch-up is on ([`CatchupCfg`]), stale participants
-//!    replay their missed seed history *before* probing, so every vote is
-//!    cast on the current model;
+//!    replay their missed seed history *before* probing — for a `Shared`
+//!    logical replica that replay is pure bookkeeping (bill the records,
+//!    bump the watermark: the invariant makes the replayed bits the
+//!    canonical buffer's), so every vote is cast on the current model;
 //! 2. **execute** — per-client probe work (batch draw → SPSA probe →
-//!    attack mutation) fans out over `std::thread::scope` workers, each
-//!    metering its uplink into a private sub-ledger;
+//!    attack mutation) fans out over `std::thread::scope` workers, every
+//!    synced participant probing the one shared canonical buffer
+//!    (`probe` is read-only); workers are loaded by **size-aware
+//!    bin-packing** (LPT over shard size × link class) instead of
+//!    contiguous equal chunks, and each meters its uplink into a private
+//!    sub-ledger;
 //! 3. **commit** — outcomes are committed **in client-id order** (votes,
 //!    sub-ledgers, orbit entries, seed-history records); each uplink
 //!    contribution crosses the (possibly impaired) channel — flips
 //!    corrupt it, drops make the PS treat the sender as absent — then
-//!    the vote is aggregated and the global update is broadcast: to
-//!    every client when `catchup = "off"` (the paper's assumption), or
-//!    to the clients the PS heard from when catch-up is on (everyone
-//!    else recovers the round from the [`crate::comm::SeedHistory`] on
+//!    the vote is aggregated and the global update is applied **once**
+//!    to the canonical buffer.  Downlink billing is unchanged: every
+//!    client is billed when `catchup = "off"` (the paper's broadcast
+//!    assumption), or only the clients the PS heard from when catch-up
+//!    is on (everyone else is left a *stale* logical replica and
+//!    recovers the round from the [`crate::comm::SeedHistory`] on
 //!    rejoin).
 //!
 //! A plan with **zero participants** (e.g. `fraction:0`) commits a no-op:
-//! no votes, no broadcast, a 0-sign orbit entry and an empty history
-//! round — round indices stay dense so both orbit replay and catch-up
-//! replay keep working.
+//! no votes, no broadcast, a 0-sign orbit entry, an empty history round
+//! and a head-only advance of the replica plane — round indices stay
+//! dense so orbit replay, catch-up replay and stale-replica reads keep
+//! working.
 //!
 //! **Determinism contract:** commit order is client id, every client's
 //! randomness lives in its own Philox stream, and coordinator randomness
 //! (participation, DP vote, eval) lives in dedicated streams — so a run is
-//! bit-identical for *every* worker-thread count, including the sequential
-//! `threads = 1` baseline (pinned by `rust/tests/parallel_parity.rs`), and
-//! FeedSign's step seed remains the round index (`seed = t`, §I.1).  The
-//! cross-topology test in `rust/tests/` (sync vs threaded-distributed)
-//! relies on the same schedule.  Catch-up replay preserves the contract
-//! because replay order equals commit order and every replayed record
-//! goes through the same exact chunk-parallel AXPY the participants used
-//! (pinned by `rust/tests/catchup_parity.rs`).
+//! bit-identical for *every* worker-thread count and *every* worker
+//! assignment (the bin-packing only schedules; outcomes are reassembled
+//! in id order), including the sequential `threads = 1` baseline (pinned
+//! by `rust/tests/parallel_parity.rs`), and FeedSign's step seed remains
+//! the round index (`seed = t`, §I.1).  The single canonical apply is
+//! bit-identical to the K per-client applies it replaced because
+//! [`crate::engine::Engine::update`] is a pure function of
+//! `(w, seed, step)` (pinned by `rust/tests/replica_parity.rs` against a
+//! dense K-replica mirror).  The cross-topology tests in `rust/tests/`
+//! (sync vs threaded-distributed, where clients *do* own dense replicas)
+//! rely on the same schedule.
 
 use crate::comm::{Ledger, Message, SeedHistory, SeedRecord};
 use crate::coordinator::aggregation::{self, Algorithm};
 use crate::coordinator::byzantine::Attack;
 use crate::coordinator::catchup::{CatchupCfg, CatchupTracker};
 use crate::coordinator::participation::ParticipationCfg;
+use crate::coordinator::replica::{ReplicaState, ReplicaStats, ReplicaStore};
 use crate::data::{Batch, Dataset, Shard};
 use crate::engine::Engine;
 use crate::metrics::{RoundRecord, RunResult};
 use crate::net::{NetCfg, NetSim};
 use crate::orbit::Orbit;
 use crate::simkit::prng::{self, Rng};
+use std::borrow::Cow;
 
-/// One federated client: local parameters + compute engine + data shard.
+/// How a client's initial replica is specified.  The session materializes
+/// these into the replica plane at construction: client 0's init becomes
+/// the canonical buffer, and any client whose init differs bit-wise is
+/// promoted to an owned (diverged) replica.
+#[derive(Debug, Clone)]
+enum ClientInit {
+    /// `Engine::init_params(seed)` — identical across clients/engines for
+    /// a given seed (the shared-checkpoint assumption).
+    Seed(u32),
+    /// An explicit dense checkpoint (e.g. pretrained weights).  Only one
+    /// client needs to carry the buffer; the rest declare
+    /// [`ClientInit::SessionCheckpoint`].
+    Checkpoint(Vec<f32>),
+    /// Starts bit-identical to the session's initial canonical buffer
+    /// (client 0's init) without carrying a copy of it.
+    SessionCheckpoint,
+    /// The session consumed this client's explicit checkpoint at
+    /// construction (it became the client's owned diverged buffer in the
+    /// replica plane).  Only client 0's init stays load-bearing after
+    /// construction — it seeds stale-replica reconstruction — so nothing
+    /// retains a second dense copy.
+    Consumed,
+}
+
+/// One federated client: compute engine + data shard + RNG stream.  The
+/// parameter vector is *not* here — clients are logical replicas in the
+/// session's [`ReplicaStore`]; read one through [`Session::replica`].
 pub struct Client {
     pub id: usize,
-    pub w: Vec<f32>,
     pub engine: Box<dyn Engine>,
     pub shard: Shard,
     pub rng: Rng,
     pub attack: Attack,
+    init: ClientInit,
 }
 
 impl Client {
     pub fn new(id: usize, engine: Box<dyn Engine>, shard: Shard, init_seed: u32) -> Self {
-        let w = engine.init_params(init_seed);
         Client {
             id,
-            w,
             engine,
             shard,
             rng: Rng::new(init_seed ^ 0xC11E_17, id as u32 + 1),
             attack: Attack::None,
+            init: ClientInit::Seed(init_seed),
         }
     }
 
@@ -84,10 +127,31 @@ impl Client {
     }
 
     /// Start from an existing (pretrained) checkpoint instead of init.
+    /// Give the checkpoint to client 0 and mark the rest with
+    /// [`Client::with_session_checkpoint`] so the pool shares one copy.
     pub fn with_checkpoint(mut self, w: &[f32]) -> Self {
-        assert_eq!(w.len(), self.w.len());
-        self.w.copy_from_slice(w);
+        assert_eq!(w.len(), self.engine.n_params());
+        self.init = ClientInit::Checkpoint(w.to_vec());
         self
+    }
+
+    /// Start bit-identical to client 0's initial replica without holding
+    /// a copy of it (the constructor-side arm of the copy-on-write
+    /// replica plane).
+    pub fn with_session_checkpoint(mut self) -> Self {
+        self.init = ClientInit::SessionCheckpoint;
+        self
+    }
+
+    /// Materialize this client's declared initial replica (`None` when
+    /// the init defers to client 0 or was already consumed into the
+    /// replica plane).
+    fn initial_params(&self) -> Option<Vec<f32>> {
+        match &self.init {
+            ClientInit::Seed(s) => Some(self.engine.init_params(*s)),
+            ClientInit::Checkpoint(w) => Some(w.clone()),
+            ClientInit::SessionCheckpoint | ClientInit::Consumed => None,
+        }
     }
 }
 
@@ -123,6 +187,13 @@ pub struct SessionCfg {
     /// default ([`NetCfg::ideal`]) takes exactly the pre-`net` code
     /// paths — pinned bit-identical by `rust/tests/net_parity.rs`.
     pub net: NetCfg,
+    /// replica-plane snapshot cache capacity
+    /// ([`crate::coordinator::replica`]): how many pre-commit canonical
+    /// buffers are retained so a *stale* logical replica can be read
+    /// without an init-plus-history reconstruction.  Memory bound is
+    /// `replica_cache · d` floats, spent only while stragglers exist;
+    /// 0 disables the cache.  Never affects the computed bits.
+    pub replica_cache: usize,
     pub seed: u32,
     /// print progress to stderr
     pub verbose: bool,
@@ -144,6 +215,7 @@ impl Default for SessionCfg {
             catchup: CatchupCfg::Off,
             threads: 0,
             net: NetCfg::ideal(),
+            replica_cache: 4,
             seed: 0,
             verbose: false,
         }
@@ -173,38 +245,69 @@ struct ProbeOutcome {
     ledger: Ledger,
 }
 
-fn run_probe_job<F>(round: u64, c: &mut Client, job: &F) -> ProbeOutcome
+fn run_probe_job<F>(round: u64, c: &mut Client, w: &[f32], job: &F) -> ProbeOutcome
 where
-    F: Fn(&mut Client, &mut Ledger) -> Contribution,
+    F: Fn(&mut Client, &[f32], &mut Ledger) -> Contribution,
 {
     let mut ledger = Ledger::default();
     // RoundStart carries the implicit seed schedule (0 payload bits)
     ledger.record(&Message::RoundStart { round });
-    let contribution = job(c, &mut ledger);
+    let contribution = job(c, w, &mut ledger);
     ProbeOutcome { client: c.id, contribution, ledger }
 }
 
-/// Execute phase: run `job` on every participant, fanning contiguous
-/// id-ordered chunks out over `threads` scoped workers.  The returned
-/// outcomes are in client-id order regardless of worker interleaving
-/// (chunks are contiguous and joined in spawn order), which is what makes
-/// the commit phase bit-identical to the sequential baseline.
+/// Size-aware worker assignment: LPT (longest-processing-time-first)
+/// greedy bin-packing of participant ranks into `bins` workers.
+/// Deterministic — ties break toward the lower rank and the lower bin —
+/// and *only* a schedule: outcomes are reassembled in participant order
+/// afterwards, so the committed bits are independent of the packing.
+/// Replaces the contiguous equal chunks of the original fan-out, which
+/// assumed uniform probe cost (Dirichlet shards and mixed device classes
+/// break that assumption).
+fn pack_bins(costs: &[u64], bins: usize) -> Vec<Vec<usize>> {
+    let bins = bins.min(costs.len()).max(1);
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| costs[b].cmp(&costs[a]).then_with(|| a.cmp(&b)));
+    let mut load = vec![0u64; bins];
+    let mut packed: Vec<Vec<usize>> = vec![Vec::new(); bins];
+    for rank in order {
+        let lightest = (0..bins).min_by_key(|&b| (load[b], b)).expect("bins >= 1");
+        packed[lightest].push(rank);
+        load[lightest] += costs[rank].max(1);
+    }
+    for bin in &mut packed {
+        bin.sort_unstable();
+    }
+    packed
+}
+
+/// Execute phase: run `job` on every participant, fanning out over
+/// `threads` scoped workers loaded by [`pack_bins`] over `costs` (one
+/// cost per participant, in participant order).  Every synced
+/// participant's replica view resolves to the one shared canonical
+/// buffer, so workers share it by reference — no per-client copies.
+/// Outcomes return in client-id order regardless of worker interleaving
+/// or assignment, which is what makes the commit phase bit-identical to
+/// the sequential baseline.
 fn execute_probes<F>(
     clients: &mut [Client],
+    replicas: &ReplicaStore,
     plan: &RoundPlan,
+    costs: &[u64],
     threads: usize,
     pin_serial: bool,
     job: F,
 ) -> Vec<ProbeOutcome>
 where
-    F: Fn(&mut Client, &mut Ledger) -> Contribution + Sync,
+    F: Fn(&mut Client, &[f32], &mut Ledger) -> Contribution + Sync,
 {
-    let mut selected: Vec<&mut Client> = Vec::with_capacity(plan.participants.len());
+    debug_assert_eq!(costs.len(), plan.participants.len());
+    let mut selected: Vec<(&mut Client, &[f32])> = Vec::with_capacity(plan.participants.len());
     {
         let mut want = plan.participants.iter().copied().peekable();
         for (id, c) in clients.iter_mut().enumerate() {
             if want.peek() == Some(&id) {
-                selected.push(c);
+                selected.push((c, replicas.probe_view(id)));
                 want.next();
             }
         }
@@ -222,71 +325,56 @@ where
         // that merely degenerated to one job (e.g. K = 1) keeps inner
         // chunk-parallelism — it is the only parallelism available.
         let _serial = pin_serial.then(prng::serial_zone);
-        return selected.into_iter().map(|c| run_probe_job(round, c, &job)).collect();
+        return selected.into_iter().map(|(c, w)| run_probe_job(round, c, w, &job)).collect();
     }
-    let chunk = selected.len().div_ceil(threads);
-    let mut out = Vec::with_capacity(selected.len());
+    let bins = pack_bins(costs, threads);
+    let mut slots: Vec<Option<(&mut Client, &[f32])>> = selected.into_iter().map(Some).collect();
+    let mut out: Vec<Option<ProbeOutcome>> =
+        std::iter::repeat_with(|| None).take(slots.len()).collect();
     std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(threads);
-        for ch in selected.chunks_mut(chunk) {
+        let mut handles = Vec::with_capacity(bins.len());
+        for bin in &bins {
+            if bin.is_empty() {
+                continue;
+            }
+            let work: Vec<(usize, (&mut Client, &[f32]))> = bin
+                .iter()
+                .map(|&rank| (rank, slots[rank].take().expect("rank packed once")))
+                .collect();
             let job = &job;
             handles.push(s.spawn(move || {
                 // client-level parallelism is the outer fan-out; keep the
                 // per-vector noise ops sequential inside each worker
                 let _serial = prng::serial_zone();
-                ch.iter_mut()
-                    .map(|c| run_probe_job(round, &mut **c, job))
+                work.into_iter()
+                    .map(|(rank, (c, w))| (rank, run_probe_job(round, c, w, job)))
                     .collect::<Vec<_>>()
             }));
         }
         for h in handles {
-            out.extend(h.join().expect("round worker panicked"));
+            for (rank, o) in h.join().expect("round worker panicked") {
+                out[rank] = Some(o);
+            }
         }
     });
-    out
-}
-
-/// Run `job` on every client, chunk-parallel over `threads` workers (used
-/// by the commit phase to apply the broadcast update).
-fn for_each_client_parallel<F>(clients: &mut [Client], threads: usize, pin_serial: bool, job: F)
-where
-    F: Fn(&mut Client) + Sync,
-{
-    if threads <= 1 || clients.len() <= 1 {
-        let _serial = pin_serial.then(prng::serial_zone);
-        for c in clients {
-            job(c);
-        }
-        return;
-    }
-    let chunk = clients.len().div_ceil(threads);
-    std::thread::scope(|s| {
-        for ch in clients.chunks_mut(chunk) {
-            let job = &job;
-            s.spawn(move || {
-                let _serial = prng::serial_zone();
-                for c in ch {
-                    job(c);
-                }
-            });
-        }
-    });
+    out.into_iter().map(|o| o.expect("every participant probes exactly once")).collect()
 }
 
 /// The federated runtime.
 pub struct Session {
     pub cfg: SessionCfg,
     pub clients: Vec<Client>,
+    /// The copy-on-write replica plane: one canonical parameter buffer
+    /// at the committed head round + per-client logical replicas.
+    pub replicas: ReplicaStore,
     pub train: Dataset,
     pub test: Dataset,
     pub ledger: Ledger,
     pub orbit: Orbit,
     /// Per-round committed-update history (maintained only while
     /// [`SessionCfg::catchup`] is on; the compaction watermark is the
-    /// slowest client in [`Session::tracker`]).
+    /// slowest client in the replica plane's tracker).
     pub history: SeedHistory,
-    /// Per-client `last_synced_round` watermarks for catch-up.
-    pub tracker: CatchupTracker,
     /// Impaired-channel simulator (a no-op shell when
     /// [`SessionCfg::net`] is the ideal default); `net.stats` holds the
     /// run's impairment counters.
@@ -297,7 +385,7 @@ pub struct Session {
 }
 
 impl Session {
-    pub fn new(cfg: SessionCfg, clients: Vec<Client>, train: Dataset, test: Dataset) -> Self {
+    pub fn new(cfg: SessionCfg, mut clients: Vec<Client>, train: Dataset, test: Dataset) -> Self {
         assert!(!clients.is_empty());
         if matches!(cfg.algorithm, Algorithm::Mezo) {
             assert_eq!(clients.len(), 1, "MeZO is centralized (K = 1)");
@@ -311,7 +399,50 @@ impl Session {
                 "catch-up applies to the synchronized seed-based algorithms only"
             );
         }
-        let tracker = CatchupTracker::new(clients.len());
+        let d = clients[0].engine.n_params();
+        for c in &clients {
+            assert_eq!(c.engine.n_params(), d, "all clients must share one parameter space");
+        }
+        // replica plane: client 0's init is the canonical buffer; any
+        // client whose declared init differs bit-wise starts as an owned
+        // (diverged) replica, everyone else shares canonical at zero cost
+        let canonical = clients[0]
+            .initial_params()
+            .expect("client 0 must carry the session init (seed or checkpoint)");
+        let mut replicas = ReplicaStore::new(canonical, clients.len(), cfg.replica_cache);
+        for id in 1..clients.len() {
+            let shared_by_decl = match (&clients[id].init, &clients[0].init) {
+                (ClientInit::SessionCheckpoint, _) => true,
+                (ClientInit::Seed(a), ClientInit::Seed(b)) => a == b,
+                _ => false,
+            };
+            if shared_by_decl {
+                continue;
+            }
+            // materialize by *moving* an explicit checkpoint out of the
+            // client (never cloning: a retained copy would double the
+            // owned replica's memory and falsify the store's byte
+            // accounting); only client 0's init is load-bearing after
+            // construction
+            let w = match std::mem::replace(&mut clients[id].init, ClientInit::Consumed) {
+                ClientInit::Seed(s) => {
+                    clients[id].init = ClientInit::Seed(s);
+                    clients[id].engine.init_params(s)
+                }
+                ClientInit::Checkpoint(w) => w,
+                ClientInit::SessionCheckpoint | ClientInit::Consumed => {
+                    unreachable!("handled by shared_by_decl / constructed once")
+                }
+            };
+            let same_bits = w.len() == d
+                && w.iter().zip(replicas.canonical()).all(|(a, b)| a.to_bits() == b.to_bits());
+            if same_bits {
+                // drop the redundant copy: the client is canonical-shared
+                clients[id].init = ClientInit::SessionCheckpoint;
+            } else {
+                replicas.set_owned(id, w);
+            }
+        }
         let orbit = Orbit::new(cfg.algorithm.name(), cfg.seed, cfg.eta);
         let net = NetSim::new(cfg.net.clone());
         let dp_rng = Rng::new(cfg.seed ^ 0xD9, 0xD9);
@@ -320,17 +451,78 @@ impl Session {
         Session {
             cfg,
             clients,
+            replicas,
             train,
             test,
             ledger: Ledger::default(),
             orbit,
             history: SeedHistory::default(),
-            tracker,
             net,
             dp_rng,
             eval_rng,
             part_rng,
         }
+    }
+
+    /// The per-client catch-up watermarks (embedded in the replica
+    /// plane, so staleness and memory state can never disagree).
+    pub fn tracker(&self) -> &CatchupTracker {
+        self.replicas.tracker()
+    }
+
+    /// Read client `id`'s logical replica.  Resolution order: an owned
+    /// buffer or the canonical buffer (borrowed, zero-copy) → the
+    /// pre-commit snapshot cache for a stale shared replica (borrowed) →
+    /// an init-plus-orbit-prefix reconstruction (owned, allocates `d`
+    /// floats; exact, because the orbit *is* the committed update
+    /// stream).
+    ///
+    /// The reconstruction fallback replays through the native
+    /// [`crate::simkit::zo::apply_update`] primitive (the same code
+    /// orbit replay and seed-history replay are defined in terms of).
+    /// The native engine's [`Engine::update`] is that primitive, so the
+    /// fallback is bit-exact; an engine whose update kernel is only
+    /// *approximately* equal to it (the PJRT path is pinned to 1e-6, not
+    /// to the bit) should raise [`SessionCfg::replica_cache`] so stale
+    /// reads stay cache-resident instead of reconstructing.
+    pub fn replica(&self, id: usize) -> Cow<'_, [f32]> {
+        if let Some(w) = self.replicas.resident(id) {
+            return Cow::Borrowed(w);
+        }
+        // stale shared replica: its logical value is canonical-as-of(r)
+        let r = self.replicas.watermark(id);
+        if self.cfg.catchup.is_on() {
+            if let Some(missed) = self.history.replay_span(r, self.replicas.head()) {
+                if missed.is_empty() {
+                    // the missed span is all no-op rounds: bit-equal to head
+                    return Cow::Borrowed(self.replicas.canonical());
+                }
+                // the snapshot taken when the first missed round committed
+                // is canonical *before* that commit — exactly
+                // canonical-as-of(r), since the span up to it is empty
+                if let Some(w) = self.replicas.cached(missed[0].round) {
+                    return Cow::Borrowed(w);
+                }
+            }
+        }
+        let mut w = self
+            .clients[0]
+            .initial_params()
+            .expect("client 0 carries the session init");
+        self.orbit.replay_prefix(&mut w, r as usize);
+        Cow::Owned(w)
+    }
+
+    /// Mutable access to client `id`'s replica, promoting it to an owned
+    /// (diverged) buffer if it is still shared — the external write API
+    /// of the copy-on-write plane.  A stale client is materialized via
+    /// [`Session::replica`] first.
+    pub fn replica_mut(&mut self, id: usize) -> &mut Vec<f32> {
+        if !self.replicas.is_owned(id) && !self.replicas.is_current(id) {
+            let w = self.replica(id).into_owned();
+            self.replicas.set_owned(id, w);
+        }
+        self.replicas.promote_owned(id)
     }
 
     /// Drive all rounds; returns the run record.
@@ -373,7 +565,14 @@ impl Session {
             rounds: self.cfg.rounds,
             wall_s: start.elapsed().as_secs_f64(),
             net: self.net.stats.clone(),
+            replica: self.replica_stats(),
         }
+    }
+
+    /// Replica-plane accounting (peak bytes, owned count, canonical
+    /// commit count) — the coordinator-side Table 10 column.
+    pub fn replica_stats(&self) -> ReplicaStats {
+        self.replicas.stats()
     }
 
     /// One aggregation round.
@@ -392,8 +591,8 @@ impl Session {
     /// plan-phase output made injectable so tests (and schedulers) can pin
     /// a deterministic participation schedule, e.g. forcing a client
     /// offline for exactly k rounds (`rust/tests/catchup_parity.rs`).
-    /// Plans must arrive in round order when catch-up is on (the seed
-    /// history commits in round order).
+    /// Plans must arrive in round order (the seed history and the replica
+    /// plane both commit in round order).
     pub fn step_with_plan(&mut self, plan: RoundPlan) {
         match self.cfg.algorithm {
             Algorithm::FeedSign => self.step_feedsign(plan, None),
@@ -422,9 +621,17 @@ impl Session {
 
     /// Paper-accounting payload bits one participant moves in a round
     /// (uplink, downlink) — what the virtual event clock charges to the
-    /// link.
+    /// link.  `participants` is the *round's* voter count, not the pool
+    /// size K: the ZO-FedSGD downlink is `64 · participants` bits because
+    /// every client downloads the round's full pair bundle, one 64-bit
+    /// (seed, projection) pair per client that probed *this round* —
+    /// under partial participation the bundle shrinks with the sample,
+    /// never with K (`comm_accounting_zo_fedsgd_exact` and
+    /// `zo_fedsgd_partial_participation_divides_by_participants` pin the
+    /// distinction).  Reads the parameter count from the replica plane,
+    /// so it is well-defined for any pool the store accepts.
     fn round_payload_bits(&self, participants: usize) -> (u64, u64) {
-        let d = self.clients[0].engine.n_params() as u64;
+        let d = self.replicas.d() as u64;
         match self.cfg.algorithm {
             Algorithm::FeedSign | Algorithm::DpFeedSign { .. } => (1, 1),
             Algorithm::ZoFedSgd => (64, 64 * participants.max(1) as u64),
@@ -433,20 +640,45 @@ impl Session {
         }
     }
 
+    /// Execute-phase cost model for the size-aware fan-out: a
+    /// participant's probe cost scales with its shard size (Dirichlet
+    /// partitions are heavily skewed) and, when the net simulation is
+    /// active, with its link's device class (iot-class hardware is
+    /// slower than a wifi workstation).  Only a schedule input — the
+    /// committed bits are assignment-independent.
+    fn probe_costs(&self, participants: &[usize]) -> Vec<u64> {
+        participants
+            .iter()
+            .map(|&id| {
+                let shard = self.clients[id].shard.len().max(1) as u64;
+                let device = if self.net.is_active() {
+                    self.net.cfg.links.profile(id).device_cost_weight()
+                } else {
+                    1
+                };
+                shard.saturating_mul(device)
+            })
+            .collect()
+    }
+
     /// Replay (or dense-rebroadcast) the committed history to every client
     /// in `ids` that is stale relative to `to_round`, metering the
-    /// downlink per [`CatchupCfg`].  Updates go through the same exact
-    /// chunk-parallel AXPY path ([`crate::engine::Engine::update`] →
-    /// `zo::apply_update`) the participants used when each round
-    /// committed, in commit order — which is why a rejoining replica is
-    /// bit-identical to an always-on one.
+    /// downlink per [`CatchupCfg`].  For a `Shared` logical replica the
+    /// replay is bookkeeping: the records are billed and the watermark
+    /// advances, and the invariant (replay order = commit order through
+    /// the same exact AXPY) guarantees the materialized result *is* the
+    /// canonical buffer — so no math runs at all.  An `Owned` (diverged)
+    /// replica applies the records for real through its own engine.
+    /// Either way a rejoining replica is bit-identical to an always-on
+    /// one (pinned by `rust/tests/catchup_parity.rs` and the dense
+    /// mirror in `rust/tests/replica_parity.rs`).
     fn catch_up_clients(&mut self, ids: &[usize], to_round: u64) {
         debug_assert!(self.cfg.catchup.is_on());
-        let d = self.clients[0].engine.n_params();
+        let d = self.replicas.d();
         // honor the explicitly requested sequential baseline
         let _serial = (self.cfg.threads == 1).then(prng::serial_zone);
         for &id in ids {
-            let span = self.tracker.span(id, to_round);
+            let span = self.replicas.tracker().span(id, to_round);
             if span.is_empty() {
                 continue;
             }
@@ -460,7 +692,7 @@ impl Session {
                 // the missed span held only zero-participant no-op
                 // rounds: nothing to apply, nothing to bill (mirrors the
                 // distributed topology's empty-replay guard)
-                self.tracker.mark_synced(id, to_round);
+                self.replicas.mark_synced(id, to_round);
                 continue;
             }
             let records = match self.cfg.catchup {
@@ -478,11 +710,14 @@ impl Session {
                 }
                 CatchupCfg::Off => unreachable!(),
             };
-            let c = &mut self.clients[id];
-            for r in &records {
-                c.engine.update(&mut c.w, r.seed, r.step());
+            if self.replicas.is_owned(id) {
+                let engine = &mut self.clients[id].engine;
+                let w = self.replicas.owned_mut(id).expect("checked owned");
+                for r in &records {
+                    engine.update(w, r.seed, r.step());
+                }
             }
-            self.tracker.mark_synced(id, to_round);
+            self.replicas.mark_synced(id, to_round);
         }
     }
 
@@ -496,7 +731,7 @@ impl Session {
         let ids: Vec<usize> = (0..self.clients.len()).collect();
         let to = self.history.head_round();
         self.catch_up_clients(&ids, to);
-        self.history.compact_to(self.tracker.watermark());
+        self.history.compact_to(self.replicas.tracker().watermark());
     }
 
     /// Commit-phase history bookkeeping: append this round's records and
@@ -506,7 +741,7 @@ impl Session {
             return;
         }
         self.history.commit_round(round, records);
-        self.history.compact_to(self.tracker.watermark());
+        self.history.compact_to(self.replicas.tracker().watermark());
     }
 
     /// Worker count for a fan-out over `jobs` independent units.
@@ -520,7 +755,9 @@ impl Session {
     }
 
     /// FeedSign (Algorithm 1, FeedSign branch): shared seed = t, 1-bit
-    /// votes up, 1-bit majority (or DP vote) down, synchronized update.
+    /// votes up, 1-bit majority (or DP vote) down, synchronized update —
+    /// applied **once** to the canonical buffer (the replica plane's
+    /// whole point: the dense layout applied the same AXPY K times).
     fn step_feedsign(&mut self, plan: RoundPlan, dp_epsilon: Option<f32>) {
         let t = plan.round;
         // catch-up: stale participants replay their missed span *before*
@@ -531,9 +768,11 @@ impl Session {
         }
         if plan.participants.is_empty() {
             // zero-participant round: commit a no-op (no votes, no
-            // broadcast); the 0-sign orbit entry and the empty history
-            // round keep round indices dense for both replay paths
+            // broadcast); the 0-sign orbit entry, the empty history round
+            // and the head-only replica advance keep round indices dense
+            // for every replay path
             self.orbit.push_sign(0);
+            self.replicas.advance_noop(t, !self.cfg.catchup.is_on());
             self.commit_history(t, Vec::new());
             return;
         }
@@ -541,19 +780,28 @@ impl Session {
         let seed = t as u32;
         let (mu, bs, c_g) = (self.cfg.mu, self.cfg.batch_size, self.cfg.c_g_noise);
         let pin_serial = self.cfg.threads == 1;
+        let costs = self.probe_costs(&plan.participants);
         let train = &self.train;
         // execute: fan the probes out; each worker meters its own uplink
-        let outcomes = execute_probes(&mut self.clients, &plan, threads, pin_serial, |c, ledger| {
-            let batch = c.shard.next_batch(train, bs, &mut c.rng);
-            let mut p = c.engine.probe(&c.w, &batch, seed, mu);
-            if c_g > 0.0 {
-                p *= 1.0 + c_g * c.rng.normal();
-            }
-            let honest = if p >= 0.0 { 1i8 } else { -1 };
-            let sign = c.attack.mutate_sign(honest, &mut c.rng);
-            ledger.record(&Message::SignVote { sign });
-            Contribution::Sign(sign)
-        });
+        let outcomes = execute_probes(
+            &mut self.clients,
+            &self.replicas,
+            &plan,
+            &costs,
+            threads,
+            pin_serial,
+            |c, w, ledger| {
+                let batch = c.shard.next_batch(train, bs, &mut c.rng);
+                let mut p = c.engine.probe(w, &batch, seed, mu);
+                if c_g > 0.0 {
+                    p *= 1.0 + c_g * c.rng.normal();
+                }
+                let honest = if p >= 0.0 { 1i8 } else { -1 };
+                let sign = c.attack.mutate_sign(honest, &mut c.rng);
+                ledger.record(&Message::SignVote { sign });
+                Contribution::Sign(sign)
+            },
+        );
         // commit: votes and sub-ledgers in client-id order; each vote
         // then crosses the (possibly impaired) uplink — a flip lands in
         // the vote, a drop makes the PS treat the voter as absent this
@@ -577,6 +825,7 @@ impl Session {
             // every vote was lost in transit: the round aborts to a no-op
             // commit, exactly like a zero-participant plan
             self.orbit.push_sign(0);
+            self.replicas.advance_noop(t, !self.cfg.catchup.is_on());
             self.commit_history(t, Vec::new());
             return;
         }
@@ -586,27 +835,28 @@ impl Session {
         };
         let step = f as f32 * self.cfg.eta;
         let msg = Message::GlobalSign { sign: f };
+        let pool = self.clients.len();
+        // one canonical AXPY commits the round for the whole pool; with
+        // an explicit sequential baseline the inner chunk-parallel noise
+        // walk is pinned to one thread (same bits either way)
+        let _serial = pin_serial.then(prng::serial_zone);
+        let engine = &mut self.clients[0].engine;
         if self.cfg.catchup.is_on() {
-            // only the clients the PS heard from hear the broadcast;
-            // everyone else (sampled out, deadline-cut, or dropped on the
-            // uplink) recovers the round from the seed history on rejoin
-            let _serial = pin_serial.then(prng::serial_zone);
-            for &id in &voters {
+            // only the clients the PS heard from are billed the 1-bit
+            // downlink; everyone else (sampled out, deadline-cut, or
+            // dropped on the uplink) is left a stale logical replica and
+            // recovers the round from the seed history on rejoin
+            for _ in &voters {
                 self.ledger.record(&msg);
-                let c = &mut self.clients[id];
-                c.engine.update(&mut c.w, seed, step);
-                self.tracker.mark_synced(id, t + 1);
             }
+            self.replicas.advance(t, &voters, |w| engine.update(w, seed, step));
         } else {
-            // broadcast to every client (non-participants too: the 1-bit
-            // downlink is what keeps all replicas synchronized)
-            for _ in 0..self.clients.len() {
+            // every client is billed the broadcast (non-participants too:
+            // the 1-bit downlink is what keeps all replicas synchronized)
+            for _ in 0..pool {
                 self.ledger.record(&msg);
             }
-            let threads_all = self.worker_threads(self.clients.len());
-            for_each_client_parallel(&mut self.clients, threads_all, pin_serial, |c| {
-                c.engine.update(&mut c.w, seed, step);
-            });
+            self.replicas.advance_all(t, |w| engine.update(w, seed, step));
         }
         self.orbit.push_sign(f);
         self.commit_history(t, vec![SeedRecord::sign_step(t, f, self.cfg.eta)]);
@@ -614,7 +864,7 @@ impl Session {
 
     /// ZO-FedSGD (FwdLLM/FedKSeed-style): each participant samples its own
     /// seed, uploads a 64-bit seed-projection pair; everyone downloads all
-    /// pairs and applies the mean update.
+    /// pairs and the mean update commits once to the canonical buffer.
     fn step_zo_fedsgd(&mut self, plan: RoundPlan) {
         let t = plan.round;
         if self.cfg.catchup.is_on() {
@@ -623,24 +873,34 @@ impl Session {
         }
         if plan.participants.is_empty() {
             self.orbit.push_pairs(Vec::new());
+            self.replicas.advance_noop(t, !self.cfg.catchup.is_on());
             self.commit_history(t, Vec::new());
             return;
         }
         let threads = self.worker_threads(plan.participants.len());
         let (mu, bs, c_g) = (self.cfg.mu, self.cfg.batch_size, self.cfg.c_g_noise);
         let pin_serial = self.cfg.threads == 1;
+        let costs = self.probe_costs(&plan.participants);
         let train = &self.train;
-        let outcomes = execute_probes(&mut self.clients, &plan, threads, pin_serial, |c, ledger| {
-            let seed = c.rng.next_u32() & 0x7FFF_FFFF; // direction counters < 2^31
-            let batch = c.shard.next_batch(train, bs, &mut c.rng);
-            let mut p = c.engine.probe(&c.w, &batch, seed, mu);
-            if c_g > 0.0 {
-                p *= 1.0 + c_g * c.rng.normal();
-            }
-            let p = c.attack.mutate_projection(p, &mut c.rng);
-            ledger.record(&Message::Projection { seed, p });
-            Contribution::Pair { seed, p }
-        });
+        let outcomes = execute_probes(
+            &mut self.clients,
+            &self.replicas,
+            &plan,
+            &costs,
+            threads,
+            pin_serial,
+            |c, w, ledger| {
+                let seed = c.rng.next_u32() & 0x7FFF_FFFF; // direction counters < 2^31
+                let batch = c.shard.next_batch(train, bs, &mut c.rng);
+                let mut p = c.engine.probe(w, &batch, seed, mu);
+                if c_g > 0.0 {
+                    p *= 1.0 + c_g * c.rng.normal();
+                }
+                let p = c.attack.mutate_projection(p, &mut c.rng);
+                ledger.record(&Message::Projection { seed, p });
+                Contribution::Pair { seed, p }
+            },
+        );
         // commit in client-id order; each 64-bit pair crosses the uplink
         // (flipped seed bits pick a different-but-valid direction,
         // flipped projection bits corrupt the coefficient, a drop makes
@@ -663,33 +923,32 @@ impl Session {
         if pairs.is_empty() {
             // every pair was lost in transit: no-op round
             self.orbit.push_pairs(Vec::new());
+            self.replicas.advance_noop(t, !self.cfg.catchup.is_on());
             self.commit_history(t, Vec::new());
             return;
         }
         let k = pairs.len();
         let eta = self.cfg.eta;
         let msg = Message::GlobalProjections { pairs: pairs.clone() };
+        let pool = self.clients.len();
+        let _serial = pin_serial.then(prng::serial_zone);
+        let engine = &mut self.clients[0].engine;
+        let pairs_ref = &pairs;
+        let apply = |w: &mut [f32]| {
+            for &(seed, p) in pairs_ref {
+                engine.update(w, seed, eta * p / k as f32);
+            }
+        };
         if self.cfg.catchup.is_on() {
-            let _serial = pin_serial.then(prng::serial_zone);
-            for &id in &voters {
+            for _ in &voters {
                 self.ledger.record(&msg);
-                let c = &mut self.clients[id];
-                for &(seed, p) in &pairs {
-                    c.engine.update(&mut c.w, seed, eta * p / k as f32);
-                }
-                self.tracker.mark_synced(id, t + 1);
             }
+            self.replicas.advance(t, &voters, apply);
         } else {
-            for _ in 0..self.clients.len() {
+            for _ in 0..pool {
                 self.ledger.record(&msg);
             }
-            let threads_all = self.worker_threads(self.clients.len());
-            let pairs_ref = &pairs;
-            for_each_client_parallel(&mut self.clients, threads_all, pin_serial, |c| {
-                for &(seed, p) in pairs_ref {
-                    c.engine.update(&mut c.w, seed, eta * p / k as f32);
-                }
-            });
+            self.replicas.advance_all(t, apply);
         }
         // history: one record per pair, the mean-projection coefficient
         // folded into (sign, lr_scale) so replay applies `sign·lr_scale`
@@ -707,10 +966,13 @@ impl Session {
     /// gradient crosses the impaired uplink like every other message —
     /// which is where the dense baseline pays for its payload: one
     /// flipped exponent bit blows a gradient entry up by orders of
-    /// magnitude, the fragility the BER robustness bench measures.
+    /// magnitude, the fragility the BER robustness bench measures.  The
+    /// mean gradient commits once to the canonical buffer (every client
+    /// applies the identical mean, so the dense per-client loop was
+    /// K-fold redundant here too).
     fn step_fedsgd(&mut self, t: u64) {
         let bs = self.cfg.batch_size;
-        let d = self.clients[0].engine.n_params();
+        let d = self.replicas.d();
         // virtual clock: a dense round still costs wall-clock on every
         // link (there is no plan phase here, so the deadline cut does not
         // apply — the config layer rejects deadline+fedsgd)
@@ -724,7 +986,7 @@ impl Session {
         let mut delivered = 0usize;
         for c in &mut self.clients {
             let batch = c.shard.next_batch(&self.train, bs, &mut c.rng);
-            c.engine.grad(&mut c.w, &batch, &mut g);
+            c.engine.grad(self.replicas.probe_view(c.id), &batch, &mut g);
             c.attack.mutate_gradient(&mut g, &mut c.rng);
             self.ledger.record(&Message::Gradient { g: Vec::new() }); // meter below
             self.ledger.uplink_bits += 32 * d as u64;
@@ -738,43 +1000,52 @@ impl Session {
             return;
         }
         aggregation::finish_mean(&mut acc, delivered);
-        for c in &mut self.clients {
+        for _ in 0..self.clients.len() {
             self.ledger.record(&Message::GlobalGradient { g: Vec::new() });
             self.ledger.downlink_bits += 32 * d as u64;
-            for (wi, gi) in c.w.iter_mut().zip(&acc) {
-                *wi -= self.cfg.eta * gi;
-            }
         }
+        let eta = self.cfg.eta;
+        self.replicas.advance_all(t, |w| {
+            for (wi, gi) in w.iter_mut().zip(&acc) {
+                *wi -= eta * gi;
+            }
+        });
     }
 
-    /// Centralized MeZO (K = 1): no communication.
+    /// Centralized MeZO (K = 1): no communication; the single client's
+    /// replica *is* the canonical buffer.
     fn step_mezo(&mut self, t: u64) {
         let seed = t as u32;
         let (mu, bs) = (self.cfg.mu, self.cfg.batch_size);
         let c = &mut self.clients[0];
         let batch = c.shard.next_batch(&self.train, bs, &mut c.rng);
-        let p = c.engine.probe(&c.w, &batch, seed, mu);
-        c.engine.update(&mut c.w, seed, self.cfg.eta * p);
+        let p = c.engine.probe(self.replicas.probe_view(0), &batch, seed, mu);
+        let step = self.cfg.eta * p;
+        let engine = &mut c.engine;
+        self.replicas.advance_all(t, |w| engine.update(w, seed, step));
         self.orbit.push_pairs(vec![(seed, p)]);
     }
 
-    /// Evaluate the global model on the test set.  With catch-up off this
-    /// is client 0's replica (identical across clients for every
-    /// synchronized algorithm); with catch-up on, replicas legitimately
-    /// differ mid-run, so the freshest replica (lowest id among the
-    /// most-synced clients) stands in for the global model.
+    /// Evaluate the global model on the test set.  With catch-up off the
+    /// global model is the canonical buffer (every client is a current
+    /// shared view of it); with catch-up on, logical replicas legitimately
+    /// lag mid-run, so the freshest replica (lowest id among the
+    /// most-synced clients) stands in — and because a committed round
+    /// always marks its voters current, the freshest replica's bits are
+    /// the canonical buffer's (any rounds past its watermark are no-ops).
     pub fn evaluate(&mut self) -> (f32, f32) {
         let mut idx = 0usize;
         if self.cfg.catchup.is_on() {
-            let mut best = self.tracker.last_synced(0);
+            let mut best = self.replicas.watermark(0);
             for i in 1..self.clients.len() {
-                let s = self.tracker.last_synced(i);
+                let s = self.replicas.watermark(i);
                 if s > best {
                     best = s;
                     idx = i;
                 }
             }
         }
+        let view = self.replicas.eval_view(idx);
         let c = &mut self.clients[idx];
         let mut loss_sum = 0.0f64;
         let mut correct = 0u32;
@@ -784,7 +1055,7 @@ impl Session {
             let batch =
                 eval_shard.next_batch(&self.test, self.cfg.eval_batch_size, &mut self.eval_rng);
             let rows = batch.rows() as u32;
-            let (l, corr) = c.engine.eval(&mut c.w, &batch);
+            let (l, corr) = c.engine.eval(view, &batch);
             loss_sum += l as f64;
             correct += corr;
             total += rows;
@@ -795,13 +1066,32 @@ impl Session {
         )
     }
 
-    /// Checksum of client replicas — synchronized algorithms must keep all
-    /// replicas identical (`assert_synchronized` test hook).  With
-    /// catch-up on this holds only once every client is current (e.g.
-    /// after [`Session::catch_up_all`]), not mid-run.
+    /// Whether every logical replica currently holds the same bits —
+    /// synchronized algorithms must keep this true (`assert_synchronized`
+    /// test hook).  With catch-up on it holds only once every client is
+    /// current (e.g. after [`Session::catch_up_all`]), not mid-run.
+    /// Shared replicas compare by construction; a stale shared replica
+    /// counts as synchronized only when its missed span is all no-ops;
+    /// owned replicas compare bit patterns against the canonical buffer
+    /// (NaN-safe — an impaired channel can legitimately drive weights
+    /// non-finite, and bit equality must not hide behind `NaN != NaN`).
     pub fn replicas_synchronized(&self) -> bool {
-        let w0 = &self.clients[0].w;
-        self.clients.iter().all(|c| &c.w == w0)
+        let head = self.replicas.head();
+        let canonical = self.replicas.canonical();
+        (0..self.clients.len()).all(|id| match self.replicas.state(id) {
+            ReplicaState::Shared => {
+                self.replicas.watermark(id) == head
+                    || self
+                        .history
+                        .replay_span(self.replicas.watermark(id), head)
+                        .is_some_and(|missed| missed.is_empty())
+            }
+            ReplicaState::Owned(w) => {
+                self.replicas.watermark(id) == head
+                    && w.len() == canonical.len()
+                    && w.iter().zip(canonical).all(|(a, b)| a.to_bits() == b.to_bits())
+            }
+        })
     }
 
     /// Batch for external probing (sign-reversal studies).
@@ -927,7 +1217,7 @@ mod tests {
         }
         let mut w = s.clients[0].engine.init_params(7);
         s.orbit.replay(&mut w);
-        assert_eq!(w, s.clients[0].w, "orbit replay must reconstruct exactly");
+        assert_eq!(w.as_slice(), &*s.replica(0), "orbit replay must reconstruct exactly");
     }
 
     #[test]
@@ -958,7 +1248,7 @@ mod tests {
             seq.step(t);
             par.step(t);
         }
-        assert_eq!(seq.clients[0].w, par.clients[0].w, "bit-identical across thread counts");
+        assert_eq!(seq.replica(0), par.replica(0), "bit-identical across thread counts");
         assert_eq!(seq.ledger.uplink_bits, par.ledger.uplink_bits);
     }
 
@@ -1005,19 +1295,20 @@ mod tests {
     fn zero_participant_round_commits_noop() {
         let mut s = make_session(Algorithm::FeedSign, 3, 0);
         s.cfg.participation = ParticipationCfg::Fraction(0.0);
-        let w0 = s.clients[0].w.clone();
+        let w0 = s.replica(0).into_owned();
         for t in 0..5 {
             s.step(t);
         }
-        assert_eq!(s.clients[0].w, w0, "no participants, no update");
+        assert_eq!(&*s.replica(0), w0.as_slice(), "no participants, no update");
         assert_eq!(s.ledger.total_bits(), 0, "no votes, no broadcast");
         assert_eq!(s.orbit.len(), 5, "round indices stay dense");
         assert!(s.replicas_synchronized());
+        assert_eq!(s.replicas.head(), 5, "no-op rounds still advance the head");
         // the 0-sign entries replay as no-ops, so the orbit still
         // reconstructs exactly
         let mut w = s.clients[0].engine.init_params(7);
         s.orbit.replay(&mut w);
-        assert_eq!(w, s.clients[0].w);
+        assert_eq!(w.as_slice(), &*s.replica(0));
     }
 
     #[test]
@@ -1106,11 +1397,12 @@ mod tests {
         // everyone applies the same delivered (possibly corrupted) pairs;
         // compare replicas as bit patterns — corruption can drive weights
         // non-finite, where f32 equality would lie
-        let w0: Vec<u32> = s.clients[0].w.iter().map(|v| v.to_bits()).collect();
-        for c in &s.clients[1..] {
-            let wi: Vec<u32> = c.w.iter().map(|v| v.to_bits()).collect();
-            assert_eq!(wi, w0, "client {} diverged", c.id);
+        let w0: Vec<u32> = s.replica(0).iter().map(|v| v.to_bits()).collect();
+        for id in 1..4 {
+            let wi: Vec<u32> = s.replica(id).iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wi, w0, "client {id} diverged");
         }
+        assert!(s.replicas_synchronized(), "bit-level equality, NaN included");
     }
 
     #[test]
@@ -1137,5 +1429,172 @@ mod tests {
         }
         let (l1, _) = s.evaluate();
         assert!(l1 < l0);
+    }
+
+    #[test]
+    fn all_synced_run_holds_one_canonical_buffer_and_commits_once_per_round() {
+        let mut s = make_session(Algorithm::FeedSign, 5, 0);
+        for t in 0..40 {
+            s.step(t);
+        }
+        let st = s.replica_stats();
+        let d = s.replicas.d();
+        assert_eq!(st.peak_bytes, 4 * d, "all-synced pool must cost exactly one d-float buffer");
+        assert!(st.peak_bytes <= 2 * 4 * d, "the acceptance bound, with margin");
+        assert_eq!(st.owned_clients, 0);
+        assert_eq!(st.canonical_commits, 40, "exactly one canonical AXPY per round");
+        assert_eq!(st.dense_bytes, 4 * d * 5);
+    }
+
+    #[test]
+    fn cow_write_diverges_one_client_without_touching_the_pool() {
+        let mut s = make_session(Algorithm::FeedSign, 4, 0);
+        for t in 0..10 {
+            s.step(t);
+        }
+        let before = s.replica(0).into_owned();
+        s.replica_mut(2)[0] += 1.0;
+        assert!(!s.replicas_synchronized(), "a diverged owned replica breaks equality");
+        assert_eq!(&*s.replica(0), before.as_slice(), "canonical untouched by the COW write");
+        assert_eq!(s.replica_stats().owned_clients, 1);
+        // the diverged client keeps riding commits with real math
+        for t in 10..20 {
+            s.step(t);
+        }
+        assert_ne!(s.replica(2), s.replica(0));
+        let gap = s.replica(2)[0] - s.replica(0)[0];
+        assert!((gap - 1.0).abs() < 1e-4, "divergence tracks the injected write: {gap}");
+    }
+
+    #[test]
+    fn stale_replica_reads_resolve_through_cache_and_reconstruction() {
+        let mut s = make_session(Algorithm::FeedSign, 3, 0);
+        s.cfg.catchup = CatchupCfg::Replay;
+        let all = |t: u64| RoundPlan { round: t, participants: vec![0, 1, 2] };
+        let without2 = |t: u64| RoundPlan { round: t, participants: vec![0, 1] };
+        for t in 0..4 {
+            s.step_with_plan(all(t));
+        }
+        let frozen = s.replica(2).into_owned();
+        for t in 4..8 {
+            s.step_with_plan(without2(t));
+        }
+        // client 2 is stale at round 4; its logical replica must read as
+        // the pre-round-4 canonical, via the snapshot cache
+        assert!(s.replicas.resident(2).is_none());
+        assert_eq!(&*s.replica(2), frozen.as_slice(), "cache-resolved stale read");
+        assert!(s.replica_stats().snapshots > 0);
+        // with the cache disabled the same read reconstructs from the
+        // orbit prefix — same bits, one allocation
+        let mut cold = make_session(Algorithm::FeedSign, 3, 0);
+        cold.cfg.catchup = CatchupCfg::Replay;
+        cold.cfg.replica_cache = 0;
+        cold.replicas = ReplicaStore::new(
+            cold.clients[0].initial_params().unwrap(),
+            3,
+            0,
+        );
+        for t in 0..4 {
+            cold.step_with_plan(all(t));
+        }
+        for t in 4..8 {
+            cold.step_with_plan(without2(t));
+        }
+        assert_eq!(cold.replica_stats().snapshots, 0);
+        assert!(matches!(cold.replica(2), Cow::Owned(_)), "cold read reconstructs");
+        assert_eq!(&*cold.replica(2), frozen.as_slice(), "reconstruction-resolved stale read");
+    }
+
+    #[test]
+    fn divergent_initial_checkpoint_starts_owned() {
+        let train = generate(&SYNTH_CIFAR10, 200, 0);
+        let test = generate(&SYNTH_CIFAR10, 100, 1);
+        let shards = split(&train, 3, Partition::Iid, 0);
+        let clients: Vec<Client> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| {
+                let mut c = Client::new(
+                    id,
+                    Box::new(NativeEngine::new(LinearProbe::new(128, 10))),
+                    shard,
+                    7,
+                );
+                if id == 2 {
+                    let w = vec![0.5; c.engine.n_params()];
+                    c = c.with_checkpoint(&w);
+                }
+                c
+            })
+            .collect();
+        let cfg = SessionCfg { algorithm: Algorithm::FeedSign, seed: 7, ..Default::default() };
+        let s = Session::new(cfg, clients, train, test);
+        assert_eq!(s.replica_stats().owned_clients, 1);
+        assert!(s.replicas.is_owned(2));
+        assert_eq!(s.replica(2)[0], 0.5);
+        assert!(!s.replicas_synchronized());
+        assert!(
+            matches!(s.clients[2].init, ClientInit::Consumed),
+            "the materialized checkpoint is moved into the store, never retained as a dead copy"
+        );
+    }
+
+    #[test]
+    fn pack_bins_balances_and_preserves_every_rank() {
+        // skewed costs: LPT must not put the two giants in one bin
+        let costs = [100u64, 1, 1, 1, 90, 1, 1, 1];
+        let bins = pack_bins(&costs, 2);
+        assert_eq!(bins.len(), 2);
+        let mut all: Vec<usize> = bins.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>(), "every rank packed exactly once");
+        let load = |b: &[usize]| b.iter().map(|&r| costs[r]).sum::<u64>();
+        let (a, b) = (load(&bins[0]), load(&bins[1]));
+        assert!(a.abs_diff(b) <= 8, "LPT must balance skewed loads: {a} vs {b}");
+        // determinism: identical inputs, identical packing
+        assert_eq!(pack_bins(&costs, 2), bins);
+        // degenerate shapes
+        assert_eq!(pack_bins(&[5], 4).iter().flatten().count(), 1);
+        assert_eq!(pack_bins(&[0, 0, 0], 2).iter().flatten().count(), 3);
+    }
+
+    #[test]
+    fn dirichlet_skewed_shards_stay_bit_identical_across_assignments() {
+        // the size-aware packing is schedule-only: a heavily skewed
+        // Dirichlet partition must produce the same bits for 1 and N
+        // workers (which exercises genuinely unequal bins)
+        let build = |threads: usize| {
+            let train = generate(&SYNTH_CIFAR10, 400, 0);
+            let test = generate(&SYNTH_CIFAR10, 100, 1);
+            let shards = split(&train, 5, Partition::Dirichlet { beta: 0.1 }, 3);
+            let clients: Vec<Client> = shards
+                .into_iter()
+                .enumerate()
+                .map(|(id, shard)| {
+                    Client::new(
+                        id,
+                        Box::new(NativeEngine::new(LinearProbe::new(128, 10))),
+                        shard,
+                        7,
+                    )
+                })
+                .collect();
+            let cfg = SessionCfg {
+                algorithm: Algorithm::FeedSign,
+                threads,
+                seed: 7,
+                eval_every: 0,
+                ..Default::default()
+            };
+            Session::new(cfg, clients, train, test)
+        };
+        let mut seq = build(1);
+        let mut par = build(3);
+        for t in 0..40 {
+            seq.step(t);
+            par.step(t);
+        }
+        assert_eq!(seq.replica(0), par.replica(0));
+        assert_eq!(seq.ledger.uplink_bits, par.ledger.uplink_bits);
     }
 }

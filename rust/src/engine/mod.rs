@@ -27,18 +27,33 @@ pub trait Engine: Send {
     /// enforces it (perturbed views are regenerated into engine scratch).
     fn probe(&mut self, w: &[f32], batch: &Batch, seed: u32, mu: f32) -> f32;
 
-    /// Apply the aggregated update `w -= step * z(seed)`.
+    /// Apply the aggregated update `w -= step * z(seed)`.  Must be a
+    /// pure function of `(w, seed, step)`: the coordinator's replica
+    /// plane relies on one canonical apply being bit-identical to the K
+    /// per-client applies a dense layout would perform
+    /// ([`crate::coordinator::replica`]).  Implementations should also
+    /// match the native replay primitive
+    /// ([`crate::simkit::zo::apply_update`]) bit-for-bit — orbit replay,
+    /// seed-history catch-up and the replica plane's cold stale-read
+    /// reconstruction are all defined in terms of it (the PJRT kernel is
+    /// currently pinned only to 1e-6; see
+    /// `Session::replica` for the operational consequence).
     fn update(&mut self, w: &mut [f32], seed: u32, step: f32);
 
-    /// `(mean loss, #correct)` on an eval batch.
-    fn eval(&mut self, w: &mut [f32], batch: &Batch) -> (f32, u32);
+    /// `(mean loss, #correct)` on an eval batch.  Takes `w` by shared
+    /// reference — evaluation never mutates the replica, and with the
+    /// copy-on-write replica plane many clients evaluate against the
+    /// *same* canonical buffer.
+    fn eval(&mut self, w: &[f32], batch: &Batch) -> (f32, u32);
 
     /// First-order step `w -= lr * grad`; returns the pre-step loss.
     /// Powers the FedSGD baseline and pretraining.
     fn fo_step(&mut self, w: &mut [f32], batch: &Batch, lr: f32) -> f32;
 
     /// Full gradient (for FedSGD's gradient *exchange*); returns loss.
-    fn grad(&mut self, w: &mut [f32], batch: &Batch, out: &mut [f32]) -> f32;
+    /// Like [`Engine::probe`], read-only in `w` — FedSGD clients compute
+    /// their local gradients against the shared canonical buffer.
+    fn grad(&mut self, w: &[f32], batch: &Batch, out: &mut [f32]) -> f32;
 
     /// Fresh initial parameter vector (same across all clients/engines for
     /// a given seed — everyone starts from the shared checkpoint).
@@ -84,7 +99,7 @@ impl<M: Model> Engine for NativeEngine<M> {
         zo::apply_update(w, seed, step);
     }
 
-    fn eval(&mut self, w: &mut [f32], batch: &Batch) -> (f32, u32) {
+    fn eval(&mut self, w: &[f32], batch: &Batch) -> (f32, u32) {
         self.model.eval(w, batch)
     }
 
@@ -100,7 +115,7 @@ impl<M: Model> Engine for NativeEngine<M> {
         loss
     }
 
-    fn grad(&mut self, w: &mut [f32], batch: &Batch, out: &mut [f32]) -> f32 {
+    fn grad(&mut self, w: &[f32], batch: &Batch, out: &mut [f32]) -> f32 {
         self.model.loss_and_grad(w, batch, out)
     }
 
@@ -172,10 +187,10 @@ mod tests {
     #[test]
     fn grad_matches_fo_step_direction() {
         let mut e = engine();
-        let mut w = e.init_params(0);
+        let w = e.init_params(0);
         let b = batch(3);
         let mut g = vec![0.0; w.len()];
-        e.grad(&mut w, &b, &mut g);
+        e.grad(&w, &b, &mut g);
         let mut w2 = w.clone();
         e.fo_step(&mut w2, &b, 0.1);
         for i in 0..w.len() {

@@ -38,6 +38,14 @@
 //! `catchup = "replay" | "rebroadcast" | "off"` knob) — bit-identically
 //! to an always-on client, as pinned by `rust/tests/catchup_parity.rs`.
 //!
+//! Client memory is flat in the pool size: [`coordinator::replica`] is a
+//! copy-on-write shared parameter store — one canonical buffer at the
+//! committed head round, per-client `Shared`/`Owned` logical replicas,
+//! and a single canonical AXPY per committed round — so a pool of
+//! hundreds of clients costs the coordinator `O(d)` instead of `K·d`
+//! (pinned against a dense K-replica mirror by
+//! `rust/tests/replica_parity.rs`).
+//!
 //! The protocol's robustness story has an executable surface in [`net`]:
 //! a deterministic impaired-channel simulator (bit-flip / erasure
 //! channels, heterogeneous per-client link profiles, a virtual event

@@ -30,10 +30,10 @@ COMMANDS:
                [--threads N] [--participation full|fraction:F|bernoulli:P]
                [--catchup off|replay|rebroadcast]
                [--channel ideal|ber:P|drop:P] [--link mobile|wifi|iot|mixed]
-               [--deadline T] [--channel-seed S]
+               [--deadline T] [--channel-seed S] [--replica-cache N]
   quickstart   [--rounds 2000] [--threads N] [--participation SPEC]
                [--catchup SPEC] [--channel SPEC] [--link SPEC]
-               [--deadline T] [--channel-seed S]
+               [--deadline T] [--channel-seed S] [--replica-cache N]
   init-config
   theory       [--eta 1e-3] [--p-max 0.1]
   replay       --input run.orbit --n-params D
@@ -69,8 +69,9 @@ fn main() -> Result<()> {
 }
 
 /// Apply the round-engine CLI overrides (`--threads`, `--participation`,
-/// `--catchup`, `--channel`, `--link`, `--deadline`, `--channel-seed`)
-/// on top of a loaded config, re-validating afterwards.
+/// `--catchup`, `--channel`, `--link`, `--deadline`, `--channel-seed`,
+/// `--replica-cache`) on top of a loaded config, re-validating
+/// afterwards.
 fn apply_engine_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     if let Some(t) = args.str("threads") {
         cfg.threads = t.parse().context("parsing --threads")?;
@@ -92,6 +93,9 @@ fn apply_engine_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()>
     }
     if let Some(s) = args.str("channel-seed") {
         cfg.channel_seed = s.parse().context("parsing --channel-seed")?;
+    }
+    if let Some(r) = args.str("replica-cache") {
+        cfg.replica_cache = r.parse().context("parsing --replica-cache")?;
     }
     cfg.validate()
 }
@@ -230,6 +234,17 @@ fn print_result(result: &metrics::RunResult) {
         result.ledger.downlink_bits,
         result.ledger.uplink_msgs + result.ledger.downlink_msgs
     );
+    if result.replica.clients > 0 {
+        println!(
+            "replica plane: peak {} B for K={} (dense layout: {} B), \
+             {} owned, {} canonical commits",
+            result.replica.peak_bytes,
+            result.replica.clients,
+            result.replica.dense_bytes,
+            result.replica.owned_clients,
+            result.replica.canonical_commits
+        );
+    }
     if result.net != feedsign::net::NetStats::default() {
         println!(
             "channel: {} dropped, {} corrupted ({} bits flipped), \

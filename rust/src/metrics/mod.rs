@@ -26,6 +26,11 @@ pub struct RunResult {
     /// Impaired-channel counters ([`crate::net`]); all zero on a run
     /// without an active simulation.
     pub net: crate::net::NetStats,
+    /// Replica-plane accounting ([`crate::coordinator::replica`]):
+    /// peak coordinator replica bytes (O(d) on the all-synced path vs
+    /// the dense layout's K·d), owned-replica count, and the
+    /// one-canonical-AXPY-per-round commit counter.
+    pub replica: crate::coordinator::ReplicaStats,
 }
 
 impl RunResult {
@@ -125,6 +130,7 @@ mod tests {
             rounds: accs.len() as u64,
             wall_s: 0.0,
             net: Default::default(),
+            replica: Default::default(),
         }
     }
 

@@ -153,6 +153,19 @@ impl LinkProfile {
             + up_bits as f64 / self.up_bps
             + down_bits as f64 / self.down_bps
     }
+
+    /// Relative *compute*-cost weight of the device class behind this
+    /// link — the execute fan-out's size-aware bin-packing signal
+    /// (`coordinator::session`): in the paper's deployment archetypes a
+    /// slow uplink correlates with weak hardware, so a worker that draws
+    /// the iot-class client should not also draw three wifi clients.
+    /// Log-scaled on uplink bandwidth (wifi 1, mobile 4, iot 12);
+    /// deterministic, and only ever a scheduling hint — the committed
+    /// bits are assignment-independent.
+    pub fn device_cost_weight(&self) -> u64 {
+        let ratio = (2e8 / self.up_bps).max(1.0);
+        (ratio.log2().ceil() as u64).max(1)
+    }
 }
 
 /// How link profiles map onto the client pool.
@@ -580,6 +593,17 @@ impl NetSim {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn device_cost_weight_orders_the_link_classes() {
+        let (wifi, mobile, iot) = (
+            LinkProfile::wifi().device_cost_weight(),
+            LinkProfile::mobile().device_cost_weight(),
+            LinkProfile::iot().device_cost_weight(),
+        );
+        assert!(wifi < mobile && mobile < iot, "{wifi} < {mobile} < {iot}");
+        assert!(wifi >= 1, "weights are positive bin-packing costs");
+    }
 
     fn sim(channel: &str, deadline_s: f64) -> NetSim {
         NetSim::new(NetCfg {

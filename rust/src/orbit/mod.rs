@@ -63,7 +63,17 @@ impl Orbit {
     /// entries (zero-participant no-op rounds) replay as no-ops while
     /// keeping the seed schedule dense.
     pub fn replay(&self, w: &mut [f32]) {
-        for (t, entry) in self.entries.iter().enumerate() {
+        self.replay_prefix(w, self.entries.len());
+    }
+
+    /// Replay only the first `rounds` entries — the parameters *as of*
+    /// round `rounds`.  Entry index equals round index (no-op rounds
+    /// store explicit entries), so this reconstructs any historical
+    /// replica bit-exactly; the coordinator's replica plane uses it to
+    /// materialize a stale logical replica that fell out of the snapshot
+    /// cache ([`crate::coordinator::replica`]).
+    pub fn replay_prefix(&self, w: &mut [f32], rounds: usize) {
+        for (t, entry) in self.entries.iter().take(rounds).enumerate() {
             match entry {
                 OrbitEntry::Sign(s) => {
                     zo::apply_update(w, t as u32, *s as f32 * self.eta);
@@ -77,7 +87,6 @@ impl Orbit {
             }
         }
     }
-
 }
 
 /// Compact binary encoding (separate from serde so the storage ledger
@@ -316,6 +325,29 @@ mod tests {
         crate::simkit::zo::apply_update(&mut expect, 2, -0.01);
         o.replay(&mut w);
         assert_eq!(w, expect, "0-sign entry must not move parameters or shift seeds");
+    }
+
+    #[test]
+    fn replay_prefix_reconstructs_intermediate_replicas() {
+        let init = normals_vec(11, 256);
+        let mut w = init.clone();
+        let mut o = Orbit::new("feedsign", 11, 0.01);
+        let mut snapshots = Vec::new();
+        for t in 0..30u32 {
+            snapshots.push(w.clone()); // parameters as of round t
+            let s = if t % 3 == 0 { -1i8 } else { 1 };
+            crate::simkit::zo::apply_update(&mut w, t, s as f32 * 0.01);
+            o.push_sign(s);
+        }
+        for (t, expect) in snapshots.iter().enumerate() {
+            let mut wp = init.clone();
+            o.replay_prefix(&mut wp, t);
+            assert_eq!(&wp, expect, "prefix {t} must be bit-exact");
+        }
+        // full-length prefix == replay
+        let mut wp = init.clone();
+        o.replay_prefix(&mut wp, 30);
+        assert_eq!(wp, w);
     }
 
     #[test]

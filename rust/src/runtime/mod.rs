@@ -241,7 +241,7 @@ impl Engine for SharedPjrtEngine {
         self.model.update(w, seed, step).expect("pjrt update")
     }
 
-    fn eval(&mut self, w: &mut [f32], batch: &Batch) -> (f32, u32) {
+    fn eval(&mut self, w: &[f32], batch: &Batch) -> (f32, u32) {
         self.model.eval(w, batch).expect("pjrt eval")
     }
 
@@ -249,7 +249,7 @@ impl Engine for SharedPjrtEngine {
         self.model.fo_step(w, batch, lr).expect("pjrt fo_step")
     }
 
-    fn grad(&mut self, _w: &mut [f32], _batch: &Batch, _out: &mut [f32]) -> f32 {
+    fn grad(&mut self, _w: &[f32], _batch: &Batch, _out: &mut [f32]) -> f32 {
         unimplemented!("dense gradient exchange is a native-engine baseline")
     }
 

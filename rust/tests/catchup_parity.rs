@@ -80,7 +80,8 @@ fn rejoin_is_bit_identical_for_every_engine_and_gap() {
                 t += 1;
             }
             assert_eq!(
-                s.clients[2].w, s.clients[0].w,
+                s.replica(2),
+                s.replica(0),
                 "{}: client offline for {gap} rounds rejoined with a drifted replica",
                 algo.name()
             );
@@ -133,9 +134,9 @@ fn rebroadcast_pays_dense_checkpoint_and_stays_exact() {
     let replay = schedule(CatchupCfg::Replay);
     let rebroadcast = schedule(CatchupCfg::Rebroadcast);
     // both rejoin exactly...
-    assert_eq!(replay.clients[3].w, replay.clients[0].w);
-    assert_eq!(rebroadcast.clients[3].w, rebroadcast.clients[0].w);
-    assert_eq!(rebroadcast.clients[3].w, replay.clients[3].w, "policies must agree on bits");
+    assert_eq!(replay.replica(3), replay.replica(0));
+    assert_eq!(rebroadcast.replica(3), rebroadcast.replica(0));
+    assert_eq!(rebroadcast.replica(3), replay.replica(3), "policies must agree on bits");
     // ...but the dense fallback pays 32·d where replay paid 3 bits
     let d = replay.clients[0].engine.n_params() as u64;
     assert_eq!(
@@ -163,8 +164,13 @@ fn full_replay_run_matches_broadcast_run_bit_for_bit() {
             rep.step(t);
         }
         rep.catch_up_all();
-        for (a, b) in off.clients.iter().zip(&rep.clients) {
-            assert_eq!(a.w, b.w, "{}: replica {} diverged across catch-up modes", algo.name(), a.id);
+        for id in 0..off.clients.len() {
+            assert_eq!(
+                off.replica(id),
+                rep.replica(id),
+                "{}: replica {id} diverged across catch-up modes",
+                algo.name()
+            );
         }
         assert_eq!(off.ledger.uplink_bits, rep.ledger.uplink_bits, "{}", algo.name());
         assert_eq!(
@@ -196,7 +202,7 @@ fn compaction_never_drops_records_the_slowest_client_needs() {
         s.step_with_plan(plan_without(t, 3, 2));
         t += 1;
     }
-    assert_eq!(s.tracker.last_synced(2), 2);
+    assert_eq!(s.tracker().last_synced(2), 2);
     assert_eq!(
         s.history.records_len(),
         50,
@@ -204,7 +210,7 @@ fn compaction_never_drops_records_the_slowest_client_needs() {
     );
     // rejoin: the span must be fully servable and exact
     s.step_with_plan(plan_full(t, 3));
-    assert_eq!(s.clients[2].w, s.clients[0].w, "rejoin after 50 rounds must be bit-identical");
+    assert_eq!(s.replica(2), s.replica(0), "rejoin after 50 rounds must be bit-identical");
     // with everyone synced, the very next compaction trims to capacity
     assert!(
         s.history.records_len() <= 4,

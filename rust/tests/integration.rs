@@ -43,6 +43,7 @@ fn lm_cfg(algorithm: &str, rounds: u64) -> ExperimentConfig {
         deadline: 0.0,
         channel_seed: 0,
         threads: 0,
+        replica_cache: 4,
         pretrain_rounds: 0,
         seed: 1,
         verbose: false,
@@ -107,7 +108,7 @@ fn orbit_roundtrips_through_disk_format_and_replays() {
     let decoded = orbit::decode(&bytes).unwrap();
     let mut w = session.clients[0].engine.init_params(session.cfg.seed);
     decoded.replay(&mut w);
-    assert_eq!(w, session.clients[0].w, "disk-roundtripped orbit must replay exactly");
+    assert_eq!(w.as_slice(), &*session.replica(0), "disk-roundtripped orbit must replay exactly");
     let _ = result;
 }
 
@@ -118,7 +119,7 @@ fn zo_fedsgd_orbit_replays_exactly_too() {
     let decoded = orbit::decode(&orbit::encode(&session.orbit)).unwrap();
     let mut w = session.clients[0].engine.init_params(session.cfg.seed);
     decoded.replay(&mut w);
-    assert_eq!(w, session.clients[0].w);
+    assert_eq!(w.as_slice(), &*session.replica(0));
 }
 
 #[test]

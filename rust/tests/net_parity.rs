@@ -103,8 +103,12 @@ fn ideal_channel_is_bit_identical_to_the_no_net_baseline() {
         clocked.step(t);
     }
     for s in [&ideal, &clocked] {
-        for (b, i) in baseline.clients.iter().zip(&s.clients) {
-            assert_eq!(bits(&b.w), bits(&i.w), "client {} replica drifted", b.id);
+        for id in 0..baseline.clients.len() {
+            assert_eq!(
+                bits(&baseline.replica(id)),
+                bits(&s.replica(id)),
+                "client {id} replica drifted"
+            );
         }
         assert_eq!(baseline.ledger.uplink_bits, s.ledger.uplink_bits);
         assert_eq!(baseline.ledger.downlink_bits, s.ledger.downlink_bits);
@@ -150,8 +154,12 @@ fn impaired_runs_are_identical_across_worker_thread_counts() {
         }
         seq.catch_up_all();
         par.catch_up_all();
-        for (a, b) in seq.clients.iter().zip(&par.clients) {
-            assert_eq!(bits(&a.w), bits(&b.w), "{channel:?}: client {} diverged", a.id);
+        for id in 0..seq.clients.len() {
+            assert_eq!(
+                bits(&seq.replica(id)),
+                bits(&par.replica(id)),
+                "{channel:?}: client {id} diverged"
+            );
         }
         assert_eq!(seq.ledger.uplink_bits, par.ledger.uplink_bits, "{channel:?}");
         assert_eq!(seq.ledger.downlink_bits, par.ledger.downlink_bits, "{channel:?}");
@@ -176,8 +184,8 @@ fn impaired_zo_runs_are_identical_across_worker_thread_counts() {
         seq.step(t);
         par.step(t);
     }
-    for (a, b) in seq.clients.iter().zip(&par.clients) {
-        assert_eq!(bits(&a.w), bits(&b.w), "client {} diverged", a.id);
+    for id in 0..seq.clients.len() {
+        assert_eq!(bits(&seq.replica(id)), bits(&par.replica(id)), "client {id} diverged");
     }
     assert_eq!(seq.net.stats, par.net.stats);
 }
@@ -203,12 +211,12 @@ fn same_channel_seed_reproduces_different_channel_seed_diverges() {
     };
     let a = build(5);
     let b = build(5);
-    assert_eq!(bits(&a.clients[0].w), bits(&b.clients[0].w), "same seed must reproduce");
+    assert_eq!(bits(&a.replica(0)), bits(&b.replica(0)), "same seed must reproduce");
     assert_eq!(a.net.stats, b.net.stats);
     let c = build(6);
     assert_ne!(
-        bits(&a.clients[0].w),
-        bits(&c.clients[0].w),
+        bits(&a.replica(0)),
+        bits(&c.replica(0)),
         "a different channel seed draws a different drop pattern"
     );
 }
@@ -291,7 +299,7 @@ fn impaired_cross_topology_parity() {
         for (id, w) in res.finals.iter().enumerate() {
             assert_eq!(
                 bits(w),
-                bits(&sync.clients[id].w),
+                bits(&sync.replica(id)),
                 "{label}: client {id} diverged across topologies"
             );
         }
@@ -321,7 +329,7 @@ fn ber_zero_bitflip_channel_matches_ideal_replicas() {
         ideal.step(t);
         zero.step(t);
     }
-    assert_eq!(bits(&ideal.clients[0].w), bits(&zero.clients[0].w));
+    assert_eq!(bits(&ideal.replica(0)), bits(&zero.replica(0)));
     assert_eq!(ideal.ledger.uplink_bits, zero.ledger.uplink_bits);
     assert_eq!(zero.net.stats.flipped_bits, 0);
     assert_eq!(zero.net.stats.rounds, 80, "the virtual clock still observed the run");

@@ -64,8 +64,8 @@ fn assert_parity(mut seq: Session, mut par: Session, rounds: u64, label: &str) {
     }
     // 1. final replicas: every client, bit-identical
     assert_eq!(seq.clients.len(), par.clients.len());
-    for (a, b) in seq.clients.iter().zip(&par.clients) {
-        assert_eq!(a.w, b.w, "{label}: replica {} diverged", a.id);
+    for id in 0..seq.clients.len() {
+        assert_eq!(seq.replica(id), par.replica(id), "{label}: replica {id} diverged");
     }
     assert!(seq.replicas_synchronized(), "{label}: sequential replicas desynced");
     assert!(par.replicas_synchronized(), "{label}: parallel replicas desynced");
@@ -79,7 +79,7 @@ fn assert_parity(mut seq: Session, mut par: Session, rounds: u64, label: &str) {
     assert_eq!(seq.orbit.entries, par.orbit.entries, "{label}: orbit entries");
     let mut w = par.clients[0].engine.init_params(11);
     par.orbit.replay(&mut w);
-    assert_eq!(w, par.clients[0].w, "{label}: orbit replay must reconstruct exactly");
+    assert_eq!(w.as_slice(), &*par.replica(0), "{label}: orbit replay must reconstruct exactly");
 }
 
 #[test]
@@ -138,7 +138,8 @@ fn parity_across_many_thread_counts() {
             s.step(t);
         }
         assert_eq!(
-            s.clients[0].w, reference.clients[0].w,
+            s.replica(0),
+            reference.replica(0),
             "threads={threads} diverged from sequential"
         );
         assert_eq!(s.ledger.uplink_bits, reference.ledger.uplink_bits);

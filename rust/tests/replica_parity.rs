@@ -1,0 +1,308 @@
+//! Replica-plane parity: the copy-on-write shared parameter store
+//! (`coordinator::replica`) must be **bit-identical** to the dense
+//! layout it replaced — K per-client buffers, each applying every
+//! delivered update itself.  The tests maintain exactly that dense
+//! K-replica mirror on the side (incremental `zo::apply_update` per
+//! client per delivered round, the old memory layout's arithmetic) and
+//! compare bit patterns against the store's logical replicas:
+//!
+//! * FeedSign / DP-FeedSign / ZO-FedSGD under partial participation,
+//!   BER impairment and deadline stragglers (`catchup = "off"`: every
+//!   committed round reaches every client, and the orbit records the
+//!   *delivered* aggregate, so the mirror is exact);
+//! * replay catch-up with an injected offline schedule: stale logical
+//!   replicas read back (through the snapshot cache or the
+//!   init-plus-orbit reconstruction) as the dense straggler buffers,
+//!   mid-run and after `catch_up_all`;
+//! * a proptest-lite case randomizing the participation schedule;
+//! * the memory contract itself: an all-synced pool holds one `d`-float
+//!   buffer regardless of K, with exactly one canonical apply per
+//!   committed round.
+//!
+//! Replicas are compared as `u32` bit patterns throughout — BER can
+//! drive weights non-finite, where f32 equality would lie.
+
+use feedsign::coordinator::catchup::CatchupCfg;
+use feedsign::coordinator::participation::ParticipationCfg;
+use feedsign::coordinator::session::RoundPlan;
+use feedsign::coordinator::{Algorithm, Client, Session, SessionCfg};
+use feedsign::data::partition::{split, Partition};
+use feedsign::data::vision::{generate, SYNTH_CIFAR10};
+use feedsign::engine::NativeEngine;
+use feedsign::net::{ChannelModel, LinkAssignment, NetCfg};
+use feedsign::orbit::OrbitEntry;
+use feedsign::simkit::nn::LinearProbe;
+use feedsign::simkit::zo;
+use feedsign::util::proptest_lite::{check, Gen};
+
+fn bits(w: &[f32]) -> Vec<u32> {
+    w.iter().map(|v| v.to_bits()).collect()
+}
+
+fn build_session(algo: Algorithm, k: usize, cfg_mut: impl FnOnce(&mut SessionCfg)) -> Session {
+    let train = generate(&SYNTH_CIFAR10, 400, 0);
+    let test = generate(&SYNTH_CIFAR10, 150, 1);
+    let shards = split(&train, k, Partition::Iid, 0);
+    let clients: Vec<Client> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            Client::new(id, Box::new(NativeEngine::new(LinearProbe::new(128, 10))), shard, 17)
+        })
+        .collect();
+    let mut cfg = SessionCfg {
+        algorithm: algo,
+        rounds: 0,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 16,
+        eval_every: 0,
+        seed: 17,
+        ..Default::default()
+    };
+    cfg_mut(&mut cfg);
+    Session::new(cfg, clients, train, test)
+}
+
+/// The dense baseline the replica plane replaced: K independent
+/// parameter buffers, each applying every round it *hears* itself.
+/// `applied[id]` is the first round client `id` has not applied — the
+/// dense twin of the store's watermark.
+struct DenseMirror {
+    w: Vec<Vec<f32>>,
+    applied: Vec<usize>,
+}
+
+impl DenseMirror {
+    fn new(s: &Session) -> Self {
+        let k = s.clients.len();
+        let init = s.replica(0).into_owned();
+        DenseMirror { w: vec![init; k], applied: vec![0; k] }
+    }
+
+    /// Apply orbit entries `[applied[id], upto)` to client `id`'s dense
+    /// buffer — the per-client AXPY loop the old layout ran eagerly.
+    fn sync_to(&mut self, s: &Session, id: usize, upto: usize) {
+        let eta = s.orbit.eta;
+        for t in self.applied[id]..upto {
+            match &s.orbit.entries[t] {
+                OrbitEntry::Sign(sign) => {
+                    zo::apply_update(&mut self.w[id], t as u32, *sign as f32 * eta);
+                }
+                OrbitEntry::Pairs(pairs) => {
+                    let k = pairs.len().max(1) as f32;
+                    for &(seed, p) in pairs {
+                        zo::apply_update(&mut self.w[id], seed, eta * p / k);
+                    }
+                }
+            }
+        }
+        self.applied[id] = self.applied[id].max(upto);
+    }
+
+    /// Broadcast delivery (`catchup = "off"`): every client applies the
+    /// round that just committed.
+    fn sync_all(&mut self, s: &Session) {
+        for id in 0..self.w.len() {
+            self.sync_to(s, id, s.orbit.len());
+        }
+    }
+}
+
+#[test]
+fn broadcast_runs_match_the_dense_mirror_bit_for_bit() {
+    // every synchronized engine, under partial participation, BER
+    // corruption and deadline stragglers — all catchup-off, where the
+    // broadcast reaches the whole pool and the orbit is the delivered
+    // update stream
+    type CfgMutator = Box<dyn Fn(&mut SessionCfg)>;
+    let scenarios: Vec<(&str, CfgMutator)> = vec![
+        ("partial", Box::new(|cfg: &mut SessionCfg| {
+            cfg.participation = ParticipationCfg::Fraction(0.4);
+        })),
+        ("ber", Box::new(|cfg: &mut SessionCfg| {
+            cfg.net = NetCfg {
+                channel: ChannelModel::BitFlip { ber: 0.05 },
+                links: LinkAssignment::parse("mixed").unwrap(),
+                deadline_s: 0.0,
+                channel_seed: 3,
+            };
+        })),
+        ("deadline", Box::new(|cfg: &mut SessionCfg| {
+            cfg.net = NetCfg {
+                channel: ChannelModel::Ideal,
+                links: LinkAssignment::parse("mixed").unwrap(),
+                deadline_s: 0.1,
+                channel_seed: 3,
+            };
+        })),
+        ("drop", Box::new(|cfg: &mut SessionCfg| {
+            cfg.net = NetCfg {
+                channel: ChannelModel::Erasure { p: 0.3 },
+                links: LinkAssignment::parse("mixed").unwrap(),
+                deadline_s: 0.0,
+                channel_seed: 3,
+            };
+        })),
+    ];
+    for algo in [Algorithm::FeedSign, Algorithm::DpFeedSign { epsilon: 4.0 }, Algorithm::ZoFedSgd] {
+        for (label, mutate) in &scenarios {
+            let mut s = build_session(algo, 5, |cfg| mutate(cfg));
+            let mut mirror = DenseMirror::new(&s);
+            for t in 0..60 {
+                s.step(t);
+                mirror.sync_all(&s);
+                if t % 20 == 19 {
+                    for id in 0..5 {
+                        assert_eq!(
+                            bits(&mirror.w[id]),
+                            bits(&s.replica(id)),
+                            "{}/{label}: client {id} diverged from the dense mirror at round {t}",
+                            algo.name()
+                        );
+                    }
+                }
+            }
+            for id in 0..5 {
+                assert_eq!(
+                    bits(&mirror.w[id]),
+                    bits(&s.replica(id)),
+                    "{}/{label}: final client {id} diverged from the dense mirror",
+                    algo.name()
+                );
+            }
+            assert!(s.replicas_synchronized(), "{}/{label}", algo.name());
+            // the memory contract: a broadcast pool shares one buffer
+            let st = s.replica_stats();
+            assert_eq!(st.owned_clients, 0, "{}/{label}", algo.name());
+            assert_eq!(
+                st.peak_bytes,
+                4 * st.d,
+                "{}/{label}: all-synced pool must cost O(d), not K·d",
+                algo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn replay_catchup_stale_reads_match_the_dense_straggler() {
+    // injected offline schedule: client 3 disappears for a span; its
+    // *stale* logical replica must read back (cache or reconstruction)
+    // as the dense buffer that stopped applying rounds — mid-run, for
+    // both the cached and the cache-disabled store
+    for (label, cache) in [("cached", 8usize), ("cold", 0)] {
+        for algo in [Algorithm::FeedSign, Algorithm::ZoFedSgd] {
+            let mut s = build_session(algo, 4, |cfg| {
+                cfg.catchup = CatchupCfg::Replay;
+                cfg.replica_cache = cache;
+            });
+            let mut mirror = DenseMirror::new(&s);
+            let all = |t: u64| RoundPlan { round: t, participants: vec![0, 1, 2, 3] };
+            let without3 = |t: u64| RoundPlan { round: t, participants: vec![0, 1, 2] };
+            for t in 0..5 {
+                s.step_with_plan(all(t));
+                for id in 0..4 {
+                    mirror.sync_to(&s, id, s.orbit.len());
+                }
+            }
+            for t in 5..25 {
+                s.step_with_plan(without3(t));
+                for id in 0..3 {
+                    mirror.sync_to(&s, id, s.orbit.len());
+                }
+                // client 3's dense buffer is frozen at round 5; the
+                // store's stale logical replica must read identically
+                assert_eq!(
+                    bits(&mirror.w[3]),
+                    bits(&s.replica(3)),
+                    "{}/{label}: stale read diverged at round {t}",
+                    algo.name()
+                );
+            }
+            // rejoin: replay brings the dense straggler and the logical
+            // replica to the same bits
+            s.step_with_plan(all(25));
+            for id in 0..4 {
+                mirror.sync_to(&s, id, s.orbit.len());
+            }
+            for id in 0..4 {
+                assert_eq!(
+                    bits(&mirror.w[id]),
+                    bits(&s.replica(id)),
+                    "{}/{label}: client {id} diverged after rejoin",
+                    algo.name()
+                );
+            }
+            s.catch_up_all();
+            assert!(s.replicas_synchronized(), "{}/{label}", algo.name());
+        }
+    }
+}
+
+#[test]
+fn randomized_participation_schedules_stay_bit_identical() {
+    // proptest-lite: arbitrary participation schedules (including empty
+    // rounds and long per-client gaps) — after the run every logical
+    // replica equals its dense mirror, and catch_up_all restores pool
+    // equality
+    check("replica plane vs dense mirror", |g: &mut Gen| {
+        let k = g.usize_in(2, 5);
+        let rounds = g.usize_in(5, 25);
+        let cache = g.usize_in(0, 3);
+        let mut s = build_session(Algorithm::FeedSign, k, |cfg| {
+            cfg.catchup = CatchupCfg::Replay;
+            cfg.replica_cache = cache;
+        });
+        let mut mirror = DenseMirror::new(&s);
+        for t in 0..rounds {
+            let participants: Vec<usize> = (0..k).filter(|_| g.usize_in(0, 2) > 0).collect();
+            // stale participants replay their missed span before probing
+            for &id in &participants {
+                mirror.sync_to(&s, id, t);
+            }
+            s.step_with_plan(RoundPlan { round: t as u64, participants: participants.clone() });
+            // ...and hear the round they voted in (when it committed)
+            for &id in &participants {
+                mirror.sync_to(&s, id, s.orbit.len());
+            }
+            // spot-check a random client's logical replica, stale or not
+            let probe = g.usize_in(0, k);
+            mirror.sync_to(&s, probe, s.tracker().last_synced(probe) as usize);
+            assert_eq!(
+                bits(&mirror.w[probe]),
+                bits(&s.replica(probe)),
+                "client {probe} diverged at round {t} (k={k}, cache={cache})"
+            );
+        }
+        s.catch_up_all();
+        for id in 0..k {
+            mirror.sync_to(&s, id, s.orbit.len());
+            assert_eq!(
+                bits(&mirror.w[id]),
+                bits(&s.replica(id)),
+                "client {id} diverged after catch_up_all (k={k})"
+            );
+        }
+        assert!(s.replicas_synchronized());
+    });
+}
+
+#[test]
+fn large_pool_memory_is_flat_in_k() {
+    // the table8-style pool: K = 200 clients, full participation — the
+    // replica plane must hold one canonical buffer (4·d bytes), where
+    // the dense layout would hold 200 of them
+    let mut s = build_session(Algorithm::FeedSign, 200, |_| {});
+    for t in 0..5 {
+        s.step(t);
+    }
+    let st = s.replica_stats();
+    assert_eq!(st.clients, 200);
+    assert_eq!(st.peak_bytes, 4 * st.d);
+    assert!(st.peak_bytes <= 2 * 4 * st.d, "acceptance bound: <= 2·d floats");
+    assert_eq!(st.dense_bytes, 200 * 4 * st.d);
+    assert_eq!(st.canonical_commits, 5, "exactly one canonical AXPY per round");
+    assert!(s.replicas_synchronized());
+    assert_eq!(s.ledger.uplink_bits, 5 * 200, "1-bit votes from the whole pool");
+}
