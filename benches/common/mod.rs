@@ -11,6 +11,8 @@
 
 use feedsign::config::{ExperimentConfig, ModelSpec, TaskSpec};
 use feedsign::metrics::{mean_std, MeanStd, RunResult};
+use feedsign::util::json::Json;
+use std::collections::BTreeMap;
 
 /// Round-budget scale from the environment.
 pub fn scale() -> f64 {
@@ -182,4 +184,79 @@ pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
     let out = f();
     println!("[timing] {label}: {:.1}s", t0.elapsed().as_secs_f64());
     out
+}
+
+/// Machine-readable bench results: every timed section lands in
+/// `BENCH_<bench>.json` at the repo root as `{ms_per_op, melems_per_s?}`
+/// keyed by section name, plus free-form top-level metrics.  The file
+/// doubles as the committed perf baseline the next run compares against
+/// (via [`BenchJson::baseline`]); `calibrated` marks whether the numbers
+/// came from a full-scale run on a quiet host (`FEEDSIGN_BENCH_SCALE >=
+/// 1`) — uncalibrated baselines (CI smoke runs, hand-seeded estimates)
+/// are reported but never hard-gate a regression.
+pub struct BenchJson {
+    bench: String,
+    top: BTreeMap<String, Json>,
+    sections: BTreeMap<String, Json>,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> Self {
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str(bench.to_string()));
+        top.insert("scale".to_string(), Json::Num(scale()));
+        top.insert("calibrated".to_string(), Json::Bool(scale() >= 1.0));
+        BenchJson { bench: bench.to_string(), top, sections: BTreeMap::new() }
+    }
+
+    pub fn path(bench: &str) -> String {
+        format!("BENCH_{bench}.json")
+    }
+
+    /// Record one timed section: ms/op plus optional element throughput.
+    pub fn section(&mut self, name: &str, ms_per_op: f64, melems_per_s: Option<f64>) {
+        let mut m = BTreeMap::new();
+        m.insert("ms_per_op".to_string(), Json::Num(ms_per_op));
+        if let Some(t) = melems_per_s {
+            m.insert("melems_per_s".to_string(), Json::Num(t));
+        }
+        self.sections.insert(name.to_string(), Json::Obj(m));
+    }
+
+    /// Record a free-form top-level metric (speedup factors, counters).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.top.insert(name.to_string(), Json::Num(value));
+    }
+
+    pub fn note(&mut self, name: &str, value: &str) {
+        self.top.insert(name.to_string(), Json::Str(value.to_string()));
+    }
+
+    /// The committed baseline for `bench`, if one exists and parses.
+    /// Call *before* [`BenchJson::write`] overwrites it.
+    pub fn baseline(bench: &str) -> Option<Json> {
+        let text = std::fs::read_to_string(Self::path(bench)).ok()?;
+        Json::parse(&text).ok()
+    }
+
+    /// ms/op a baseline recorded for `section`, if present.
+    pub fn baseline_ms(base: &Json, section: &str) -> Option<f64> {
+        base.get("sections")?.get(section)?.get("ms_per_op")?.as_f64()
+    }
+
+    /// Whether a baseline's numbers came from a full-scale run — only
+    /// calibrated baselines arm the hard regression gate.
+    pub fn baseline_calibrated(base: &Json) -> bool {
+        matches!(base.get("calibrated"), Some(Json::Bool(true)))
+    }
+
+    /// Serialize and write `BENCH_<bench>.json`, consuming the recorder.
+    pub fn write(mut self) {
+        self.top.insert("sections".to_string(), Json::Obj(std::mem::take(&mut self.sections)));
+        let path = Self::path(&self.bench);
+        let mut text = Json::Obj(self.top).to_string_compact();
+        text.push('\n');
+        std::fs::write(&path, text).expect("write bench json");
+        println!("[bench-json] wrote {path}");
+    }
 }

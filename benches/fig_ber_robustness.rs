@@ -96,6 +96,15 @@ fn main() {
     println!(" dense payloads collapse once exponent bits start flipping)");
 
     let at = |m: &'static str, ber: f64| acc[&(m, ber.to_bits())];
+    // machine-readable cells: best-acc % per (method, ber)
+    let mut bj = BenchJson::new("fig_ber_robustness");
+    bj.metric("rounds", rounds as f64);
+    for method in METHODS {
+        for &ber in &BERS {
+            bj.metric(&format!("best_acc_pct.{method}.ber_{ber}"), at(method, ber) as f64);
+        }
+    }
+    bj.write();
     let mut v = Verdict::new();
     // FeedSign degrades gracefully across the whole sweep
     let fs_drop = BERS

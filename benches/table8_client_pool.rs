@@ -114,6 +114,16 @@ fn k200_scenario(v: &mut Verdict) {
         run.ledger.uplink_bits == rounds * 200,
         format!("{} bits over {rounds} rounds x 200 clients", run.ledger.uplink_bits),
     );
+    // machine-readable record of the pool-scale claim (CI prints this)
+    let mut bj = BenchJson::new("table8_client_pool");
+    bj.metric("k200_rounds", rounds as f64);
+    bj.metric("k200_replica_peak_bytes", run.replica.peak_bytes as f64);
+    bj.metric("k200_dense_bytes", run.replica.dense_bytes as f64);
+    bj.metric("k200_canonical_commits", run.replica.canonical_commits as f64);
+    bj.metric("k200_probe_canonical_passes", run.probe.canonical_passes as f64);
+    bj.metric("k200_probe_unbatched_passes", run.probe.unbatched_passes() as f64);
+    bj.metric("k200_wall_s", run.wall_s);
+    bj.write();
 }
 
 fn main() {

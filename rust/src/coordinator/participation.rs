@@ -74,6 +74,21 @@ impl ParticipationCfg {
         }
     }
 
+    /// Whether this sampler can leave a client out of a round — the
+    /// participation half of the session's snapshot-cache admission
+    /// check (a sampler that always selects everyone cannot create a
+    /// stale reader, so pre-commit snapshots would only be dead copies).
+    /// `Fraction(1.0)` selects the whole pool every round and therefore
+    /// cannot strand anyone; any smaller fraction and every Bernoulli
+    /// rate can.
+    pub fn can_strand_clients(&self) -> bool {
+        match *self {
+            ParticipationCfg::Full => false,
+            ParticipationCfg::Fraction(f) => f < 1.0,
+            ParticipationCfg::Bernoulli(_) => true,
+        }
+    }
+
     /// Expected participants per round for a pool of `k` (bench/report
     /// helper for matched-perturbation budgets).
     pub fn expected_participants(&self, k: usize) -> f32 {
@@ -186,6 +201,15 @@ mod tests {
         assert!(ParticipationCfg::parse("bernoulli:-1").is_none());
         assert!(ParticipationCfg::parse("bernoulli:0").is_none());
         assert!(ParticipationCfg::parse("sometimes").is_none());
+    }
+
+    #[test]
+    fn stranding_capability_by_mode() {
+        assert!(!ParticipationCfg::Full.can_strand_clients());
+        assert!(!ParticipationCfg::Fraction(1.0).can_strand_clients());
+        assert!(ParticipationCfg::Fraction(0.99).can_strand_clients());
+        assert!(ParticipationCfg::Fraction(0.0).can_strand_clients());
+        assert!(ParticipationCfg::Bernoulli(1.0).can_strand_clients());
     }
 
     #[test]

@@ -79,6 +79,10 @@ pub struct ReplicaStats {
     pub canonical_commits: u64,
     /// Pre-commit canonical snapshots taken for stale-replica reads.
     pub snapshots: u64,
+    /// Snapshots the admission policy declined (a straggler existed but
+    /// the session judged stale readers unlikely —
+    /// [`ReplicaStore::set_snapshot_admission`]).
+    pub snapshots_declined: u64,
     /// What `K` dense replicas would cost: `4·K·d` bytes.
     pub dense_bytes: usize,
 }
@@ -101,10 +105,15 @@ pub struct ReplicaStore {
     /// FIFO ring of `(round, pre-commit canonical)` snapshots.
     cache: Vec<(u64, Vec<f32>)>,
     cache_cap: usize,
+    /// Admission switch over the cache (see
+    /// [`ReplicaStore::set_snapshot_admission`]); defaults to permissive
+    /// so direct store users keep the PR 5 semantics.
+    admit_snapshots: bool,
     current_bytes: usize,
     peak_bytes: usize,
     canonical_commits: u64,
     snapshots: u64,
+    snapshots_declined: u64,
 }
 
 impl ReplicaStore {
@@ -122,10 +131,12 @@ impl ReplicaStore {
             tracker: CatchupTracker::new(k),
             cache: Vec::new(),
             cache_cap,
+            admit_snapshots: true,
             current_bytes: 0,
             peak_bytes: 0,
             canonical_commits: 0,
             snapshots: 0,
+            snapshots_declined: 0,
         };
         store.account();
         store
@@ -295,7 +306,14 @@ impl ReplicaStore {
                 !hears && matches!(self.states[id], ReplicaState::Shared) && self.is_current(id)
             });
             if left_behind {
-                self.snapshot(round);
+                if self.admit_snapshots {
+                    self.snapshot(round);
+                } else {
+                    // admission declined: stale reads of this round fall
+                    // back to the init-plus-orbit reconstruction, which
+                    // is bit-exact — this is a memory policy only
+                    self.snapshots_declined += 1;
+                }
             }
         }
         apply(&mut self.canonical);
@@ -323,6 +341,19 @@ impl ReplicaStore {
                 self.tracker.mark_synced(id, self.head);
             }
         }
+    }
+
+    /// Gate the snapshot cache on whether stale readers are *likely*:
+    /// the session consults its participation sampler and channel model
+    /// each round and declines pre-commit snapshots when neither can
+    /// strand a client (full participation over a delivering channel) —
+    /// then injected plans that do strand someone cost a reconstruction
+    /// on read instead of a `d`-float copy on every commit.  Defaults to
+    /// `true` (always admit), the PR 5 behaviour, for direct store
+    /// users.  Purely a memory/throughput policy: stale reads resolve
+    /// bit-identically through the reconstruction fallback either way.
+    pub fn set_snapshot_admission(&mut self, admit: bool) {
+        self.admit_snapshots = admit;
     }
 
     /// Pre-commit canonical snapshot for round `round` (the buffer is
@@ -358,6 +389,7 @@ impl ReplicaStore {
                 .count(),
             canonical_commits: self.canonical_commits,
             snapshots: self.snapshots,
+            snapshots_declined: self.snapshots_declined,
             dense_bytes: 4 * self.d * self.states.len(),
         }
     }
@@ -447,6 +479,24 @@ mod tests {
         assert!(s.cached(0).is_none(), "oldest snapshots evicted");
         assert!(s.cached(3).is_some() && s.cached(4).is_some());
         assert!(s.stats().current_bytes <= 4 * 4 * 3, "canonical + 2 cached buffers");
+    }
+
+    #[test]
+    fn declined_admission_counts_and_takes_no_copy() {
+        let mut s = store(4, 2, 4);
+        s.set_snapshot_admission(false);
+        s.mark_synced(1, s.head());
+        s.advance(0, &[0], |w| w[0] += 1.0); // would snapshot, but declined
+        assert_eq!(s.stats().snapshots, 0);
+        assert_eq!(s.stats().snapshots_declined, 1);
+        assert!(s.cached(0).is_none());
+        assert_eq!(s.stats().peak_bytes, 4 * 4, "no cache copy was taken");
+        // re-admitting restores the PR 5 behaviour
+        s.set_snapshot_admission(true);
+        s.mark_synced(1, s.head());
+        s.advance(1, &[0], |w| w[0] += 1.0);
+        assert_eq!(s.stats().snapshots, 1);
+        assert!(s.cached(1).is_some());
     }
 
     #[test]

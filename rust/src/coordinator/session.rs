@@ -66,7 +66,7 @@ use crate::coordinator::catchup::{CatchupCfg, CatchupTracker};
 use crate::coordinator::participation::ParticipationCfg;
 use crate::coordinator::replica::{ReplicaState, ReplicaStats, ReplicaStore};
 use crate::data::{Batch, Dataset, Shard};
-use crate::engine::Engine;
+use crate::engine::{probe_batch, Engine, ProbeBatchStats, ProbeJob};
 use crate::metrics::{RoundRecord, RunResult};
 use crate::net::{NetCfg, NetSim};
 use crate::orbit::Orbit;
@@ -245,15 +245,98 @@ struct ProbeOutcome {
     ledger: Ledger,
 }
 
-fn run_probe_job<F>(round: u64, c: &mut Client, w: &[f32], job: &F) -> ProbeOutcome
+/// One participant's probe request after the spec stage: its drawn batch
+/// and direction seed, plus the ledger its messages meter into.  The
+/// replica view `w` is the grouping key — participants staged against
+/// the *same* buffer (the shared canonical case) are served by one
+/// [`probe_batch`] call.
+struct Staged<'a> {
+    rank: usize,
+    client: &'a mut Client,
+    w: &'a [f32],
+    batch: Batch,
+    seed: u32,
+    ledger: Ledger,
+}
+
+/// Run one worker's probe jobs: stage every client (spec draws —
+/// per-client RNG order is preserved exactly), group staged jobs by
+/// replica-view identity, serve each group through [`probe_batch`]
+/// (streaming the shared buffer once per view group instead of twice
+/// per client), then finish every client in rank order (noise / attack
+/// draws + uplink metering).  Bit-exact vs the per-client loop: each
+/// client's own RNG stream sees the identical draw sequence
+/// (spec draws, then its finish draws), `Engine::loss` is pure, and the
+/// batched views carry the bits of the unbatched fused AXPYs.
+fn run_worker_probes<S, F>(
+    round: u64,
+    work: Vec<(usize, (&mut Client, &[f32]))>,
+    mu: f32,
+    spec: &S,
+    finish: &F,
+) -> (Vec<(usize, ProbeOutcome)>, ProbeBatchStats)
 where
-    F: Fn(&mut Client, &[f32], &mut Ledger) -> Contribution,
+    S: Fn(&mut Client, &mut Ledger) -> (Batch, u32),
+    F: Fn(&mut Client, u32, f32, &mut Ledger) -> Contribution,
 {
-    let mut ledger = Ledger::default();
-    // RoundStart carries the implicit seed schedule (0 payload bits)
-    ledger.record(&Message::RoundStart { round });
-    let contribution = job(c, w, &mut ledger);
-    ProbeOutcome { client: c.id, contribution, ledger }
+    let staged: Vec<Staged> = work
+        .into_iter()
+        .map(|(rank, (c, w))| {
+            let mut ledger = Ledger::default();
+            // RoundStart carries the implicit seed schedule (0 payload bits)
+            ledger.record(&Message::RoundStart { round });
+            let (batch, seed) = spec(c, &mut ledger);
+            Staged { rank, client: c, w, batch, seed, ledger }
+        })
+        .collect();
+    // group by view identity, in first-appearance (= rank) order: synced
+    // participants all borrow the one canonical buffer and land in one
+    // group; an owned (diverged) replica forms its own
+    let mut keys: Vec<*const f32> = Vec::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for (i, s) in staged.iter().enumerate() {
+        let key = s.w.as_ptr();
+        match keys.iter().position(|&k| std::ptr::eq(k, key)) {
+            Some(g) => groups[g].push(i),
+            None => {
+                keys.push(key);
+                groups.push(vec![i]);
+            }
+        }
+    }
+    let mut stats = ProbeBatchStats::default();
+    let mut projections = vec![0.0f32; staged.len()];
+    let mut slots: Vec<Option<Staged>> = staged.into_iter().map(Some).collect();
+    for idxs in &groups {
+        let mut members: Vec<(usize, Staged)> =
+            idxs.iter().map(|&i| (i, slots[i].take().expect("grouped once"))).collect();
+        let w = members[0].1.w;
+        let mut jobs: Vec<ProbeJob> = members
+            .iter_mut()
+            .map(|(_, s)| ProbeJob {
+                engine: s.client.engine.as_mut(),
+                batch: &s.batch,
+                seed: s.seed,
+            })
+            .collect();
+        let (ps, group_stats) = probe_batch(w, mu, &mut jobs);
+        drop(jobs);
+        stats.merge(&group_stats);
+        for ((i, s), p) in members.into_iter().zip(ps) {
+            projections[i] = p;
+            slots[i] = Some(s);
+        }
+    }
+    let out = slots
+        .into_iter()
+        .zip(projections)
+        .map(|(slot, p)| {
+            let mut s = slot.expect("every staged job returns to its slot");
+            let contribution = finish(s.client, s.seed, p, &mut s.ledger);
+            (s.rank, ProbeOutcome { client: s.client.id, contribution, ledger: s.ledger })
+        })
+        .collect();
+    (out, stats)
 }
 
 /// Size-aware worker assignment: LPT (longest-processing-time-first)
@@ -281,25 +364,32 @@ fn pack_bins(costs: &[u64], bins: usize) -> Vec<Vec<usize>> {
     packed
 }
 
-/// Execute phase: run `job` on every participant, fanning out over
-/// `threads` scoped workers loaded by [`pack_bins`] over `costs` (one
-/// cost per participant, in participant order).  Every synced
-/// participant's replica view resolves to the one shared canonical
-/// buffer, so workers share it by reference — no per-client copies.
-/// Outcomes return in client-id order regardless of worker interleaving
-/// or assignment, which is what makes the commit phase bit-identical to
-/// the sequential baseline.
-fn execute_probes<F>(
+/// Execute phase: run the spec → batched-probe → finish pipeline on
+/// every participant, fanning out over `threads` scoped workers loaded
+/// by [`pack_bins`] over `costs` (one cost per participant, in
+/// participant order).  Every synced participant's replica view resolves
+/// to the one shared canonical buffer, so workers share it by reference
+/// — no per-client copies — and each worker's clients are served by
+/// grouped [`probe_batch`] calls that stream that buffer once per view
+/// group instead of twice per client ([`run_worker_probes`]).  Outcomes
+/// return in client-id order regardless of worker interleaving or
+/// assignment, which is what makes the commit phase bit-identical to the
+/// sequential baseline; the returned [`ProbeBatchStats`] (summed over
+/// workers) is equally schedule-deterministic.
+fn execute_probes<S, F>(
     clients: &mut [Client],
     replicas: &ReplicaStore,
     plan: &RoundPlan,
     costs: &[u64],
     threads: usize,
     pin_serial: bool,
-    job: F,
-) -> Vec<ProbeOutcome>
+    mu: f32,
+    spec: S,
+    finish: F,
+) -> (Vec<ProbeOutcome>, ProbeBatchStats)
 where
-    F: Fn(&mut Client, &[f32], &mut Ledger) -> Contribution + Sync,
+    S: Fn(&mut Client, &mut Ledger) -> (Batch, u32) + Sync,
+    F: Fn(&mut Client, u32, f32, &mut Ledger) -> Contribution + Sync,
 {
     debug_assert_eq!(costs.len(), plan.participants.len());
     let mut selected: Vec<(&mut Client, &[f32])> = Vec::with_capacity(plan.participants.len());
@@ -325,12 +415,17 @@ where
         // that merely degenerated to one job (e.g. K = 1) keeps inner
         // chunk-parallelism — it is the only parallelism available.
         let _serial = pin_serial.then(prng::serial_zone);
-        return selected.into_iter().map(|(c, w)| run_probe_job(round, c, w, &job)).collect();
+        let work: Vec<(usize, (&mut Client, &[f32]))> =
+            selected.into_iter().enumerate().collect();
+        let (mut ranked, stats) = run_worker_probes(round, work, mu, &spec, &finish);
+        ranked.sort_by_key(|(rank, _)| *rank);
+        return (ranked.into_iter().map(|(_, o)| o).collect(), stats);
     }
     let bins = pack_bins(costs, threads);
     let mut slots: Vec<Option<(&mut Client, &[f32])>> = selected.into_iter().map(Some).collect();
     let mut out: Vec<Option<ProbeOutcome>> =
         std::iter::repeat_with(|| None).take(slots.len()).collect();
+    let mut stats = ProbeBatchStats::default();
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(bins.len());
         for bin in &bins {
@@ -341,23 +436,25 @@ where
                 .iter()
                 .map(|&rank| (rank, slots[rank].take().expect("rank packed once")))
                 .collect();
-            let job = &job;
+            let (spec, finish) = (&spec, &finish);
             handles.push(s.spawn(move || {
                 // client-level parallelism is the outer fan-out; keep the
                 // per-vector noise ops sequential inside each worker
                 let _serial = prng::serial_zone();
-                work.into_iter()
-                    .map(|(rank, (c, w))| (rank, run_probe_job(round, c, w, job)))
-                    .collect::<Vec<_>>()
+                run_worker_probes(round, work, mu, spec, finish)
             }));
         }
         for h in handles {
-            for (rank, o) in h.join().expect("round worker panicked") {
+            let (ranked, worker_stats) = h.join().expect("round worker panicked");
+            stats.merge(&worker_stats);
+            for (rank, o) in ranked {
                 out[rank] = Some(o);
             }
         }
     });
-    out.into_iter().map(|o| o.expect("every participant probes exactly once")).collect()
+    let outcomes =
+        out.into_iter().map(|o| o.expect("every participant probes exactly once")).collect();
+    (outcomes, stats)
 }
 
 /// The federated runtime.
@@ -379,6 +476,10 @@ pub struct Session {
     /// [`SessionCfg::net`] is the ideal default); `net.stats` holds the
     /// run's impairment counters.
     pub net: NetSim,
+    /// Execute-phase probe-batching counters, summed over the run — the
+    /// measured canonical-buffer-reads-per-round basis of the batching
+    /// claim (reported in [`RunResult::probe`]).
+    pub probe_stats: ProbeBatchStats,
     dp_rng: Rng,
     eval_rng: Rng,
     part_rng: Rng,
@@ -458,6 +559,7 @@ impl Session {
             orbit,
             history: SeedHistory::default(),
             net,
+            probe_stats: ProbeBatchStats::default(),
             dp_rng,
             eval_rng,
             part_rng,
@@ -566,6 +668,7 @@ impl Session {
             wall_s: start.elapsed().as_secs_f64(),
             net: self.net.stats.clone(),
             replica: self.replica_stats(),
+            probe: self.probe_stats,
         }
     }
 
@@ -594,6 +697,18 @@ impl Session {
     /// Plans must arrive in round order (the seed history and the replica
     /// plane both commit in round order).
     pub fn step_with_plan(&mut self, plan: RoundPlan) {
+        // snapshot-cache admission (PR 5 follow-up): pre-commit snapshots
+        // exist to serve *stale* readers, so only admit them when this
+        // round's config can actually strand a client — a participation
+        // sampler that skips clients, or a channel that erases votes or
+        // cuts deadline stragglers.  Full participation over a delivering
+        // channel declines the copy (the cold reconstruction path stays
+        // bit-exact regardless, so this is memory policy, not numerics).
+        // Evaluated live, not at construction: tests and schedulers
+        // mutate `cfg` mid-run.
+        let admit =
+            self.cfg.participation.can_strand_clients() || self.cfg.net.can_strand_clients();
+        self.replicas.set_snapshot_admission(admit);
         match self.cfg.algorithm {
             Algorithm::FeedSign => self.step_feedsign(plan, None),
             Algorithm::DpFeedSign { epsilon } => self.step_feedsign(plan, Some(epsilon)),
@@ -783,16 +898,20 @@ impl Session {
         let costs = self.probe_costs(&plan.participants);
         let train = &self.train;
         // execute: fan the probes out; each worker meters its own uplink
-        let outcomes = execute_probes(
+        // and serves its clients through grouped batched probes (the
+        // whole worker shares seed = t, so one +mu/-mu view pair serves
+        // every client it owns)
+        let (outcomes, probe_stats) = execute_probes(
             &mut self.clients,
             &self.replicas,
             &plan,
             &costs,
             threads,
             pin_serial,
-            |c, w, ledger| {
-                let batch = c.shard.next_batch(train, bs, &mut c.rng);
-                let mut p = c.engine.probe(w, &batch, seed, mu);
+            mu,
+            |c, _ledger| (c.shard.next_batch(train, bs, &mut c.rng), seed),
+            |c, _seed, p, ledger| {
+                let mut p = p;
                 if c_g > 0.0 {
                     p *= 1.0 + c_g * c.rng.normal();
                 }
@@ -802,6 +921,7 @@ impl Session {
                 Contribution::Sign(sign)
             },
         );
+        self.probe_stats.merge(&probe_stats);
         // commit: votes and sub-ledgers in client-id order; each vote
         // then crosses the (possibly impaired) uplink — a flip lands in
         // the vote, a drop makes the PS treat the voter as absent this
@@ -882,17 +1002,24 @@ impl Session {
         let pin_serial = self.cfg.threads == 1;
         let costs = self.probe_costs(&plan.participants);
         let train = &self.train;
-        let outcomes = execute_probes(
+        // execute: every client draws its private direction seed first
+        // (same per-client RNG order as the unbatched loop), then the
+        // worker serves the distinct-seed probes in blocked multi-view
+        // passes over the shared buffer
+        let (outcomes, probe_stats) = execute_probes(
             &mut self.clients,
             &self.replicas,
             &plan,
             &costs,
             threads,
             pin_serial,
-            |c, w, ledger| {
+            mu,
+            |c, _ledger| {
                 let seed = c.rng.next_u32() & 0x7FFF_FFFF; // direction counters < 2^31
-                let batch = c.shard.next_batch(train, bs, &mut c.rng);
-                let mut p = c.engine.probe(w, &batch, seed, mu);
+                (c.shard.next_batch(train, bs, &mut c.rng), seed)
+            },
+            |c, seed, p, ledger| {
+                let mut p = p;
                 if c_g > 0.0 {
                     p *= 1.0 + c_g * c.rng.normal();
                 }
@@ -901,6 +1028,7 @@ impl Session {
                 Contribution::Pair { seed, p }
             },
         );
+        self.probe_stats.merge(&probe_stats);
         // commit in client-id order; each 64-bit pair crosses the uplink
         // (flipped seed bits pick a different-but-valid direction,
         // flipped projection bits corrupt the coefficient, a drop makes
@@ -1470,6 +1598,9 @@ mod tests {
     fn stale_replica_reads_resolve_through_cache_and_reconstruction() {
         let mut s = make_session(Algorithm::FeedSign, 3, 0);
         s.cfg.catchup = CatchupCfg::Replay;
+        // injected plans bypass the sampler, so declare a configuration
+        // that *can* strand clients — snapshot admission is config-driven
+        s.cfg.participation = ParticipationCfg::Fraction(0.75);
         let all = |t: u64| RoundPlan { round: t, participants: vec![0, 1, 2] };
         let without2 = |t: u64| RoundPlan { round: t, participants: vec![0, 1] };
         for t in 0..4 {
@@ -1488,6 +1619,7 @@ mod tests {
         // orbit prefix — same bits, one allocation
         let mut cold = make_session(Algorithm::FeedSign, 3, 0);
         cold.cfg.catchup = CatchupCfg::Replay;
+        cold.cfg.participation = ParticipationCfg::Fraction(0.75);
         cold.cfg.replica_cache = 0;
         cold.replicas = ReplicaStore::new(
             cold.clients[0].initial_params().unwrap(),
@@ -1503,6 +1635,61 @@ mod tests {
         assert_eq!(cold.replica_stats().snapshots, 0);
         assert!(matches!(cold.replica(2), Cow::Owned(_)), "cold read reconstructs");
         assert_eq!(&*cold.replica(2), frozen.as_slice(), "reconstruction-resolved stale read");
+    }
+
+    #[test]
+    fn full_participation_config_declines_snapshots_but_stale_reads_stay_exact() {
+        // default cfg: Full participation over an ideal channel — the
+        // admission check judges that nothing can strand a client, so
+        // pre-commit snapshots are declined even when injected plans
+        // *do* strand one; the stale read then resolves through the
+        // reconstruction fallback with the same bits
+        let mut s = make_session(Algorithm::FeedSign, 3, 0);
+        s.cfg.catchup = CatchupCfg::Replay;
+        for t in 0..4 {
+            s.step_with_plan(RoundPlan { round: t, participants: vec![0, 1, 2] });
+        }
+        let frozen = s.replica(2).into_owned();
+        for t in 4..8 {
+            s.step_with_plan(RoundPlan { round: t, participants: vec![0, 1] });
+        }
+        let st = s.replica_stats();
+        assert_eq!(st.snapshots, 0, "admission must decline the copies");
+        assert!(st.snapshots_declined > 0, "declined admissions are counted");
+        assert!(s.replicas.resident(2).is_none());
+        assert!(matches!(s.replica(2), Cow::Owned(_)), "stale read reconstructs");
+        assert_eq!(&*s.replica(2), frozen.as_slice(), "same bits without the cache");
+    }
+
+    #[test]
+    fn probe_batching_reduces_canonical_passes() {
+        // FeedSign: every participant shares seed = t, so a sequential
+        // worker serves all K clients from ONE canonical pass per round
+        // (the unbatched engine paid two per probe)
+        let mut s = make_session(Algorithm::FeedSign, 5, 0);
+        s.cfg.threads = 1;
+        for t in 0..20 {
+            s.step(t);
+        }
+        assert_eq!(s.probe_stats.probes, 20 * 5);
+        assert_eq!(s.probe_stats.fallback_probes, 0);
+        assert_eq!(s.probe_stats.canonical_passes, 20, "one shared-seed pass per round");
+        assert_eq!(s.probe_stats.unbatched_passes(), 20 * 5 * 2);
+
+        // ZO-FedSGD: distinct per-client seeds still pack several ±mu
+        // view pairs into each blocked pass over the shared buffer
+        let mut z = make_session(Algorithm::ZoFedSgd, 5, 0);
+        z.cfg.threads = 1;
+        for t in 0..10 {
+            z.step(t);
+        }
+        assert_eq!(z.probe_stats.probes, 10 * 5);
+        assert!(
+            z.probe_stats.canonical_passes < z.probe_stats.unbatched_passes(),
+            "{} passes should beat the unbatched {}",
+            z.probe_stats.canonical_passes,
+            z.probe_stats.unbatched_passes()
+        );
     }
 
     #[test]

@@ -27,6 +27,24 @@ pub trait Engine: Send {
     /// enforces it (perturbed views are regenerated into engine scratch).
     fn probe(&mut self, w: &[f32], batch: &Batch, seed: u32, mu: f32) -> f32;
 
+    /// Mean loss of `w` on `batch` — the half-probe primitive
+    /// [`probe_batch`] composes into batched SPSA projections.  Only
+    /// engines that opt into batched probing
+    /// ([`Engine::supports_batched_probe`]) need it; others keep the
+    /// unreachable default and are probed one call at a time.
+    fn loss(&mut self, _w: &[f32], _batch: &Batch) -> f32 {
+        unreachable!("engine does not support batched probing (supports_batched_probe = false)")
+    }
+
+    /// Whether [`probe_batch`] may decompose this engine's probe into
+    /// two [`Engine::loss`] calls over externally-materialised views.
+    /// Requires `loss` to be pure in `(w, batch)` (no carried state), so
+    /// evaluating several clients' `+mu` views before their `-mu` views
+    /// is observationally identical to the per-client call order.
+    fn supports_batched_probe(&self) -> bool {
+        false
+    }
+
     /// Apply the aggregated update `w -= step * z(seed)`.  Must be a
     /// pure function of `(w, seed, step)`: the coordinator's replica
     /// plane relies on one canonical apply being bit-identical to the K
@@ -95,6 +113,16 @@ impl<M: Model> Engine for NativeEngine<M> {
         p
     }
 
+    fn loss(&mut self, w: &[f32], batch: &Batch) -> f32 {
+        self.model.loss(w, batch)
+    }
+
+    fn supports_batched_probe(&self) -> bool {
+        // Model::loss is a pure forward pass — reordering view
+        // evaluations cannot change any client's projection bits
+        true
+    }
+
     fn update(&mut self, w: &mut [f32], seed: u32, step: f32) {
         zo::apply_update(w, seed, step);
     }
@@ -122,6 +150,126 @@ impl<M: Model> Engine for NativeEngine<M> {
     fn init_params(&self, seed: u32) -> Vec<f32> {
         self.model.init(seed)
     }
+}
+
+// ---------------------------------------------------------------------------
+// Per-worker probe batching
+// ---------------------------------------------------------------------------
+
+/// Most perturbed views one [`probe_batch`] pass materialises at once
+/// (scratch is `MAX_GROUP_VIEWS · d` floats; each client costs two views,
+/// so up to `MAX_GROUP_VIEWS / 2` distinct seeds share a canonical pass).
+pub const MAX_GROUP_VIEWS: usize = 8;
+
+/// One client's probe request inside a [`probe_batch`] call: its engine,
+/// its local batch, its direction seed.  The shared `(w, mu)` live on
+/// the call itself.
+pub struct ProbeJob<'a> {
+    pub engine: &'a mut dyn Engine,
+    pub batch: &'a Batch,
+    pub seed: u32,
+}
+
+/// Counters for the probe execute phase — the measured basis of the
+/// "canonical buffer read once per worker" claim.  A *canonical pass* is
+/// one full streaming read of the shared parameter buffer; the classic
+/// per-client probe costs two (one fused AXPY per perturbed view), which
+/// [`ProbeBatchStats::unbatched_passes`] reports for comparison.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ProbeBatchStats {
+    /// Client probes served.
+    pub probes: u64,
+    /// Streaming passes over the canonical buffer actually performed.
+    pub canonical_passes: u64,
+    /// Probes served through [`Engine::probe`] because the engine opted
+    /// out of batching (each costs two canonical passes).
+    pub fallback_probes: u64,
+}
+
+impl ProbeBatchStats {
+    /// Accumulate another worker's counters.
+    pub fn merge(&mut self, other: &ProbeBatchStats) {
+        self.probes += other.probes;
+        self.canonical_passes += other.canonical_passes;
+        self.fallback_probes += other.fallback_probes;
+    }
+
+    /// Canonical passes the unbatched per-client probe would have made.
+    pub fn unbatched_passes(&self) -> u64 {
+        2 * self.probes
+    }
+}
+
+/// Serve a worker's probe jobs against the shared canonical buffer `w`,
+/// streaming it **once per view group** instead of twice per client.
+///
+/// Jobs are grouped by seed: a FeedSign round (every client shares
+/// `seed = t`) collapses to one `+mu` and one `-mu` view for the whole
+/// worker, materialised in a single [`zo::axpy_many`] pass; ZO-FedSGD's
+/// distinct seeds are packed `MAX_GROUP_VIEWS / 2` at a time.  Each
+/// client's projection is then two pure [`Engine::loss`] calls on the
+/// shared views.  Engines that opt out
+/// ([`Engine::supports_batched_probe`]) fall back to [`Engine::probe`].
+///
+/// **Bit-exactness:** the views carry exactly the bits
+/// [`zo::axpy_into`] would produce (`axpy_many` is pinned to it
+/// bitwise), `loss` is pure, and per-client RNG state is untouched here
+/// — so every projection equals the unbatched `engine.probe` result
+/// bit-for-bit, for any grouping (pinned by the tests below and by the
+/// four parity suites).
+pub fn probe_batch(w: &[f32], mu: f32, jobs: &mut [ProbeJob]) -> (Vec<f32>, ProbeBatchStats) {
+    let mut stats = ProbeBatchStats { probes: jobs.len() as u64, ..Default::default() };
+    let mut out = vec![0.0f32; jobs.len()];
+    let mut batchable: Vec<usize> = Vec::new();
+    for (i, job) in jobs.iter_mut().enumerate() {
+        if job.engine.supports_batched_probe() {
+            batchable.push(i);
+        } else {
+            out[i] = job.engine.probe(w, job.batch, job.seed, mu);
+            stats.fallback_probes += 1;
+            stats.canonical_passes += 2;
+        }
+    }
+    if batchable.is_empty() {
+        return (out, stats);
+    }
+    // group by seed, preserving first-appearance order (determinism: the
+    // grouping is a pure function of the job list)
+    let mut groups: Vec<(u32, Vec<usize>)> = Vec::new();
+    for &i in &batchable {
+        let seed = jobs[i].seed;
+        match groups.iter_mut().find(|(s, _)| *s == seed) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((seed, vec![i])),
+        }
+    }
+    let seeds_per_pass = (MAX_GROUP_VIEWS / 2).max(1);
+    let mut view_bufs: Vec<Vec<f32>> = Vec::new();
+    for chunk in groups.chunks(seeds_per_pass) {
+        let views: Vec<(u32, f32)> =
+            chunk.iter().flat_map(|(s, _)| [(*s, mu), (*s, -mu)]).collect();
+        if view_bufs.len() < views.len() {
+            view_bufs.resize_with(views.len(), Vec::new);
+        }
+        for v in view_bufs.iter_mut().take(views.len()) {
+            v.resize(w.len(), 0.0);
+        }
+        {
+            let mut outs: Vec<&mut [f32]> =
+                view_bufs.iter_mut().take(views.len()).map(|v| v.as_mut_slice()).collect();
+            zo::axpy_many(w, &views, &mut outs);
+        }
+        stats.canonical_passes += 1;
+        for (g, (_, idxs)) in chunk.iter().enumerate() {
+            for &i in idxs {
+                let job = &mut jobs[i];
+                let lp = job.engine.loss(&view_bufs[2 * g], job.batch);
+                let lm = job.engine.loss(&view_bufs[2 * g + 1], job.batch);
+                out[i] = (lp - lm) / (2.0 * mu);
+            }
+        }
+    }
+    (out, stats)
 }
 
 #[cfg(test)]
@@ -196,5 +344,107 @@ mod tests {
         for i in 0..w.len() {
             assert!((w2[i] - (w[i] - 0.1 * g[i])).abs() < 1e-6);
         }
+    }
+
+    /// An engine that keeps the trait's opt-out defaults — exercises the
+    /// [`probe_batch`] fallback leg.
+    struct OptOut(NativeEngine<LinearProbe>);
+
+    impl Engine for OptOut {
+        fn n_params(&self) -> usize {
+            self.0.n_params()
+        }
+        fn probe(&mut self, w: &[f32], b: &Batch, seed: u32, mu: f32) -> f32 {
+            self.0.probe(w, b, seed, mu)
+        }
+        fn update(&mut self, w: &mut [f32], seed: u32, step: f32) {
+            self.0.update(w, seed, step)
+        }
+        fn eval(&mut self, w: &[f32], b: &Batch) -> (f32, u32) {
+            self.0.eval(w, b)
+        }
+        fn fo_step(&mut self, w: &mut [f32], b: &Batch, lr: f32) -> f32 {
+            self.0.fo_step(w, b, lr)
+        }
+        fn grad(&mut self, w: &[f32], b: &Batch, out: &mut [f32]) -> f32 {
+            self.0.grad(w, b, out)
+        }
+        fn init_params(&self, seed: u32) -> Vec<f32> {
+            self.0.init_params(seed)
+        }
+    }
+
+    #[test]
+    fn probe_batch_shared_seed_matches_individual_probes_bitwise() {
+        // the FeedSign shape: every client probes the same direction —
+        // one view pair serves the whole group, same bits as one-by-one
+        let mut engines: Vec<NativeEngine<LinearProbe>> = (0..5).map(|_| engine()).collect();
+        let w = engines[0].init_params(0);
+        let batches: Vec<Batch> = (0..5).map(|i| batch(i as u32)).collect();
+        let expect: Vec<f32> = engines
+            .iter_mut()
+            .zip(&batches)
+            .map(|(e, b)| e.probe(&w, b, 42, 1e-3))
+            .collect();
+        let mut jobs: Vec<ProbeJob> = engines
+            .iter_mut()
+            .zip(&batches)
+            .map(|(e, b)| ProbeJob { engine: e, batch: b, seed: 42 })
+            .collect();
+        let (got, stats) = probe_batch(&w, 1e-3, &mut jobs);
+        for (i, (a, b)) in expect.iter().zip(&got).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "client {i}");
+        }
+        assert_eq!(stats.probes, 5);
+        assert_eq!(stats.fallback_probes, 0);
+        assert_eq!(stats.canonical_passes, 1, "one shared pass for the whole group");
+        assert_eq!(stats.unbatched_passes(), 10);
+    }
+
+    #[test]
+    fn probe_batch_distinct_seeds_matches_individual_probes_bitwise() {
+        // the ZO-FedSGD shape: distinct seeds pack MAX_GROUP_VIEWS / 2
+        // per pass; 6 seeds -> 2 passes, bits unchanged
+        let mut engines: Vec<NativeEngine<LinearProbe>> = (0..6).map(|_| engine()).collect();
+        let w = engines[0].init_params(1);
+        let batches: Vec<Batch> = (0..6).map(|i| batch(10 + i as u32)).collect();
+        let seeds = [3u32, 1000, 7, 7, 2_000_000, 13];
+        let expect: Vec<f32> = engines
+            .iter_mut()
+            .zip(&batches)
+            .zip(&seeds)
+            .map(|((e, b), &s)| e.probe(&w, b, s, 1e-3))
+            .collect();
+        let mut jobs: Vec<ProbeJob> = engines
+            .iter_mut()
+            .zip(&batches)
+            .zip(&seeds)
+            .map(|((e, b), &s)| ProbeJob { engine: e, batch: b, seed: s })
+            .collect();
+        let (got, stats) = probe_batch(&w, 1e-3, &mut jobs);
+        for (i, (a, b)) in expect.iter().zip(&got).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "client {i} (seed {})", seeds[i]);
+        }
+        // 5 distinct seeds (7 repeats), 4 seeds per pass -> 2 passes
+        assert_eq!(stats.canonical_passes, 2);
+        assert_eq!(stats.unbatched_passes(), 12);
+    }
+
+    #[test]
+    fn probe_batch_falls_back_for_opt_out_engines() {
+        let mut native = engine();
+        let mut opt_out = OptOut(engine());
+        let w = native.init_params(0);
+        let (b0, b1) = (batch(1), batch(2));
+        let expect = [native.probe(&w, &b0, 9, 1e-3), opt_out.probe(&w, &b1, 9, 1e-3)];
+        let mut jobs = vec![
+            ProbeJob { engine: &mut native, batch: &b0, seed: 9 },
+            ProbeJob { engine: &mut opt_out, batch: &b1, seed: 9 },
+        ];
+        let (got, stats) = probe_batch(&w, 1e-3, &mut jobs);
+        assert_eq!(expect[0].to_bits(), got[0].to_bits());
+        assert_eq!(expect[1].to_bits(), got[1].to_bits());
+        assert_eq!(stats.fallback_probes, 1);
+        assert_eq!(stats.canonical_passes, 3, "2 for the fallback + 1 for the group");
     }
 }

@@ -245,6 +245,16 @@ fn print_result(result: &metrics::RunResult) {
             result.replica.canonical_commits
         );
     }
+    if result.probe.probes > 0 {
+        println!(
+            "probe batching: {} probes in {} canonical passes \
+             (unbatched: {}; {} engine fallbacks)",
+            result.probe.probes,
+            result.probe.canonical_passes,
+            result.probe.unbatched_passes(),
+            result.probe.fallback_probes
+        );
+    }
     if result.net != feedsign::net::NetStats::default() {
         println!(
             "channel: {} dropped, {} corrupted ({} bits flipped), \

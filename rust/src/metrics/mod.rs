@@ -31,6 +31,10 @@ pub struct RunResult {
     /// the dense layout's K·d), owned-replica count, and the
     /// one-canonical-AXPY-per-round commit counter.
     pub replica: crate::coordinator::ReplicaStats,
+    /// Execute-phase batching counters ([`crate::engine::probe_batch`]):
+    /// canonical-buffer passes actually streamed vs the two-per-probe an
+    /// unbatched engine would have paid.
+    pub probe: crate::engine::ProbeBatchStats,
 }
 
 impl RunResult {
@@ -131,6 +135,7 @@ mod tests {
             wall_s: 0.0,
             net: Default::default(),
             replica: Default::default(),
+            probe: Default::default(),
         }
     }
 

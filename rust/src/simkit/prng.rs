@@ -7,7 +7,8 @@
 //! `(x >> 8) * 2^-24 + 2^-25` and Box–Muller.  The u32 word stream matches
 //! the kernel **bit-exactly** (pure integer pipeline; pinned against the
 //! manifest's recorded vectors in `runtime::manifest` tests); the f32
-//! normals agree to ~1e-6 (libm vs XLA transcendentals).
+//! normals agree to ~1e-6 (the [`crate::simkit::fastmath`] polynomial
+//! transcendentals vs XLA's).
 //!
 //! Counter-based generation is what lets FeedSign ship a *direction in R^d*
 //! as a 32-bit seed: element `i` of `z` is a pure function of `(seed, i)`
@@ -17,7 +18,15 @@
 //! chunk-parallel split of the counter space across worker threads
 //! (exact, not approximate), and the seed-history catch-up replay all
 //! exploit exactly that.  The fused span consumers share one walker,
-//! [`for_each_span_lane`].
+//! [`for_each_span`], which dispatches between the scalar lane loop
+//! ([`for_each_span_lane`]) and the structure-of-arrays wide kernel
+//! (`philox4x32xW`, W ∈ {4, 8, 16} counter lanes per iteration — see
+//! [`SimdWidth`] / [`simd_width`] and the `FEEDSIGN_SIMD` escape hatch).
+//! Because the wide kernel is the *same* u32 arithmetic over W counters
+//! and the normal map is the *same* straight-line [`box_muller`] per
+//! element, **every dispatch width emits the identical f32 stream
+//! bit-for-bit** — the wide path is a throughput choice, never a
+//! numerics choice (pinned by `wide_widths_match_scalar_stream_bitwise`).
 //!
 //! The second invariant here is the **serial-zone policy**
 //! ([`serial_zone`] / [`SerialZone`]): a thread already inside a
@@ -35,7 +44,7 @@ pub const PHILOX_W1: u32 = 0xBB67_AE85;
 /// Initial second key lane (matches the Pallas kernel).
 pub const KEY1_INIT: u32 = 0xCAFE_F00D;
 
-const TWO_PI: f32 = 6.283_185_3;
+use crate::simkit::fastmath;
 
 #[inline(always)]
 fn mulhilo(a: u32, b: u32) -> (u32, u32) {
@@ -68,12 +77,19 @@ pub fn u32_to_unit(x: u32) -> f32 {
     (x >> 8) as f32 * (1.0 / (1 << 24) as f32) + 1.0 / (1 << 25) as f32
 }
 
-/// Box–Muller: two uniforms in (0,1) -> two standard normals.
+/// Box–Muller: two uniforms in (0,1] -> two standard normals.
+///
+/// Transcendentals come from [`fastmath`], not libm: the branch-free
+/// polynomial kernels auto-vectorize inside the wide walker's per-lane
+/// loops, and — because this *same* straight-line function is the only
+/// normal map in the crate — the scalar and wide paths produce
+/// bit-identical f32 streams by construction.  `sqrt` is IEEE-exact and
+/// a single instruction on every target.
 #[inline(always)]
 pub fn box_muller(u1: f32, u2: f32) -> (f32, f32) {
-    let r = (-2.0 * u1.ln()).sqrt();
-    let theta = TWO_PI * u2;
-    (r * theta.cos(), r * theta.sin())
+    let r = (-2.0 * fastmath::ln_pos(u1)).sqrt();
+    let (s, c) = fastmath::sincos_2pi(u2);
+    (r * c, r * s)
 }
 
 /// The 4 standard normals of counter lane `ctr`: elements
@@ -130,12 +146,191 @@ pub fn for_each_span_lane<F: FnMut(usize, &[f32])>(seed: u32, start: usize, len:
     }
 }
 
+// ---------------------------------------------------------------------------
+// Wide lanes: structure-of-arrays philox4x32xW and the dispatching walker
+// ---------------------------------------------------------------------------
+
+/// Widest supported SoA kernel (lanes); one wide block covers
+/// `4 * MAX_LANES` stream elements.
+pub const MAX_LANES: usize = 16;
+
+/// `philox4x32xW` + Box–Muller over `W` consecutive counter lanes
+/// `ctr .. ctr + W`, writing the `4 * W` stream elements into `out`.
+///
+/// Structure of arrays: the four counter words live in `[u32; W]` arrays
+/// so each Philox round is W independent identical u32 operations — LLVM
+/// turns the inner `for j in 0..W` loops into packed integer SIMD.  The
+/// normal map then calls the scalar [`box_muller`] per lane; its body is
+/// branch-free polynomial arithmetic ([`fastmath`]), so that loop
+/// vectorizes too *and* every element goes through the exact expression
+/// tree the scalar walker uses — identical bits by construction, not by
+/// tolerance.
+#[inline(always)]
+fn normals_soa<const W: usize>(seed: u32, ctr: u32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 4 * W);
+    let mut c0 = [0u32; W];
+    let mut c1 = [0u32; W];
+    let mut c2 = [0u32; W];
+    let mut c3 = [0u32; W];
+    for j in 0..W {
+        c0[j] = ctr.wrapping_add(j as u32);
+    }
+    let mut k0 = seed;
+    let mut k1 = KEY1_INIT;
+    for _ in 0..10 {
+        for j in 0..W {
+            let (hi0, lo0) = mulhilo(PHILOX_M0, c0[j]);
+            let (hi1, lo1) = mulhilo(PHILOX_M1, c2[j]);
+            (c0[j], c1[j], c2[j], c3[j]) = (hi1 ^ c1[j] ^ k0, lo1, hi0 ^ c3[j] ^ k1, lo0);
+        }
+        k0 = k0.wrapping_add(PHILOX_W0);
+        k1 = k1.wrapping_add(PHILOX_W1);
+    }
+    for j in 0..W {
+        let (za, zb) = box_muller(u32_to_unit(c0[j]), u32_to_unit(c1[j]));
+        let (zc, zd) = box_muller(u32_to_unit(c2[j]), u32_to_unit(c3[j]));
+        out[4 * j] = za;
+        out[4 * j + 1] = zb;
+        out[4 * j + 2] = zc;
+        out[4 * j + 3] = zd;
+    }
+}
+
+/// Runtime-selected lane count for the span walkers.  `Scalar` is the
+/// one-lane [`for_each_span_lane`] loop; the wide variants run
+/// [`normals_soa`] blocks of `4 * W` elements with scalar head/tail.
+/// All widths emit bit-identical streams — this knob trades nothing but
+/// throughput.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdWidth {
+    /// One counter lane per iteration (the fallback / escape hatch).
+    Scalar,
+    /// 4 lanes (16 elements) per iteration — 128-bit registers.
+    W4,
+    /// 8 lanes (32 elements) per iteration — 256-bit registers (default).
+    W8,
+    /// 16 lanes (64 elements) per iteration — 512-bit registers.
+    W16,
+}
+
+impl SimdWidth {
+    /// Every width, scalar first — the parity tests sweep this.
+    pub const ALL: [SimdWidth; 4] =
+        [SimdWidth::Scalar, SimdWidth::W4, SimdWidth::W8, SimdWidth::W16];
+
+    /// Counter lanes processed per wide iteration (1 for `Scalar`).
+    pub fn lanes(self) -> usize {
+        match self {
+            SimdWidth::Scalar => 1,
+            SimdWidth::W4 => 4,
+            SimdWidth::W8 => 8,
+            SimdWidth::W16 => 16,
+        }
+    }
+
+    /// Parse a `FEEDSIGN_SIMD` value.  `off`/`scalar`/`0`/`1` force the
+    /// scalar walker; `4`/`8`/`16` pick a lane count; `on`/`wide` mean
+    /// the default wide width.  Unknown strings return `None` (the
+    /// dispatcher then falls back to the default rather than panicking
+    /// mid-run).
+    pub fn parse(s: &str) -> Option<SimdWidth> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "scalar" | "0" | "1" => Some(SimdWidth::Scalar),
+            "4" => Some(SimdWidth::W4),
+            "8" | "on" | "wide" => Some(SimdWidth::W8),
+            "16" => Some(SimdWidth::W16),
+            _ => None,
+        }
+    }
+}
+
+/// The process-wide dispatch width: `FEEDSIGN_SIMD` if set and valid
+/// (see [`SimdWidth::parse`]), else [`SimdWidth::W8`] — 8 lanes keeps
+/// the SoA state in 256-bit registers on AVX2 and splits cleanly into
+/// two 128-bit halves on baseline SSE2/NEON.  Read once and cached:
+/// the hot loops must not re-parse an env var per span.
+pub fn simd_width() -> SimdWidth {
+    static WIDTH: std::sync::OnceLock<SimdWidth> = std::sync::OnceLock::new();
+    *WIDTH.get_or_init(|| {
+        std::env::var("FEEDSIGN_SIMD")
+            .ok()
+            .and_then(|v| SimdWidth::parse(&v))
+            .unwrap_or(SimdWidth::W8)
+    })
+}
+
+/// [`for_each_span_lane`] with `W`-lane wide blocks: scalar head up to
+/// the next lane boundary, [`normals_soa`] body, scalar ragged tail.
+/// Spans shorter than one wide block take the scalar walker whole.
+#[inline(always)]
+fn for_each_span_wide<const W: usize, F: FnMut(usize, &[f32])>(
+    seed: u32,
+    start: usize,
+    len: usize,
+    mut f: F,
+) {
+    let block = 4 * W;
+    if len < block {
+        for_each_span_lane(seed, start, len, f);
+        return;
+    }
+    let phase = start % 4;
+    let head = if phase == 0 { 0 } else { 4 - phase };
+    if head != 0 {
+        for_each_span_lane(seed, start, head, &mut f);
+    }
+    let mut i = head;
+    let mut ctr = ((start + head) / 4) as u32;
+    let mut buf = [0.0f32; 4 * MAX_LANES];
+    while i + block <= len {
+        normals_soa::<W>(seed, ctr, &mut buf[..block]);
+        f(i, &buf[..block]);
+        i += block;
+        ctr = ctr.wrapping_add(W as u32);
+    }
+    if i < len {
+        for_each_span_lane(seed, start + i, len - i, |off, z| f(i + off, z));
+    }
+}
+
+/// The dispatching span walker every fused counter-space consumer calls:
+/// [`for_each_span_w`] at the process-wide [`simd_width`].  Contract and
+/// bit-exactness guarantees are those of [`for_each_span_lane`] — the
+/// width changes throughput only.
+#[inline]
+pub fn for_each_span<F: FnMut(usize, &[f32])>(seed: u32, start: usize, len: usize, f: F) {
+    for_each_span_w(seed, start, len, simd_width(), f)
+}
+
+/// [`for_each_span`] at an explicit width — the parity tests and benches
+/// sweep widths side by side without touching the process environment.
+#[inline]
+pub fn for_each_span_w<F: FnMut(usize, &[f32])>(
+    seed: u32,
+    start: usize,
+    len: usize,
+    width: SimdWidth,
+    f: F,
+) {
+    match width {
+        SimdWidth::Scalar => for_each_span_lane(seed, start, len, f),
+        SimdWidth::W4 => for_each_span_wide::<4, F>(seed, start, len, f),
+        SimdWidth::W8 => for_each_span_wide::<8, F>(seed, start, len, f),
+        SimdWidth::W16 => for_each_span_wide::<16, F>(seed, start, len, f),
+    }
+}
+
 /// Fill `out` with elements `z[start .. start + out.len()]` of the
-/// direction `z(seed)` — the copy instance of [`for_each_span_lane`],
+/// direction `z(seed)` — the copy instance of [`for_each_span`],
 /// and the primitive the chunk-parallel noise ops hand to each worker
 /// thread.
 pub fn normals_into_span(seed: u32, start: usize, out: &mut [f32]) {
-    for_each_span_lane(seed, start, out.len(), |i, z| {
+    normals_into_span_w(seed, start, out, simd_width());
+}
+
+/// [`normals_into_span`] at an explicit dispatch width.
+pub fn normals_into_span_w(seed: u32, start: usize, out: &mut [f32], width: SimdWidth) {
+    for_each_span_w(seed, start, out.len(), width, |i, z| {
         out[i..i + z.len()].copy_from_slice(z);
     });
 }
@@ -372,9 +567,16 @@ pub fn init_flat_params(
         } else if *std == 0.0 {
             w.extend(std::iter::repeat(0.0f32).take(n));
         } else {
-            let m = (n + 3) / 4 * 4;
-            let z = normals_vec(seed.wrapping_mul(65536).wrapping_add(idx as u32), m);
-            w.extend(z[..n].iter().map(|v| v * std));
+            // fill the segment in place: the span walker regenerates any
+            // ragged tail lane itself, so no lane-padded scratch vector
+            // is needed, and scaling in place keeps the exact
+            // `z * std` bits of the old copy-out
+            let at = w.len();
+            w.resize(at + n, 0.0);
+            normals_into(seed.wrapping_mul(65536).wrapping_add(idx as u32), &mut w[at..]);
+            for v in &mut w[at..] {
+                *v *= std;
+            }
         }
     }
     w.resize(padded_size, 0.0);
@@ -508,6 +710,97 @@ mod tests {
         assert!(w[32..40].iter().all(|&v| v == 1.0));
         assert!(w[40..48].iter().all(|&v| v == 0.0));
         assert!(w[48..].iter().all(|&v| v == 0.0)); // pad tail
+    }
+
+    #[test]
+    fn init_flat_params_fills_segments_in_place_bitwise() {
+        // regression for the lane-padded scratch allocation: ragged
+        // (n % 4 != 0) weight segments must hold exactly std * z bits,
+        // with no padding spill into the next segment
+        let segs = vec![
+            ("w0".to_string(), vec![3, 3], 0.02f32), // n = 9, ragged
+            ("gain".to_string(), vec![5], 1.0),
+            ("w1".to_string(), vec![7], 0.5), // ragged again, odd offset
+            ("bias".to_string(), vec![4], 0.0),
+        ];
+        let w = init_flat_params(&segs, 32, 3);
+        assert_eq!(w.len(), 32);
+        let z0 = normals_vec(3u32.wrapping_mul(65536), 9);
+        for (a, b) in w[..9].iter().zip(&z0) {
+            assert_eq!(a.to_bits(), (b * 0.02f32).to_bits());
+        }
+        assert!(w[9..14].iter().all(|&v| v == 1.0));
+        let z2 = normals_vec(3u32.wrapping_mul(65536).wrapping_add(2), 7);
+        for (a, b) in w[14..21].iter().zip(&z2) {
+            assert_eq!(a.to_bits(), (b * 0.5f32).to_bits());
+        }
+        assert!(w[21..].iter().all(|&v| v == 0.0), "bias + pad tail");
+    }
+
+    #[test]
+    fn simd_width_parse_table() {
+        for s in ["off", "scalar", "0", "1", " OFF "] {
+            assert_eq!(SimdWidth::parse(s), Some(SimdWidth::Scalar), "{s:?}");
+        }
+        assert_eq!(SimdWidth::parse("4"), Some(SimdWidth::W4));
+        for s in ["8", "on", "wide", "ON"] {
+            assert_eq!(SimdWidth::parse(s), Some(SimdWidth::W8), "{s:?}");
+        }
+        assert_eq!(SimdWidth::parse("16"), Some(SimdWidth::W16));
+        assert_eq!(SimdWidth::parse("512"), None);
+        assert_eq!(SimdWidth::parse(""), None);
+        for w in SimdWidth::ALL {
+            assert!(w.lanes() <= MAX_LANES);
+        }
+        assert!(SimdWidth::ALL.contains(&simd_width()));
+    }
+
+    #[test]
+    fn wide_widths_match_scalar_stream_bitwise() {
+        // the tentpole invariant: every dispatch width emits the same
+        // f32 stream bit-for-bit at arbitrary offsets and ragged tails
+        crate::util::proptest_lite::check("wide vs scalar normal stream", |g| {
+            let seed = g.u32() & 0x7FFF_FFFF;
+            let start = g.usize_in(0, 200);
+            let len = g.usize_in(1, 300);
+            let mut scalar = vec![0.0f32; len];
+            normals_into_span_w(seed, start, &mut scalar, SimdWidth::Scalar);
+            for width in [SimdWidth::W4, SimdWidth::W8, SimdWidth::W16] {
+                let mut wide = vec![0.0f32; len];
+                normals_into_span_w(seed, start, &mut wide, width);
+                for (i, (a, b)) in scalar.iter().zip(&wide).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{width:?} diverged at {i} (seed {seed}, start {start}, len {len})"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn wide_walker_covers_every_element_exactly_once() {
+        // the wide walker's head/body/tail must tile the span: offsets
+        // chosen to exercise mid-lane heads, whole-block bodies and
+        // every ragged tail length around a block boundary
+        for width in SimdWidth::ALL {
+            let block = 4 * width.lanes();
+            for start in [0usize, 1, 2, 3, 5] {
+                for len in [1usize, 3, block - 1, block, block + 1, 3 * block + 2] {
+                    let mut hits = vec![0u8; len];
+                    for_each_span_w(77, start, len, width, |i, z| {
+                        for j in 0..z.len() {
+                            hits[i + j] += 1;
+                        }
+                    });
+                    assert!(
+                        hits.iter().all(|&h| h == 1),
+                        "{width:?}: start {start} len {len} coverage {hits:?}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -11,8 +11,12 @@
 //! [`axpy_into`] / [`perturb_in_place`] split the counter space across
 //! worker threads and stay bit-identical to the sequential loop for every
 //! thread count (the rust analogue of the grid-parallel `spsa_axpy`
-//! Pallas kernel).  All span variants are per-lane closures over the one
-//! shared walker, [`prng::for_each_span_lane`].
+//! Pallas kernel).  All span variants are per-block closures over the one
+//! shared dispatching walker, [`prng::for_each_span`] — scalar or W-lane
+//! wide, same bits either way (see [`prng::SimdWidth`]).  [`axpy_many`]
+//! is the probe-batching form: one streaming pass over the canonical
+//! buffer materialises several clients' `w + scale_c · z(seed_c)` views
+//! at once.
 //!
 //! [`apply_update`] is also the replay primitive of the seed-history
 //! catch-up path (`coordinator::catchup`): a rejoining client applies its
@@ -26,10 +30,16 @@ use crate::data::Batch;
 
 /// In-place `w[j] += scale * z_{start+j}(seed)` for a span beginning at
 /// absolute element offset `start` of the direction stream — the
-/// accumulate instance of [`prng::for_each_span_lane`].  `start` may
+/// accumulate instance of [`prng::for_each_span`].  `start` may
 /// land mid-lane; the partial head lane is regenerated and sliced.
 pub fn perturb_span(w: &mut [f32], seed: u32, scale: f32, start: usize) {
-    prng::for_each_span_lane(seed, start, w.len(), |i, z| {
+    perturb_span_w(w, seed, scale, start, prng::simd_width());
+}
+
+/// [`perturb_span`] at an explicit dispatch width (parity tests and
+/// benches sweep widths without touching the environment).
+pub fn perturb_span_w(w: &mut [f32], seed: u32, scale: f32, start: usize, width: prng::SimdWidth) {
+    prng::for_each_span_w(seed, start, w.len(), width, |i, z| {
         for (wj, zj) in w[i..i + z.len()].iter_mut().zip(z) {
             *wj += scale * zj;
         }
@@ -38,15 +48,55 @@ pub fn perturb_span(w: &mut [f32], seed: u32, scale: f32, start: usize) {
 
 /// Fused `out[j] = w[j] + scale * z_{start+j}(seed)` for a span beginning
 /// at absolute element offset `start` (out-of-place form of
-/// [`perturb_span`]; the write instance of
-/// [`prng::for_each_span_lane`]).
+/// [`perturb_span`]; the write instance of [`prng::for_each_span`]).
 pub fn axpy_span(w: &[f32], out: &mut [f32], seed: u32, scale: f32, start: usize) {
+    axpy_span_w(w, out, seed, scale, start, prng::simd_width());
+}
+
+/// [`axpy_span`] at an explicit dispatch width.
+pub fn axpy_span_w(
+    w: &[f32],
+    out: &mut [f32],
+    seed: u32,
+    scale: f32,
+    start: usize,
+    width: prng::SimdWidth,
+) {
     debug_assert_eq!(w.len(), out.len());
-    prng::for_each_span_lane(seed, start, w.len(), |i, z| {
+    prng::for_each_span_w(seed, start, w.len(), width, |i, z| {
         for (j, zj) in z.iter().enumerate() {
             out[i + j] = w[i + j] + scale * zj;
         }
     });
+}
+
+/// Block length for [`axpy_many`]: long enough to amortise the per-view
+/// walker setup, short enough that one canonical block stays resident in
+/// L1/L2 while every view consumes it.
+const MANY_BLOCK: usize = 1 << 14;
+
+/// Multi-view fused AXPY: for each `(seed_v, scale_v)` in `views`,
+/// `outs[v][j] = w[j] + scale_v * z_j(seed_v)` — bit-identical to `V`
+/// separate [`axpy_span`] calls (counter-space purity makes the
+/// per-block interleaving invisible), but the canonical buffer `w`
+/// streams through the cache **once per block for all views** instead of
+/// once per view.  This is the probe-batching primitive behind
+/// `engine::probe_batch`: the memory traffic drops from `V` reads of `w`
+/// to ~1.
+pub fn axpy_many(w: &[f32], views: &[(u32, f32)], outs: &mut [&mut [f32]]) {
+    assert_eq!(views.len(), outs.len());
+    for out in outs.iter() {
+        debug_assert_eq!(w.len(), out.len());
+    }
+    let mut at = 0usize;
+    while at < w.len() {
+        let end = (at + MANY_BLOCK).min(w.len());
+        let wc = &w[at..end];
+        for ((seed, scale), out) in views.iter().zip(outs.iter_mut()) {
+            axpy_span(wc, &mut out[at..end], *seed, *scale, at);
+        }
+        at = end;
+    }
 }
 
 /// In-place `w += scale * z(seed)` with streaming noise regeneration,
@@ -206,20 +256,45 @@ mod tests {
                 cuts.push(g.usize_in(0, n + 1));
             }
             cuts.sort_unstable();
-            let mut out = vec![0.0f32; n];
-            for pair in cuts.windows(2) {
-                let (a, b) = (pair[0], pair[1]);
-                axpy_span(&w[a..b], &mut out[a..b], seed, scale, a);
+            // every dispatch width must survive the same arbitrary cuts
+            // (mid-lane and mid-wide-block alike) bit-exactly
+            for width in prng::SimdWidth::ALL {
+                let mut out = vec![0.0f32; n];
+                for pair in cuts.windows(2) {
+                    let (a, b) = (pair[0], pair[1]);
+                    axpy_span_w(&w[a..b], &mut out[a..b], seed, scale, a, width);
+                }
+                assert_eq!(out, expect, "axpy at {width:?}");
+                // and the perturb form over the same cuts
+                let mut wp = w.clone();
+                for pair in cuts.windows(2) {
+                    let (a, b) = (pair[0], pair[1]);
+                    perturb_span_w(&mut wp[a..b], seed, scale, a, width);
+                }
+                assert_eq!(wp, expect, "perturb at {width:?}");
             }
-            assert_eq!(out, expect);
-            // and the perturb form over the same cuts
-            let mut wp = w.clone();
-            for pair in cuts.windows(2) {
-                let (a, b) = (pair[0], pair[1]);
-                perturb_span(&mut wp[a..b], seed, scale, a);
-            }
-            assert_eq!(wp, expect);
         });
+    }
+
+    #[test]
+    fn axpy_many_matches_separate_axpys_bitwise() {
+        // the probe-batching primitive: interleaving views per block must
+        // be invisible — each view equals its standalone fused AXPY
+        for n in [0usize, 5, MANY_BLOCK - 1, MANY_BLOCK, MANY_BLOCK + 37] {
+            let w = prng::normals_vec(4, n);
+            let views = [(11u32, 1e-3f32), (12, -1e-3), (11, -1e-3), (900, 0.25)];
+            let mut expect = vec![vec![0.0f32; n]; views.len()];
+            for ((seed, scale), out) in views.iter().zip(expect.iter_mut()) {
+                axpy_span(&w, out, *seed, *scale, 0);
+            }
+            let mut many = vec![vec![0.0f32; n]; views.len()];
+            let mut outs: Vec<&mut [f32]> = many.iter_mut().map(|v| v.as_mut_slice()).collect();
+            axpy_many(&w, &views, &mut outs);
+            for (v, (e, m)) in expect.iter().zip(&many).enumerate() {
+                let same = e.iter().zip(m).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "view {v} diverged (n={n})");
+            }
+        }
     }
 
     #[test]

@@ -196,6 +196,10 @@ fn replay_catchup_stale_reads_match_the_dense_straggler() {
             let mut s = build_session(algo, 4, |cfg| {
                 cfg.catchup = CatchupCfg::Replay;
                 cfg.replica_cache = cache;
+                // injected plans bypass the sampler; declare a config that
+                // can strand clients so snapshot admission stays open and
+                // the "cached" arm really exercises the cache path
+                cfg.participation = ParticipationCfg::Fraction(0.75);
             });
             let mut mirror = DenseMirror::new(&s);
             let all = |t: u64| RoundPlan { round: t, participants: vec![0, 1, 2, 3] };
@@ -253,6 +257,7 @@ fn randomized_participation_schedules_stay_bit_identical() {
         let mut s = build_session(Algorithm::FeedSign, k, |cfg| {
             cfg.catchup = CatchupCfg::Replay;
             cfg.replica_cache = cache;
+            cfg.participation = ParticipationCfg::Fraction(0.75);
         });
         let mut mirror = DenseMirror::new(&s);
         for t in 0..rounds {
