@@ -245,9 +245,19 @@ impl BenchJson {
     }
 
     /// Whether a baseline's numbers came from a full-scale run — only
-    /// calibrated baselines arm the hard regression gate.
+    /// calibrated baselines arm the hard regression gate.  Delegates to
+    /// the library-resident predicate (`util::bench`) so the
+    /// uncalibrated path stays covered by `cargo test`, which never runs
+    /// the `harness = false` bench binaries.
     pub fn baseline_calibrated(base: &Json) -> bool {
-        matches!(base.get("calibrated"), Some(Json::Bool(true)))
+        feedsign::util::bench::baseline_calibrated(base)
+    }
+
+    /// Whether the hard no-regression gate should arm for this run
+    /// (calibrated baseline AND full-scale current run); see
+    /// `util::bench::regression_gate_armed`.
+    pub fn gate_armed(base: &Json) -> bool {
+        feedsign::util::bench::regression_gate_armed(base, scale())
     }
 
     /// Serialize and write `BENCH_<bench>.json`, consuming the recorder.

@@ -32,6 +32,7 @@ fn cfg(algorithm: &str, rounds: u64) -> ExperimentConfig {
         c_g_noise: 1.0, // the paper's high-c_g amplifier (Appendix H)
         participation: "full".into(),
         catchup: "off".into(),
+        seed_pool: 0,
         channel: "ideal".into(),
         link: "mobile".into(),
         deadline: 0.0,

@@ -52,6 +52,7 @@ fn cfg(algorithm: &str, ber: f64, rounds: u64) -> ExperimentConfig {
         c_g_noise: 0.0,
         participation: "full".into(),
         catchup: "off".into(),
+        seed_pool: 0,
         channel: if ber == 0.0 { "ideal".into() } else { format!("ber:{ber}") },
         link: "mobile".into(),
         deadline: 0.0,

@@ -1,0 +1,152 @@
+//! Convergence-vs-K sweep for the restricted seed space (FedKSeed /
+//! FedKSeed-Pro, `seed_pool` mode), confronted with the
+//! `theory::feedsign_pool` prediction.
+//!
+//! Restricting each round's direction to a pool of K candidate seeds
+//! buys a `ceil(log2 K)`-bit ledger (vs the implicit round counter) at
+//! the price of an approximation penalty that shrinks as K grows:
+//! `theory::feedsign_pool` models the error floor as the unrestricted
+//! FeedSign floor times `(1 + r_eff / K)`.  This bench runs the vision
+//! FFT task at K ∈ {16, 256, 4096} plus the unrestricted baseline and
+//! checks the measured shape:
+//!
+//! * every pool run learns (beats zero-shot) — convergence is retained
+//!   for any K >= 2, it is the *floor* that moves;
+//! * a large pool (K = 4096) lands in the unrestricted run's accuracy
+//!   band — the paper-scale regime where the restriction is ~free;
+//! * the per-round downlink prices at `ceil(log2 K) + 1` bits exactly;
+//! * the theory floors are monotone decreasing in K toward the
+//!   unrestricted floor (printed side by side with the measurements).
+
+mod common;
+
+use common::*;
+use feedsign::config::ExperimentConfig;
+use feedsign::theory;
+
+const POOLS: [usize; 3] = [16, 256, 4096];
+
+fn cfg(seed_pool: usize, rounds: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("fig-seedpool-k{seed_pool}"),
+        model: vision_model("synth-cifar10"),
+        task: vision_task("synth-cifar10"),
+        algorithm: "feedsign".into(),
+        clients: 5,
+        rounds,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 16,
+        eval_every: (rounds / 5).max(1),
+        eval_batches: 4,
+        eval_batch_size: 64,
+        dirichlet_beta: None,
+        byzantine_count: 0,
+        attack: None,
+        c_g_noise: 0.0,
+        participation: "full".into(),
+        catchup: "off".into(),
+        seed_pool,
+        channel: "ideal".into(),
+        link: "mobile".into(),
+        deadline: 0.0,
+        channel_seed: 0,
+        threads: 0,
+        replica_cache: 4,
+        pretrain_rounds: 0,
+        seed: 23,
+        verbose: false,
+    }
+}
+
+fn index_bits(k: usize) -> u64 {
+    let mut bits = 0u64;
+    while (1usize << bits) < k {
+        bits += 1;
+    }
+    bits.max(1)
+}
+
+fn main() {
+    let rounds = scaled(2500);
+    let n = repeats();
+    let mut v = Verdict::new();
+    let mut bj = BenchJson::new("fig_seedpool_convergence");
+
+    let zs = zero_shot(&cfg(0, 10));
+    println!("zero-shot: {zs:.1}%");
+
+    // theory column: the predicted floor ordering the sweep confronts
+    let c = theory::Constants::example();
+    let base = theory::feedsign(&c, 2e-3, 0.1);
+    println!("\n{:>12} | {:>12} | {:>14}", "pool K", "theory floor", "floor inflation");
+    let mut prev = f32::INFINITY;
+    for &k in &POOLS {
+        let rf = theory::feedsign_pool(&c, 2e-3, 0.1, k);
+        println!(
+            "{k:>12} | {:>12.3e} | {:>13.3}x",
+            rf.error_floor(),
+            rf.error_floor() / base.error_floor()
+        );
+        v.check(
+            &format!("theory-floor-monotone-k{k}"),
+            rf.c < prev && rf.c > base.c,
+            format!("floor C {:.3e} (unrestricted {:.3e})", rf.c, base.c),
+        );
+        prev = rf.c;
+    }
+    println!("{:>12} | {:>12.3e} | {:>13.3}x", "inf", base.error_floor(), 1.0);
+
+    // measured column
+    let mut table = Table::new(
+        &format!("seed-pool convergence ({rounds} rounds, K=5 clients, vision FFT)"),
+        &["best acc %", "final loss", "bits/round down"],
+    );
+    let unrestricted = run_repeats(&cfg(0, rounds), n);
+    let base_acc = best_accs(&unrestricted);
+    table.row(
+        "unrestricted",
+        vec![
+            format!("{base_acc}"),
+            format!("{:.4}", final_losses(&unrestricted).mean),
+            "5x1".into(),
+        ],
+    );
+    for &k in &POOLS {
+        let runs = run_repeats(&cfg(k, rounds), n);
+        let acc = best_accs(&runs);
+        let bits = runs[0].ledger.downlink_bits;
+        let per_round = index_bits(k) + 1;
+        table.row(
+            &format!("pool K={k}"),
+            vec![
+                format!("{acc}"),
+                format!("{:.4}", final_losses(&runs).mean),
+                format!("5x{per_round}"),
+            ],
+        );
+        v.check(
+            &format!("pool-k{k}-learns"),
+            acc.mean > zs,
+            format!("{:.1}% vs zero-shot {zs:.1}%", acc.mean),
+        );
+        v.check(
+            &format!("pool-k{k}-downlink-prices-log2k-plus-one"),
+            bits == runs[0].rounds * 5 * per_round,
+            format!("{bits} bits over {} rounds x 5 x {per_round}", runs[0].rounds),
+        );
+        bj.metric(&format!("acc_k{k}"), acc.mean as f64);
+        if k == *POOLS.last().unwrap() {
+            v.check(
+                "large-pool-matches-unrestricted-band",
+                (base_acc.mean - acc.mean).abs() < 10.0,
+                format!("K={k}: {:.1}% vs unrestricted {:.1}%", acc.mean, base_acc.mean),
+            );
+        }
+    }
+    table.print();
+    bj.metric("acc_unrestricted", base_acc.mean as f64);
+    bj.metric("rounds", rounds as f64);
+    bj.write();
+    v.finish()
+}

@@ -361,7 +361,7 @@ fn main() {
     // full-scale run) AND this run is itself full-scale — smoke runs and
     // hand-seeded estimate baselines soft-log instead of failing
     if let Some(base) = &baseline {
-        let calibrated = BenchJson::baseline_calibrated(base);
+        let armed = feedsign::util::bench::regression_gate_armed(base, scale());
         for (section, now_ms) in [
             ("wide_normals_1m", wide_n * 1e3),
             ("wide_axpy_1m", axpy_wide * 1e3),
@@ -371,7 +371,7 @@ fn main() {
             let Some(base_ms) = BenchJson::baseline_ms(base, section) else { continue };
             let regressed = now_ms > base_ms * 1.5;
             let detail = format!("{section}: {now_ms:.3} ms/op vs baseline {base_ms:.3}");
-            if calibrated && scale() >= 1.0 {
+            if armed {
                 v.check(&format!("no-regression-{section}"), !regressed, detail);
             } else if regressed {
                 println!("[perf-note] {detail} (uncalibrated baseline or smoke run: not gating)");
@@ -447,6 +447,7 @@ fn round_cfg(k: usize, threads: usize) -> ExperimentConfig {
         c_g_noise: 0.0,
         participation: "full".into(),
         catchup: "off".into(),
+        seed_pool: 0,
         channel: "ideal".into(),
         link: "mobile".into(),
         deadline: 0.0,

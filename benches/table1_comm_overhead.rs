@@ -32,6 +32,7 @@ fn cfg(algorithm: &str) -> ExperimentConfig {
         c_g_noise: 0.0,
         participation: "full".into(),
         catchup: "off".into(),
+        seed_pool: 0,
         channel: "ideal".into(),
         link: "mobile".into(),
         deadline: 0.0,

@@ -42,6 +42,7 @@ fn cfg(task: &str, algorithm: &str, rounds: u64, eta: f32) -> ExperimentConfig {
         c_g_noise: 0.0,
         participation: "full".into(),
         catchup: "off".into(),
+        seed_pool: 0,
         channel: "ideal".into(),
         link: "mobile".into(),
         deadline: 0.0,

@@ -36,6 +36,7 @@ fn cfg(task: &str, algorithm: &str, beta: Option<f32>, rounds: u64) -> Experimen
         c_g_noise: 0.0,
         participation: "full".into(),
         catchup: "off".into(),
+        seed_pool: 0,
         channel: "ideal".into(),
         link: "mobile".into(),
         deadline: 0.0,

@@ -35,6 +35,8 @@
 //! synced round) gates what the ring may drop, so a record is never
 //! discarded while some tracked client still needs it.
 
+use crate::simkit::prng;
+
 /// A protocol message.  Payload bits follow the paper's accounting
 /// (Eq. 5): float projections are 32 bits, seeds 32 bits, signs 1 bit.
 #[derive(Debug, Clone, PartialEq)]
@@ -66,6 +68,17 @@ pub enum Message {
     /// (`catchup = "rebroadcast"` — the cost baseline replay is compared
     /// against; 32·d bits).
     Rebroadcast { n_params: usize },
+    /// PS -> client: the round's sampled index into the restricted seed
+    /// pool (`seed_pool` mode, FedKSeed).  The direction is no longer
+    /// derivable from the round alone, so the trigger carries
+    /// `ceil(log2 K)` payload bits — the per-round downlink becomes
+    /// `ceil(log2 K) + 1` once the 1-bit [`Message::GlobalSign`] lands.
+    PoolIndex { round: u64, index: u32, index_bits: u16 },
+    /// PS -> client: the K accumulated per-pool-seed step scalars — the
+    /// FedKSeed model-delta download, a rejoin cost *constant in the gap
+    /// length* (`catchup = "pool"`; 32·K bits) because the whole model
+    /// delta is `sum_i scalars[i] · z(pool_seed_i)`.
+    PoolScalars { k: usize },
 }
 
 impl Message {
@@ -81,6 +94,8 @@ impl Message {
                 records.iter().map(SeedRecord::payload_bits).sum()
             }
             Message::Rebroadcast { n_params } => 32 * *n_params as u64,
+            Message::PoolIndex { index_bits, .. } => *index_bits as u64,
+            Message::PoolScalars { k } => 32 * *k as u64,
         }
     }
 
@@ -115,12 +130,27 @@ pub struct SeedRecord {
     /// a `seed == round` coincidence, which a randomly sampled ZO seed
     /// can produce.
     pub seed_from_round: bool,
+    /// `Some((index, index_bits))` when the update's direction was drawn
+    /// from a restricted [`SeedPool`] (`seed_pool` mode): `seed` still
+    /// carries the *resolved* pool seed (so every replay path applies the
+    /// record without pool context), but on the wire only the
+    /// `index_bits = ceil(log2 K)`-bit index travels alongside the sign.
+    pub pool_index: Option<(u32, u16)>,
 }
 
 impl SeedRecord {
-    /// A FeedSign/DP-FeedSign round commit: `seed = round`, derivable.
+    /// A FeedSign/DP-FeedSign round commit: `seed = round` (masked into
+    /// the 31-bit direction space — see
+    /// [`crate::simkit::prng::round_direction_seed`]), derivable.
     pub fn sign_step(round: u64, sign: i8, lr_scale: f32) -> SeedRecord {
-        SeedRecord { round, seed: round as u32, sign, lr_scale, seed_from_round: true }
+        SeedRecord {
+            round,
+            seed: prng::round_direction_seed(round),
+            sign,
+            lr_scale,
+            seed_from_round: true,
+            pool_index: None,
+        }
     }
 
     /// A ZO-FedSGD pair commit: explicit seed, coefficient folded into
@@ -132,6 +162,29 @@ impl SeedRecord {
             sign: if coeff < 0.0 { -1 } else { 1 },
             lr_scale: coeff.abs(),
             seed_from_round: false,
+            pool_index: None,
+        }
+    }
+
+    /// A restricted-seed-pool round commit (`seed_pool` mode): `seed` is
+    /// the resolved pool seed at `index`, and the record prices at
+    /// `index_bits + 1` bits (index + sign) instead of the 64-bit
+    /// explicit pair.
+    pub fn index_step(
+        round: u64,
+        seed: u32,
+        index: u32,
+        index_bits: u16,
+        sign: i8,
+        lr_scale: f32,
+    ) -> SeedRecord {
+        SeedRecord {
+            round,
+            seed,
+            sign,
+            lr_scale,
+            seed_from_round: false,
+            pool_index: Some((index, index_bits)),
         }
     }
 
@@ -144,14 +197,125 @@ impl SeedRecord {
 
     /// Paper-accounting bits to ship this record to a rejoining client:
     /// 1 bit when the seed is derivable from the round index (only the
-    /// sign travels), else 32-bit seed + 32-bit coefficient (the
+    /// sign travels), `ceil(log2 K) + 1` for a restricted-pool index
+    /// record (FedKSeed), else 32-bit seed + 32-bit coefficient (the
     /// ZO-FedSGD pair format).
     pub fn payload_bits(&self) -> u64 {
-        if self.seed_from_round {
+        if let Some((_, bits)) = self.pool_index {
+            bits as u64 + 1
+        } else if self.seed_from_round {
             1
         } else {
             64
         }
+    }
+}
+
+/// Bits needed to index a pool of `k` candidates: `ceil(log2 k)`, with a
+/// 1-bit floor so a degenerate 1-entry pool still prices a real index.
+pub fn index_bits_for(k: usize) -> u16 {
+    debug_assert!(k >= 1);
+    let bits = usize::BITS - k.saturating_sub(1).leading_zeros();
+    bits.max(1) as u16
+}
+
+/// The restricted seed space of FedKSeed (arXiv 2312.06353): K candidate
+/// Philox direction seeds derived **once** from a pool seed, after which
+/// every per-round perturbation is named by a `ceil(log2 K)`-bit *index*
+/// instead of a 31-bit seed.  Both topologies (and every rejoining
+/// client) derive the identical pool from the run seed, so the pool
+/// itself never travels.
+///
+/// Candidate seeds come from the same Philox-4x32 substrate as the
+/// directions themselves (4 candidates per block, counter-indexed) and
+/// are masked into the 31-bit [`prng::DIRECTION_MASK`] domain the
+/// channel impairment model reserves — the same domain bugfix the
+/// round-derived schedule got.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeedPool {
+    /// The seed the pool was derived from (keys the sampler's draws).
+    pub pool_seed: u32,
+    seeds: Vec<u32>,
+}
+
+/// Key salt separating pool-candidate derivation from every other Philox
+/// consumer keyed off the run seed.
+const POOL_DERIVE_SALT: u32 = 0x5EED_C0DE;
+/// Key salt for the per-round sampler draw.
+const POOL_SAMPLE_SALT: u32 = 0xA11C_E5ED;
+
+impl SeedPool {
+    /// Derive the K candidate seeds.  Pure function of `(pool_seed, k)`:
+    /// every party that knows the run config regenerates the identical
+    /// pool.
+    pub fn derive(pool_seed: u32, k: usize) -> SeedPool {
+        assert!(k >= 2, "a seed pool needs at least 2 candidate directions (got {k})");
+        let mut seeds = Vec::with_capacity(k);
+        let mut ctr = 0u32;
+        while seeds.len() < k {
+            for w in prng::philox4x32(pool_seed ^ POOL_DERIVE_SALT, ctr) {
+                if seeds.len() < k {
+                    seeds.push(w & prng::DIRECTION_MASK);
+                }
+            }
+            ctr = ctr.wrapping_add(1);
+        }
+        SeedPool { pool_seed, seeds }
+    }
+
+    pub fn k(&self) -> usize {
+        self.seeds.len()
+    }
+
+    /// `ceil(log2 K)` — the bits one ledger index costs on the wire.
+    pub fn index_bits(&self) -> u16 {
+        index_bits_for(self.seeds.len())
+    }
+
+    /// The candidate direction seed at `index`.
+    pub fn seed_at(&self, index: u32) -> u32 {
+        self.seeds[index as usize]
+    }
+
+    /// FedKSeed-Pro's probability-differentiated draw: sample round `t`'s
+    /// pool index, biased toward directions with large accumulated
+    /// |step-scalar| history (`scalars[i]` is the sum of committed
+    /// `sign·lr_scale` steps along candidate `i`).
+    ///
+    /// Determinism contract: one Philox block keyed
+    /// `(pool_seed ^ salt, t)` and a sequential f32 cumulative scan — no
+    /// thread-count, topology, or iteration-order dependence, so both
+    /// topologies sample the identical index stream (the same discipline
+    /// as the participation and channel draws).  Weights are
+    /// `1 + K·|h_i|/S` (half uniform mass, half proportional), so the
+    /// sampler never collapses onto a single direction and reduces to
+    /// uniform while the history is empty.
+    pub fn sample_index(&self, scalars: &[f32], t: u64) -> u32 {
+        let k = self.seeds.len();
+        debug_assert!(scalars.is_empty() || scalars.len() == k);
+        let block = prng::philox4x32(self.pool_seed ^ POOL_SAMPLE_SALT, t as u32);
+        // fold the high round word in so rounds >= 2^32 keep fresh draws
+        let draw = block[0] ^ (t >> 32) as u32;
+        let total_h: f64 = scalars.iter().map(|h| h.abs() as f64).sum();
+        if total_h <= 0.0 || !total_h.is_finite() {
+            // uniform: modulo over a 32-bit draw (bias < K/2^32, and the
+            // draw is deterministic, which is the property that matters)
+            return draw % k as u32;
+        }
+        let u = prng::u32_to_unit(draw) as f64;
+        let mut weights_total = 0.0f64;
+        for h in scalars {
+            weights_total += 1.0 + k as f64 * h.abs() as f64 / total_h;
+        }
+        let target = u * weights_total;
+        let mut cum = 0.0f64;
+        for (i, h) in scalars.iter().enumerate() {
+            cum += 1.0 + k as f64 * h.abs() as f64 / total_h;
+            if target <= cum {
+                return i as u32;
+            }
+        }
+        (k - 1) as u32
     }
 }
 
@@ -355,11 +519,30 @@ impl LinkModel {
         LinkModel { up_bps: 20e6, down_bps: 100e6, rtt_s: 0.03 }
     }
 
-    /// Projected communication seconds for a ledger.
+    /// Projected communication seconds for a ledger.  Degenerate link
+    /// profiles (zero, negative, or non-finite bandwidth) project to
+    /// `+inf` for any non-empty transfer instead of the NaN the naive
+    /// `0/0` division produced.
     pub fn seconds(&self, ledger: &Ledger) -> f64 {
-        ledger.uplink_bits as f64 / self.up_bps
-            + ledger.downlink_bits as f64 / self.down_bps
+        transfer_seconds(ledger.uplink_bits, self.up_bps)
+            + transfer_seconds(ledger.downlink_bits, self.down_bps)
             + (ledger.uplink_msgs + ledger.downlink_msgs) as f64 * self.rtt_s
+    }
+}
+
+/// Seconds to push `bits` through a `bps` link, guarded against
+/// degenerate bandwidths: an empty transfer is free on any link, and a
+/// non-positive or non-finite bandwidth means a non-empty transfer never
+/// completes (`+inf`) — never NaN, which would poison every downstream
+/// wall-clock sum and comparison.  Shared by [`LinkModel::seconds`] and
+/// the per-client `net::LinkProfile` projections.
+pub fn transfer_seconds(bits: u64, bps: f64) -> f64 {
+    if bits == 0 {
+        0.0
+    } else if bps > 0.0 && bps.is_finite() {
+        bits as f64 / bps
+    } else {
+        f64::INFINITY
     }
 }
 
@@ -496,6 +679,106 @@ mod tests {
     #[test]
     fn rebroadcast_costs_dense_checkpoint() {
         assert_eq!(Message::Rebroadcast { n_params: 1000 }.payload_bits(), 32_000);
+    }
+
+    #[test]
+    fn degenerate_link_profiles_never_project_nan() {
+        let l = Ledger { uplink_bits: 100, downlink_bits: 0, uplink_msgs: 1, downlink_msgs: 0 };
+        for bad in [0.0, -5.0, f64::NAN, f64::INFINITY] {
+            let lm = LinkModel { up_bps: bad, down_bps: bad, rtt_s: 0.01 };
+            let s = lm.seconds(&l);
+            assert!(!s.is_nan(), "up_bps={bad} produced NaN");
+            assert!(s.is_infinite(), "a non-empty transfer on a dead link never completes");
+        }
+        // the 0-bit / 0-bps corner is the one that used to be NaN (0/0):
+        // an empty transfer is free even on a dead link
+        let empty = Ledger::default();
+        let lm = LinkModel { up_bps: 0.0, down_bps: 0.0, rtt_s: 0.0 };
+        assert_eq!(lm.seconds(&empty), 0.0);
+        assert_eq!(transfer_seconds(0, 0.0), 0.0);
+        assert_eq!(transfer_seconds(1, 0.0), f64::INFINITY);
+        assert_eq!(transfer_seconds(8, 2.0), 4.0);
+    }
+
+    #[test]
+    fn round_derived_record_seed_is_masked_at_the_boundary() {
+        // rounds below 2^31: the masked derivation is the identity
+        assert_eq!(SeedRecord::sign_step(7, 1, 1e-3).seed, 7);
+        // rounds at/past the MSB boundary: the seed stays in the 31-bit
+        // direction space the channel model's corruption masking assumes
+        let boundary = SeedRecord::sign_step(1 << 31, 1, 1e-3);
+        assert_eq!(boundary.seed, 0);
+        let past = SeedRecord::sign_step((1 << 31) + 9, -1, 1e-3);
+        assert_eq!(past.seed, 9);
+        assert_eq!(past.seed & !crate::simkit::prng::DIRECTION_MASK, 0);
+        // pricing is unchanged: the schedule is still round-derivable
+        assert_eq!(boundary.payload_bits(), 1);
+    }
+
+    #[test]
+    fn index_bits_are_ceil_log2() {
+        assert_eq!(index_bits_for(1), 1);
+        assert_eq!(index_bits_for(2), 1);
+        assert_eq!(index_bits_for(3), 2);
+        assert_eq!(index_bits_for(4), 2);
+        assert_eq!(index_bits_for(5), 3);
+        assert_eq!(index_bits_for(1024), 10);
+        assert_eq!(index_bits_for(4096), 12);
+        assert_eq!(index_bits_for(4097), 13);
+    }
+
+    #[test]
+    fn seed_pool_derivation_is_deterministic_and_in_domain() {
+        let a = SeedPool::derive(29, 4096);
+        let b = SeedPool::derive(29, 4096);
+        assert_eq!(a, b, "pure function of (pool_seed, k)");
+        assert_eq!(a.k(), 4096);
+        assert_eq!(a.index_bits(), 12);
+        for i in 0..a.k() as u32 {
+            assert_eq!(
+                a.seed_at(i) & !crate::simkit::prng::DIRECTION_MASK,
+                0,
+                "candidate {i} left the 31-bit direction space"
+            );
+        }
+        // a different pool seed gives a different pool
+        assert_ne!(SeedPool::derive(30, 4096), a);
+    }
+
+    #[test]
+    fn pool_index_record_prices_at_log2k_plus_one() {
+        let pool = SeedPool::derive(7, 4096);
+        let r = SeedRecord::index_step(5, pool.seed_at(100), 100, pool.index_bits(), 1, 2e-3);
+        assert_eq!(r.payload_bits(), 13, "ceil(log2 4096) + 1 sign bit");
+        assert_eq!(r.seed, pool.seed_at(100), "replay needs no pool context");
+        // the message variants price consistently
+        let m = Message::PoolIndex { round: 5, index: 100, index_bits: pool.index_bits() };
+        assert_eq!(m.payload_bits(), 12);
+        assert!(!m.is_uplink());
+        assert_eq!(Message::PoolScalars { k: 4096 }.payload_bits(), 32 * 4096);
+        // the compression claim at K=4096: 64-bit explicit pair vs 13
+        assert!(64 >= 4 * r.payload_bits(), ">=4x ledger-record reduction");
+    }
+
+    #[test]
+    fn pool_sampler_is_uniform_without_history_and_biased_with_it() {
+        let pool = SeedPool::derive(11, 64);
+        // empty history: a deterministic uniform draw
+        let h0 = vec![0.0f32; 64];
+        let first = pool.sample_index(&h0, 0);
+        assert_eq!(first, pool.sample_index(&h0, 0), "keyed draw reproduces");
+        assert!(first < 64);
+        let spread: std::collections::BTreeSet<u32> =
+            (0..200).map(|t| pool.sample_index(&h0, t)).collect();
+        assert!(spread.len() > 16, "uniform draws must spread over the pool");
+        // loaded history: the heavy direction is sampled far above 1/K
+        let mut h = vec![0.0f32; 64];
+        h[17] = 100.0;
+        let hits = (0..2000).filter(|t| pool.sample_index(&h, *t) == 17).count();
+        assert!(hits > 2000 / 64 * 4, "Pro sampler must bias toward |history| ({hits} hits)");
+        // ...but never collapses: other directions still get drawn
+        let others = (0..2000).filter(|t| pool.sample_index(&h, *t) != 17).count();
+        assert!(others > 200, "uniform floor keeps exploring ({others} non-17 draws)");
     }
 
     #[test]

@@ -87,9 +87,15 @@ pub struct ExperimentConfig {
     /// per-round client sampling: `full | fraction:F | bernoulli:P`
     /// (synchronized ZO algorithms only)
     pub participation: String,
-    /// offline-client catch-up policy: `off | replay | rebroadcast`
+    /// offline-client catch-up policy: `off | replay | rebroadcast | pool`
     /// (synchronized ZO algorithms only; see `coordinator::catchup`)
     pub catchup: String,
+    /// restricted seed space (FedKSeed): size K of the candidate
+    /// direction pool, or 0 for the unrestricted per-round derivation.
+    /// K ≥ 2 prices each round announcement at `ceil(log2 K)` index bits
+    /// instead of an implicit 64-bit round counter (FeedSign algorithms
+    /// only; see `comm::SeedPool`)
+    pub seed_pool: usize,
     /// impaired-channel model: `ideal | ber:P | drop:P` (see `net`)
     pub channel: String,
     /// per-client link profiles: `mobile | wifi | iot | mixed`
@@ -170,6 +176,7 @@ impl ExperimentConfig {
             c_g_noise: doc.float("", "c_g_noise").unwrap_or(0.0) as f32,
             participation: doc.str("", "participation").unwrap_or_else(|| "full".into()),
             catchup: doc.str("", "catchup").unwrap_or_else(|| "off".into()),
+            seed_pool: doc.int("", "seed_pool").unwrap_or(0) as usize,
             channel: doc.str("", "channel").unwrap_or_else(|| "ideal".into()),
             link: doc.str("", "link").unwrap_or_else(|| "mobile".into()),
             deadline: doc.float("", "deadline").unwrap_or(0.0),
@@ -212,6 +219,7 @@ impl ExperimentConfig {
         d.set("", "c_g_noise", Value::Float(self.c_g_noise as f64));
         d.set("", "participation", s(&self.participation));
         d.set("", "catchup", s(&self.catchup));
+        d.set("", "seed_pool", Value::Int(self.seed_pool as i64));
         d.set("", "channel", s(&self.channel));
         d.set("", "link", s(&self.link));
         d.set("", "deadline", Value::Float(self.deadline));
@@ -293,10 +301,21 @@ impl ExperimentConfig {
             bail!("partial participation applies to feedsign/dp-feedsign/zo-fedsgd only");
         }
         let Some(catchup) = CatchupCfg::parse(&self.catchup) else {
-            bail!("unknown catchup {:?} (off | replay | rebroadcast)", self.catchup);
+            bail!("unknown catchup {:?} (off | replay | rebroadcast | pool)", self.catchup);
         };
         if catchup.is_on() && matches!(algo, Algorithm::FedSgd | Algorithm::Mezo) {
             bail!("catch-up applies to feedsign/dp-feedsign/zo-fedsgd only");
+        }
+        if self.seed_pool == 1 {
+            bail!("seed_pool = 1 would fix a single direction for the whole run; use K >= 2 (or 0 for the unrestricted space)");
+        }
+        if self.seed_pool > 0
+            && !matches!(algo, Algorithm::FeedSign | Algorithm::DpFeedSign { .. })
+        {
+            bail!("the restricted seed space (seed_pool) applies to feedsign/dp-feedsign only");
+        }
+        if catchup == CatchupCfg::PoolScalars && self.seed_pool == 0 {
+            bail!("catchup = \"pool\" downloads the K accumulated pool scalars and so requires seed_pool >= 2");
         }
         let Some(channel) = ChannelModel::parse(&self.channel) else {
             bail!("unknown channel {:?} (ideal | ber:P | drop:P)", self.channel);
@@ -456,6 +475,7 @@ impl ExperimentConfig {
             c_g_noise: self.c_g_noise,
             participation: self.participation_cfg(),
             catchup: self.catchup_cfg(),
+            seed_pool: self.seed_pool,
             threads: self.threads,
             net: self.net_cfg(),
             replica_cache: self.replica_cache,
@@ -522,6 +542,7 @@ pub fn quickstart() -> ExperimentConfig {
         c_g_noise: 0.0,
         participation: "full".into(),
         catchup: "off".into(),
+        seed_pool: 0,
         channel: "ideal".into(),
         link: "mobile".into(),
         deadline: 0.0,
@@ -607,6 +628,7 @@ mod tests {
             c_g_noise: 0.0,
             participation: "full".into(),
             catchup: "off".into(),
+            seed_pool: 0,
             channel: "ideal".into(),
             link: "mobile".into(),
             deadline: 0.0,
@@ -795,6 +817,58 @@ mod tests {
         assert_eq!(s.replica_stats().owned_clients, 0);
         assert_eq!(s.replica_stats().peak_bytes, 4 * s.replicas.d());
         s.step(0);
+        assert!(s.replicas_synchronized());
+    }
+
+    #[test]
+    fn seed_pool_roundtrips_gates_and_reaches_session() {
+        let mut cfg = quickstart();
+        cfg.seed_pool = 64;
+        cfg.validate().unwrap();
+        let back = ExperimentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.seed_pool, 64);
+        // omitted key defaults to the unrestricted space
+        let text: String = cfg
+            .to_toml()
+            .lines()
+            .filter(|l| !l.starts_with("seed_pool"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert_eq!(ExperimentConfig::from_toml(&text).unwrap().seed_pool, 0);
+        // the knob reaches the session and prices the downlink at
+        // ceil(log2 64) + 1 = 7 bits per client per round
+        cfg.rounds = 3;
+        let mut s = cfg.build_session().unwrap();
+        assert_eq!(s.cfg.seed_pool, 64);
+        s.step(0);
+        assert_eq!(s.ledger.downlink_bits, 5 * 7);
+        // gating: K = 1 is degenerate; FO/MeZO have no seed to restrict
+        cfg.seed_pool = 1;
+        assert!(cfg.validate().is_err(), "a single-direction pool cannot learn");
+        cfg.seed_pool = 64;
+        cfg.algorithm = "zo-fedsgd".into();
+        assert!(cfg.validate().is_err(), "projection uplinks are not index-coded");
+        cfg.algorithm = "dp-feedsign:2.0".into();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn pool_catchup_requires_seed_pool() {
+        let mut cfg = quickstart();
+        cfg.participation = "fraction:0.4".into();
+        cfg.catchup = "pool".into();
+        assert!(cfg.validate().is_err(), "no pool to download scalars for");
+        cfg.seed_pool = 16;
+        cfg.validate().unwrap();
+        assert_eq!(cfg.catchup_cfg(), CatchupCfg::PoolScalars);
+        let back = ExperimentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.catchup, "pool");
+        cfg.rounds = 4;
+        let mut s = cfg.build_session().unwrap();
+        for t in 0..4 {
+            s.step(t);
+        }
+        s.catch_up_all();
         assert!(s.replicas_synchronized());
     }
 

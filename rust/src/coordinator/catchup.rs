@@ -44,15 +44,25 @@ pub enum CatchupCfg {
     /// `coordinator::distributed` topology cannot run this mode: its PS
     /// holds no parameters, per the paper's §D.2 privacy property.)
     Rebroadcast,
+    /// Rejoining clients download the K accumulated per-pool-seed step
+    /// scalars (`seed_pool` mode only; the FedKSeed model-delta
+    /// representation): 32·K bits per rejoin, **constant in the gap
+    /// length**, because `sum_i scalars[i] · z(pool_seed_i)` *is* the
+    /// model delta.  Like `rebroadcast`, the threaded topology rejects
+    /// it: a dense distributed client must apply the missed updates in
+    /// commit order to stay bit-identical to the session's canonical
+    /// buffer, which is replay, not a scalar download.
+    PoolScalars,
 }
 
 impl CatchupCfg {
-    /// Parse a config/CLI spec: `off`, `replay`, `rebroadcast`.
+    /// Parse a config/CLI spec: `off`, `replay`, `rebroadcast`, `pool`.
     pub fn parse(s: &str) -> Option<CatchupCfg> {
         match s.trim().to_ascii_lowercase().as_str() {
             "off" => Some(CatchupCfg::Off),
             "replay" => Some(CatchupCfg::Replay),
             "rebroadcast" => Some(CatchupCfg::Rebroadcast),
+            "pool" => Some(CatchupCfg::PoolScalars),
             _ => None,
         }
     }
@@ -64,6 +74,7 @@ impl CatchupCfg {
             CatchupCfg::Off => "off",
             CatchupCfg::Replay => "replay",
             CatchupCfg::Rebroadcast => "rebroadcast",
+            CatchupCfg::PoolScalars => "pool",
         }
     }
 
@@ -133,7 +144,7 @@ mod tests {
 
     #[test]
     fn parse_render_roundtrip() {
-        for s in ["off", "replay", "rebroadcast"] {
+        for s in ["off", "replay", "rebroadcast", "pool"] {
             let cfg = CatchupCfg::parse(s).unwrap();
             assert_eq!(CatchupCfg::parse(cfg.render()), Some(cfg));
         }
@@ -142,6 +153,7 @@ mod tests {
         assert!(!CatchupCfg::Off.is_on());
         assert!(CatchupCfg::Replay.is_on());
         assert!(CatchupCfg::Rebroadcast.is_on());
+        assert!(CatchupCfg::PoolScalars.is_on());
     }
 
     #[test]

@@ -29,7 +29,7 @@
 //! tests pin this runtime against the synchronous session: identical
 //! seeds must produce bit-identical final models and ledgers.
 
-use crate::comm::{self, Ledger, Message, SeedHistory, SeedRecord};
+use crate::comm::{self, Ledger, Message, SeedHistory, SeedPool, SeedRecord};
 use crate::coordinator::aggregation;
 use crate::coordinator::byzantine::Attack;
 use crate::coordinator::catchup::{CatchupCfg, CatchupTracker};
@@ -75,6 +75,12 @@ pub struct DistCfg {
     /// Coordinator seed (must match the sync session's `cfg.seed` for
     /// cross-topology parity).
     pub seed: u32,
+    /// Restricted seed space (FedKSeed): `>= 2` derives the same K
+    /// candidate directions the sync session derives from `seed`, and
+    /// each round's trigger becomes a [`Message::PoolIndex`] carrying
+    /// the `ceil(log2 K)`-bit index; 0 keeps the implicit `seed = t`
+    /// schedule.
+    pub seed_pool: usize,
 }
 
 impl DistCfg {
@@ -89,6 +95,7 @@ impl DistCfg {
             catchup: CatchupCfg::Off,
             net: NetCfg::ideal(),
             seed: 0,
+            seed_pool: 0,
         }
     }
 }
@@ -123,11 +130,21 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
         cfg.catchup != CatchupCfg::Rebroadcast,
         "the threaded PS holds no parameters (§D.2); only replay catch-up is possible here"
     );
+    assert!(
+        cfg.catchup != CatchupCfg::PoolScalars,
+        "the threaded topology's dense clients must apply missed updates in commit order \
+         to stay bit-identical; use catchup = \"replay\""
+    );
     let k = clients.len();
     let train = Arc::new(train);
     let mut ps_links = Vec::with_capacity(k);
     let mut handles = Vec::with_capacity(k);
     let (eta, mu, batch_size) = (cfg.eta, cfg.mu, cfg.batch_size);
+    // restricted seed space: PS and every client derive the identical
+    // pool from (seed, K) — the pool seed is setup-time metadata, so
+    // only the per-round index crosses the wire
+    let ps_pool = (cfg.seed_pool >= 2).then(|| SeedPool::derive(cfg.seed, cfg.seed_pool));
+    let (pool_seed, pool_k) = (cfg.seed, cfg.seed_pool);
 
     for mut c in clients {
         let (duplex, port) = comm::link();
@@ -147,6 +164,7 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
             // the PS never interleaves rounds, so a GlobalSign always
             // applies along it.
             let mut round_seed = 0u32;
+            let pool = (pool_k >= 2).then(|| SeedPool::derive(pool_seed, pool_k));
             while let Ok(msg) = port.from_ps.recv() {
                 match msg {
                     Message::ReplayHistory { records } => {
@@ -158,7 +176,25 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
                         }
                     }
                     Message::RoundStart { round } => {
-                        round_seed = round as u32;
+                        // same masked round -> seed derivation as the
+                        // session engine (31-bit direction space)
+                        round_seed = prng::round_direction_seed(round);
+                        let batch = c.shard.next_batch(&train, batch_size, &mut c.rng);
+                        let p = c.engine.probe(&c.w, &batch, round_seed, mu);
+                        let honest = if p >= 0.0 { 1i8 } else { -1 };
+                        let sign = c.attack.mutate_sign(honest, &mut c.rng);
+                        if port.to_ps.send(Message::SignVote { sign }).is_err() {
+                            break;
+                        }
+                    }
+                    Message::PoolIndex { index, .. } => {
+                        // pool-mode round trigger: resolve the direction
+                        // through the locally derived pool, then probe
+                        // and vote exactly as a RoundStart round
+                        round_seed = pool
+                            .as_ref()
+                            .expect("PoolIndex requires seed_pool mode")
+                            .seed_at(index);
                         let batch = c.shard.next_batch(&train, batch_size, &mut c.rng);
                         let p = c.engine.probe(&c.w, &batch, round_seed, mu);
                         let honest = if p >= 0.0 { 1i8 } else { -1 };
@@ -184,13 +220,22 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
     let mut tracker = CatchupTracker::new(k);
     let mut net = NetSim::new(cfg.net.clone());
     let mut part_rng = Rng::new(cfg.seed ^ 0x9A, 0x9A);
+    // FedKSeed-Pro state: the same per-pool-seed scalar accumulation the
+    // sync session keeps, so both topologies' samplers see identical
+    // history and draw identical indices
+    let mut pool_scalars = vec![0.0f32; ps_pool.as_ref().map_or(0, |p| p.k())];
     let mut votes_per_round = Vec::with_capacity(cfg.rounds as usize);
     for t in 0..cfg.rounds {
         let mut participants = cfg.participation.sample(k, t, &mut part_rng);
         if net.is_active() {
-            // virtual-clock admission, same keyed draws as the session's
-            // plan phase: deadline stragglers never get a RoundStart
-            participants = net.admit(t, participants, 1, 1);
+            // virtual-clock admission, same keyed draws and payload
+            // pricing as the session's plan phase: deadline stragglers
+            // never get a round trigger
+            let (up, down) = match &ps_pool {
+                Some(p) => (1, 1 + p.index_bits() as u64),
+                None => (1, 1),
+            };
+            participants = net.admit(t, participants, up, down);
         }
         if participants.is_empty() {
             // zero-participant no-op round: keep round indices dense
@@ -215,8 +260,19 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
                 tracker.mark_synced(id, t);
             }
         }
+        // round trigger: pool mode draws this round's index from the
+        // deterministic sampler and names it on the downlink
+        // (ceil(log2 K) bits); otherwise RoundStart's implicit seed = t
+        // schedule costs 0 payload bits
+        let round_step = ps_pool.as_ref().map(|p| {
+            let idx = p.sample_index(&pool_scalars, t);
+            (idx, p.index_bits(), p.seed_at(idx))
+        });
         for &id in &participants {
-            let msg = Message::RoundStart { round: t };
+            let msg = match round_step {
+                Some((index, index_bits, _)) => Message::PoolIndex { round: t, index, index_bits },
+                None => Message::RoundStart { round: t },
+            };
             ledger.record(&msg);
             ps_links[id].to_client.send(msg).expect("client alive");
         }
@@ -257,7 +313,15 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
                 tracker.mark_synced(id, t + 1);
             }
         }
-        let record = SeedRecord::sign_step(t, f, eta);
+        let record = match round_step {
+            Some((idx, bits, seed)) => {
+                // accumulate this direction's committed step scalar —
+                // identical formula and order to the sync session
+                pool_scalars[idx as usize] += f as f32 * eta;
+                SeedRecord::index_step(t, seed, idx, bits, f, eta)
+            }
+            None => SeedRecord::sign_step(t, f, eta),
+        };
         if cfg.catchup.is_on() {
             history.commit_round(t, [record]);
             history.compact_to(tracker.watermark());
@@ -433,6 +497,7 @@ mod tests {
                 catchup,
                 net: NetCfg::ideal(),
                 seed: 7,
+                seed_pool: 0,
             };
             let res = run_feedsign(dclients, train, dcfg);
             for (id, w) in res.finals.iter().enumerate() {
@@ -455,5 +520,78 @@ mod tests {
         let mut cfg = DistCfg::full(5, 2e-3, 1e-3, 8);
         cfg.catchup = CatchupCfg::Rebroadcast;
         run_feedsign(clients, train, cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "commit order")]
+    fn distributed_rejects_pool_scalar_catchup() {
+        let train = generate(&SYNTH_CIFAR10, 60, 0);
+        let clients = dist_clients(2, &train);
+        let mut cfg = DistCfg::full(5, 2e-3, 1e-3, 8);
+        cfg.seed_pool = 16;
+        cfg.catchup = CatchupCfg::PoolScalars;
+        run_feedsign(clients, train, cfg);
+    }
+
+    #[test]
+    fn seed_pool_matches_sync_session_for_both_catchup_modes() {
+        use crate::coordinator::session::{Client, Session, SessionCfg};
+        for catchup in [CatchupCfg::Off, CatchupCfg::Replay] {
+            let train = generate(&SYNTH_CIFAR10, 300, 0);
+            let test = generate(&SYNTH_CIFAR10, 100, 1);
+            let shards = split(&train, 4, Partition::Iid, 0);
+            let clients: Vec<Client> = shards
+                .into_iter()
+                .enumerate()
+                .map(|(id, shard)| {
+                    Client::new(
+                        id,
+                        Box::new(NativeEngine::new(LinearProbe::new(128, 10))),
+                        shard,
+                        7,
+                    )
+                })
+                .collect();
+            let cfg = SessionCfg {
+                rounds: 60,
+                eta: 2e-3,
+                mu: 1e-3,
+                batch_size: 16,
+                eval_every: 0,
+                participation: ParticipationCfg::Fraction(0.5),
+                catchup,
+                seed_pool: 32,
+                seed: 7,
+                ..Default::default()
+            };
+            let mut sync = Session::new(cfg, clients, train.clone(), test);
+            for t in 0..60 {
+                sync.step(t);
+            }
+            sync.catch_up_all();
+
+            let dclients = dist_clients(4, &train);
+            let dcfg = DistCfg {
+                rounds: 60,
+                eta: 2e-3,
+                mu: 1e-3,
+                batch_size: 16,
+                participation: ParticipationCfg::Fraction(0.5),
+                catchup,
+                net: NetCfg::ideal(),
+                seed: 7,
+                seed_pool: 32,
+            };
+            let res = run_feedsign(dclients, train, dcfg);
+            for (id, w) in res.finals.iter().enumerate() {
+                assert_eq!(
+                    w.as_slice(),
+                    &*sync.replica(id),
+                    "catchup={catchup:?}: pool client {id} diverged across topologies"
+                );
+            }
+            assert_eq!(res.ledger.uplink_bits, sync.ledger.uplink_bits, "{catchup:?}");
+            assert_eq!(res.ledger.downlink_bits, sync.ledger.downlink_bits, "{catchup:?}");
+        }
     }
 }

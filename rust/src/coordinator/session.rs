@@ -59,7 +59,7 @@
 //! (sync vs threaded-distributed, where clients *do* own dense replicas)
 //! rely on the same schedule.
 
-use crate::comm::{Ledger, Message, SeedHistory, SeedRecord};
+use crate::comm::{Ledger, Message, SeedHistory, SeedPool, SeedRecord};
 use crate::coordinator::aggregation::{self, Algorithm};
 use crate::coordinator::byzantine::Attack;
 use crate::coordinator::catchup::{CatchupCfg, CatchupTracker};
@@ -176,8 +176,16 @@ pub struct SessionCfg {
     pub participation: ParticipationCfg,
     /// how clients that missed rounds are brought current on rejoin:
     /// `replay` ships the missed seed-sign history, `rebroadcast` ships a
-    /// dense checkpoint, `off` broadcasts every round to every client
+    /// dense checkpoint, `pool` ships the K accumulated per-pool-seed
+    /// step scalars (`seed_pool` mode only), `off` broadcasts every
+    /// round to every client
     pub catchup: CatchupCfg,
+    /// restricted seed space (FedKSeed): `>= 2` derives a pool of that
+    /// many candidate directions once from [`SessionCfg::seed`] and
+    /// names each round's direction by a `ceil(log2 K)`-bit index
+    /// instead of the implicit `seed = t` schedule; 0 disables the pool
+    /// (FeedSign algorithms only)
+    pub seed_pool: usize,
     /// round-engine worker threads: 0 = auto (machine parallelism),
     /// 1 = sequential baseline, N = exactly N workers.  Every setting
     /// produces the same bits; this only trades wall-clock.
@@ -213,6 +221,7 @@ impl Default for SessionCfg {
             c_g_noise: 0.0,
             participation: ParticipationCfg::Full,
             catchup: CatchupCfg::Off,
+            seed_pool: 0,
             threads: 0,
             net: NetCfg::ideal(),
             replica_cache: 4,
@@ -480,6 +489,17 @@ pub struct Session {
     /// measured canonical-buffer-reads-per-round basis of the batching
     /// claim (reported in [`RunResult::probe`]).
     pub probe_stats: ProbeBatchStats,
+    /// Restricted seed space (`seed_pool` mode): the K candidate
+    /// directions every round's index resolves through, derived once
+    /// from [`SessionCfg::seed`] — both topologies derive the identical
+    /// pool, which is what keeps them bit-identical.
+    pub pool: Option<SeedPool>,
+    /// Per-pool-seed accumulated step scalars: `pool_scalars[i]` is the
+    /// sum of `sign · eta` over committed rounds that drew direction
+    /// `i`.  Drives the FedKSeed-Pro biased sampler, and *is* the model
+    /// delta (`sum_i scalars[i] · z_i`) the [`CatchupCfg::PoolScalars`]
+    /// download ships.
+    pub pool_scalars: Vec<f32>,
     dp_rng: Rng,
     eval_rng: Rng,
     part_rng: Rng,
@@ -500,6 +520,17 @@ impl Session {
                 "catch-up applies to the synchronized seed-based algorithms only"
             );
         }
+        if cfg.seed_pool > 0 {
+            assert!(cfg.seed_pool >= 2, "a seed pool needs at least 2 candidates");
+            assert!(
+                matches!(cfg.algorithm, Algorithm::FeedSign | Algorithm::DpFeedSign { .. }),
+                "the restricted seed space applies to the FeedSign algorithms"
+            );
+        }
+        assert!(
+            !matches!(cfg.catchup, CatchupCfg::PoolScalars) || cfg.seed_pool >= 2,
+            "catchup = \"pool\" requires seed_pool mode (the scalar download is indexed by pool seed)"
+        );
         let d = clients[0].engine.n_params();
         for c in &clients {
             assert_eq!(c.engine.n_params(), d, "all clients must share one parameter space");
@@ -544,7 +575,12 @@ impl Session {
                 replicas.set_owned(id, w);
             }
         }
-        let orbit = Orbit::new(cfg.algorithm.name(), cfg.seed, cfg.eta);
+        let mut orbit = Orbit::new(cfg.algorithm.name(), cfg.seed, cfg.eta);
+        let pool = (cfg.seed_pool >= 2).then(|| SeedPool::derive(cfg.seed, cfg.seed_pool));
+        if let Some(p) = &pool {
+            orbit.set_pool(p.pool_seed, p.k());
+        }
+        let pool_scalars = vec![0.0f32; pool.as_ref().map_or(0, |p| p.k())];
         let net = NetSim::new(cfg.net.clone());
         let dp_rng = Rng::new(cfg.seed ^ 0xD9, 0xD9);
         let eval_rng = Rng::new(cfg.seed ^ 0xEE, 0xEE);
@@ -560,6 +596,8 @@ impl Session {
             history: SeedHistory::default(),
             net,
             probe_stats: ProbeBatchStats::default(),
+            pool,
+            pool_scalars,
             dp_rng,
             eval_rng,
             part_rng,
@@ -748,7 +786,13 @@ impl Session {
     fn round_payload_bits(&self, participants: usize) -> (u64, u64) {
         let d = self.replicas.d() as u64;
         match self.cfg.algorithm {
-            Algorithm::FeedSign | Algorithm::DpFeedSign { .. } => (1, 1),
+            // restricted seed space: the downlink names the round's
+            // direction by index, so the broadcast is (index, sign) =
+            // ceil(log2 K) + 1 bits instead of the implicit-schedule 1
+            Algorithm::FeedSign | Algorithm::DpFeedSign { .. } => match &self.pool {
+                Some(p) => (1, 1 + p.index_bits() as u64),
+                None => (1, 1),
+            },
             Algorithm::ZoFedSgd => (64, 64 * participants.max(1) as u64),
             Algorithm::FedSgd => (32 * d, 32 * d),
             Algorithm::Mezo => (0, 0),
@@ -823,6 +867,24 @@ impl Session {
                     self.ledger.record(&Message::Rebroadcast { n_params: d });
                     records
                 }
+                CatchupCfg::PoolScalars => {
+                    // FedKSeed model-delta download: the K accumulated
+                    // step scalars, 32·K bits, constant in the gap
+                    // length.  A `Shared` replica's rejoin stays pure
+                    // bookkeeping (the invariant makes the bits the
+                    // canonical buffer's); an `Owned` replica realizes
+                    // the mathematically equal scalar sum by applying
+                    // the missed records in commit order — the
+                    // order-stable evaluation of that sum, so it stays
+                    // bit-identical to an always-on diverged client.
+                    let k = self
+                        .pool
+                        .as_ref()
+                        .expect("catchup = \"pool\" requires seed_pool mode")
+                        .k();
+                    self.ledger.record(&Message::PoolScalars { k });
+                    records
+                }
                 CatchupCfg::Off => unreachable!(),
             };
             if self.replicas.is_owned(id) {
@@ -892,7 +954,22 @@ impl Session {
             return;
         }
         let threads = self.worker_threads(plan.participants.len());
-        let seed = t as u32;
+        // round -> direction derivation.  Pool mode (FedKSeed): the
+        // coordinator draws one index per round from the deterministic
+        // Philox-keyed sampler — biased toward high-|history| directions
+        // once scalars accumulate (FedKSeed-Pro) — and every participant
+        // probes the same pooled direction, so the whole worker still
+        // shares one seed.  Without a pool the seed is the round index,
+        // masked into the 31-bit direction space the channel simulator's
+        // corruption model assumes (`t as u32` alone leaves it at
+        // t >= 2^31 and whenever the low 32 bits carry the MSB).
+        let (seed, pool_idx) = match &self.pool {
+            Some(pool) => {
+                let idx = pool.sample_index(&self.pool_scalars, t);
+                (pool.seed_at(idx), Some((idx, pool.index_bits())))
+            }
+            None => (prng::round_direction_seed(t), None),
+        };
         let (mu, bs, c_g) = (self.cfg.mu, self.cfg.batch_size, self.cfg.c_g_noise);
         let pin_serial = self.cfg.threads == 1;
         let costs = self.probe_costs(&plan.participants);
@@ -955,31 +1032,57 @@ impl Session {
         };
         let step = f as f32 * self.cfg.eta;
         let msg = Message::GlobalSign { sign: f };
-        let pool = self.clients.len();
+        // pool mode: the broadcast also names the round's direction —
+        // the ceil(log2 K)-bit index rides down with the 1-bit sign, so
+        // each billed client's downlink prices at index_bits + 1
+        let idx_msg = pool_idx
+            .map(|(index, index_bits)| Message::PoolIndex { round: t, index, index_bits });
+        let pool_size = self.clients.len();
         // one canonical AXPY commits the round for the whole pool; with
         // an explicit sequential baseline the inner chunk-parallel noise
         // walk is pinned to one thread (same bits either way)
         let _serial = pin_serial.then(prng::serial_zone);
         let engine = &mut self.clients[0].engine;
         if self.cfg.catchup.is_on() {
-            // only the clients the PS heard from are billed the 1-bit
+            // only the clients the PS heard from are billed the
             // downlink; everyone else (sampled out, deadline-cut, or
             // dropped on the uplink) is left a stale logical replica and
             // recovers the round from the seed history on rejoin
             for _ in &voters {
                 self.ledger.record(&msg);
+                if let Some(m) = &idx_msg {
+                    self.ledger.record(m);
+                }
             }
             self.replicas.advance(t, &voters, |w| engine.update(w, seed, step));
         } else {
             // every client is billed the broadcast (non-participants too:
-            // the 1-bit downlink is what keeps all replicas synchronized)
-            for _ in 0..pool {
+            // the downlink is what keeps all replicas synchronized)
+            for _ in 0..pool_size {
                 self.ledger.record(&msg);
+                if let Some(m) = &idx_msg {
+                    self.ledger.record(m);
+                }
             }
             self.replicas.advance_all(t, |w| engine.update(w, seed, step));
         }
-        self.orbit.push_sign(f);
-        self.commit_history(t, vec![SeedRecord::sign_step(t, f, self.cfg.eta)]);
+        match pool_idx {
+            Some((idx, bits)) => {
+                // FedKSeed-Pro state: accumulate this direction's step
+                // scalar (the sampler's bias signal, and the PoolScalars
+                // download's payload), identically in both topologies
+                self.pool_scalars[idx as usize] += step;
+                self.orbit.push_index(idx, f);
+                self.commit_history(
+                    t,
+                    vec![SeedRecord::index_step(t, seed, idx, bits, f, self.cfg.eta)],
+                );
+            }
+            None => {
+                self.orbit.push_sign(f);
+                self.commit_history(t, vec![SeedRecord::sign_step(t, f, self.cfg.eta)]);
+            }
+        }
     }
 
     /// ZO-FedSGD (FwdLLM/FedKSeed-style): each participant samples its own
@@ -1143,7 +1246,7 @@ impl Session {
     /// Centralized MeZO (K = 1): no communication; the single client's
     /// replica *is* the canonical buffer.
     fn step_mezo(&mut self, t: u64) {
-        let seed = t as u32;
+        let seed = prng::round_direction_seed(t);
         let (mu, bs) = (self.cfg.mu, self.cfg.batch_size);
         let c = &mut self.clients[0];
         let batch = c.shard.next_batch(&self.train, bs, &mut c.rng);
@@ -1783,5 +1886,124 @@ mod tests {
         }
         assert_eq!(seq.replica(0), par.replica(0));
         assert_eq!(seq.ledger.uplink_bits, par.ledger.uplink_bits);
+    }
+
+    fn make_pool_session(k: usize, pool: usize, catchup: CatchupCfg, threads: usize) -> Session {
+        let train = generate(&SYNTH_CIFAR10, 400, 0);
+        let test = generate(&SYNTH_CIFAR10, 200, 1);
+        let shards = split(&train, k, Partition::Iid, 0);
+        let clients: Vec<Client> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| {
+                Client::new(id, Box::new(NativeEngine::new(LinearProbe::new(128, 10))), shard, 7)
+            })
+            .collect();
+        let cfg = SessionCfg {
+            algorithm: Algorithm::FeedSign,
+            eta: 2e-3,
+            mu: 1e-3,
+            batch_size: 16,
+            eval_every: 0,
+            seed_pool: pool,
+            catchup,
+            threads,
+            seed: 7,
+            ..Default::default()
+        };
+        Session::new(cfg, clients, train, test)
+    }
+
+    #[test]
+    fn seed_pool_run_is_thread_invariant() {
+        let mut seq = make_pool_session(5, 32, CatchupCfg::Off, 1);
+        let mut par = make_pool_session(5, 32, CatchupCfg::Off, 4);
+        for t in 0..60 {
+            seq.step(t);
+            par.step(t);
+        }
+        assert_eq!(seq.replica(0), par.replica(0), "pool draws must be schedule-independent");
+        assert_eq!(seq.ledger.uplink_bits, par.ledger.uplink_bits);
+        assert_eq!(seq.ledger.downlink_bits, par.ledger.downlink_bits);
+        assert!(seq.replicas_synchronized());
+    }
+
+    #[test]
+    fn seed_pool_still_learns() {
+        let mut s = make_pool_session(5, 1024, CatchupCfg::Off, 0);
+        let (l0, _) = s.evaluate();
+        for t in 0..800 {
+            s.step(t);
+        }
+        let (l1, _) = s.evaluate();
+        assert!(l1 < l0, "restricted directions should still descend: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn seed_pool_accounting_prices_indices_at_log2k_plus_one() {
+        let mut s = make_pool_session(5, 32, CatchupCfg::Off, 0);
+        for t in 0..100 {
+            s.step(t);
+        }
+        // uplink: the vote is still 1 bit; downlink: every client
+        // receives (index, sign) = 5 + 1 bits per round at K = 32
+        assert_eq!(s.ledger.uplink_bits, 100 * 5);
+        assert_eq!(s.ledger.downlink_bits, 100 * 5 * 6);
+        assert_eq!(s.orbit.len(), 100);
+    }
+
+    #[test]
+    fn seed_pool_orbit_replays_and_roundtrips() {
+        let mut s = make_pool_session(3, 64, CatchupCfg::Off, 0);
+        for t in 0..150 {
+            s.step(t);
+        }
+        let mut w = s.clients[0].engine.init_params(7);
+        s.orbit.replay(&mut w);
+        assert_eq!(w.as_slice(), &*s.replica(0), "index orbit replay must reconstruct exactly");
+        let back = crate::orbit::decode(&crate::orbit::encode(&s.orbit)).unwrap();
+        assert_eq!(back.entries, s.orbit.entries);
+    }
+
+    #[test]
+    fn pool_scalars_track_committed_steps() {
+        let mut s = make_pool_session(4, 16, CatchupCfg::Off, 0);
+        for t in 0..50 {
+            s.step(t);
+        }
+        // the scalars are exactly the per-index sums of the committed
+        // orbit steps, accumulated in round order
+        let mut expect = vec![0.0f32; 16];
+        for e in &s.orbit.entries {
+            if let crate::orbit::OrbitEntry::IndexSign { index, sign } = e {
+                expect[*index as usize] += *sign as f32 * s.cfg.eta;
+            }
+        }
+        assert_eq!(s.pool_scalars, expect);
+        assert!(expect.iter().any(|v| *v != 0.0), "50 committed rounds must move scalars");
+    }
+
+    #[test]
+    fn pool_scalar_catchup_bills_constant_in_gap_and_resyncs() {
+        let mut s = make_pool_session(3, 16, CatchupCfg::PoolScalars, 0);
+        s.cfg.participation = ParticipationCfg::Fraction(0.75);
+        for t in 0..3 {
+            s.step_with_plan(RoundPlan { round: t, participants: vec![0, 1, 2] });
+        }
+        for t in 3..10 {
+            s.step_with_plan(RoundPlan { round: t, participants: vec![0, 1] });
+        }
+        let before = s.ledger.downlink_bits;
+        s.catch_up_all();
+        // one 32·K-bit scalar download rejoins client 2, regardless of
+        // how many rounds it missed
+        assert_eq!(s.ledger.downlink_bits - before, 32 * 16);
+        assert!(s.replicas_synchronized());
+    }
+
+    #[test]
+    #[should_panic(expected = "requires seed_pool mode")]
+    fn pool_catchup_without_a_pool_is_rejected() {
+        let _ = make_pool_session(3, 0, CatchupCfg::PoolScalars, 0);
     }
 }

@@ -28,11 +28,13 @@ USAGE: feedsign <command> [options]
 COMMANDS:
   run          --config exp.toml [--csv curve.csv] [--orbit run.orbit]
                [--threads N] [--participation full|fraction:F|bernoulli:P]
-               [--catchup off|replay|rebroadcast]
-               [--channel ideal|ber:P|drop:P] [--link mobile|wifi|iot|mixed]
+               [--catchup off|replay|rebroadcast|pool]
+               [--seed-pool K] [--channel ideal|ber:P|drop:P]
+               [--link mobile|wifi|iot|mixed]
                [--deadline T] [--channel-seed S] [--replica-cache N]
   quickstart   [--rounds 2000] [--threads N] [--participation SPEC]
-               [--catchup SPEC] [--channel SPEC] [--link SPEC]
+               [--catchup SPEC] [--seed-pool K] [--channel SPEC]
+               [--link SPEC]
                [--deadline T] [--channel-seed S] [--replica-cache N]
   init-config
   theory       [--eta 1e-3] [--p-max 0.1]
@@ -69,9 +71,9 @@ fn main() -> Result<()> {
 }
 
 /// Apply the round-engine CLI overrides (`--threads`, `--participation`,
-/// `--catchup`, `--channel`, `--link`, `--deadline`, `--channel-seed`,
-/// `--replica-cache`) on top of a loaded config, re-validating
-/// afterwards.
+/// `--catchup`, `--seed-pool`, `--channel`, `--link`, `--deadline`,
+/// `--channel-seed`, `--replica-cache`) on top of a loaded config,
+/// re-validating afterwards.
 fn apply_engine_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     if let Some(t) = args.str("threads") {
         cfg.threads = t.parse().context("parsing --threads")?;
@@ -81,6 +83,9 @@ fn apply_engine_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()>
     }
     if let Some(c) = args.str("catchup") {
         cfg.catchup = c.to_string();
+    }
+    if let Some(k) = args.str("seed-pool") {
+        cfg.seed_pool = k.parse().context("parsing --seed-pool")?;
     }
     if let Some(c) = args.str("channel") {
         cfg.channel = c.to_string();
@@ -138,6 +143,7 @@ fn cmd_theory(args: &Args) -> Result<()> {
         ("fedsgd", theory::fedsgd(&c, eta)),
         ("zo-fedsgd", theory::zo_fedsgd(&c, eta)),
         ("feedsign", theory::feedsign(&c, eta, p_max)),
+        ("fs-pool-4k", theory::feedsign_pool(&c, eta, p_max, 4096)),
     ];
     println!("{:>10} | {:>12} | {:>12} | {:>12}", "method", "rate A", "floor C", "C/A");
     for (name, rf) in rows {

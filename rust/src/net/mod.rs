@@ -146,12 +146,15 @@ impl LinkProfile {
     }
 
     /// Seconds one round costs this link for the given payload, with the
-    /// jitter draw already resolved.
+    /// jitter draw already resolved.  Bandwidth terms go through the
+    /// guarded [`crate::comm::transfer_seconds`]: a zero/negative/NaN
+    /// bandwidth projects an unreachable link (`inf`), never a NaN that
+    /// would poison the virtual clock's `max()` straggler comparison.
     pub fn round_seconds(&self, up_bits: u64, down_bits: u64, jitter_s: f64) -> f64 {
         self.rtt_s
             + jitter_s
-            + up_bits as f64 / self.up_bps
-            + down_bits as f64 / self.down_bps
+            + crate::comm::transfer_seconds(up_bits, self.up_bps)
+            + crate::comm::transfer_seconds(down_bits, self.down_bps)
     }
 
     /// Relative *compute*-cost weight of the device class behind this
@@ -161,10 +164,15 @@ impl LinkProfile {
     /// the iot-class client should not also draw three wifi clients.
     /// Log-scaled on uplink bandwidth (wifi 1, mobile 4, iot 12);
     /// deterministic, and only ever a scheduling hint — the committed
-    /// bits are assignment-independent.
+    /// bits are assignment-independent.  A degenerate (zero/negative/NaN)
+    /// uplink gets the bounded worst-class weight instead of the
+    /// `inf -> u64::MAX` saturation that would overflow bin sums.
     pub fn device_cost_weight(&self) -> u64 {
+        if !(self.up_bps > 0.0) || !self.up_bps.is_finite() {
+            return 64;
+        }
         let ratio = (2e8 / self.up_bps).max(1.0);
-        (ratio.log2().ceil() as u64).max(1)
+        (ratio.log2().ceil() as u64).max(1).min(64)
     }
 }
 
@@ -615,6 +623,24 @@ mod tests {
         );
         assert!(wifi < mobile && mobile < iot, "{wifi} < {mobile} < {iot}");
         assert!(wifi >= 1, "weights are positive bin-packing costs");
+    }
+
+    #[test]
+    fn degenerate_links_never_produce_nan_times_or_saturated_weights() {
+        // a zero-bandwidth link is unreachable (inf), not 0/0 = NaN —
+        // NaN would poison admit()'s max() straggler comparison; and its
+        // cost weight stays a bounded bin-packing cost, not u64::MAX
+        let dead = LinkProfile { up_bps: 0.0, down_bps: 0.0, rtt_s: 0.01, jitter_s: 0.0 };
+        assert!(dead.round_seconds(1, 1, 0.0).is_infinite());
+        assert!(!dead.round_seconds(1, 1, 0.0).is_nan());
+        assert_eq!(dead.round_seconds(0, 0, 0.0), 0.01, "empty payload costs only rtt");
+        assert_eq!(dead.device_cost_weight(), 64);
+        let nan = LinkProfile { up_bps: f64::NAN, down_bps: -1.0, rtt_s: 0.0, jitter_s: 0.0 };
+        assert!(!nan.round_seconds(8, 8, 0.0).is_nan());
+        assert_eq!(nan.device_cost_weight(), 64);
+        // healthy profiles are untouched by the guard
+        let m = LinkProfile::mobile();
+        assert!((m.round_seconds(20e6 as u64, 0, 0.0) - (0.03 + 1.0)).abs() < 1e-9);
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! which is the paper's "OPT-13B fine-tune in < 200 bytes" claim — the
 //! `fig5_orbit_storage` bench regenerates the storage-ledger comparison.
 
-use crate::simkit::zo;
+use crate::comm::{index_bits_for, SeedPool};
+use crate::simkit::{prng, zo};
 
 /// One aggregated global step.
 #[derive(Debug, Clone, PartialEq)]
@@ -18,6 +19,11 @@ pub enum OrbitEntry {
     /// ZO-FedSGD / MeZO: aggregated seed-projection pairs applied that
     /// step (MeZO has one pair; ZO-FedSGD one per client).
     Pairs(Vec<(u32, f32)>),
+    /// Restricted seed space (`seed_pool` mode, FedKSeed): the round's
+    /// direction named by a `ceil(log2 K)`-bit index into the pool the
+    /// orbit's metadata derives, plus the 1-bit vote.  A 0-sign index
+    /// entry replays as a no-op, like [`OrbitEntry::Sign`].
+    IndexSign { index: u32, sign: i8 },
 }
 
 /// A complete fine-tuning orbit.
@@ -29,16 +35,40 @@ pub struct Orbit {
     pub init_seed: u32,
     /// Learning rate folded into replay.
     pub eta: f32,
+    /// Restricted-seed-pool metadata (`seed_pool` mode): the pool seed
+    /// and candidate count [`OrbitEntry::IndexSign`] indices resolve
+    /// through.  `pool_k == 0` means no pool — the pre-pool encoding
+    /// (version 1) is byte-identical for such orbits.
+    pub pool_seed: u32,
+    pub pool_k: u32,
     pub entries: Vec<OrbitEntry>,
 }
 
-/// Serialized-size magic + version.
+/// Serialized-size magic + versions: version 1 is the pre-pool format;
+/// version 2 adds the pool metadata header and index entries, and is
+/// only emitted when the orbit actually uses them.
 const MAGIC: u32 = 0xFEED_5160;
 const VERSION: u8 = 1;
+const VERSION_POOL: u8 = 2;
 
 impl Orbit {
     pub fn new(algorithm: &str, init_seed: u32, eta: f32) -> Self {
-        Orbit { algorithm: algorithm.to_string(), init_seed, eta, entries: Vec::new() }
+        Orbit {
+            algorithm: algorithm.to_string(),
+            init_seed,
+            eta,
+            pool_seed: 0,
+            pool_k: 0,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Attach restricted-seed-pool metadata (`seed_pool` mode) so
+    /// [`OrbitEntry::IndexSign`] entries can resolve their directions.
+    pub fn set_pool(&mut self, pool_seed: u32, k: usize) {
+        assert!(k >= 2, "a seed pool needs at least 2 candidates");
+        self.pool_seed = pool_seed;
+        self.pool_k = k as u32;
     }
 
     pub fn push_sign(&mut self, sign: i8) {
@@ -47,6 +77,13 @@ impl Orbit {
 
     pub fn push_pairs(&mut self, pairs: Vec<(u32, f32)>) {
         self.entries.push(OrbitEntry::Pairs(pairs));
+    }
+
+    /// Push a restricted-pool step (requires [`Orbit::set_pool`]).
+    pub fn push_index(&mut self, index: u32, sign: i8) {
+        debug_assert!(self.pool_k >= 2, "push_index requires pool metadata");
+        debug_assert!(index < self.pool_k);
+        self.entries.push(OrbitEntry::IndexSign { index, sign });
     }
 
     pub fn len(&self) -> usize {
@@ -73,16 +110,24 @@ impl Orbit {
     /// materialize a stale logical replica that fell out of the snapshot
     /// cache ([`crate::coordinator::replica`]).
     pub fn replay_prefix(&self, w: &mut [f32], rounds: usize) {
+        let pool = (self.pool_k >= 2).then(|| SeedPool::derive(self.pool_seed, self.pool_k as usize));
         for (t, entry) in self.entries.iter().take(rounds).enumerate() {
             match entry {
                 OrbitEntry::Sign(s) => {
-                    zo::apply_update(w, t as u32, *s as f32 * self.eta);
+                    // masked round->seed derivation: the same 31-bit
+                    // direction domain every other derivation site uses
+                    zo::apply_update(w, prng::round_direction_seed(t as u64), *s as f32 * self.eta);
                 }
                 OrbitEntry::Pairs(pairs) => {
                     let k = pairs.len().max(1) as f32;
                     for &(seed, p) in pairs {
                         zo::apply_update(w, seed, self.eta * p / k);
                     }
+                }
+                OrbitEntry::IndexSign { index, sign } => {
+                    let pool =
+                        pool.as_ref().expect("index orbit entries require pool metadata (set_pool)");
+                    zo::apply_update(w, pool.seed_at(*index), *sign as f32 * self.eta);
                 }
             }
         }
@@ -94,47 +139,99 @@ impl Orbit {
 pub fn encode(orbit: &Orbit) -> Vec<u8> {
     let mut out = Vec::new();
     out.extend_from_slice(&MAGIC.to_le_bytes());
-    out.push(VERSION);
+    // version 2 only when the pool machinery is actually in play, so
+    // every pre-pool orbit stays byte-identical to the version-1 format
+    let v2 = orbit.pool_k != 0
+        || orbit.entries.iter().any(|e| matches!(e, OrbitEntry::IndexSign { .. }));
+    out.push(if v2 { VERSION_POOL } else { VERSION });
     let algo = orbit.algorithm.as_bytes();
     out.push(algo.len() as u8);
     out.extend_from_slice(algo);
     out.extend_from_slice(&orbit.init_seed.to_le_bytes());
     out.extend_from_slice(&orbit.eta.to_le_bytes());
+    if v2 {
+        out.extend_from_slice(&orbit.pool_seed.to_le_bytes());
+        out.extend_from_slice(&orbit.pool_k.to_le_bytes());
+    }
     out.extend_from_slice(&(orbit.entries.len() as u64).to_le_bytes());
 
-    // homogeneous fast path: all non-zero Sign entries -> bit-packed.
-    // Sign(0) (a zero-participant no-op round) has no bit encoding, so
-    // orbits containing one fall back to the tagged form.
+    // homogeneous fast paths: all non-zero Sign entries -> 1 bit each;
+    // all non-zero IndexSign entries -> ceil(log2 K) + 1 bits each.
+    // Sign(0) / IndexSign{sign: 0} (zero-participant no-op rounds) have
+    // no packed encoding, so orbits containing one fall back to the
+    // tagged form.
     let all_signs = orbit.entries.iter().all(|e| matches!(e, OrbitEntry::Sign(s) if *s != 0));
-    out.push(all_signs as u8);
-    if all_signs {
-        let mut byte = 0u8;
-        for (i, e) in orbit.entries.iter().enumerate() {
-            let OrbitEntry::Sign(s) = e else { unreachable!() };
-            if *s > 0 {
-                byte |= 1 << (i % 8);
-            }
-            if i % 8 == 7 {
-                out.push(byte);
-                byte = 0;
-            }
-        }
-        if orbit.entries.len() % 8 != 0 {
-            out.push(byte);
-        }
+    let all_index = v2
+        && orbit.pool_k >= 2
+        && orbit
+            .entries
+            .iter()
+            .all(|e| matches!(e, OrbitEntry::IndexSign { sign, .. } if *sign != 0));
+    let mode: u8 = if all_signs {
+        1
+    } else if all_index {
+        2
     } else {
-        for e in &orbit.entries {
-            match e {
-                OrbitEntry::Sign(s) => {
-                    out.push(0u8);
-                    out.push(*s as u8);
+        0
+    };
+    out.push(mode);
+    match mode {
+        1 => {
+            let mut byte = 0u8;
+            for (i, e) in orbit.entries.iter().enumerate() {
+                let OrbitEntry::Sign(s) = e else { unreachable!() };
+                if *s > 0 {
+                    byte |= 1 << (i % 8);
                 }
-                OrbitEntry::Pairs(pairs) => {
-                    out.push(1u8);
-                    out.extend_from_slice(&(pairs.len() as u32).to_le_bytes());
-                    for (seed, p) in pairs {
-                        out.extend_from_slice(&seed.to_le_bytes());
-                        out.extend_from_slice(&p.to_le_bytes());
+                if i % 8 == 7 {
+                    out.push(byte);
+                    byte = 0;
+                }
+            }
+            if orbit.entries.len() % 8 != 0 {
+                out.push(byte);
+            }
+        }
+        2 => {
+            // LSB-first bit stream of (sign bit, then index bits) per
+            // entry — the same ceil(log2 K) + 1 bits the ledger prices
+            let ib = index_bits_for(orbit.pool_k as usize) as u32;
+            let mut acc = 0u64;
+            let mut nbits = 0u32;
+            for e in &orbit.entries {
+                let OrbitEntry::IndexSign { index, sign } = e else { unreachable!() };
+                let val = ((*index as u64) << 1) | (*sign > 0) as u64;
+                acc |= val << nbits;
+                nbits += ib + 1;
+                while nbits >= 8 {
+                    out.push(acc as u8);
+                    acc >>= 8;
+                    nbits -= 8;
+                }
+            }
+            if nbits > 0 {
+                out.push(acc as u8);
+            }
+        }
+        _ => {
+            for e in &orbit.entries {
+                match e {
+                    OrbitEntry::Sign(s) => {
+                        out.push(0u8);
+                        out.push(*s as u8);
+                    }
+                    OrbitEntry::Pairs(pairs) => {
+                        out.push(1u8);
+                        out.extend_from_slice(&(pairs.len() as u32).to_le_bytes());
+                        for (seed, p) in pairs {
+                            out.extend_from_slice(&seed.to_le_bytes());
+                            out.extend_from_slice(&p.to_le_bytes());
+                        }
+                    }
+                    OrbitEntry::IndexSign { index, sign } => {
+                        out.push(2u8);
+                        out.extend_from_slice(&index.to_le_bytes());
+                        out.push(*sign as u8);
                     }
                 }
             }
@@ -160,44 +257,86 @@ pub fn decode(bytes: &[u8]) -> anyhow::Result<Orbit> {
         bail!("bad orbit magic {magic:#x}");
     }
     let version = take(1)?[0];
-    if version != VERSION {
+    if version != VERSION && version != VERSION_POOL {
         bail!("unsupported orbit version {version}");
     }
     let alen = take(1)?[0] as usize;
     let algorithm = String::from_utf8(take(alen)?.to_vec()).context("algorithm name")?;
     let init_seed = u32::from_le_bytes(take(4)?.try_into().unwrap());
     let eta = f32::from_le_bytes(take(4)?.try_into().unwrap());
+    let (pool_seed, pool_k) = if version == VERSION_POOL {
+        let ps = u32::from_le_bytes(take(4)?.try_into().unwrap());
+        let pk = u32::from_le_bytes(take(4)?.try_into().unwrap());
+        (ps, pk)
+    } else {
+        (0, 0)
+    };
     let count = u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize;
-    let all_signs = take(1)?[0] == 1;
+    let mode = take(1)?[0];
 
     let mut entries = Vec::with_capacity(count);
-    if all_signs {
-        let nbytes = (count + 7) / 8;
-        let packed = take(nbytes)?.to_vec();
-        for i in 0..count {
-            let bit = (packed[i / 8] >> (i % 8)) & 1;
-            entries.push(OrbitEntry::Sign(if bit == 1 { 1 } else { -1 }));
-        }
-    } else {
-        for _ in 0..count {
-            let tag = take(1)?[0];
-            match tag {
-                0 => entries.push(OrbitEntry::Sign(take(1)?[0] as i8)),
-                1 => {
-                    let n = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
-                    let mut pairs = Vec::with_capacity(n);
-                    for _ in 0..n {
-                        let seed = u32::from_le_bytes(take(4)?.try_into().unwrap());
-                        let p = f32::from_le_bytes(take(4)?.try_into().unwrap());
-                        pairs.push((seed, p));
-                    }
-                    entries.push(OrbitEntry::Pairs(pairs));
-                }
-                t => bail!("bad entry tag {t}"),
+    match mode {
+        1 => {
+            let nbytes = (count + 7) / 8;
+            let packed = take(nbytes)?.to_vec();
+            for i in 0..count {
+                let bit = (packed[i / 8] >> (i % 8)) & 1;
+                entries.push(OrbitEntry::Sign(if bit == 1 { 1 } else { -1 }));
             }
         }
+        2 => {
+            if version != VERSION_POOL || pool_k < 2 {
+                bail!("packed-index orbit without pool metadata");
+            }
+            let ib = index_bits_for(pool_k as usize) as usize;
+            let per = ib + 1;
+            let nbytes = (count * per + 7) / 8;
+            let packed = take(nbytes)?.to_vec();
+            let mut bitpos = 0usize;
+            for _ in 0..count {
+                let mut val = 0u64;
+                for b in 0..per {
+                    let p = bitpos + b;
+                    if (packed[p / 8] >> (p % 8)) & 1 == 1 {
+                        val |= 1 << b;
+                    }
+                }
+                bitpos += per;
+                let sign = if val & 1 == 1 { 1i8 } else { -1 };
+                let index = (val >> 1) as u32;
+                if index >= pool_k {
+                    bail!("orbit index {index} outside pool of {pool_k}");
+                }
+                entries.push(OrbitEntry::IndexSign { index, sign });
+            }
+        }
+        0 => {
+            for _ in 0..count {
+                let tag = take(1)?[0];
+                match tag {
+                    0 => entries.push(OrbitEntry::Sign(take(1)?[0] as i8)),
+                    1 => {
+                        let n = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+                        let mut pairs = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            let seed = u32::from_le_bytes(take(4)?.try_into().unwrap());
+                            let p = f32::from_le_bytes(take(4)?.try_into().unwrap());
+                            pairs.push((seed, p));
+                        }
+                        entries.push(OrbitEntry::Pairs(pairs));
+                    }
+                    2 if version == VERSION_POOL => {
+                        let index = u32::from_le_bytes(take(4)?.try_into().unwrap());
+                        let sign = take(1)?[0] as i8;
+                        entries.push(OrbitEntry::IndexSign { index, sign });
+                    }
+                    t => bail!("bad entry tag {t}"),
+                }
+            }
+        }
+        m => bail!("bad orbit entry mode {m}"),
     }
-    Ok(Orbit { algorithm, init_seed, eta, entries })
+    Ok(Orbit { algorithm, init_seed, eta, pool_seed, pool_k, entries })
 }
 
 /// Storage ledger entry for the Fig 5/6 comparison.
@@ -362,5 +501,82 @@ mod tests {
     fn decode_rejects_truncation() {
         let bytes = encode(&sign_orbit(100));
         assert!(decode(&bytes[..bytes.len() - 5]).is_err());
+    }
+
+    fn index_orbit(t: usize, pool_seed: u32, k: usize) -> Orbit {
+        let mut o = Orbit::new("feedsign", 0, 1e-3);
+        o.set_pool(pool_seed, k);
+        for i in 0..t {
+            let index = ((i * 37) % k) as u32;
+            o.push_index(index, if i % 3 == 0 { -1 } else { 1 });
+        }
+        o
+    }
+
+    #[test]
+    fn packed_index_orbit_roundtrips() {
+        let o = index_orbit(1000, 99, 4096);
+        let back = decode(&encode(&o)).unwrap();
+        assert_eq!(o.entries, back.entries);
+        assert_eq!(back.pool_seed, 99);
+        assert_eq!(back.pool_k, 4096);
+    }
+
+    #[test]
+    fn mixed_index_orbit_with_noop_takes_tagged_path() {
+        let mut o = index_orbit(10, 7, 256);
+        o.entries.push(OrbitEntry::IndexSign { index: 3, sign: 0 });
+        o.push_index(200, 1);
+        let back = decode(&encode(&o)).unwrap();
+        assert_eq!(o.entries, back.entries);
+        assert_eq!(back.pool_k, 256);
+    }
+
+    #[test]
+    fn index_replay_matches_direct_application() {
+        let pool = SeedPool::derive(21, 64);
+        let mut w = normals_vec(21, 256);
+        let w0 = w.clone();
+        let mut o = Orbit::new("feedsign", 21, 0.02);
+        o.set_pool(21, 64);
+        for t in 0..40usize {
+            let index = ((t * 11) % 64) as u32;
+            let s = if t % 4 == 0 { -1i8 } else { 1 };
+            crate::simkit::zo::apply_update(&mut w, pool.seed_at(index), s as f32 * 0.02);
+            o.push_index(index, s);
+        }
+        let mut w_replay = w0;
+        o.replay(&mut w_replay);
+        assert_eq!(w, w_replay, "index replay must be bit-exact");
+    }
+
+    #[test]
+    fn packed_index_orbit_is_log2k_plus_one_bits_per_step() {
+        // at K = 4096 an index step packs to 13 bits vs the 64-bit dense
+        // (seed, projection) pair — the >= 4x storage win the restricted
+        // seed space buys the ledger
+        let steps = 10_000;
+        let o = index_orbit(steps, 5, 4096);
+        let index_bytes = encode(&o).len();
+        let mut dense = Orbit::new("zo-fedsgd", 5, 1e-3);
+        for i in 0..steps {
+            dense.push_pairs(vec![(i as u32, 1.0)]);
+        }
+        let dense_bytes = encode(&dense).len();
+        let per_step_bits = (index_bytes as f64 - 64.0) * 8.0 / steps as f64;
+        assert!(per_step_bits <= 13.1, "expected ~13 bits/step, got {per_step_bits}");
+        assert!(
+            dense_bytes as f64 / index_bytes as f64 >= 4.0,
+            "index orbit must be >= 4x smaller than dense pairs ({dense_bytes} vs {index_bytes})"
+        );
+        let rep = storage_report(&o, 1 << 20);
+        assert!(rep.orbit_bytes == index_bytes && rep.steps == steps);
+    }
+
+    #[test]
+    fn plain_sign_orbits_still_encode_as_version_one() {
+        // pool-free orbits must stay byte-identical to the pre-pool format
+        let bytes = encode(&sign_orbit(64));
+        assert_eq!(bytes[4], VERSION);
     }
 }

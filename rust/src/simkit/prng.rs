@@ -68,6 +68,22 @@ pub fn philox4x32(seed: u32, ctr: u32) -> [u32; 4] {
     [c0, c1, c2, c3]
 }
 
+/// The 31-bit direction-seed domain.  `net::ChannelModel`'s bit-flip
+/// impairment masks corrupted seed fields back into this space (the MSB
+/// is reserved), so every seed that names a direction — round-derived,
+/// client-drawn, or pool-derived — must stay below `2^31`.
+pub const DIRECTION_MASK: u32 = 0x7FFF_FFFF;
+
+/// Derive the shared per-round direction seed from a round counter,
+/// masked into the 31-bit [`DIRECTION_MASK`] domain.  The naive
+/// `t as u32` leaves the domain once round counters reach the MSB
+/// (t >= 2^31), silently breaking the channel model's masking
+/// assumption; every round→seed derivation site goes through here.
+#[inline(always)]
+pub fn round_direction_seed(t: u64) -> u32 {
+    (t as u32) & DIRECTION_MASK
+}
+
 /// Map a u32 to the log-safe interval (0, 1] — same bit recipe as the
 /// Pallas kernel, so uniform streams match exactly.  (The top of the
 /// range rounds to exactly 1.0f32, which is harmless: Box-Muller only
@@ -601,6 +617,21 @@ mod tests {
     #[test]
     fn philox_deterministic() {
         assert_eq!(philox4x32(42, 7), philox4x32(42, 7));
+    }
+
+    #[test]
+    fn round_seed_stays_in_the_31_bit_direction_space() {
+        // below the MSB the masked derivation is the identity — the
+        // bugfix is a no-op for every realistic round count
+        for t in [0u64, 1, 1000, (1 << 31) - 1] {
+            assert_eq!(round_direction_seed(t), t as u32);
+        }
+        // at and past the boundary the MSB is cleared, never set
+        for t in [1u64 << 31, (1 << 31) + 5, u32::MAX as u64, (1 << 40) + 3] {
+            let s = round_direction_seed(t);
+            assert_eq!(s & !DIRECTION_MASK, 0, "MSB leaked for t={t}");
+            assert_eq!(s, (t as u32) & DIRECTION_MASK);
+        }
     }
 
     #[test]

@@ -118,6 +118,24 @@ pub fn feedsign(c: &Constants, eta: f32, p_max: f32) -> RateFloor {
     RateFloor { a, c: cc }
 }
 
+/// FeedSign over a restricted seed space of K pooled directions
+/// (FedKSeed-style, `seed_pool` mode).  Restricting the per-round
+/// direction to a size-K candidate set leaves the rate shape intact but
+/// raises the error floor by the pool's approximation penalty: the best
+/// direction available in a finite pool misaligns with the true gradient
+/// by an extra factor that shrinks as the pool grows relative to the
+/// loss landscape's effective rank.  We model the floor as
+/// `feedsign floor x (1 + r_eff / K)` — exact FeedSign as `K -> inf`,
+/// and a pool much smaller than the effective rank pays roughly the
+/// rank-to-pool ratio.  (FedKSeed's Theorem 1 gives the same qualitative
+/// picture: convergence is retained for any finite K, with a constant
+/// that decays in K.)
+pub fn feedsign_pool(c: &Constants, eta: f32, p_max: f32, pool_k: usize) -> RateFloor {
+    assert!(pool_k >= 2, "a seed pool needs at least 2 candidates");
+    let base = feedsign(c, eta, p_max);
+    RateFloor { a: base.a, c: base.c * (1.0 + c.r_eff / pool_k as f32) }
+}
+
 /// Proposition D.5: overall sign-reversing probability under Byzantine
 /// fraction `p_b` and inherent batch error `p_e`.
 pub fn byzantine_sign_error(p_e: f32, p_b: f32) -> f32 {
@@ -212,6 +230,33 @@ mod tests {
         assert!(feedsign(&c, 1e-3, 0.5).a.abs() < 1e-12);
         assert!(feedsign(&c, 1e-3, 0.2).a > 0.0);
         assert!(feedsign(&c, 1e-3, 0.6).a < 0.0, "adversarial majority diverges");
+    }
+
+    #[test]
+    fn pool_floor_decays_monotonically_to_feedsign() {
+        let c = Constants::example();
+        let eta = 1e-3;
+        let unrestricted = feedsign(&c, eta, 0.1);
+        let mut last = f32::INFINITY;
+        for k in [2usize, 16, 256, 4096, 1 << 20] {
+            let rf = feedsign_pool(&c, eta, 0.1, k);
+            assert_eq!(rf.a, unrestricted.a, "restricting seeds must not change the rate");
+            assert!(rf.c > unrestricted.c, "a finite pool pays an approximation penalty");
+            assert!(rf.c < last, "the penalty must shrink as K grows");
+            last = rf.c;
+        }
+        // asymptote: a huge pool is within 1% of unrestricted FeedSign
+        let big = feedsign_pool(&c, eta, 0.1, 1 << 20);
+        assert!((big.c - unrestricted.c) / unrestricted.c < 0.01);
+        // a pool far below the effective rank pays at least ~2x
+        let tiny = feedsign_pool(&c, eta, 0.1, 2);
+        assert!(tiny.c > unrestricted.c * 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2")]
+    fn pool_theory_rejects_degenerate_pool() {
+        feedsign_pool(&Constants::example(), 1e-3, 0.1, 1);
     }
 
     #[test]

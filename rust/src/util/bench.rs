@@ -1,0 +1,73 @@
+//! Bench-baseline bookkeeping shared by the `harness = false` bench
+//! binaries and the test suite.
+//!
+//! The perf benches write `BENCH_<name>.json` files that double as the
+//! committed regression baselines (`benches/common/mod.rs`).  The
+//! hard no-regression gate must only arm when **both** sides of the
+//! comparison are trustworthy: the committed baseline was written by a
+//! full-scale run (`calibrated: true`) *and* the current run is itself
+//! full-scale (`FEEDSIGN_BENCH_SCALE >= 1`).  That conjunction used to
+//! live inline in `benches/perf_hotpath.rs`, where no `cargo test` could
+//! reach it — a smoke-scale baseline (or a baseline missing the
+//! `calibrated` flag entirely) must soft-log, never fail the build.
+//! Keeping the predicate here makes the uncalibrated path unit-testable.
+
+use crate::util::json::Json;
+
+/// Whether a committed baseline's numbers came from a full-scale run.
+/// A missing or non-boolean `calibrated` key means the file predates the
+/// flag or was hand-seeded: treat it as uncalibrated.
+pub fn baseline_calibrated(base: &Json) -> bool {
+    matches!(base.get("calibrated"), Some(Json::Bool(true)))
+}
+
+/// Whether the hard regression gate should arm for this run: the
+/// baseline is calibrated AND the current run's round-budget scale is
+/// full (`>= 1.0`).  NaN or sub-unit scales (smoke runs) never arm.
+pub fn regression_gate_armed(base: &Json, scale: f64) -> bool {
+    baseline_calibrated(base) && scale >= 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn baseline(calibrated: Option<Json>) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("bench".to_string(), Json::Str("perf_hotpath".to_string()));
+        if let Some(c) = calibrated {
+            m.insert("calibrated".to_string(), c);
+        }
+        Json::Obj(m)
+    }
+
+    #[test]
+    fn uncalibrated_baseline_never_arms_the_gate() {
+        // explicit smoke-run baseline
+        let smoke = baseline(Some(Json::Bool(false)));
+        assert!(!baseline_calibrated(&smoke));
+        assert!(!regression_gate_armed(&smoke, 1.0));
+        assert!(!regression_gate_armed(&smoke, 8.0));
+        // pre-flag baseline file: no `calibrated` key at all
+        let legacy = baseline(None);
+        assert!(!baseline_calibrated(&legacy));
+        assert!(!regression_gate_armed(&legacy, 1.0));
+        // corrupt flag types are uncalibrated, not armed
+        let corrupt = baseline(Some(Json::Num(1.0)));
+        assert!(!baseline_calibrated(&corrupt));
+        assert!(!regression_gate_armed(&corrupt, 1.0));
+    }
+
+    #[test]
+    fn calibrated_baseline_arms_only_at_full_scale() {
+        let cal = baseline(Some(Json::Bool(true)));
+        assert!(baseline_calibrated(&cal));
+        assert!(regression_gate_armed(&cal, 1.0));
+        assert!(regression_gate_armed(&cal, 4.0));
+        // current run is a smoke run: soft-log, don't gate
+        assert!(!regression_gate_armed(&cal, 0.1));
+        assert!(!regression_gate_armed(&cal, 0.999));
+        assert!(!regression_gate_armed(&cal, f64::NAN));
+    }
+}

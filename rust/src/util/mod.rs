@@ -4,6 +4,7 @@
 //! a randomized property-testing harness ([`proptest_lite`]) built on the
 //! crate's own Philox RNG.
 
+pub mod bench;
 pub mod json;
 pub mod proptest_lite;
 pub mod toml_lite;

@@ -12,7 +12,15 @@
 //!   the downlink bits of the broadcast-to-everyone baseline, in fewer
 //!   messages;
 //! * ledger compaction never drops a record the slowest tracked client
-//!   still needs, however small the ring's soft capacity.
+//!   still needs, however small the ring's soft capacity;
+//! * seed-pool interop (FedKSeed restricted seed space): rejoin parity
+//!   for both index-record replay and the constant-size K-scalar
+//!   download (`catchup = "pool"`), index-record pricing at
+//!   `ceil(log2 K) + 1` bits, and compaction over index records.
+//!
+//! `FEEDSIGN_SEED_POOL=K` reruns the whole FeedSign portion of the suite
+//! over a K-seed pool (the CI seed-pool leg); exact-bit accounting tests
+//! that assume 1-bit records pin `seed_pool = 0` explicitly.
 
 use feedsign::coordinator::catchup::CatchupCfg;
 use feedsign::coordinator::participation::ParticipationCfg;
@@ -23,7 +31,30 @@ use feedsign::data::vision::{generate, SYNTH_CIFAR10};
 use feedsign::engine::NativeEngine;
 use feedsign::simkit::nn::LinearProbe;
 
+/// Pool size the FeedSign tests run with: `FEEDSIGN_SEED_POOL=K` opts
+/// the suite into the restricted seed space (0 = unrestricted).  The
+/// non-FeedSign engines always run unrestricted — the pool applies to
+/// the sign-vote algorithms only.
+fn env_seed_pool(algo: Algorithm) -> usize {
+    match algo {
+        Algorithm::FeedSign | Algorithm::DpFeedSign { .. } => std::env::var("FEEDSIGN_SEED_POOL")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0),
+        _ => 0,
+    }
+}
+
 fn build_session(algo: Algorithm, k: usize, catchup: CatchupCfg) -> Session {
+    build_pool_session(algo, k, catchup, env_seed_pool(algo))
+}
+
+fn build_pool_session(
+    algo: Algorithm,
+    k: usize,
+    catchup: CatchupCfg,
+    seed_pool: usize,
+) -> Session {
     let train = generate(&SYNTH_CIFAR10, 400, 0);
     let test = generate(&SYNTH_CIFAR10, 150, 1);
     let shards = split(&train, k, Partition::Iid, 0);
@@ -42,6 +73,7 @@ fn build_session(algo: Algorithm, k: usize, catchup: CatchupCfg) -> Session {
         batch_size: 16,
         eval_every: 0,
         catchup,
+        seed_pool,
         seed: 13,
         ..Default::default()
     };
@@ -97,7 +129,9 @@ fn rejoin_is_bit_identical_for_every_engine_and_gap() {
 
 #[test]
 fn replay_bits_are_one_per_missed_feedsign_round() {
-    let mut s = build_session(Algorithm::FeedSign, 4, CatchupCfg::Replay);
+    // pinned to the unrestricted space: the 1-bit-per-round arithmetic
+    // below is exactly what seed_pool mode replaces with log2(K)+1
+    let mut s = build_pool_session(Algorithm::FeedSign, 4, CatchupCfg::Replay, 0);
     let mut t = 0u64;
     for _ in 0..2 {
         s.step_with_plan(plan_full(t, 4));
@@ -118,7 +152,8 @@ fn replay_bits_are_one_per_missed_feedsign_round() {
 #[test]
 fn rebroadcast_pays_dense_checkpoint_and_stays_exact() {
     let schedule = |catchup: CatchupCfg| {
-        let mut s = build_session(Algorithm::FeedSign, 4, catchup);
+        // pinned unrestricted: the 32·d − 3 delta assumes 1-bit records
+        let mut s = build_pool_session(Algorithm::FeedSign, 4, catchup, 0);
         let mut t = 0u64;
         for _ in 0..2 {
             s.step_with_plan(plan_full(t, 4));
@@ -185,6 +220,103 @@ fn full_replay_run_matches_broadcast_run_bit_for_bit() {
             algo.name()
         );
     }
+}
+
+#[test]
+fn pool_rejoin_is_bit_identical_for_both_pool_catchup_modes() {
+    // The seed-pool twin of `rejoin_is_bit_identical_...`: the missed
+    // span is repaired either by replaying the index records or by
+    // downloading the K accumulated scalars — both must land the
+    // rejoining client on the always-on clients' bits exactly.
+    for catchup in [CatchupCfg::Replay, CatchupCfg::PoolScalars] {
+        for gap in [1usize, 7, 50] {
+            let mut s = build_pool_session(Algorithm::FeedSign, 4, catchup, 32);
+            let mut t = 0u64;
+            for _ in 0..3 {
+                s.step_with_plan(plan_full(t, 4));
+                t += 1;
+            }
+            for _ in 0..gap {
+                s.step_with_plan(plan_without(t, 4, 2));
+                t += 1;
+            }
+            for _ in 0..2 {
+                s.step_with_plan(plan_full(t, 4));
+                t += 1;
+            }
+            assert_eq!(
+                s.replica(2),
+                s.replica(0),
+                "{catchup:?}: pool client offline {gap} rounds rejoined with drifted bits"
+            );
+            s.catch_up_all();
+            assert!(s.replicas_synchronized(), "{catchup:?}: pool not synchronized (gap {gap})");
+        }
+    }
+}
+
+#[test]
+fn pool_catchup_pricing_replay_scales_with_gap_scalar_download_does_not() {
+    // K = 32 pool seeds: every record prices at ceil(log2 32) + 1 = 6
+    // bits, and the FedKSeed scalar download prices at 32·K bits no
+    // matter how long the client was away.
+    let run = |catchup: CatchupCfg, gap: u64| {
+        let mut s = build_pool_session(Algorithm::FeedSign, 4, catchup, 32);
+        let mut t = 0u64;
+        for _ in 0..2 {
+            s.step_with_plan(plan_full(t, 4));
+            t += 1;
+        }
+        for _ in 0..gap {
+            s.step_with_plan(plan_without(t, 4, 3));
+            t += 1;
+        }
+        let before = s.ledger.downlink_bits;
+        s.step_with_plan(plan_full(t, 4)); // rejoin + one live round
+        s.ledger.downlink_bits - before
+    };
+    // rejoin round: 4 live (index + sign) broadcasts at 6 bits each,
+    // plus the catch-up payload
+    let live = 4 * 6;
+    assert_eq!(run(CatchupCfg::Replay, 7), live + 7 * 6);
+    assert_eq!(run(CatchupCfg::Replay, 50), live + 50 * 6);
+    let scalar_7 = run(CatchupCfg::PoolScalars, 7);
+    let scalar_50 = run(CatchupCfg::PoolScalars, 50);
+    assert_eq!(scalar_7, live + 32 * 32, "32-bit scalar per pool seed");
+    assert_eq!(scalar_7, scalar_50, "the scalar download is constant in the gap");
+}
+
+#[test]
+fn compaction_retains_index_records_for_the_slowest_client() {
+    // the compaction floor logic must hold when the pinned records are
+    // pool-index records (and their replay must bill at 5 bits each:
+    // ceil(log2 16) + 1)
+    let mut s = build_pool_session(Algorithm::FeedSign, 3, CatchupCfg::Replay, 16);
+    s.history.set_capacity(4);
+    let mut t = 0u64;
+    for _ in 0..2 {
+        s.step_with_plan(plan_full(t, 3));
+        t += 1;
+    }
+    for _ in 0..50 {
+        s.step_with_plan(plan_without(t, 3, 2));
+        t += 1;
+    }
+    assert_eq!(s.tracker().last_synced(2), 2);
+    assert_eq!(s.history.records_len(), 50, "client 2 pins rounds 2..52");
+    let before = s.ledger.downlink_bits;
+    s.step_with_plan(plan_full(t, 3));
+    assert_eq!(s.replica(2), s.replica(0), "index-record rejoin must be bit-identical");
+    assert_eq!(
+        s.ledger.downlink_bits - before,
+        3 * 5 + 50 * 5,
+        "3 live broadcasts + 50 replayed index records, 5 bits each"
+    );
+    assert!(
+        s.history.records_len() <= 4,
+        "ring must shrink to capacity once the watermark advances ({} records)",
+        s.history.records_len()
+    );
 }
 
 #[test]

@@ -38,6 +38,7 @@ fn lm_cfg(algorithm: &str, rounds: u64) -> ExperimentConfig {
         c_g_noise: 0.0,
         participation: "full".into(),
         catchup: "off".into(),
+        seed_pool: 0,
         channel: "ideal".into(),
         link: "mobile".into(),
         deadline: 0.0,

@@ -294,6 +294,7 @@ fn impaired_cross_topology_parity() {
             catchup,
             net,
             seed: 11,
+            seed_pool: 0,
         };
         let res = run_feedsign(dist_clients(4, &train), train, dcfg);
         for (id, w) in res.finals.iter().enumerate() {
