@@ -43,6 +43,7 @@ fn cfg(algorithm: &str, byzantine: usize, rounds: u64) -> ExperimentConfig {
         channel_seed: 0,
         threads: 0,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 0,
         seed: 41,
         verbose: false,

@@ -51,6 +51,7 @@ fn main() {
         channel_seed: 0,
         threads: 0,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 0,
         seed: 43,
         verbose: false,

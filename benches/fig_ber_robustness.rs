@@ -59,6 +59,7 @@ fn cfg(algorithm: &str, ber: f64, rounds: u64) -> ExperimentConfig {
         channel_seed: 17,
         threads: 0,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 0,
         seed: 41,
         verbose: false,

@@ -53,6 +53,7 @@ fn cfg(seed_pool: usize, rounds: u64) -> ExperimentConfig {
         channel_seed: 0,
         threads: 0,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 0,
         seed: 23,
         verbose: false,

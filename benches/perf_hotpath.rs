@@ -454,6 +454,7 @@ fn round_cfg(k: usize, threads: usize) -> ExperimentConfig {
         channel_seed: 0,
         threads,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 0,
         seed: 5,
         verbose: false,

@@ -39,6 +39,7 @@ fn cfg(algorithm: &str) -> ExperimentConfig {
         channel_seed: 0,
         threads: 0,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 0,
         seed: 3,
         verbose: false,

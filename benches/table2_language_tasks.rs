@@ -49,6 +49,7 @@ fn cfg(task: &str, algorithm: &str, rounds: u64, eta: f32) -> ExperimentConfig {
         channel_seed: 0,
         threads: 0,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 300,
         seed: 11,
         verbose: false,

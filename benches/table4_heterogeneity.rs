@@ -43,6 +43,7 @@ fn cfg(task: &str, algorithm: &str, beta: Option<f32>, rounds: u64) -> Experimen
         channel_seed: 0,
         threads: 0,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 300,
         seed: 17,
         verbose: false,

@@ -31,11 +31,18 @@
 //! space, `seed_pool = 4096`) shows each committed round costing
 //! `ceil(log2 K) + 1 = 13` bits in the packed-index orbit — at least 4x
 //! below a dense (seed, scalar) ledger entry.
+//!
+//! A **sharded-coordinator scale scenario** (`coordinator::shard`,
+//! `--shards N`) pushes the pool to K in {10^4, 10^5}: coordinator
+//! memory must stay flat in K (the shards share one canonical buffer
+//! read-only) and round throughput must scale near-linearly in the
+//! shard count — recorded in `BENCH_table8_shards.json`, runnable alone
+//! via `FEEDSIGN_TABLE8_SHARDS_ONLY=1`.
 
 mod common;
 
 use common::*;
-use feedsign::config::ExperimentConfig;
+use feedsign::config::{ExperimentConfig, TaskSpec};
 use feedsign::coordinator::ParticipationCfg;
 
 const TASKS: [&str; 4] = ["synth-sst2", "synth-cb", "synth-copa", "synth-boolq"];
@@ -74,10 +81,123 @@ fn cfg(
         channel_seed: 0,
         threads: 0,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 300,
         seed: 29,
         verbose: false,
     }
+}
+
+/// Config for the sharded-coordinator scale scenario: a vision-probe
+/// pool of `k` clients with ~1000 voters per round, the round engine
+/// pinned to `shards` coordinator shards over `threads` workers.
+fn shard_cfg(k: usize, rounds: u64, shards: usize, threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("table8-shards-k{k}-n{shards}"),
+        model: vision_model("synth-cifar10"),
+        // one sample per client floor: `split` requires n >= K
+        task: TaskSpec::SynthVision { name: "synth-cifar10".into(), train: k.max(2000), test: 200 },
+        algorithm: "feedsign".into(),
+        clients: k,
+        rounds,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 8,
+        eval_every: 0,
+        eval_batches: 2,
+        eval_batch_size: 32,
+        dirichlet_beta: None,
+        byzantine_count: 0,
+        attack: None,
+        c_g_noise: 0.0,
+        participation: format!("fraction:{}", 1000.0 / k as f64),
+        catchup: "off".into(),
+        seed_pool: 0,
+        channel: "ideal".into(),
+        link: "mobile".into(),
+        deadline: 0.0,
+        channel_seed: 0,
+        threads,
+        replica_cache: 4,
+        shards,
+        pretrain_rounds: 0,
+        seed: 29,
+        verbose: false,
+    }
+}
+
+/// The K >= 10^4 regime the sharded coordinator unlocks (ROADMAP item 1):
+/// pools at K in {10_000, 100_000} with ~1000 voters per round.  Two
+/// claims, recorded in `BENCH_table8_shards.json`:
+///
+/// * **memory flat in K** — the replica plane holds <= 2·d floats
+///   whatever K (hard check at both pool sizes; sharding shares the one
+///   canonical buffer read-only, so the shard count does not multiply
+///   it);
+/// * **round throughput near-linear in shards** — stepping rate at
+///   N = 4 shards (4 workers) vs the 1-shard sequential engine must
+///   reach >= 0.7·N.  Hard-gated only on calibrated full-scale runs
+///   (`FEEDSIGN_BENCH_SCALE >= 1` on a quiet >= 4-core host); smoke
+///   runs report it advisorily.
+///
+/// Runs standalone in the CI perf-smoke job via
+/// `FEEDSIGN_TABLE8_SHARDS_ONLY=1`.
+fn shard_scale_scenario(v: &mut Verdict) {
+    let rounds = scaled(20);
+    let mut bj = BenchJson::new("table8_shards");
+    bj.metric("rounds", rounds as f64);
+    for &k in &[10_000usize, 100_000] {
+        // sequential single-shard baseline vs 4 shards over 4 workers
+        let mut rates = Vec::new();
+        for &(shards, threads) in &[(1usize, 1usize), (4, 4)] {
+            let c = shard_cfg(k, rounds, shards, threads);
+            let mut s = c.build_session().expect("config builds");
+            let t0 = std::time::Instant::now();
+            for t in 0..rounds {
+                s.step(t);
+            }
+            let dt = t0.elapsed().as_secs_f64().max(1e-9);
+            let rate = rounds as f64 / dt;
+            rates.push(rate);
+            let (rs, ss) = (s.replica_stats(), s.shard_stats());
+            println!(
+                "shard scale K={k} N={shards}: {rate:.2} rounds/s, replica peak {} B \
+                 (d = {}), {} merges, {} rounds planned ahead",
+                rs.peak_bytes, rs.d, ss.merges, ss.rounds_overlapped
+            );
+            v.check(
+                &format!("shards-k{k}-n{shards}-replica-peak-flat-in-k"),
+                rs.peak_bytes <= 2 * 4 * rs.d && rs.owned_clients == 0,
+                format!("peak {} B vs 2·d = {} B at K = {k}", rs.peak_bytes, 2 * 4 * rs.d),
+            );
+            if shards > 1 {
+                v.check(
+                    &format!("shards-k{k}-merges-metered"),
+                    ss.merges > 0 && ss.rounds_overlapped > 0,
+                    format!("{} merges, {} overlapped rounds", ss.merges, ss.rounds_overlapped),
+                );
+            }
+            bj.metric(&format!("k{k}_n{shards}_rounds_per_s"), rate);
+            bj.metric(&format!("k{k}_n{shards}_replica_peak_bytes"), rs.peak_bytes as f64);
+            bj.metric(&format!("k{k}_n{shards}_merge_bits"), ss.merge_bits as f64);
+        }
+        let speedup = rates[1] / rates[0].max(1e-9);
+        bj.metric(&format!("k{k}_speedup_n4"), speedup);
+        let target = 0.7 * 4.0;
+        if scale() >= 1.0 {
+            v.check(
+                &format!("shards-k{k}-throughput-near-linear"),
+                speedup >= target,
+                format!("N=4 speedup {speedup:.2} vs target {target:.1}"),
+            );
+        } else {
+            println!(
+                "shard scale K={k}: N=4 speedup {speedup:.2} \
+                 (target {target:.1} gates only on calibrated runs)"
+            );
+        }
+    }
+    bj.write();
 }
 
 /// The large-pool scenario the replica plane unlocks: K = 200 clients,
@@ -190,6 +310,11 @@ fn main() {
         let mut v = Verdict::new();
         k200_scenario(&mut v);
         seed_pool_storage_scenario(&mut v);
+        v.finish();
+    }
+    if std::env::var("FEEDSIGN_TABLE8_SHARDS_ONLY").as_deref() == Ok("1") {
+        let mut v = Verdict::new();
+        shard_scale_scenario(&mut v);
         v.finish();
     }
     // fixed perturbation budget: (participants per round) * rounds = const
@@ -311,5 +436,7 @@ fn main() {
     k200_scenario(&mut v);
     // the ledger the restricted seed space shrinks
     seed_pool_storage_scenario(&mut v);
+    // the pool size the sharded coordinator unlocks
+    shard_scale_scenario(&mut v);
     v.finish()
 }

@@ -48,6 +48,7 @@ fn cfg(task: &str, algorithm: &str, byzantine: usize, rounds: u64) -> Experiment
         channel_seed: 0,
         threads: 0,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 0,
         seed: 31,
         verbose: false,

@@ -35,6 +35,7 @@ fn cfg(algorithm: &str, byzantine: usize) -> ExperimentConfig {
         channel_seed: 0,
         threads: 0,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 0,
         seed: 5,
         verbose: false,

@@ -38,6 +38,7 @@ fn cfg(algorithm: &str, beta: Option<f32>, c_g: f32) -> ExperimentConfig {
         channel_seed: 0,
         threads: 0,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 0,
         seed: 9,
         verbose: false,

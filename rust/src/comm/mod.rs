@@ -79,6 +79,21 @@ pub enum Message {
     /// length* (`catchup = "pool"`; 32·K bits) because the whole model
     /// delta is `sum_i scalars[i] · z(pool_seed_i)`.
     PoolScalars { k: usize },
+    /// Shard -> global merger (sharded coordinator, `--shards N`): one
+    /// shard's pre-reduced vote contribution for a round.  Sign votes are
+    /// associative integer sums, so a shard ships only `(sum, voters)` —
+    /// the merger folds the sums and reconstructs the exact tally
+    /// (`q_+ = (sum + voters) / 2`); only the final majority/DP threshold
+    /// is global.  Priced at the pair's information content:
+    /// `sum ∈ [-voters, +voters]` costs `ceil(log2(2·voters + 1))` bits
+    /// and `voters ∈ [0, shard_size]` costs `ceil(log2(shard_size + 1))`.
+    /// ZO-FedSGD shards set `dense_pairs` and forward their voters'
+    /// (seed, projection) pairs at 64 bits each — mean aggregation needs
+    /// the pairs themselves.  These messages travel coordinator-internally
+    /// (shard -> merger), so they are metered in the shard merge ledger
+    /// (`coordinator::shard::ShardStats`), never in the client-facing
+    /// per-run [`Ledger`].
+    ShardVotes { sum: i32, voters: usize, shard_size: usize, dense_pairs: bool },
 }
 
 impl Message {
@@ -96,13 +111,23 @@ impl Message {
             Message::Rebroadcast { n_params } => 32 * *n_params as u64,
             Message::PoolIndex { index_bits, .. } => *index_bits as u64,
             Message::PoolScalars { k } => 32 * *k as u64,
+            Message::ShardVotes { voters, shard_size, dense_pairs, .. } => {
+                if *dense_pairs {
+                    64 * *voters as u64
+                } else {
+                    index_bits_for(2 * *voters + 1) as u64 + index_bits_for(*shard_size + 1) as u64
+                }
+            }
         }
     }
 
     pub fn is_uplink(&self) -> bool {
         matches!(
             self,
-            Message::SignVote { .. } | Message::Projection { .. } | Message::Gradient { .. }
+            Message::SignVote { .. }
+                | Message::Projection { .. }
+                | Message::Gradient { .. }
+                | Message::ShardVotes { .. }
         )
     }
 }
@@ -435,7 +460,7 @@ impl SeedHistory {
 }
 
 /// Cumulative communication ledger for one run.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct Ledger {
     pub uplink_bits: u64,
     pub downlink_bits: u64,
@@ -758,6 +783,25 @@ mod tests {
         assert_eq!(Message::PoolScalars { k: 4096 }.payload_bits(), 32 * 4096);
         // the compression claim at K=4096: 64-bit explicit pair vs 13
         assert!(64 >= 4 * r.payload_bits(), ">=4x ledger-record reduction");
+    }
+
+    #[test]
+    fn shard_votes_price_at_the_pair_information_content() {
+        // a 1000-client shard with 600 delivered votes: the sum lives in
+        // [-600, 600] (ceil(log2 1201) = 11 bits) and the voter count in
+        // [0, 1000] (ceil(log2 1001) = 10 bits) — 21 bits for the whole
+        // shard instead of 600 forwarded one-bit votes
+        let m = Message::ShardVotes { sum: -42, voters: 600, shard_size: 1000, dense_pairs: false };
+        assert_eq!(m.payload_bits(), 11 + 10);
+        assert!(m.is_uplink(), "shard votes travel toward the merger");
+        // an all-drained shard still reports (0, 0) so the merger can
+        // close the round: 1-bit sum floor + the count field
+        let drained = Message::ShardVotes { sum: 0, voters: 0, shard_size: 1000, dense_pairs: false };
+        assert_eq!(drained.payload_bits(), 1 + 10);
+        // ZO shards forward dense pairs — means are not mergeable from
+        // (sum, count) without losing each voter's own direction seed
+        let zo = Message::ShardVotes { sum: 0, voters: 3, shard_size: 8, dense_pairs: true };
+        assert_eq!(zo.payload_bits(), 64 * 3);
     }
 
     #[test]

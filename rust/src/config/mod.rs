@@ -116,6 +116,13 @@ pub struct ExperimentConfig {
     /// only while stragglers exist; 0 disables the cache.  Never
     /// affects the computed bits.
     pub replica_cache: usize,
+    /// coordinator shards (`--shards N`; see `coordinator::shard`):
+    /// `>= 1` partitions the client pool into that many contiguous-id
+    /// shards, each owning its clients' probe fan-out and a local
+    /// sign-vote accumulator merged hierarchically — bit-identical to
+    /// the unsharded engine by construction.  0 keeps the flat path
+    /// (synchronized ZO algorithms only).
+    pub shards: usize,
     /// Central FO pretraining steps on a *format-matched but
     /// label-uninformative* dataset before federation begins.  This
     /// manufactures the "pretrained checkpoint" the paper's fine-tuning
@@ -183,6 +190,7 @@ impl ExperimentConfig {
             channel_seed: doc.int("", "channel_seed").unwrap_or(0) as u32,
             threads: doc.int("", "threads").unwrap_or(0) as usize,
             replica_cache: doc.int("", "replica_cache").unwrap_or(4) as usize,
+            shards: doc.int("", "shards").unwrap_or(0) as usize,
             seed: doc.int("", "seed").unwrap_or(0) as u32,
             verbose: doc.bool("", "verbose").unwrap_or(false),
         };
@@ -226,6 +234,7 @@ impl ExperimentConfig {
         d.set("", "channel_seed", Value::Int(self.channel_seed as i64));
         d.set("", "threads", Value::Int(self.threads as i64));
         d.set("", "replica_cache", Value::Int(self.replica_cache as i64));
+        d.set("", "shards", Value::Int(self.shards as i64));
         d.set("", "pretrain_rounds", Value::Int(self.pretrain_rounds as i64));
         d.set("", "seed", Value::Int(self.seed as i64));
         d.set("", "verbose", Value::Bool(self.verbose));
@@ -328,6 +337,9 @@ impl ExperimentConfig {
         }
         if self.deadline > 0.0 && matches!(algo, Algorithm::FedSgd | Algorithm::Mezo) {
             bail!("the round deadline applies to feedsign/dp-feedsign/zo-fedsgd only");
+        }
+        if self.shards > 0 && matches!(algo, Algorithm::FedSgd | Algorithm::Mezo) {
+            bail!("coordinator shards apply to feedsign/dp-feedsign/zo-fedsgd only");
         }
         if matches!(algo, Algorithm::Mezo) && !channel.is_ideal() {
             bail!("mezo is centralized: there is no channel to impair");
@@ -479,6 +491,7 @@ impl ExperimentConfig {
             threads: self.threads,
             net: self.net_cfg(),
             replica_cache: self.replica_cache,
+            shards: self.shards,
             seed: self.seed,
             verbose: self.verbose,
         };
@@ -549,6 +562,7 @@ pub fn quickstart() -> ExperimentConfig {
         channel_seed: 0,
         threads: 0,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 0,
         seed: 0,
         verbose: true,
@@ -635,6 +649,7 @@ mod tests {
             channel_seed: 0,
             threads: 0,
             replica_cache: 4,
+            shards: 0,
             pretrain_rounds: 0,
             seed: 1,
             verbose: false,
@@ -803,6 +818,32 @@ mod tests {
         cfg.replica_cache = 0;
         let s = cfg.build_session().unwrap();
         assert_eq!(s.cfg.replica_cache, 0);
+    }
+
+    #[test]
+    fn shards_roundtrip_gate_and_reach_the_session() {
+        let mut cfg = quickstart();
+        cfg.shards = 2;
+        cfg.validate().unwrap();
+        let back = ExperimentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.shards, 2);
+        // omitted key defaults to the flat path
+        let text: String = cfg
+            .to_toml()
+            .lines()
+            .filter(|l| !l.starts_with("shards"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert_eq!(ExperimentConfig::from_toml(&text).unwrap().shards, 0);
+        // the knob reaches the session's sharded plane
+        cfg.rounds = 3;
+        let mut s = cfg.build_session().unwrap();
+        s.step(0);
+        assert_eq!(s.shard_stats().shards, 2);
+        assert_eq!(s.shard_stats().merges, 2, "one merge per shard per round");
+        // gating: FO/MeZO have no vote to shard
+        cfg.algorithm = "fedsgd".into();
+        assert!(cfg.validate().is_err(), "shards are a sign-vote feature");
     }
 
     #[test]

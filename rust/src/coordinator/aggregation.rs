@@ -50,7 +50,16 @@ impl Algorithm {
 /// FeedSign's majority vote.  Ties (even K, split vote) resolve to +1 —
 /// a fixed convention both PS and clients share, so it costs no bits.
 pub fn majority_sign(signs: &[i8]) -> i8 {
-    let sum: i32 = signs.iter().map(|&s| s as i32).sum();
+    majority_from_sum(signs.iter().map(|&s| s as i32).sum())
+}
+
+/// The majority threshold over a pre-reduced vote *sum* — the hierarchical
+/// form the sharded coordinator folds (`coordinator::shard`): sign votes
+/// are associative integer sums, so per-shard edge aggregation is exact
+/// and only this final threshold is global.  [`majority_sign`] delegates
+/// here, so the flat and sharded paths share one tie convention by
+/// construction.
+pub fn majority_from_sum(sum: i32) -> i8 {
     if sum >= 0 {
         1
     } else {
@@ -69,8 +78,18 @@ pub fn mean_projection(ps: &[f32]) -> f32 {
 /// coin (perfect privacy, no signal); `eps -> inf` recovers the majority
 /// vote.
 pub fn dp_vote(signs: &[i8], epsilon: f32, rng: &mut Rng) -> i8 {
-    let q_plus = signs.iter().filter(|&&s| s > 0).count() as f32;
-    let q_minus = signs.len() as f32 - q_plus;
+    dp_vote_counts(signs.iter().filter(|&&s| s > 0).count(), signs.len(), epsilon, rng)
+}
+
+/// Definition D.1 over pre-reduced counts `(q_+, total)` — the sharded
+/// merge path: a shard ships its vote `(sum, voters)` pair and the merger
+/// reconstructs `q_+ = (Σ sum + Σ voters) / 2` exactly (the counts are
+/// associative integers).  [`dp_vote`] delegates here, so the exponential-
+/// mechanism arithmetic and the single `rng.uniform()` draw are the same
+/// IEEE-754 expression on both paths — bit-identical by construction.
+pub fn dp_vote_counts(q_plus: usize, total: usize, epsilon: f32, rng: &mut Rng) -> i8 {
+    let q_plus = q_plus as f32;
+    let q_minus = total as f32 - q_plus;
     // subtract the max exponent for numerical stability
     let e_plus = epsilon * q_plus / 4.0;
     let e_minus = epsilon * q_minus / 4.0;
@@ -135,6 +154,34 @@ mod tests {
             Some(Algorithm::DpFeedSign { epsilon: 2.5 })
         );
         assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn sum_and_count_forms_match_the_flat_vote_paths() {
+        use crate::simkit::prng::Rng as R;
+        // every (q_plus, total) split at a few pool sizes: the flat vote
+        // over an explicit sign vector and the pre-reduced form must agree
+        // exactly — including the identical rng draw sequence for DP
+        for total in 0..12usize {
+            for q_plus in 0..=total {
+                let mut signs = vec![1i8; q_plus];
+                signs.extend(std::iter::repeat(-1i8).take(total - q_plus));
+                let sum = q_plus as i32 - (total - q_plus) as i32;
+                assert_eq!(majority_sign(&signs), majority_from_sum(sum));
+                // counts reconstruct from the (sum, voters) shard pair
+                assert_eq!(((sum + total as i32) / 2) as usize, q_plus);
+                for eps in [0.0f32, 0.7, 3.0] {
+                    let mut a = R::new(99, 5);
+                    let mut b = R::new(99, 5);
+                    assert_eq!(
+                        dp_vote(&signs, eps, &mut a),
+                        dp_vote_counts(q_plus, total, eps, &mut b)
+                    );
+                    // both consumed exactly one draw
+                    assert_eq!(a.next_u32(), b.next_u32());
+                }
+            }
+        }
     }
 
     #[test]

@@ -131,6 +131,19 @@ impl CatchupTracker {
         self.last_synced.iter().copied().min().unwrap_or(0)
     }
 
+    /// The compaction floor over one contiguous client-id range — a
+    /// coordinator shard's *local* watermark (`coordinator::shard`).  The
+    /// session-global floor handed to
+    /// [`crate::comm::SeedHistory::compact_to`] must be the **min across
+    /// shards** of these (min is associative, so that equals
+    /// [`CatchupTracker::watermark`] exactly); compacting to any single
+    /// shard's local watermark instead would drop records another shard's
+    /// slowest client still needs.  An empty range returns `u64::MAX`,
+    /// the identity of the min fold.
+    pub fn watermark_over(&self, ids: std::ops::Range<usize>) -> u64 {
+        self.last_synced[ids].iter().copied().min().unwrap_or(u64::MAX)
+    }
+
     /// The replay span client `id` must apply to be current through
     /// round `now` (empty when already synced).
     pub fn span(&self, id: usize, now: u64) -> std::ops::Range<u64> {
@@ -175,5 +188,21 @@ mod tests {
         let mut t = CatchupTracker::new(2);
         t.mark_synced(0, 5);
         t.mark_synced(0, 3);
+    }
+
+    #[test]
+    fn shard_local_watermarks_fold_to_the_global_floor() {
+        let mut t = CatchupTracker::new(6);
+        for (id, wm) in [(0, 9), (1, 7), (2, 9), (3, 9), (4, 2), (5, 9)] {
+            t.mark_synced(id, wm);
+        }
+        // two shards of 3: local floors are the per-range minima
+        assert_eq!(t.watermark_over(0..3), 7);
+        assert_eq!(t.watermark_over(3..6), 2);
+        // min across shards == the flat global watermark
+        assert_eq!(t.watermark_over(0..3).min(t.watermark_over(3..6)), t.watermark());
+        // empty range is the fold identity
+        assert_eq!(t.watermark_over(3..3), u64::MAX);
+        assert_eq!(t.watermark_over(0..6).min(t.watermark_over(6..6)), t.watermark());
     }
 }

@@ -34,6 +34,7 @@ use crate::coordinator::aggregation;
 use crate::coordinator::byzantine::Attack;
 use crate::coordinator::catchup::{CatchupCfg, CatchupTracker};
 use crate::coordinator::participation::ParticipationCfg;
+use crate::coordinator::shard::{ShardPlane, ShardStats, VoteAcc};
 use crate::data::{Dataset, Shard};
 use crate::engine::Engine;
 use crate::net::{NetCfg, NetSim, NetStats};
@@ -81,6 +82,15 @@ pub struct DistCfg {
     /// the `ceil(log2 K)`-bit index; 0 keeps the implicit `seed = t`
     /// schedule.
     pub seed_pool: usize,
+    /// Coordinator shards ([`crate::coordinator::shard`]): `>= 1`
+    /// partitions the *collected* votes into contiguous client-id shards
+    /// whose pre-reduced `(sum, voters)` pairs cross a metered
+    /// [`Message::ShardVotes`] hop before the global majority threshold
+    /// — bit-identical to the flat vote by associativity of the sum.
+    /// 0 keeps the flat path.  The client threads are untouched either
+    /// way: sharding is PS-internal here, as it is session-internal in
+    /// the sync engine.
+    pub shards: usize,
 }
 
 impl DistCfg {
@@ -96,6 +106,14 @@ impl DistCfg {
             net: NetCfg::ideal(),
             seed: 0,
             seed_pool: 0,
+            // same env override as `SessionCfg::default()`: the CI
+            // `FEEDSIGN_SHARDS=4` leg reroutes every `full()`-built test
+            // through the hierarchical merge; explicit DistCfg literals
+            // pin their own value
+            shards: std::env::var("FEEDSIGN_SHARDS")
+                .ok()
+                .and_then(|v| v.trim().parse().ok())
+                .unwrap_or(0),
         }
     }
 }
@@ -110,6 +128,9 @@ pub struct DistResult {
     pub votes_per_round: Vec<Vec<i8>>,
     /// impaired-channel counters (all zero on an ideal channel)
     pub net: NetStats,
+    /// hierarchical vote-merge counters (all zero on the flat path);
+    /// PS-internal — `ledger` is byte-identical either way
+    pub shard: ShardStats,
 }
 
 /// Run distributed FeedSign over worker threads.
@@ -220,6 +241,9 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
     let mut tracker = CatchupTracker::new(k);
     let mut net = NetSim::new(cfg.net.clone());
     let mut part_rng = Rng::new(cfg.seed ^ 0x9A, 0x9A);
+    // hierarchical vote merge (PS-internal): contiguous-id shards
+    // pre-reduce their delivered votes to (sum, voters) pairs
+    let mut shard_plane = (cfg.shards >= 1).then(|| ShardPlane::new(k, cfg.shards));
     // FedKSeed-Pro state: the same per-pool-seed scalar accumulation the
     // sync session keeps, so both topologies' samplers see identical
     // history and draw identical indices
@@ -292,6 +316,33 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
                 voters.push(id);
             }
         }
+        // shard pre-reduction: every shard with *planned* participants
+        // ships one ShardVotes pair (drained shards report (0, 0)), the
+        // merger folds them — recorded before the all-lost early return
+        // so the merge traffic matches the sync engine's round for round
+        let merged = shard_plane.as_mut().map(|plane| {
+            let mut tally = vec![VoteAcc::default(); plane.map().shards()];
+            for (&id, &sign) in voters.iter().zip(&signs) {
+                tally[plane.map().shard_of(id)].push(sign);
+            }
+            let mut total = VoteAcc::default();
+            for s in 0..plane.map().shards() {
+                let r = plane.map().range(s);
+                let lo = participants.partition_point(|&id| id < r.start);
+                if lo >= participants.len() || participants[lo] >= r.end {
+                    continue; // no planned participants in this shard
+                }
+                let acc = tally[s];
+                plane.record_merge(&Message::ShardVotes {
+                    sum: acc.sum,
+                    voters: acc.voters,
+                    shard_size: r.len(),
+                    dense_pairs: false,
+                });
+                total.merge(acc);
+            }
+            total
+        });
         if signs.is_empty() {
             // every vote was lost in transit: the round commits as a
             // no-op; the voters' pending GlobalSign never arrives and
@@ -303,7 +354,15 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
             votes_per_round.push(Vec::new());
             continue;
         }
-        let f = aggregation::majority_sign(&signs);
+        // sharded: threshold the merged sum (bit-identical to the flat
+        // majority — `majority_from_sum` is pinned against it)
+        let f = match &merged {
+            Some(acc) => {
+                debug_assert_eq!(acc.voters, signs.len());
+                aggregation::majority_from_sum(acc.sum)
+            }
+            None => aggregation::majority_sign(&signs),
+        };
         votes_per_round.push(signs);
         for &id in &voters {
             let msg = Message::GlobalSign { sign: f };
@@ -368,7 +427,8 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
     for h in handles {
         finals.push(h.join().expect("client thread panicked"));
     }
-    DistResult { finals, ledger, votes_per_round, net: net.stats }
+    let shard = shard_plane.map(|p| p.stats()).unwrap_or_default();
+    DistResult { finals, ledger, votes_per_round, net: net.stats, shard }
 }
 
 #[cfg(test)]
@@ -498,6 +558,7 @@ mod tests {
                 net: NetCfg::ideal(),
                 seed: 7,
                 seed_pool: 0,
+                shards: 0,
             };
             let res = run_feedsign(dclients, train, dcfg);
             for (id, w) in res.finals.iter().enumerate() {
@@ -510,6 +571,41 @@ mod tests {
             assert_eq!(res.ledger.uplink_bits, sync.ledger.uplink_bits, "{catchup:?}");
             assert_eq!(res.ledger.downlink_bits, sync.ledger.downlink_bits, "{catchup:?}");
         }
+    }
+
+    #[test]
+    fn sharded_ps_merge_is_bit_identical_to_flat() {
+        // same seeds, flat vs 3-shard PS: finals, votes and the
+        // client-facing ledger must not move a bit; only the PS-internal
+        // merge counters appear
+        let run = |shards: usize| {
+            let train = generate(&SYNTH_CIFAR10, 300, 0);
+            let clients = dist_clients(5, &train);
+            let cfg = DistCfg {
+                rounds: 30,
+                eta: 2e-3,
+                mu: 1e-3,
+                batch_size: 16,
+                participation: ParticipationCfg::Fraction(0.6),
+                catchup: CatchupCfg::Replay,
+                net: NetCfg::ideal(),
+                seed: 7,
+                seed_pool: 0,
+                shards,
+            };
+            run_feedsign(clients, train, cfg)
+        };
+        let flat = run(0);
+        let sharded = run(3);
+        assert_eq!(sharded.finals, flat.finals, "sharded PS merge changed the model");
+        assert_eq!(sharded.votes_per_round, flat.votes_per_round);
+        assert_eq!(sharded.ledger.uplink_bits, flat.ledger.uplink_bits);
+        assert_eq!(sharded.ledger.downlink_bits, flat.ledger.downlink_bits);
+        assert_eq!(flat.shard.shards, 0);
+        assert_eq!(flat.shard.merges, 0);
+        assert_eq!(sharded.shard.shards, 3);
+        assert!(sharded.shard.merges > 0, "merge traffic must be metered");
+        assert!(sharded.shard.merge_bits > 0);
     }
 
     #[test]
@@ -581,6 +677,7 @@ mod tests {
                 net: NetCfg::ideal(),
                 seed: 7,
                 seed_pool: 32,
+                shards: 0,
             };
             let res = run_feedsign(dclients, train, dcfg);
             for (id, w) in res.finals.iter().enumerate() {

@@ -13,6 +13,10 @@
 //! * [`session`] — the deterministic plan/execute/commit round engine that
 //!   all benches/examples drive (size-aware client fan-out over scoped
 //!   threads, commits in client-id order);
+//! * [`shard`] — the sharded coordinator plane (`--shards N`): contiguous
+//!   client-id shards that own their probe fan-out and pre-reduce sign
+//!   votes to associative `(sum, voters)` pairs, merged hierarchically
+//!   and bit-identical to the barriered engine;
 //! * [`distributed`] — the threaded leader/worker topology (same protocol,
 //!   real message passing), pinned to the sync session by test.
 //!
@@ -28,6 +32,7 @@ pub mod distributed;
 pub mod participation;
 pub mod replica;
 pub mod session;
+pub mod shard;
 
 pub use aggregation::Algorithm;
 pub use byzantine::Attack;
@@ -35,3 +40,4 @@ pub use catchup::{CatchupCfg, CatchupTracker};
 pub use participation::ParticipationCfg;
 pub use replica::{ReplicaStats, ReplicaStore};
 pub use session::{Client, Session, SessionCfg};
+pub use shard::{ShardMap, ShardPlane, ShardStats};

@@ -22,6 +22,15 @@
 //! availability floor in sweeps): the round engine commits such a round as
 //! a no-op rather than panicking.  `bernoulli:P` keeps its round-robin
 //! fallback (`round % K`) so availability-model runs always make progress.
+//!
+//! **Sharded coordinators** ([`crate::coordinator::shard`]) must not give
+//! each shard its own sampler: these draws are *sequenced* on one session
+//! stream, so per-shard sampling would consume different draw counts at
+//! different shard counts and break shard-count invariance.  The sharded
+//! engine therefore draws the participant set once globally through this
+//! module and *partitions* the sorted result along shard boundaries
+//! (`ShardMap::split_participants`) — pinned by
+//! `rust/tests/shard_parity.rs`.
 
 use crate::simkit::prng::Rng;
 

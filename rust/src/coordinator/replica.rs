@@ -43,6 +43,13 @@
 //! `(w, seed, step)` is what makes one canonical apply bit-identical to
 //! the `K` per-client applies it replaces (pinned by
 //! `rust/tests/replica_parity.rs`).
+//!
+//! The store holds **no interior mutability**, so a `&ReplicaStore` is
+//! `Sync` and the sharded coordinator ([`crate::coordinator::shard`])
+//! shares the one canonical buffer read-only across its shard workers
+//! during the execute phase ([`ReplicaStore::probe_view`] is `&self`);
+//! commits stay on the single merger thread.  That sharing is what keeps
+//! coordinator memory flat in the shard count *and* in `K`.
 
 use crate::coordinator::catchup::CatchupTracker;
 

@@ -58,6 +58,22 @@
 //! dense K-replica mirror).  The cross-topology tests in `rust/tests/`
 //! (sync vs threaded-distributed, where clients *do* own dense replicas)
 //! rely on the same schedule.
+//!
+//! **Sharded mode** ([`SessionCfg::shards`] >= 1, `--shards N` /
+//! `FEEDSIGN_SHARDS`): the pool is partitioned into contiguous-id
+//! coordinator shards ([`crate::coordinator::shard`]).  The plan phase is
+//! unchanged — the participant set is drawn *globally* (sequenced RNG)
+//! and split along shard boundaries; each shard executes its slice
+//! against the shared read-only canonical buffer and pre-reduces its
+//! sign votes to an associative `(sum, voters)` pair, shipped as one
+//! [`Message::ShardVotes`] per round into the plane's merge ledger
+//! (coordinator-internal — the client-facing ledger is byte-identical to
+//! the unsharded run's).  The round loop goes event-driven: the first
+//! shard to finish triggers the round-`t+1` plan draw while stragglers
+//! drain, with commit ordering still enforced globally — so a sharded
+//! run is **bit-identical** to the barriered engine for every shard
+//! count, thread count and topology (pinned by
+//! `rust/tests/shard_parity.rs`).
 
 use crate::comm::{Ledger, Message, SeedHistory, SeedPool, SeedRecord};
 use crate::coordinator::aggregation::{self, Algorithm};
@@ -65,6 +81,7 @@ use crate::coordinator::byzantine::Attack;
 use crate::coordinator::catchup::{CatchupCfg, CatchupTracker};
 use crate::coordinator::participation::ParticipationCfg;
 use crate::coordinator::replica::{ReplicaState, ReplicaStats, ReplicaStore};
+use crate::coordinator::shard::{ShardPlane, ShardStats, VoteAcc};
 use crate::data::{Batch, Dataset, Shard};
 use crate::engine::{probe_batch, Engine, ProbeBatchStats, ProbeJob};
 use crate::metrics::{RoundRecord, RunResult};
@@ -202,6 +219,17 @@ pub struct SessionCfg {
     /// `replica_cache · d` floats, spent only while stragglers exist;
     /// 0 disables the cache.  Never affects the computed bits.
     pub replica_cache: usize,
+    /// coordinator shards (`--shards N` / `FEEDSIGN_SHARDS`): `>= 1`
+    /// partitions the client pool into that many contiguous-id shards
+    /// ([`crate::coordinator::shard`]), each owning its clients' probe
+    /// fan-out and a local sign-vote accumulator; shards share the one
+    /// canonical buffer read-only and merge vote *sums* hierarchically,
+    /// and a shard finishing early lets the planner draw round `t+1`
+    /// while stragglers drain.  Bit-identical to the barriered engine
+    /// for every shard count (pinned by `rust/tests/shard_parity.rs`);
+    /// 0 keeps the legacy unsharded path.  Read at [`Session::new`], not
+    /// live: the partition is construction-time state.
+    pub shards: usize,
     pub seed: u32,
     /// print progress to stderr
     pub verbose: bool,
@@ -225,6 +253,14 @@ impl Default for SessionCfg {
             threads: 0,
             net: NetCfg::ideal(),
             replica_cache: 4,
+            // the env override reroutes every `..Default::default()`
+            // construction (the whole test suite) through the sharded
+            // plane — the CI `FEEDSIGN_SHARDS=4` leg; explicit config
+            // (TOML / CLI) builds SessionCfg literally and wins
+            shards: std::env::var("FEEDSIGN_SHARDS")
+                .ok()
+                .and_then(|v| v.trim().parse().ok())
+                .unwrap_or(0),
             seed: 0,
             verbose: false,
         }
@@ -385,6 +421,11 @@ fn pack_bins(costs: &[u64], bins: usize) -> Vec<Vec<usize>> {
 /// assignment, which is what makes the commit phase bit-identical to the
 /// sequential baseline; the returned [`ProbeBatchStats`] (summed over
 /// workers) is equally schedule-deterministic.
+///
+/// `id_base` maps slice positions to global client ids: a coordinator
+/// shard hands in its own contiguous sub-slice of the pool
+/// (`clients[i]` is global client `id_base + i`), while the unsharded
+/// engine passes the whole pool with `id_base = 0`.
 fn execute_probes<S, F>(
     clients: &mut [Client],
     replicas: &ReplicaStore,
@@ -395,6 +436,7 @@ fn execute_probes<S, F>(
     mu: f32,
     spec: S,
     finish: F,
+    id_base: usize,
 ) -> (Vec<ProbeOutcome>, ProbeBatchStats)
 where
     S: Fn(&mut Client, &mut Ledger) -> (Batch, u32) + Sync,
@@ -404,7 +446,8 @@ where
     let mut selected: Vec<(&mut Client, &[f32])> = Vec::with_capacity(plan.participants.len());
     {
         let mut want = plan.participants.iter().copied().peekable();
-        for (id, c) in clients.iter_mut().enumerate() {
+        for (i, c) in clients.iter_mut().enumerate() {
+            let id = id_base + i;
             if want.peek() == Some(&id) {
                 selected.push((c, replicas.probe_view(id)));
                 want.next();
@@ -466,6 +509,206 @@ where
     (outcomes, stats)
 }
 
+/// Paper-accounting payload bits one participant moves in a round — the
+/// free-function form of [`Session::round_payload_bits`], so the
+/// event-driven lookahead planner ([`plan_round_with`]) can price a round
+/// from disjoint field borrows while shard workers still hold the client
+/// pool.
+fn payload_bits_for(
+    algorithm: Algorithm,
+    pool_index_bits: Option<u16>,
+    d: usize,
+    participants: usize,
+) -> (u64, u64) {
+    match algorithm {
+        // restricted seed space: the downlink names the round's
+        // direction by index, so the broadcast is (index, sign) =
+        // ceil(log2 K) + 1 bits instead of the implicit-schedule 1
+        Algorithm::FeedSign | Algorithm::DpFeedSign { .. } => match pool_index_bits {
+            Some(b) => (1, 1 + b as u64),
+            None => (1, 1),
+        },
+        Algorithm::ZoFedSgd => (64, 64 * participants.max(1) as u64),
+        Algorithm::FedSgd => (32 * d as u64, 32 * d as u64),
+        Algorithm::Mezo => (0, 0),
+    }
+}
+
+/// Everything the plan phase for round `t+1` needs, borrowed disjointly
+/// from the session so the sharded execute scope can draw the next plan
+/// while straggler shards still hold `&mut clients` — the event-driven
+/// overlap.  Exactness: the participation stream is *sequenced* (one
+/// session RNG), so lookahead only moves its draws earlier in wall-clock,
+/// never earlier in draw order; the net admission for `t+1` likewise
+/// stays in round order relative to every other `admit` call, and the
+/// commit of round `t` only performs *keyed* channel draws — so the
+/// overlapped schedule is bit-identical to the barriered one.
+struct Lookahead<'a> {
+    round: u64,
+    k: usize,
+    participation: ParticipationCfg,
+    algorithm: Algorithm,
+    pool_index_bits: Option<u16>,
+    d: usize,
+    part_rng: &'a mut Rng,
+    net: &'a mut NetSim,
+}
+
+/// Plan one round from a [`Lookahead`] bundle: the participation draw,
+/// then (with an active net simulation) the virtual-clock deadline
+/// admission.  [`Session::plan_round`] delegates here, so the lookahead
+/// path and the synchronous path are one code path by construction.
+fn plan_round_with(la: Lookahead<'_>) -> RoundPlan {
+    let mut participants = la.participation.sample(la.k, la.round, la.part_rng);
+    if la.net.is_active() {
+        let (up, down) =
+            payload_bits_for(la.algorithm, la.pool_index_bits, la.d, participants.len());
+        participants = la.net.admit(la.round, participants, up, down);
+    }
+    RoundPlan { round: la.round, participants }
+}
+
+/// Sharded execute phase: split the round's (globally drawn) participant
+/// set along the [`ShardPlane`]'s contiguous id ranges, hand each shard
+/// its own disjoint `&mut [Client]` sub-slice plus the shared read-only
+/// replica plane, and run the shards event-driven: as soon as the first
+/// shard finishes while stragglers are still draining, the planner draws
+/// round `t+1` against the session's RNG/net watermarks (`lookahead`),
+/// which [`Session::step`] then consumes.  Outcomes are reassembled in
+/// shard order — which *is* global client-id order, because shards cover
+/// ascending contiguous ranges — so the commit phase downstream is
+/// byte-for-byte the unsharded engine's.
+fn execute_sharded<S, F>(
+    clients: &mut [Client],
+    replicas: &ReplicaStore,
+    plane: &mut ShardPlane,
+    plan: &RoundPlan,
+    costs: &[u64],
+    threads: usize,
+    pin_serial: bool,
+    mu: f32,
+    spec: S,
+    finish: F,
+    lookahead: Option<Lookahead<'_>>,
+) -> (Vec<ProbeOutcome>, ProbeBatchStats, Option<RoundPlan>)
+where
+    S: Fn(&mut Client, &mut Ledger) -> (Batch, u32) + Sync,
+    F: Fn(&mut Client, u32, f32, &mut Ledger) -> Contribution + Sync,
+{
+    let map = plane.map().clone();
+    let n = map.shards();
+    // partition the global draw (and its aligned cost vector) — never
+    // re-draw per shard: participation draws are sequenced, and a
+    // per-shard sampler would consume different streams at different N
+    let shard_work: Vec<(RoundPlan, Vec<u64>)> = {
+        let parts = map.split_participants(&plan.participants);
+        let mut off = 0usize;
+        parts
+            .into_iter()
+            .map(|p| {
+                let c = costs[off..off + p.len()].to_vec();
+                off += p.len();
+                (RoundPlan { round: plan.round, participants: p.to_vec() }, c)
+            })
+            .collect()
+    };
+    // disjoint contiguous client sub-slices, one per shard
+    let mut slices: Vec<(usize, &mut [Client])> = Vec::with_capacity(n);
+    {
+        let mut rest = clients;
+        let mut base = 0usize;
+        for s in 0..n {
+            let len = map.range(s).len();
+            let (head, tail) = rest.split_at_mut(len);
+            slices.push((base, head));
+            base += len;
+            rest = tail;
+        }
+    }
+    let shard_threads = (threads / n).max(1);
+    let mut done: Vec<Option<(Vec<ProbeOutcome>, ProbeBatchStats)>> =
+        (0..n).map(|_| None).collect();
+    let mut lookahead = lookahead;
+    let mut next_plan: Option<RoundPlan> = None;
+    if threads <= 1 || n == 1 {
+        // sequential baseline (or a degenerate single shard): drain the
+        // shards in shard order on this thread.  The overlap point is the
+        // same — after the first shard completes with stragglers left —
+        // so `rounds_overlapped` is thread-count-invariant like every
+        // other committed stat.
+        for (s, ((base, slice), (shard_plan, shard_costs))) in
+            slices.into_iter().zip(&shard_work).enumerate()
+        {
+            let out = execute_probes(
+                slice,
+                replicas,
+                shard_plan,
+                shard_costs,
+                shard_threads,
+                pin_serial,
+                mu,
+                &spec,
+                &finish,
+                base,
+            );
+            done[s] = Some(out);
+            if s == 0 && n > 1 {
+                if let Some(la) = lookahead.take() {
+                    next_plan = Some(plan_round_with(la));
+                    plane.note_overlap();
+                }
+            }
+        }
+    } else {
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::scope(|scope| {
+            for (s, ((base, slice), work)) in slices.into_iter().zip(&shard_work).enumerate() {
+                let tx = tx.clone();
+                let (spec, finish) = (&spec, &finish);
+                let (shard_plan, shard_costs) = work;
+                scope.spawn(move || {
+                    let out = execute_probes(
+                        slice,
+                        replicas,
+                        shard_plan,
+                        shard_costs,
+                        shard_threads,
+                        pin_serial,
+                        mu,
+                        spec,
+                        finish,
+                        base,
+                    );
+                    tx.send((s, out)).ok();
+                });
+            }
+            drop(tx);
+            // event loop: completions arrive as shards finish; the first
+            // one that lands while others are still executing triggers
+            // the round-(t+1) plan draw
+            let mut finished = 0usize;
+            while let Ok((s, out)) = rx.recv() {
+                done[s] = Some(out);
+                finished += 1;
+                if finished < n {
+                    if let Some(la) = lookahead.take() {
+                        next_plan = Some(plan_round_with(la));
+                        plane.note_overlap();
+                    }
+                }
+            }
+        });
+    }
+    let mut outcomes = Vec::with_capacity(plan.participants.len());
+    let mut stats = ProbeBatchStats::default();
+    for slot in done {
+        let (o, st) = slot.expect("every shard reports exactly once");
+        outcomes.extend(o);
+        stats.merge(&st);
+    }
+    (outcomes, stats, next_plan)
+}
+
 /// The federated runtime.
 pub struct Session {
     pub cfg: SessionCfg,
@@ -500,6 +743,15 @@ pub struct Session {
     /// delta (`sum_i scalars[i] · z_i`) the [`CatchupCfg::PoolScalars`]
     /// download ships.
     pub pool_scalars: Vec<f32>,
+    /// Sharded coordinator plane ([`SessionCfg::shards`] >= 1): the
+    /// client-id partition, the hierarchical vote-merge ledger and the
+    /// event-driven overlap counter.  `None` on the legacy unsharded
+    /// path.
+    shard_plane: Option<ShardPlane>,
+    /// Round plan drawn ahead of time by the event-driven sharded
+    /// execute (round `t+1`, planned while round `t`'s stragglers
+    /// drained); consumed by the next in-order [`Session::step`].
+    pending_plan: Option<RoundPlan>,
     dp_rng: Rng,
     eval_rng: Rng,
     part_rng: Rng,
@@ -585,6 +837,7 @@ impl Session {
         let dp_rng = Rng::new(cfg.seed ^ 0xD9, 0xD9);
         let eval_rng = Rng::new(cfg.seed ^ 0xEE, 0xEE);
         let part_rng = Rng::new(cfg.seed ^ 0x9A, 0x9A);
+        let shard_plane = (cfg.shards >= 1).then(|| ShardPlane::new(clients.len(), cfg.shards));
         Session {
             cfg,
             clients,
@@ -598,6 +851,8 @@ impl Session {
             probe_stats: ProbeBatchStats::default(),
             pool,
             pool_scalars,
+            shard_plane,
+            pending_plan: None,
             dp_rng,
             eval_rng,
             part_rng,
@@ -707,6 +962,7 @@ impl Session {
             net: self.net.stats.clone(),
             replica: self.replica_stats(),
             probe: self.probe_stats,
+            shard: self.shard_stats(),
         }
     }
 
@@ -716,14 +972,45 @@ impl Session {
         self.replicas.stats()
     }
 
+    /// Sharded-plane accounting: shard count, hierarchical merge traffic
+    /// and event-driven overlap counter.  All-zero on the unsharded path.
+    pub fn shard_stats(&self) -> ShardStats {
+        self.shard_plane.as_ref().map(ShardPlane::stats).unwrap_or_default()
+    }
+
+    /// The [`SeedHistory`] compaction floor.  Unsharded: the flat
+    /// tracker's global watermark.  Sharded: the **min across shards** of
+    /// the shard-local watermarks — the hierarchical fold a physically
+    /// sharded deployment computes.  Min is associative, so the two are
+    /// equal; what the fold must never be is any *single* shard's local
+    /// watermark, which would compact records another shard's straggler
+    /// still needs (the regression
+    /// `coordinator::shard` pins).
+    fn compaction_watermark(&self) -> u64 {
+        match &self.shard_plane {
+            Some(plane) => plane.compaction_watermark(self.replicas.tracker()),
+            None => self.replicas.tracker().watermark(),
+        }
+    }
+
     /// One aggregation round.
     pub fn step(&mut self, t: u64) {
         match self.cfg.algorithm {
             Algorithm::FedSgd => self.step_fedsgd(t),
             Algorithm::Mezo => self.step_mezo(t),
             _ => {
-                let plan = self.plan_round(t);
-                self.step_with_plan(plan);
+                // a plan drawn ahead by the event-driven sharded execute
+                // (while round t-1's stragglers drained) is consumed
+                // here; the draws happened in the identical order, so
+                // the round is bit-identical either way
+                let plan = match self.pending_plan.take() {
+                    Some(p) => {
+                        assert_eq!(p.round, t, "sharded lookahead requires in-order stepping");
+                        p
+                    }
+                    None => self.plan_round(t),
+                };
+                self.step_planned(plan, true);
             }
         }
     }
@@ -734,7 +1021,17 @@ impl Session {
     /// offline for exactly k rounds (`rust/tests/catchup_parity.rs`).
     /// Plans must arrive in round order (the seed history and the replica
     /// plane both commit in round order).
+    ///
+    /// Injected plans disable the sharded engine's lookahead planning:
+    /// an external scheduler owns the plan stream, so drawing round
+    /// `t+1` from the session sampler would desynchronize the sequenced
+    /// participation RNG (and, with an active net simulation, the
+    /// virtual clock) from the unsharded baseline.
     pub fn step_with_plan(&mut self, plan: RoundPlan) {
+        self.step_planned(plan, false)
+    }
+
+    fn step_planned(&mut self, plan: RoundPlan, allow_lookahead: bool) {
         // snapshot-cache admission (PR 5 follow-up): pre-commit snapshots
         // exist to serve *stale* readers, so only admit them when this
         // round's config can actually strand a client — a participation
@@ -748,9 +1045,11 @@ impl Session {
             self.cfg.participation.can_strand_clients() || self.cfg.net.can_strand_clients();
         self.replicas.set_snapshot_admission(admit);
         match self.cfg.algorithm {
-            Algorithm::FeedSign => self.step_feedsign(plan, None),
-            Algorithm::DpFeedSign { epsilon } => self.step_feedsign(plan, Some(epsilon)),
-            Algorithm::ZoFedSgd => self.step_zo_fedsgd(plan),
+            Algorithm::FeedSign => self.step_feedsign(plan, None, allow_lookahead),
+            Algorithm::DpFeedSign { epsilon } => {
+                self.step_feedsign(plan, Some(epsilon), allow_lookahead)
+            }
+            Algorithm::ZoFedSgd => self.step_zo_fedsgd(plan, allow_lookahead),
             Algorithm::FedSgd | Algorithm::Mezo => {
                 panic!("step_with_plan drives the synchronized seed-based algorithms only")
             }
@@ -763,13 +1062,23 @@ impl Session {
     /// the round deadline are excluded here, before they probe, and
     /// resync later through the catch-up machinery.
     fn plan_round(&mut self, t: u64) -> RoundPlan {
-        let mut participants =
-            self.cfg.participation.sample(self.clients.len(), t, &mut self.part_rng);
-        if self.net.is_active() {
-            let (up, down) = self.round_payload_bits(participants.len());
-            participants = self.net.admit(t, participants, up, down);
+        plan_round_with(self.lookahead(t))
+    }
+
+    /// Bundle the plan-phase state for round `t` — the synchronous
+    /// [`Session::plan_round`] and the sharded engine's event-driven
+    /// lookahead both plan through this, so there is one planner.
+    fn lookahead(&mut self, t: u64) -> Lookahead<'_> {
+        Lookahead {
+            round: t,
+            k: self.clients.len(),
+            participation: self.cfg.participation,
+            algorithm: self.cfg.algorithm,
+            pool_index_bits: self.pool.as_ref().map(SeedPool::index_bits),
+            d: self.replicas.d(),
+            part_rng: &mut self.part_rng,
+            net: &mut self.net,
         }
-        RoundPlan { round: t, participants }
     }
 
     /// Paper-accounting payload bits one participant moves in a round
@@ -784,19 +1093,12 @@ impl Session {
     /// distinction).  Reads the parameter count from the replica plane,
     /// so it is well-defined for any pool the store accepts.
     fn round_payload_bits(&self, participants: usize) -> (u64, u64) {
-        let d = self.replicas.d() as u64;
-        match self.cfg.algorithm {
-            // restricted seed space: the downlink names the round's
-            // direction by index, so the broadcast is (index, sign) =
-            // ceil(log2 K) + 1 bits instead of the implicit-schedule 1
-            Algorithm::FeedSign | Algorithm::DpFeedSign { .. } => match &self.pool {
-                Some(p) => (1, 1 + p.index_bits() as u64),
-                None => (1, 1),
-            },
-            Algorithm::ZoFedSgd => (64, 64 * participants.max(1) as u64),
-            Algorithm::FedSgd => (32 * d, 32 * d),
-            Algorithm::Mezo => (0, 0),
-        }
+        payload_bits_for(
+            self.cfg.algorithm,
+            self.pool.as_ref().map(SeedPool::index_bits),
+            self.replicas.d(),
+            participants,
+        )
     }
 
     /// Execute-phase cost model for the size-aware fan-out: a
@@ -908,7 +1210,8 @@ impl Session {
         let ids: Vec<usize> = (0..self.clients.len()).collect();
         let to = self.history.head_round();
         self.catch_up_clients(&ids, to);
-        self.history.compact_to(self.replicas.tracker().watermark());
+        let wm = self.compaction_watermark();
+        self.history.compact_to(wm);
     }
 
     /// Commit-phase history bookkeeping: append this round's records and
@@ -918,7 +1221,8 @@ impl Session {
             return;
         }
         self.history.commit_round(round, records);
-        self.history.compact_to(self.replicas.tracker().watermark());
+        let wm = self.compaction_watermark();
+        self.history.compact_to(wm);
     }
 
     /// Worker count for a fan-out over `jobs` independent units.
@@ -931,11 +1235,47 @@ impl Session {
         t.min(jobs.max(1))
     }
 
+    /// Hierarchical vote merge (sharded mode): each shard that had
+    /// planned participants ships its pre-reduced [`VoteAcc`] to the
+    /// global merger as one [`Message::ShardVotes`] — metered into the
+    /// plane's own merge ledger, **never** the client-facing
+    /// [`Session::ledger`] (the conservation invariant the shard fuzz
+    /// suite asserts) — and the merger folds the accumulators.  A shard
+    /// whose planned votes were all lost in transit still reports its
+    /// `(0, 0)` pair: the merger needs one message per planned shard to
+    /// close the round.  Returns `None` on the unsharded path.
+    fn merge_shard_votes(
+        &mut self,
+        plan: &RoundPlan,
+        tally: &[VoteAcc],
+        dense_pairs: bool,
+    ) -> Option<VoteAcc> {
+        let plane = self.shard_plane.as_mut()?;
+        let mut total = VoteAcc::default();
+        for (s, acc) in tally.iter().enumerate() {
+            let r = plane.map().range(s);
+            let lo = plan.participants.partition_point(|&id| id < r.start);
+            let planned = lo < plan.participants.len() && plan.participants[lo] < r.end;
+            if !planned {
+                continue;
+            }
+            let msg = Message::ShardVotes {
+                sum: acc.sum,
+                voters: acc.voters,
+                shard_size: r.len(),
+                dense_pairs,
+            };
+            plane.record_merge(&msg);
+            total.merge(*acc);
+        }
+        Some(total)
+    }
+
     /// FeedSign (Algorithm 1, FeedSign branch): shared seed = t, 1-bit
     /// votes up, 1-bit majority (or DP vote) down, synchronized update —
     /// applied **once** to the canonical buffer (the replica plane's
     /// whole point: the dense layout applied the same AXPY K times).
-    fn step_feedsign(&mut self, plan: RoundPlan, dp_epsilon: Option<f32>) {
+    fn step_feedsign(&mut self, plan: RoundPlan, dp_epsilon: Option<f32>, allow_lookahead: bool) {
         let t = plan.round;
         // catch-up: stale participants replay their missed span *before*
         // probing, so every vote is cast on the current model
@@ -973,31 +1313,74 @@ impl Session {
         let (mu, bs, c_g) = (self.cfg.mu, self.cfg.batch_size, self.cfg.c_g_noise);
         let pin_serial = self.cfg.threads == 1;
         let costs = self.probe_costs(&plan.participants);
+        let pool_size = self.clients.len();
+        let d = self.replicas.d();
+        let pool_index_bits = self.pool.as_ref().map(SeedPool::index_bits);
         let train = &self.train;
         // execute: fan the probes out; each worker meters its own uplink
         // and serves its clients through grouped batched probes (the
         // whole worker shares seed = t, so one +mu/-mu view pair serves
         // every client it owns)
-        let (outcomes, probe_stats) = execute_probes(
-            &mut self.clients,
-            &self.replicas,
-            &plan,
-            &costs,
-            threads,
-            pin_serial,
-            mu,
-            |c, _ledger| (c.shard.next_batch(train, bs, &mut c.rng), seed),
-            |c, _seed, p, ledger| {
-                let mut p = p;
-                if c_g > 0.0 {
-                    p *= 1.0 + c_g * c.rng.normal();
+        let spec =
+            |c: &mut Client, _ledger: &mut Ledger| (c.shard.next_batch(train, bs, &mut c.rng), seed);
+        let finish = |c: &mut Client, _seed: u32, p: f32, ledger: &mut Ledger| {
+            let mut p = p;
+            if c_g > 0.0 {
+                p *= 1.0 + c_g * c.rng.normal();
+            }
+            let honest = if p >= 0.0 { 1i8 } else { -1 };
+            let sign = c.attack.mutate_sign(honest, &mut c.rng);
+            ledger.record(&Message::SignVote { sign });
+            Contribution::Sign(sign)
+        };
+        let (outcomes, probe_stats) = match &mut self.shard_plane {
+            Some(plane) => {
+                let la = (allow_lookahead
+                    && t + 1 < self.cfg.rounds
+                    && self.pending_plan.is_none())
+                .then(|| Lookahead {
+                    round: t + 1,
+                    k: pool_size,
+                    participation: self.cfg.participation,
+                    algorithm: self.cfg.algorithm,
+                    pool_index_bits,
+                    d,
+                    part_rng: &mut self.part_rng,
+                    net: &mut self.net,
+                });
+                let (o, st, next) = execute_sharded(
+                    &mut self.clients,
+                    &self.replicas,
+                    plane,
+                    &plan,
+                    &costs,
+                    threads,
+                    pin_serial,
+                    mu,
+                    spec,
+                    finish,
+                    la,
+                );
+                if next.is_some() {
+                    // a consumed RNG draw must never be dropped: only the
+                    // lookahead that actually planned writes the slot
+                    self.pending_plan = next;
                 }
-                let honest = if p >= 0.0 { 1i8 } else { -1 };
-                let sign = c.attack.mutate_sign(honest, &mut c.rng);
-                ledger.record(&Message::SignVote { sign });
-                Contribution::Sign(sign)
-            },
-        );
+                (o, st)
+            }
+            None => execute_probes(
+                &mut self.clients,
+                &self.replicas,
+                &plan,
+                &costs,
+                threads,
+                pin_serial,
+                mu,
+                spec,
+                finish,
+                0,
+            ),
+        };
         self.probe_stats.merge(&probe_stats);
         // commit: votes and sub-ledgers in client-id order; each vote
         // then crosses the (possibly impaired) uplink — a flip lands in
@@ -1006,6 +1389,11 @@ impl Session {
         let mut signs = Vec::with_capacity(outcomes.len());
         let mut voters = Vec::with_capacity(outcomes.len());
         let mut subs = Vec::with_capacity(outcomes.len());
+        let mut tally: Vec<VoteAcc> = self
+            .shard_plane
+            .as_ref()
+            .map(|p| vec![VoteAcc::default(); p.map().shards()])
+            .unwrap_or_default();
         for (o, &id) in outcomes.into_iter().zip(&plan.participants) {
             debug_assert_eq!(o.client, id, "commit order must be client-id order");
             let Contribution::Sign(s) = o.contribution else {
@@ -1013,11 +1401,18 @@ impl Session {
             };
             subs.push(o.ledger);
             if let Some(s) = self.net.deliver_sign(t, id, s) {
+                if let Some(p) = &self.shard_plane {
+                    tally[p.map().shard_of(id)].push(s);
+                }
                 signs.push(s);
                 voters.push(id);
             }
         }
         self.ledger.commit(subs);
+        // sharded mode: fold the per-shard edge aggregations into the
+        // global accumulator (exact — sign votes are associative integer
+        // sums) and meter one ShardVotes pair per planned shard
+        let merged = self.merge_shard_votes(&plan, &tally, false);
         if signs.is_empty() {
             // every vote was lost in transit: the round aborts to a no-op
             // commit, exactly like a zero-participant plan
@@ -1026,9 +1421,20 @@ impl Session {
             self.commit_history(t, Vec::new());
             return;
         }
-        let f = match dp_epsilon {
-            None => aggregation::majority_sign(&signs),
-            Some(eps) => aggregation::dp_vote(&signs, eps, &mut self.dp_rng),
+        // only the final majority / DP threshold is global: the sharded
+        // path thresholds the merged (sum, voters) pair through the exact
+        // same expressions the flat path applies to the vote vector
+        // (`majority_sign` / `dp_vote` delegate to these forms)
+        let f = match (merged, dp_epsilon) {
+            (Some(acc), None) => {
+                debug_assert_eq!(acc.voters, signs.len());
+                aggregation::majority_from_sum(acc.sum)
+            }
+            (Some(acc), Some(eps)) => {
+                aggregation::dp_vote_counts(acc.q_plus(), acc.voters, eps, &mut self.dp_rng)
+            }
+            (None, None) => aggregation::majority_sign(&signs),
+            (None, Some(eps)) => aggregation::dp_vote(&signs, eps, &mut self.dp_rng),
         };
         let step = f as f32 * self.cfg.eta;
         let msg = Message::GlobalSign { sign: f };
@@ -1037,7 +1443,6 @@ impl Session {
         // each billed client's downlink prices at index_bits + 1
         let idx_msg = pool_idx
             .map(|(index, index_bits)| Message::PoolIndex { round: t, index, index_bits });
-        let pool_size = self.clients.len();
         // one canonical AXPY commits the round for the whole pool; with
         // an explicit sequential baseline the inner chunk-parallel noise
         // walk is pinned to one thread (same bits either way)
@@ -1088,7 +1493,7 @@ impl Session {
     /// ZO-FedSGD (FwdLLM/FedKSeed-style): each participant samples its own
     /// seed, uploads a 64-bit seed-projection pair; everyone downloads all
     /// pairs and the mean update commits once to the canonical buffer.
-    fn step_zo_fedsgd(&mut self, plan: RoundPlan) {
+    fn step_zo_fedsgd(&mut self, plan: RoundPlan, allow_lookahead: bool) {
         let t = plan.round;
         if self.cfg.catchup.is_on() {
             let ids = plan.participants.clone();
@@ -1104,33 +1509,72 @@ impl Session {
         let (mu, bs, c_g) = (self.cfg.mu, self.cfg.batch_size, self.cfg.c_g_noise);
         let pin_serial = self.cfg.threads == 1;
         let costs = self.probe_costs(&plan.participants);
+        let pool_size = self.clients.len();
+        let d = self.replicas.d();
         let train = &self.train;
         // execute: every client draws its private direction seed first
         // (same per-client RNG order as the unbatched loop), then the
         // worker serves the distinct-seed probes in blocked multi-view
         // passes over the shared buffer
-        let (outcomes, probe_stats) = execute_probes(
-            &mut self.clients,
-            &self.replicas,
-            &plan,
-            &costs,
-            threads,
-            pin_serial,
-            mu,
-            |c, _ledger| {
-                let seed = c.rng.next_u32() & 0x7FFF_FFFF; // direction counters < 2^31
-                (c.shard.next_batch(train, bs, &mut c.rng), seed)
-            },
-            |c, seed, p, ledger| {
-                let mut p = p;
-                if c_g > 0.0 {
-                    p *= 1.0 + c_g * c.rng.normal();
+        let spec = |c: &mut Client, _ledger: &mut Ledger| {
+            let seed = c.rng.next_u32() & 0x7FFF_FFFF; // direction counters < 2^31
+            (c.shard.next_batch(train, bs, &mut c.rng), seed)
+        };
+        let finish = |c: &mut Client, seed: u32, p: f32, ledger: &mut Ledger| {
+            let mut p = p;
+            if c_g > 0.0 {
+                p *= 1.0 + c_g * c.rng.normal();
+            }
+            let p = c.attack.mutate_projection(p, &mut c.rng);
+            ledger.record(&Message::Projection { seed, p });
+            Contribution::Pair { seed, p }
+        };
+        let (outcomes, probe_stats) = match &mut self.shard_plane {
+            Some(plane) => {
+                let la = (allow_lookahead
+                    && t + 1 < self.cfg.rounds
+                    && self.pending_plan.is_none())
+                .then(|| Lookahead {
+                    round: t + 1,
+                    k: pool_size,
+                    participation: self.cfg.participation,
+                    algorithm: self.cfg.algorithm,
+                    pool_index_bits: None,
+                    d,
+                    part_rng: &mut self.part_rng,
+                    net: &mut self.net,
+                });
+                let (o, st, next) = execute_sharded(
+                    &mut self.clients,
+                    &self.replicas,
+                    plane,
+                    &plan,
+                    &costs,
+                    threads,
+                    pin_serial,
+                    mu,
+                    spec,
+                    finish,
+                    la,
+                );
+                if next.is_some() {
+                    self.pending_plan = next;
                 }
-                let p = c.attack.mutate_projection(p, &mut c.rng);
-                ledger.record(&Message::Projection { seed, p });
-                Contribution::Pair { seed, p }
-            },
-        );
+                (o, st)
+            }
+            None => execute_probes(
+                &mut self.clients,
+                &self.replicas,
+                &plan,
+                &costs,
+                threads,
+                pin_serial,
+                mu,
+                spec,
+                finish,
+                0,
+            ),
+        };
         self.probe_stats.merge(&probe_stats);
         // commit in client-id order; each 64-bit pair crosses the uplink
         // (flipped seed bits pick a different-but-valid direction,
@@ -1139,6 +1583,11 @@ impl Session {
         let mut pairs = Vec::with_capacity(outcomes.len());
         let mut voters = Vec::with_capacity(outcomes.len());
         let mut subs = Vec::with_capacity(outcomes.len());
+        let mut tally: Vec<VoteAcc> = self
+            .shard_plane
+            .as_ref()
+            .map(|p| vec![VoteAcc::default(); p.map().shards()])
+            .unwrap_or_default();
         for (o, &id) in outcomes.into_iter().zip(&plan.participants) {
             debug_assert_eq!(o.client, id, "commit order must be client-id order");
             let Contribution::Pair { seed, p } = o.contribution else {
@@ -1146,11 +1595,22 @@ impl Session {
             };
             subs.push(o.ledger);
             if let Some((seed, p)) = self.net.deliver_pair(t, id, seed, p) {
+                if let Some(pl) = &self.shard_plane {
+                    // pair bundles have no sign sum — the shard merger
+                    // forwards the dense 64-bit pairs, so only the
+                    // delivered count matters for the merge pricing
+                    tally[pl.map().shard_of(id)].voters += 1;
+                }
                 pairs.push((seed, p));
                 voters.push(id);
             }
         }
         self.ledger.commit(subs);
+        // sharded mode: one dense_pairs ShardVotes per planned shard —
+        // the shard -> merger hop carries the shard's delivered pair
+        // bundle; concatenation in shard order *is* client-id order, so
+        // the mean aggregation below is byte-for-byte the flat engine's
+        let _ = self.merge_shard_votes(&plan, &tally, true);
         if pairs.is_empty() {
             // every pair was lost in transit: no-op round
             self.orbit.push_pairs(Vec::new());
@@ -1768,8 +2228,13 @@ mod tests {
     fn probe_batching_reduces_canonical_passes() {
         // FeedSign: every participant shares seed = t, so a sequential
         // worker serves all K clients from ONE canonical pass per round
-        // (the unbatched engine paid two per probe)
+        // (the unbatched engine paid two per probe).  Pinned unsharded:
+        // a sharded run batch-groups per shard (N passes per round), so
+        // the exact pass counts below assume one global group — the
+        // FEEDSIGN_SHARDS env leg must not reroute this test.
         let mut s = make_session(Algorithm::FeedSign, 5, 0);
+        s.cfg.shards = 0;
+        s.shard_plane = None;
         s.cfg.threads = 1;
         for t in 0..20 {
             s.step(t);
@@ -1782,6 +2247,8 @@ mod tests {
         // ZO-FedSGD: distinct per-client seeds still pack several ±mu
         // view pairs into each blocked pass over the shared buffer
         let mut z = make_session(Algorithm::ZoFedSgd, 5, 0);
+        z.cfg.shards = 0;
+        z.shard_plane = None;
         z.cfg.threads = 1;
         for t in 0..10 {
             z.step(t);
@@ -2005,5 +2472,106 @@ mod tests {
     #[should_panic(expected = "requires seed_pool mode")]
     fn pool_catchup_without_a_pool_is_rejected() {
         let _ = make_pool_session(3, 0, CatchupCfg::PoolScalars, 0);
+    }
+
+    /// Sharded builder with the shard count pinned at construction —
+    /// env-proof (the FEEDSIGN_SHARDS leg must not change what these
+    /// tests compare), and explicit `shards: 0` pins the unsharded
+    /// baseline the same way.
+    fn make_sharded(algo: Algorithm, k: usize, rounds: u64, shards: usize) -> Session {
+        let train = generate(&SYNTH_CIFAR10, 400, 0);
+        let test = generate(&SYNTH_CIFAR10, 200, 1);
+        let data_shards = split(&train, k, Partition::Iid, 0);
+        let clients: Vec<Client> = data_shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| {
+                Client::new(id, Box::new(NativeEngine::new(LinearProbe::new(128, 10))), shard, 7)
+            })
+            .collect();
+        let cfg = SessionCfg {
+            algorithm: algo,
+            rounds,
+            eta: 2e-3,
+            mu: 1e-3,
+            batch_size: 16,
+            eval_every: 0,
+            participation: ParticipationCfg::Fraction(0.6),
+            shards,
+            seed: 7,
+            ..Default::default()
+        };
+        Session::new(cfg, clients, train, test)
+    }
+
+    #[test]
+    fn sharded_run_is_bit_identical_to_unsharded() {
+        // the heavy matrix lives in rust/tests/shard_parity.rs; this is
+        // the engine-local smoke over sequenced partial participation
+        let mut base = make_sharded(Algorithm::FeedSign, 7, 40, 0);
+        let flat = base.run();
+        let flat_w = base.replica(0).into_owned();
+        for n in [1usize, 3] {
+            let mut s = make_sharded(Algorithm::FeedSign, 7, 40, n);
+            let r = s.run();
+            assert_eq!(&*s.replica(0), flat_w.as_slice(), "shards = {n}");
+            assert_eq!(r.ledger.uplink_bits, flat.ledger.uplink_bits, "shards = {n}");
+            assert_eq!(r.ledger.downlink_bits, flat.ledger.downlink_bits, "shards = {n}");
+            assert_eq!(r.final_loss.to_bits(), flat.final_loss.to_bits(), "shards = {n}");
+            assert_eq!(r.shard.shards, n.min(7));
+        }
+    }
+
+    #[test]
+    fn sharded_merge_traffic_is_coordinator_internal_and_overlap_counts() {
+        let mut s = make_sharded(Algorithm::FeedSign, 6, 10, 2);
+        s.cfg.participation = ParticipationCfg::Full;
+        let r = s.run();
+        // every round plans participants in both shards -> 2 merges/round,
+        // each priced at the pair's information content (nonzero voters)
+        assert_eq!(r.shard.shards, 2);
+        assert_eq!(r.shard.merges, 2 * 10);
+        assert!(r.shard.merge_bits > 0);
+        // event-driven overlap: every round but the last plans t+1 while
+        // the straggler shard drains — thread-count-invariantly
+        assert_eq!(r.shard.rounds_overlapped, 9);
+        // the client-facing ledger carries exactly the flat accounting:
+        // merge traffic is a coordinator-internal hop, never client bits
+        assert_eq!(r.ledger.uplink_bits, 10 * 6);
+        assert_eq!(r.ledger.downlink_bits, 10 * 6);
+    }
+
+    #[test]
+    fn sharded_lookahead_consumes_the_same_draw_stream() {
+        // manual in-order stepping (no run loop): pending plans are drawn
+        // ahead and consumed; the participation stream matches the flat
+        // engine draw for draw
+        let mut flat = make_sharded(Algorithm::FeedSign, 7, 30, 0);
+        let mut sharded = make_sharded(Algorithm::FeedSign, 7, 30, 3);
+        for t in 0..30 {
+            flat.step(t);
+            sharded.step(t);
+        }
+        assert_eq!(flat.replica(0), sharded.replica(0));
+        assert_eq!(flat.ledger.uplink_bits, sharded.ledger.uplink_bits);
+        assert!(sharded.shard_stats().rounds_overlapped > 0);
+    }
+
+    #[test]
+    fn sharded_dp_vote_consumes_one_draw_via_the_counts_form() {
+        let flat = make_sharded(Algorithm::DpFeedSign { epsilon: 3.0 }, 6, 25, 0).run();
+        let sharded = make_sharded(Algorithm::DpFeedSign { epsilon: 3.0 }, 6, 25, 4).run();
+        assert_eq!(flat.final_loss.to_bits(), sharded.final_loss.to_bits());
+        assert_eq!(flat.ledger.uplink_bits, sharded.ledger.uplink_bits);
+    }
+
+    #[test]
+    #[should_panic(expected = "in-order stepping")]
+    fn sharded_lookahead_rejects_out_of_order_steps() {
+        let mut s = make_sharded(Algorithm::FeedSign, 6, 30, 2);
+        s.cfg.participation = ParticipationCfg::Full;
+        s.step(0); // plans round 1 ahead
+        assert!(s.pending_plan.is_some());
+        s.step(2); // skips the pending round
     }
 }

@@ -1,0 +1,430 @@
+//! Sharded coordinator plane: scale the round loop past one barriered
+//! client pool (ROADMAP item 1, the K ≥ 100 000 regime).
+//!
+//! FeedSign's aggregation is a sum of ±1 votes, and integer sums are
+//! associative — so the client pool can be partitioned across N
+//! coordinator shards that each own their clients' probe fan-out and a
+//! local vote accumulator, ship one pre-reduced
+//! [`Message::ShardVotes`]`(sum, voters)` pair to the global merger per
+//! round, and remain **exact**: only the final majority / DP threshold is
+//! global ([`crate::coordinator::aggregation::majority_from_sum`] /
+//! `dp_vote_counts`).  The shards share the one canonical parameter
+//! buffer read-only (the replica plane is already copy-on-write), so
+//! sharding multiplies probe throughput without multiplying memory.
+//!
+//! Three invariants keep a sharded run **bit-identical** to the
+//! barriered engine, whatever N:
+//!
+//! * **Global draw, shard partition.**  Participation draws are
+//!   *sequenced* on one session RNG, so the round's participant set is
+//!   sampled once globally and then split along the [`ShardMap`]'s
+//!   contiguous id ranges — a per-shard sampler would consume different
+//!   draw streams at different N.  Channel impairment draws need no such
+//!   care: they are *keyed* `(channel_seed, round, client, direction)`
+//!   ([`crate::net`]), hence shard-count-invariant by construction.
+//! * **Merge order = shard order = id order.**  Shards cover contiguous
+//!   ascending id ranges, so concatenating per-shard results in shard
+//!   order reproduces the flat engine's client-id commit order exactly
+//!   (f32 accumulation is order-sensitive; vote sums are not, but ZO
+//!   pair lists and ledger sub-commits are ordered).
+//! * **Compaction watermark = min across shards.**  Each shard tracks
+//!   its own slowest client
+//!   ([`crate::coordinator::CatchupTracker::watermark_over`]); the
+//!   [`crate::comm::SeedHistory`] compaction floor must fold the **min
+//!   across all shards** ([`ShardPlane::compaction_watermark`]).  Any
+//!   single shard's local watermark — however "slow" that shard looks —
+//!   would let compaction drop records a straggler in *another* shard
+//!   still needs (pinned by
+//!   `single_shard_watermark_compaction_loses_records_min_across_shards_keeps_them`).
+//!
+//! The round loop goes *event-driven* on top of this: a shard that
+//! finishes its probe fan-out early signals the planner, which — while
+//! straggler shards are still draining — draws round `t+1`'s participant
+//! set and channel admission against the engine's watermarks
+//! ([`ShardPlane::note_overlap`] counts these overlapped plans).  Commit
+//! ordering is still enforced by the existing `CatchupTracker` / replica
+//! watermarks, which is why overlapping planning with execution cannot
+//! change a single bit (lookahead only moves *sequenced* draws earlier in
+//! wall-clock, never earlier in draw order).
+
+use crate::comm::{Ledger, Message};
+use crate::coordinator::catchup::CatchupTracker;
+
+/// Contiguous, balanced partition of client ids `0..k` into `n` shards.
+///
+/// Shard sizes differ by at most one (the first `k % n` shards take the
+/// extra client), and ranges ascend with the shard index — the property
+/// the merge-order invariant rides on.  `n` is clamped to `1..=k`, so a
+/// `--shards 7` request over a 3-client pool degrades to 3 singleton
+/// shards instead of manufacturing empty ones.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMap {
+    bounds: Vec<usize>,
+}
+
+impl ShardMap {
+    pub fn new(k: usize, n: usize) -> ShardMap {
+        assert!(k > 0, "cannot shard an empty client pool");
+        let n = n.clamp(1, k);
+        let (base, extra) = (k / n, k % n);
+        let mut bounds = Vec::with_capacity(n + 1);
+        let mut at = 0usize;
+        bounds.push(0);
+        for s in 0..n {
+            at += base + usize::from(s < extra);
+            bounds.push(at);
+        }
+        debug_assert_eq!(at, k);
+        ShardMap { bounds }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Total clients covered.
+    pub fn clients(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Client-id range owned by shard `s`.
+    pub fn range(&self, s: usize) -> std::ops::Range<usize> {
+        self.bounds[s]..self.bounds[s + 1]
+    }
+
+    /// The shard owning client `id`.
+    pub fn shard_of(&self, id: usize) -> usize {
+        debug_assert!(id < self.clients());
+        self.bounds.partition_point(|&b| b <= id) - 1
+    }
+
+    /// Split a sorted participant list along shard boundaries.  Returns
+    /// one (possibly empty) slice per shard; concatenated in shard order
+    /// they reproduce the input exactly — the global draw is partitioned,
+    /// never re-drawn.
+    pub fn split_participants<'a>(&self, participants: &'a [usize]) -> Vec<&'a [usize]> {
+        debug_assert!(participants.windows(2).all(|w| w[0] < w[1]), "participants must be sorted");
+        (0..self.shards())
+            .map(|s| {
+                let r = self.range(s);
+                let lo = participants.partition_point(|&id| id < r.start);
+                let hi = participants.partition_point(|&id| id < r.end);
+                &participants[lo..hi]
+            })
+            .collect()
+    }
+}
+
+/// One shard's per-round sign-vote accumulator: the associative
+/// `(sum, voters)` reduction that crosses the shard -> merger hop instead
+/// of the individual votes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VoteAcc {
+    pub sum: i32,
+    pub voters: usize,
+}
+
+impl VoteAcc {
+    pub fn push(&mut self, sign: i8) {
+        self.sum += sign as i32;
+        self.voters += 1;
+    }
+
+    /// Fold another accumulator in (merger side).
+    pub fn merge(&mut self, other: VoteAcc) {
+        self.sum += other.sum;
+        self.voters += other.voters;
+    }
+
+    /// `q_+` reconstructed from the reduction — exact, because
+    /// `sum = q_+ - q_-` and `voters = q_+ + q_-`.
+    pub fn q_plus(&self) -> usize {
+        debug_assert!(self.sum.unsigned_abs() as usize <= self.voters);
+        ((self.sum + self.voters as i32) / 2) as usize
+    }
+}
+
+/// Headline counters for the sharded plane, surfaced in
+/// [`crate::metrics::RunResult`] and the CLI run summary.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardStats {
+    /// Shard count the run executed with (0 = unsharded legacy path).
+    pub shards: usize,
+    /// Hierarchical merge messages (one [`Message::ShardVotes`] per shard
+    /// with planned participants per round).
+    pub merges: u64,
+    /// Bits those merges carried.  Coordinator-internal: the client-facing
+    /// ledger is byte-identical to the unsharded run's (the conservation
+    /// invariant the shard fuzz suite asserts).
+    pub merge_bits: u64,
+    /// Rounds whose `t+1` plan was drawn while at least one straggler
+    /// shard was still executing round `t` (the event-driven overlap).
+    pub rounds_overlapped: u64,
+}
+
+/// The session-side sharded coordinator plane: the partition, the merge
+/// ledger, and the overlap bookkeeping.
+#[derive(Debug, Clone)]
+pub struct ShardPlane {
+    map: ShardMap,
+    merge_ledger: Ledger,
+    rounds_overlapped: u64,
+}
+
+impl ShardPlane {
+    pub fn new(k: usize, n: usize) -> ShardPlane {
+        ShardPlane { map: ShardMap::new(k, n), merge_ledger: Ledger::default(), rounds_overlapped: 0 }
+    }
+
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    /// Meter one shard -> merger message into the (coordinator-internal)
+    /// merge ledger.
+    pub fn record_merge(&mut self, msg: &Message) {
+        debug_assert!(matches!(msg, Message::ShardVotes { .. }));
+        self.merge_ledger.record(msg);
+    }
+
+    /// A shard finished executing while stragglers were still draining
+    /// and the planner drew the next round's plan against the watermarks.
+    pub fn note_overlap(&mut self) {
+        self.rounds_overlapped += 1;
+    }
+
+    /// The [`crate::comm::SeedHistory`] compaction floor: the **min
+    /// across shards** of the shard-local watermarks.  Associativity of
+    /// min makes this equal to the flat tracker's global watermark — the
+    /// point is that it is computed hierarchically, the only form a
+    /// physically sharded deployment has, and that no single shard's
+    /// local watermark is ever used alone (the regression the shard test
+    /// suite pins).
+    pub fn compaction_watermark(&self, tracker: &CatchupTracker) -> u64 {
+        (0..self.map.shards())
+            .map(|s| tracker.watermark_over(self.map.range(s)))
+            .min()
+            .unwrap_or(0)
+    }
+
+    pub fn stats(&self) -> ShardStats {
+        ShardStats {
+            shards: self.map.shards(),
+            merges: self.merge_ledger.uplink_msgs,
+            merge_bits: self.merge_ledger.uplink_bits,
+            rounds_overlapped: self.rounds_overlapped,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{SeedHistory, SeedPool, SeedRecord};
+
+    #[test]
+    fn shard_map_is_contiguous_balanced_and_exhaustive() {
+        for k in [1usize, 2, 3, 7, 100, 1013] {
+            for n in [1usize, 2, 4, 7, 64] {
+                let m = ShardMap::new(k, n);
+                assert_eq!(m.shards(), n.min(k));
+                assert_eq!(m.clients(), k);
+                let mut seen = 0usize;
+                let mut sizes = Vec::new();
+                for s in 0..m.shards() {
+                    let r = m.range(s);
+                    assert_eq!(r.start, seen, "ranges must be contiguous and ascending");
+                    assert!(!r.is_empty(), "clamping must prevent empty shards");
+                    for id in r.clone() {
+                        assert_eq!(m.shard_of(id), s);
+                    }
+                    sizes.push(r.len());
+                    seen = r.end;
+                }
+                assert_eq!(seen, k, "every client owned exactly once");
+                let (lo, hi) =
+                    (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(hi - lo <= 1, "balanced to within one client ({sizes:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn split_participants_partitions_the_global_draw() {
+        let m = ShardMap::new(10, 4); // ranges 0..3, 3..6, 6..8, 8..10
+        let parts = vec![0usize, 2, 3, 7, 9];
+        let split = m.split_participants(&parts);
+        assert_eq!(split.len(), 4);
+        assert_eq!(split[0], &[0, 2]);
+        assert_eq!(split[1], &[3]);
+        assert_eq!(split[2], &[7]);
+        assert_eq!(split[3], &[9]);
+        // concatenation in shard order reproduces the draw exactly
+        let rejoined: Vec<usize> = split.iter().flat_map(|s| s.iter().copied()).collect();
+        assert_eq!(rejoined, parts);
+        // empty shards yield empty slices, not omissions
+        let none: Vec<usize> = vec![4];
+        let split = m.split_participants(&none);
+        assert_eq!(split.iter().map(|s| s.len()).sum::<usize>(), 1);
+        assert_eq!(split[1], &[4]);
+    }
+
+    #[test]
+    fn vote_acc_reduction_is_exact_and_associative() {
+        // any split of any vote vector: merging shard accumulators must
+        // reproduce the flat (sum, voters, q_plus) triple
+        let votes: Vec<i8> = (0..23).map(|i| if i % 3 == 0 { -1 } else { 1 }).collect();
+        let mut flat = VoteAcc::default();
+        votes.iter().for_each(|&s| flat.push(s));
+        for cut in 0..=votes.len() {
+            let (a_votes, b_votes) = votes.split_at(cut);
+            let mut a = VoteAcc::default();
+            a_votes.iter().for_each(|&s| a.push(s));
+            let mut b = VoteAcc::default();
+            b_votes.iter().for_each(|&s| b.push(s));
+            a.merge(b);
+            assert_eq!(a.sum, flat.sum);
+            assert_eq!(a.voters, flat.voters);
+            assert_eq!(a.q_plus(), flat.q_plus());
+        }
+        assert_eq!(flat.q_plus(), votes.iter().filter(|&&s| s > 0).count());
+    }
+
+    #[test]
+    fn merge_ledger_meters_shard_votes_separately() {
+        let mut p = ShardPlane::new(100, 4);
+        p.record_merge(&Message::ShardVotes { sum: 3, voters: 20, shard_size: 25, dense_pairs: false });
+        p.record_merge(&Message::ShardVotes { sum: -5, voters: 25, shard_size: 25, dense_pairs: false });
+        let s = p.stats();
+        assert_eq!(s.shards, 4);
+        assert_eq!(s.merges, 2);
+        // 20 voters: sum in [-20,20] -> ceil(log2 41) = 6, count in
+        // [0,25] -> ceil(log2 26) = 5; 25 voters: 6 + 5
+        assert_eq!(s.merge_bits, (6 + 5) + (6 + 5));
+        assert_eq!(s.rounds_overlapped, 0);
+        p.note_overlap();
+        assert_eq!(p.stats().rounds_overlapped, 1);
+    }
+
+    #[test]
+    fn compaction_watermark_folds_min_across_shards() {
+        let plane = ShardPlane::new(9, 3);
+        let mut t = CatchupTracker::new(9);
+        for id in 0..9 {
+            t.mark_synced(id, 10 + id as u64);
+        }
+        // shard floors: 10, 13, 16 — the fold takes the min
+        assert_eq!(plane.compaction_watermark(&t), 10);
+        assert_eq!(plane.compaction_watermark(&t), t.watermark());
+        // drag one client in the *last* shard down: the fold must follow
+        let mut t2 = CatchupTracker::new(9);
+        t2.mark_synced(8, 0); // no-op, but explicit
+        for id in 0..8 {
+            t2.mark_synced(id, 50);
+        }
+        assert_eq!(plane.compaction_watermark(&t2), 0);
+    }
+
+    /// The satellite regression: the compaction floor must be the min
+    /// across *all* shards' local watermarks.  The old single-watermark
+    /// logic — compacting to the watermark of whichever shard drove the
+    /// commit (here shard 0, fully synced) — drops the exact records a
+    /// straggler in another shard still needs, and its rejoin replay dies
+    /// with a refused span.  The min-across-shards fold keeps them.
+    #[test]
+    fn single_shard_watermark_compaction_loses_records_min_across_shards_keeps_them() {
+        let plane = ShardPlane::new(8, 2); // shard 0: ids 0..4, shard 1: ids 4..8
+        let mut tracker = CatchupTracker::new(8);
+        let records = |t: u64| [SeedRecord::sign_step(t, if t % 2 == 0 { 1 } else { -1 }, 1e-3)];
+
+        // 20 rounds; shard 0's clients all stay current, client 6 (shard 1)
+        // went offline after round 3
+        let mut good = SeedHistory::new(2); // tiny ring: compaction is live
+        let mut bad = SeedHistory::new(2);
+        for t in 0..20u64 {
+            for id in 0..8 {
+                if id != 6 || t < 3 {
+                    tracker.mark_synced(id, t + 1);
+                }
+            }
+            good.commit_round(t, records(t));
+            bad.commit_round(t, records(t));
+            // fixed logic: fold the min across both shards' local floors
+            good.compact_to(plane.compaction_watermark(&tracker));
+            // old logic: one shard's watermark stands in for the pool's
+            bad.compact_to(tracker.watermark_over(plane.map().range(0)));
+        }
+        assert_eq!(plane.compaction_watermark(&tracker), 3, "client 6 pins the floor");
+
+        // client 6 rejoins and asks for rounds 3..20
+        let span = tracker.span(6, 20);
+        assert_eq!(span, 3..20);
+        assert!(
+            good.replay_span(span.start, span.end).is_some(),
+            "min-across-shards retains the straggler's records"
+        );
+        assert!(
+            bad.replay_span(span.start, span.end).is_none(),
+            "single-shard watermark compacted the straggler's records away — \
+             the bug the min-across-shards fold fixes"
+        );
+    }
+
+    /// Orbit-v2-era rings hold v1 derivable sign records and v2
+    /// restricted-pool index records side by side.  Sharded compaction
+    /// must treat the eras uniformly: whole rounds drop at the
+    /// min-across-shards floor, and a straggler's replay span comes back
+    /// with both record kinds — and their wire pricing — intact.
+    #[test]
+    fn mixed_v1_v2_records_compact_and_replay_under_sharded_watermarks() {
+        let plane = ShardPlane::new(6, 3); // shards: 0..2, 2..4, 4..6
+        let mut tracker = CatchupTracker::new(6);
+        let mut hist = SeedHistory::new(4); // tiny ring: compaction is live
+        let pool = SeedPool::derive(9, 16); // 4 index bits
+        for t in 0..12u64 {
+            // alternate eras: even rounds commit a v1 sign record, odd
+            // rounds a v2 pool-index record
+            let rec = if t % 2 == 0 {
+                SeedRecord::sign_step(t, 1, 1e-3)
+            } else {
+                let index = (t % 16) as u32;
+                SeedRecord::index_step(t, pool.seed_at(index), index, pool.index_bits(), -1, 1e-3)
+            };
+            hist.commit_round(t, [rec]);
+            // client 5 (last shard) goes offline after round 5
+            for id in 0..6 {
+                if id != 5 || t < 5 {
+                    tracker.mark_synced(id, t + 1);
+                }
+            }
+            hist.compact_to(plane.compaction_watermark(&tracker));
+        }
+        assert_eq!(plane.compaction_watermark(&tracker), 5, "client 5 pins the floor");
+        assert_eq!(hist.tail_round(), 5, "compaction reached the sharded floor, never past it");
+        assert_eq!(hist.records_len(), 7, "rounds 5..12 retained above the soft capacity");
+
+        // the straggler's rejoin span carries both eras, pricing intact:
+        // rounds 5,7,9,11 are 5-bit index records, 6,8,10 are 1-bit signs
+        let span = tracker.span(5, 12);
+        assert_eq!(span, 5..12);
+        let records = hist.replay_span(span.start, span.end).expect("span must be replayable");
+        assert_eq!(records.len(), 7);
+        for r in &records {
+            match r.pool_index {
+                Some((index, bits)) => {
+                    assert_eq!(r.round % 2, 1, "odd rounds committed the v2 era");
+                    assert_eq!(bits, 4);
+                    assert_eq!(r.seed, pool.seed_at(index), "v2 records resolve their pool seed");
+                    assert_eq!(r.payload_bits(), 5);
+                }
+                None => {
+                    assert_eq!(r.round % 2, 0, "even rounds committed the v1 era");
+                    assert!(r.seed_from_round);
+                    assert_eq!(r.payload_bits(), 1);
+                }
+            }
+        }
+        assert_eq!(records.iter().map(SeedRecord::payload_bits).sum::<u64>(), 4 * 5 + 3 * 1);
+    }
+}

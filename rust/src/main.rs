@@ -32,10 +32,12 @@ COMMANDS:
                [--seed-pool K] [--channel ideal|ber:P|drop:P]
                [--link mobile|wifi|iot|mixed]
                [--deadline T] [--channel-seed S] [--replica-cache N]
+               [--shards N]
   quickstart   [--rounds 2000] [--threads N] [--participation SPEC]
                [--catchup SPEC] [--seed-pool K] [--channel SPEC]
                [--link SPEC]
                [--deadline T] [--channel-seed S] [--replica-cache N]
+               [--shards N]
   init-config
   theory       [--eta 1e-3] [--p-max 0.1]
   replay       --input run.orbit --n-params D
@@ -72,8 +74,8 @@ fn main() -> Result<()> {
 
 /// Apply the round-engine CLI overrides (`--threads`, `--participation`,
 /// `--catchup`, `--seed-pool`, `--channel`, `--link`, `--deadline`,
-/// `--channel-seed`, `--replica-cache`) on top of a loaded config,
-/// re-validating afterwards.
+/// `--channel-seed`, `--replica-cache`, `--shards`) on top of a loaded
+/// config, re-validating afterwards.
 fn apply_engine_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     if let Some(t) = args.str("threads") {
         cfg.threads = t.parse().context("parsing --threads")?;
@@ -101,6 +103,9 @@ fn apply_engine_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()>
     }
     if let Some(r) = args.str("replica-cache") {
         cfg.replica_cache = r.parse().context("parsing --replica-cache")?;
+    }
+    if let Some(n) = args.str("shards") {
+        cfg.shards = n.parse().context("parsing --shards")?;
     }
     cfg.validate()
 }
@@ -259,6 +264,16 @@ fn print_result(result: &metrics::RunResult) {
             result.probe.canonical_passes,
             result.probe.unbatched_passes(),
             result.probe.fallback_probes
+        );
+    }
+    if result.shard.shards > 0 {
+        println!(
+            "sharded coordinator: {} shards, {} vote merges ({} bits, \
+             coordinator-internal), {} rounds planned ahead of stragglers",
+            result.shard.shards,
+            result.shard.merges,
+            result.shard.merge_bits,
+            result.shard.rounds_overlapped
         );
     }
     if result.net != feedsign::net::NetStats::default() {

@@ -35,6 +35,12 @@ pub struct RunResult {
     /// canonical-buffer passes actually streamed vs the two-per-probe an
     /// unbatched engine would have paid.
     pub probe: crate::engine::ProbeBatchStats,
+    /// Sharded-coordinator counters ([`crate::coordinator::shard`]):
+    /// shard count, hierarchical vote-merge traffic (coordinator-internal
+    /// — never part of the client-facing [`Ledger`]), and rounds whose
+    /// next plan was drawn while a straggler shard was still executing.
+    /// All zero on the unsharded legacy path.
+    pub shard: crate::coordinator::ShardStats,
 }
 
 impl RunResult {
@@ -136,6 +142,7 @@ mod tests {
             net: Default::default(),
             replica: Default::default(),
             probe: Default::default(),
+            shard: Default::default(),
         }
     }
 

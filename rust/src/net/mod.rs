@@ -30,7 +30,13 @@
 //! the synchronous session and the threaded distributed topology, and
 //! across reruns.  The `ideal` channel takes the exact code paths of a
 //! run without the simulator (zero draws), pinned bit-identical by
-//! `rust/tests/net_parity.rs`.
+//! `rust/tests/net_parity.rs`.  Because the key carries the *client* id
+//! and never a shard id, the trace is also **shard-count-invariant**:
+//! a `--shards N` coordinator ([`crate::coordinator::shard`]) observes
+//! the same flips, drops and straggler cuts for every N (pinned by
+//! `rust/tests/shard_parity.rs`).  Only [`NetSim::admit`]'s virtual
+//! clock accumulates sequentially, which is why admission stays in the
+//! global plan phase rather than moving into the shards.
 //!
 //! Scope note: the coordinator applies channel impairment to the
 //! **uplink** (client → PS), where the protocol's 1-bit votes travel

@@ -574,6 +574,69 @@ mod tests {
     }
 
     #[test]
+    fn packed_index_roundtrips_at_edge_pool_sizes_including_the_one_bit_floor() {
+        // K = 2 exercises the `index_bits_for` 1-bit floor (2 bits/step);
+        // K = 3 the first non-power-of-two (3 bits/step); K = 4096 the
+        // table-scale pool (13 bits/step).  257 steps: odd length, so the
+        // packed stream straddles byte boundaries in every case.
+        for (k, per_bits) in [(2usize, 2usize), (3, 3), (4096, 13)] {
+            assert_eq!(index_bits_for(k) as usize + 1, per_bits);
+            let o = index_orbit(257, 17, k);
+            let bytes = encode(&o);
+            assert_eq!(bytes[4], VERSION_POOL, "K={k}");
+            let header = 4 + 1 + 1 + o.algorithm.len() + 4 + 4 + 4 + 4 + 8 + 1;
+            assert_eq!(
+                bytes.len(),
+                header + (257 * per_bits).div_ceil(8),
+                "K={k} must pack ceil(log2 K)+1 = {per_bits} bits/step"
+            );
+            let back = decode(&bytes).unwrap();
+            assert_eq!(back.entries, o.entries, "K={k}");
+            assert_eq!(back.pool_seed, 17);
+            assert_eq!(back.pool_k, k as u32);
+        }
+    }
+
+    #[test]
+    fn packed_index_roundtrips_at_the_two_power_31_boundary() {
+        // the Philox direction domain is 31-bit, so 2^31 candidates is
+        // the largest meaningful pool; its indices pack at 31 + 1 = 32
+        // bits/step and the top index must survive the bit stream
+        let k = 1usize << 31;
+        assert_eq!(index_bits_for(k), 31);
+        let top = (1u32 << 31) - 1;
+        let mut o = Orbit::new("feedsign", 0, 1e-3);
+        o.set_pool(13, k);
+        for (index, sign) in [(0u32, 1i8), (1, -1), (top - 1, -1), (top, 1)] {
+            o.push_index(index, sign);
+        }
+        let bytes = encode(&o);
+        let header = 4 + 1 + 1 + o.algorithm.len() + 4 + 4 + 4 + 4 + 8 + 1;
+        assert_eq!(bytes.len(), header + 4 * 32 / 8, "4 steps at 32 bits each");
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back.entries, o.entries);
+        assert_eq!(back.pool_k, 1u32 << 31);
+        // a 0-sign no-op at the boundary index has no packed form: the
+        // orbit must fall back to the tagged encoding and still roundtrip
+        o.entries.push(OrbitEntry::IndexSign { index: top, sign: 0 });
+        let tagged = decode(&encode(&o)).unwrap();
+        assert_eq!(tagged.entries, o.entries);
+    }
+
+    #[test]
+    fn decode_rejects_out_of_pool_packed_index() {
+        // mode-2 streams validate indices against the pool bound
+        let o = index_orbit(16, 3, 8);
+        let mut bytes = encode(&o);
+        // pool_k lives right after magic+version+alen+name+seed+eta;
+        // 5 still needs 3 index bits, so the stream parses at the same
+        // width but the orbit's index 7 now lies outside the pool
+        let pool_k_at = 4 + 1 + 1 + o.algorithm.len() + 4 + 4 + 4;
+        bytes[pool_k_at..pool_k_at + 4].copy_from_slice(&5u32.to_le_bytes());
+        assert!(decode(&bytes).is_err(), "indices >= K must be rejected");
+    }
+
+    #[test]
     fn plain_sign_orbits_still_encode_as_version_one() {
         // pool-free orbits must stay byte-identical to the pre-pool format
         let bytes = encode(&sign_orbit(64));

@@ -45,6 +45,7 @@ fn lm_cfg(algorithm: &str, rounds: u64) -> ExperimentConfig {
         channel_seed: 0,
         threads: 0,
         replica_cache: 4,
+        shards: 0,
         pretrain_rounds: 0,
         seed: 1,
         verbose: false,

@@ -295,6 +295,7 @@ fn impaired_cross_topology_parity() {
             net,
             seed: 11,
             seed_pool: 0,
+            shards: 0,
         };
         let res = run_feedsign(dist_clients(4, &train), train, dcfg);
         for (id, w) in res.finals.iter().enumerate() {

@@ -1,11 +1,18 @@
 //! Randomized property tests (proptest_lite harness) over the protocol
 //! invariants the paper's guarantees rest on.
 
-use feedsign::comm::{Ledger, Message};
+use feedsign::comm::{index_bits_for, Ledger, Message};
 use feedsign::coordinator::aggregation::{dp_vote, majority_sign, mean_projection};
+use feedsign::coordinator::catchup::CatchupCfg;
+use feedsign::coordinator::participation::ParticipationCfg;
+use feedsign::coordinator::shard::VoteAcc;
+use feedsign::coordinator::{aggregation, Algorithm, Client, Session, SessionCfg, ShardMap};
 use feedsign::data::partition::{split, Partition};
 use feedsign::data::vision::{generate, SYNTH_CIFAR10};
+use feedsign::engine::NativeEngine;
+use feedsign::net::{ChannelModel, LinkAssignment, NetCfg};
 use feedsign::orbit::{decode, encode, Orbit, OrbitEntry};
+use feedsign::simkit::nn::LinearProbe;
 use feedsign::simkit::ops;
 use feedsign::simkit::prng::{normals_vec, philox4x32, Rng};
 use feedsign::simkit::zo;
@@ -273,6 +280,172 @@ fn prop_matmul_transpose_identities() {
         for i in 0..m * n {
             assert!((c1[i] - c2[i]).abs() < 1e-4);
         }
+    });
+}
+
+#[test]
+fn prop_shard_vote_merge_conserves_counts_and_payload_bits() {
+    // the sharded coordinator's arithmetic contract, fuzzed at the
+    // message level: for ANY pool size, shard count and participant
+    // subset, the hierarchical (sum, voters) merge reconstructs the flat
+    // tally exactly, the majority/DP thresholds agree bit-for-bit with
+    // the flat forms, and every ShardVotes pair prices by the
+    // log2-domain formula
+    check("shard merge conservation", |g: &mut Gen| {
+        let k = g.usize_in(1, 400);
+        let n = g.usize_in(1, 13);
+        let map = ShardMap::new(k, n);
+        assert_eq!(map.shards(), n.min(k));
+        assert_eq!(map.clients(), k);
+        let voters: Vec<usize> = (0..k).filter(|_| g.bool()).collect();
+        let signs = g.signs(voters.len());
+        let mut tally = vec![VoteAcc::default(); map.shards()];
+        for (&id, &s) in voters.iter().zip(&signs) {
+            tally[map.shard_of(id)].push(s);
+        }
+        let mut total = VoteAcc::default();
+        for s in 0..map.shards() {
+            let acc = tally[s];
+            let shard_size = map.range(s).len();
+            assert!(acc.voters <= shard_size, "a shard cannot out-vote its population");
+            let msg = Message::ShardVotes {
+                sum: acc.sum,
+                voters: acc.voters,
+                shard_size,
+                dense_pairs: false,
+            };
+            assert_eq!(
+                msg.payload_bits(),
+                index_bits_for(2 * acc.voters + 1) as u64
+                    + index_bits_for(shard_size + 1) as u64,
+                "sparse pair pricing"
+            );
+            let dense = Message::ShardVotes {
+                sum: acc.sum,
+                voters: acc.voters,
+                shard_size,
+                dense_pairs: true,
+            };
+            assert_eq!(dense.payload_bits(), 64 * acc.voters as u64, "dense pair pricing");
+            total.merge(acc);
+        }
+        // conservation: the merged pair IS the flat tally
+        assert_eq!(total.sum, signs.iter().map(|&s| s as i32).sum::<i32>());
+        assert_eq!(total.voters, signs.len());
+        assert_eq!(aggregation::majority_from_sum(total.sum), majority_sign(&signs));
+        // DP path: counts form consumes the same single uniform draw
+        if !signs.is_empty() {
+            let eps = g.f32_in(0.1, 10.0);
+            let seed = g.u32();
+            let flat = dp_vote(&signs, eps, &mut Rng::new(seed, 7));
+            let sharded =
+                aggregation::dp_vote_counts(total.q_plus(), total.voters, eps, &mut Rng::new(seed, 7));
+            assert_eq!(flat, sharded, "DP exponential mechanism must not see the topology");
+        }
+    });
+}
+
+#[test]
+fn prop_sharded_session_parity_under_random_schedules() {
+    // end-to-end schedule fuzzer: random (algorithm, participation,
+    // channel, deadline, catch-up, seed pool, shard count, thread count)
+    // configurations, each run flat and sharded — replicas, the
+    // client-facing ledger (payload-bit conservation), the impairment
+    // trace and the orbit must all be bit-identical
+    let train = generate(&SYNTH_CIFAR10, 64, 0);
+    let test = generate(&SYNTH_CIFAR10, 32, 1);
+    check("sharded schedule parity", |g: &mut Gen| {
+        let k = g.usize_in(3, 9);
+        let rounds = g.usize_in(4, 11) as u64;
+        let algo = match g.usize_in(0, 3) {
+            0 => Algorithm::FeedSign,
+            1 => Algorithm::DpFeedSign { epsilon: g.f32_in(0.5, 8.0) },
+            _ => Algorithm::ZoFedSgd,
+        };
+        let seed_pool = if matches!(algo, Algorithm::ZoFedSgd) || g.bool() {
+            0
+        } else {
+            g.usize_in(2, 9)
+        };
+        let participation = match g.usize_in(0, 3) {
+            0 => ParticipationCfg::Full,
+            1 => ParticipationCfg::Fraction(g.f32_in(0.3, 0.9)),
+            _ => ParticipationCfg::Bernoulli(g.f32_in(0.4, 0.9)),
+        };
+        let catchup = match g.usize_in(0, 3) {
+            0 => CatchupCfg::Off,
+            1 => CatchupCfg::Replay,
+            _ if seed_pool >= 2 => CatchupCfg::PoolScalars,
+            _ => CatchupCfg::Rebroadcast,
+        };
+        let net = NetCfg {
+            channel: match g.usize_in(0, 3) {
+                0 => ChannelModel::Ideal,
+                1 => ChannelModel::BitFlip { ber: g.f32_in(0.001, 0.1) as f64 },
+                _ => ChannelModel::Erasure { p: g.f32_in(0.01, 0.3) as f64 },
+            },
+            links: LinkAssignment::parse(if g.bool() { "mixed" } else { "mobile" }).unwrap(),
+            deadline_s: if g.bool() { 0.0 } else { g.f32_in(0.05, 0.3) as f64 },
+            channel_seed: g.u32(),
+        };
+        let shards = g.usize_in(1, 6);
+        let threads = g.usize_in(1, 5);
+        let seed = g.u32();
+        let run = |shards: usize, threads: usize| {
+            let data_shards = split(&train, k, Partition::Iid, 0);
+            let clients: Vec<Client> = data_shards
+                .into_iter()
+                .enumerate()
+                .map(|(id, shard)| {
+                    Client::new(
+                        id,
+                        Box::new(NativeEngine::new(LinearProbe::new(128, 10))),
+                        shard,
+                        seed,
+                    )
+                })
+                .collect();
+            let cfg = SessionCfg {
+                algorithm: algo,
+                rounds,
+                eta: 2e-3,
+                mu: 1e-3,
+                batch_size: 8,
+                eval_every: 0,
+                participation,
+                catchup,
+                seed_pool,
+                net: net.clone(),
+                threads,
+                shards,
+                seed,
+                ..Default::default()
+            };
+            let mut s = Session::new(cfg, clients, train.clone(), test.clone());
+            for t in 0..rounds {
+                s.step(t);
+            }
+            s.catch_up_all();
+            s
+        };
+        let flat = run(0, 1);
+        let sharded = run(shards, threads);
+        for id in 0..k {
+            assert_eq!(
+                flat.replica(id).iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+                sharded.replica(id).iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+                "client {id} replica diverged (shards={shards}, threads={threads})"
+            );
+        }
+        // RunResult payload-bit conservation: the client-facing ledger
+        // must not know the coordinator is sharded
+        assert_eq!(flat.ledger, sharded.ledger, "ledger diverged under sharding");
+        assert_eq!(flat.net.stats, sharded.net.stats, "impairment trace diverged");
+        assert_eq!(encode(&flat.orbit), encode(&sharded.orbit), "orbit diverged");
+        let stats = sharded.shard_stats();
+        assert_eq!(stats.shards, shards.min(k));
+        assert_eq!(flat.shard_stats().shards, 0);
+        assert_eq!(flat.shard_stats().merge_bits, 0);
     });
 }
 

@@ -1,0 +1,253 @@
+//! Sharded-coordinator parity: `--shards N` must be a pure execution
+//! strategy, never a protocol change.
+//!
+//! The contracts, per `coordinator::shard`'s three invariants:
+//!
+//! 1. **Shard-count parity** — for every engine (FeedSign, DP-FeedSign,
+//!    ZO-FedSGD), every shard count N in {1, 2, 4, 7} and every worker
+//!    thread count, a sharded session is **bit-identical** to the
+//!    unsharded baseline: replicas, client-facing ledger, orbit, and the
+//!    impairment trace — under partial participation, a `ber:P` bit-flip
+//!    channel, and deadline stragglers all at once.
+//! 2. **Cross-topology parity** — the threaded distributed topology with
+//!    a sharded PS lands on the same bits as the sharded synchronous
+//!    session (and both on the flat engines' bits).
+//! 3. **Merge-traffic containment** — the hierarchical `ShardVotes`
+//!    merge is coordinator-internal: it shows up in `ShardStats`, never
+//!    in the client-facing `Ledger`.
+//!
+//! Replicas are compared as `u32` bit patterns (flips can push weights
+//! non-finite; NaN-blind f32 equality must not hide a divergence).
+
+use feedsign::coordinator::catchup::CatchupCfg;
+use feedsign::coordinator::distributed::{run_feedsign, DistClient, DistCfg};
+use feedsign::coordinator::participation::ParticipationCfg;
+use feedsign::coordinator::{Algorithm, Attack, Client, Session, SessionCfg};
+use feedsign::data::partition::{split, Partition};
+use feedsign::data::vision::{generate, SYNTH_CIFAR10};
+use feedsign::data::Dataset;
+use feedsign::engine::NativeEngine;
+use feedsign::net::{ChannelModel, LinkAssignment, NetCfg};
+use feedsign::simkit::nn::LinearProbe;
+use feedsign::simkit::prng::Rng;
+
+fn bits(w: &[f32]) -> Vec<u32> {
+    w.iter().map(|v| v.to_bits()).collect()
+}
+
+/// The impaired regime every parity case below runs under: partial
+/// participation, a bit-flip channel over heterogeneous links, and a
+/// round deadline that cuts iot-class stragglers at plan time.
+fn impaired_net() -> NetCfg {
+    NetCfg {
+        channel: ChannelModel::BitFlip { ber: 0.05 },
+        links: LinkAssignment::parse("mixed").unwrap(),
+        deadline_s: 0.1,
+        channel_seed: 5,
+    }
+}
+
+/// Session with `shards` and `threads` pinned at construction — explicit
+/// values are env-proof, so the `FEEDSIGN_SHARDS` CI leg cannot change
+/// what these tests compare.
+fn build(algo: Algorithm, k: usize, shards: usize, threads: usize) -> Session {
+    let train: Dataset = generate(&SYNTH_CIFAR10, 400, 0);
+    let test: Dataset = generate(&SYNTH_CIFAR10, 150, 1);
+    let data_shards = split(&train, k, Partition::Iid, 0);
+    let clients: Vec<Client> = data_shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            Client::new(id, Box::new(NativeEngine::new(LinearProbe::new(128, 10))), shard, 11)
+        })
+        .collect();
+    let cfg = SessionCfg {
+        algorithm: algo,
+        rounds: 50,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 16,
+        eval_every: 0,
+        participation: ParticipationCfg::Fraction(0.6),
+        catchup: CatchupCfg::Replay,
+        net: impaired_net(),
+        threads,
+        shards,
+        seed: 11,
+        ..Default::default()
+    };
+    Session::new(cfg, clients, train, test)
+}
+
+fn run_to_end(mut s: Session) -> Session {
+    for t in 0..50 {
+        s.step(t);
+    }
+    s.catch_up_all();
+    s
+}
+
+fn assert_session_parity(label: &str, base: &Session, s: &Session) {
+    for id in 0..base.clients.len() {
+        assert_eq!(
+            bits(&base.replica(id)),
+            bits(&s.replica(id)),
+            "{label}: client {id} replica diverged"
+        );
+    }
+    assert_eq!(base.ledger.uplink_bits, s.ledger.uplink_bits, "{label}: uplink bits");
+    assert_eq!(base.ledger.downlink_bits, s.ledger.downlink_bits, "{label}: downlink bits");
+    assert_eq!(base.ledger.uplink_msgs, s.ledger.uplink_msgs, "{label}: uplink msgs");
+    assert_eq!(base.ledger.downlink_msgs, s.ledger.downlink_msgs, "{label}: downlink msgs");
+    assert_eq!(base.net.stats, s.net.stats, "{label}: impairment trace diverged");
+    assert_eq!(
+        feedsign::orbit::encode(&base.orbit),
+        feedsign::orbit::encode(&s.orbit),
+        "{label}: orbit bytes diverged"
+    );
+}
+
+#[test]
+fn every_engine_is_bit_identical_for_all_shard_and_thread_counts() {
+    for algo in [
+        Algorithm::FeedSign,
+        Algorithm::DpFeedSign { epsilon: 2.0 },
+        Algorithm::ZoFedSgd,
+    ] {
+        // unsharded sequential baseline
+        let base = run_to_end(build(algo, 7, 0, 1));
+        assert_eq!(base.shard_stats().shards, 0, "flat baseline must not shard");
+        for n in [1usize, 2, 4, 7] {
+            for threads in [1usize, 3, 8] {
+                let s = run_to_end(build(algo, 7, n, threads));
+                let label = format!("{algo:?}/shards={n}/threads={threads}");
+                assert_session_parity(&label, &base, &s);
+                let stats = s.shard_stats();
+                assert_eq!(stats.shards, n.min(7), "{label}: shard count");
+                assert!(stats.merges > 0, "{label}: merge traffic must be metered");
+            }
+        }
+    }
+}
+
+#[test]
+fn merge_traffic_is_coordinator_internal() {
+    // the hierarchical merge must price its ShardVotes pairs somewhere —
+    // but never in the client-facing ledger the flat run produces
+    let flat = run_to_end(build(Algorithm::FeedSign, 7, 0, 1));
+    let sharded = run_to_end(build(Algorithm::FeedSign, 7, 4, 4));
+    assert_eq!(flat.ledger.uplink_bits, sharded.ledger.uplink_bits);
+    assert_eq!(flat.ledger.uplink_msgs, sharded.ledger.uplink_msgs);
+    let stats = sharded.shard_stats();
+    assert!(stats.merge_bits > 0, "pairs carry information");
+    assert!(
+        stats.merges >= stats.merge_bits / 64,
+        "each pair prices at most the dense 64-bit bound"
+    );
+    assert_eq!(flat.shard_stats().merges, 0);
+}
+
+fn dist_clients(k: usize, train: &Dataset) -> Vec<DistClient> {
+    let shards = split(train, k, Partition::Iid, 0);
+    shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            let engine: Box<dyn feedsign::engine::Engine> =
+                Box::new(NativeEngine::new(LinearProbe::new(128, 10)));
+            let w = engine.init_params(11);
+            DistClient {
+                engine,
+                w,
+                shard,
+                attack: Attack::None,
+                rng: Rng::new(11 ^ 0xC11E_17, id as u32 + 1),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn both_topologies_agree_under_sharding() {
+    // sync sharded vs threaded-distributed sharded vs both flat: four
+    // runs of the same impaired configuration, one set of bits
+    let train: Dataset = generate(&SYNTH_CIFAR10, 400, 0);
+    let dist = |shards: usize| {
+        let dcfg = DistCfg {
+            rounds: 50,
+            eta: 2e-3,
+            mu: 1e-3,
+            batch_size: 16,
+            participation: ParticipationCfg::Fraction(0.6),
+            catchup: CatchupCfg::Replay,
+            net: impaired_net(),
+            seed: 11,
+            seed_pool: 0,
+            shards,
+        };
+        run_feedsign(dist_clients(7, &train), train.clone(), dcfg)
+    };
+    let sync_flat = run_to_end(build(Algorithm::FeedSign, 7, 0, 1));
+    let sync_sharded = run_to_end(build(Algorithm::FeedSign, 7, 4, 4));
+    let dist_flat = dist(0);
+    let dist_sharded = dist(4);
+
+    for (id, w) in dist_sharded.finals.iter().enumerate() {
+        assert_eq!(bits(w), bits(&dist_flat.finals[id]), "dist client {id}: sharding drifted");
+        assert_eq!(bits(w), bits(&sync_sharded.replica(id)), "client {id}: topologies diverged");
+        assert_eq!(bits(w), bits(&sync_flat.replica(id)), "client {id}: sharded vs flat sync");
+    }
+    for d in [&dist_flat, &dist_sharded] {
+        assert_eq!(d.ledger.uplink_bits, sync_flat.ledger.uplink_bits);
+        assert_eq!(d.ledger.downlink_bits, sync_flat.ledger.downlink_bits);
+        assert_eq!(d.net, sync_flat.net.stats, "impairment trace diverged");
+    }
+    assert_eq!(dist_sharded.shard.shards, 4);
+    assert!(dist_sharded.shard.merges > 0);
+    assert_eq!(dist_flat.shard.shards, 0);
+}
+
+#[test]
+fn oversubscribed_shard_count_degrades_to_singletons() {
+    // --shards 7 over a 3-client pool: the map clamps to 3 singleton
+    // shards and the run stays bit-identical to flat
+    let base = run_to_end_small(build_small(0));
+    let s = run_to_end_small(build_small(7));
+    for id in 0..3 {
+        assert_eq!(bits(&base.replica(id)), bits(&s.replica(id)), "client {id}");
+    }
+    assert_eq!(s.shard_stats().shards, 3, "clamped to one shard per client");
+}
+
+fn build_small(shards: usize) -> Session {
+    let train: Dataset = generate(&SYNTH_CIFAR10, 300, 0);
+    let test: Dataset = generate(&SYNTH_CIFAR10, 100, 1);
+    let data_shards = split(&train, 3, Partition::Iid, 0);
+    let clients: Vec<Client> = data_shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            Client::new(id, Box::new(NativeEngine::new(LinearProbe::new(128, 10))), shard, 11)
+        })
+        .collect();
+    let cfg = SessionCfg {
+        algorithm: Algorithm::FeedSign,
+        rounds: 30,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 16,
+        eval_every: 0,
+        threads: 2,
+        shards,
+        seed: 11,
+        ..Default::default()
+    };
+    Session::new(cfg, clients, train, test)
+}
+
+fn run_to_end_small(mut s: Session) -> Session {
+    for t in 0..30 {
+        s.step(t);
+    }
+    s
+}
