@@ -206,6 +206,9 @@ impl BenchJson {
         top.insert("bench".to_string(), Json::Str(bench.to_string()));
         top.insert("scale".to_string(), Json::Num(scale()));
         top.insert("calibrated".to_string(), Json::Bool(scale() >= 1.0));
+        // attribution stamp: git rev, host threads, SIMD width, shard
+        // count — lets a bench trajectory be compared across PRs/hosts
+        top.insert("meta".to_string(), Json::Obj(feedsign::util::bench::run_metadata()));
         BenchJson { bench: bench.to_string(), top, sections: BTreeMap::new() }
     }
 

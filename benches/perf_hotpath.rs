@@ -226,6 +226,11 @@ fn main() {
     // baseline vs scoped client fan-out (plan/execute/commit; bit-identical
     // runs, pinned by rust/tests/parallel_parity.rs)
     println!("\n== parallel round engine (K-client fan-out, {cores} cores) ==");
+    // whether this binary carries the obs instrumentation (compiled in
+    // but runtime-disabled here) — the CI disabled-overhead gate diffs
+    // the round sections below between an obs-on and a
+    // --no-default-features build of this same bench
+    bj.note("obs_compiled", if cfg!(feature = "obs") { "on" } else { "off" });
     let mut speedup_k20 = 0.0f64;
     for (k, rounds) in [(5usize, 40u64), (20, 16), (100, 4)] {
         let seq = time_rounds(&round_cfg(k, 1), rounds);
@@ -236,6 +241,8 @@ fn main() {
             seq * 1e3,
             par * 1e3
         );
+        bj.section(&format!("round_k{k}_seq"), seq * 1e3, None);
+        bj.section(&format!("round_k{k}_fanout"), par * 1e3, None);
         if k == 20 {
             speedup_k20 = speedup;
         }

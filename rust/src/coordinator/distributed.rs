@@ -38,6 +38,7 @@ use crate::coordinator::shard::{ShardPlane, ShardStats, VoteAcc};
 use crate::data::{Dataset, Shard};
 use crate::engine::Engine;
 use crate::net::{NetCfg, NetSim, NetStats};
+use crate::obs::{Event, Phase, Tracer};
 use crate::simkit::prng::{self, Rng};
 use std::sync::Arc;
 
@@ -131,6 +132,11 @@ pub struct DistResult {
     /// hierarchical vote-merge counters (all zero on the flat path);
     /// PS-internal — `ledger` is byte-identical either way
     pub shard: ShardStats,
+    /// PS-side event trace ([`crate::obs`]); empty unless tracing was
+    /// requested.  Emits the same logical payloads for the round-level
+    /// phases (plan / net-admit / commit) as the synchronous session, so
+    /// cross-topology logical sequences can be compared directly.
+    pub trace: Tracer,
 }
 
 /// Run distributed FeedSign over worker threads.
@@ -147,6 +153,18 @@ pub struct DistResult {
 /// round every stale client is caught up, so the returned replicas are
 /// always identical.
 pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> DistResult {
+    run_feedsign_with(clients, train, cfg, crate::obs::trace_env())
+}
+
+/// [`run_feedsign`] with tracing chosen explicitly instead of via
+/// `FEEDSIGN_TRACE` — what the CLI's `--trace-out` and the trace parity
+/// suite call (env mutation races parallel tests; a parameter does not).
+pub fn run_feedsign_with(
+    clients: Vec<DistClient>,
+    train: Dataset,
+    cfg: DistCfg,
+    trace: bool,
+) -> DistResult {
     assert!(
         cfg.catchup != CatchupCfg::Rebroadcast,
         "the threaded PS holds no parameters (§D.2); only replay catch-up is possible here"
@@ -240,6 +258,8 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
     let mut history = SeedHistory::default();
     let mut tracker = CatchupTracker::new(k);
     let mut net = NetSim::new(cfg.net.clone());
+    let mut tracer = Tracer::new(trace);
+    net.log_admissions = tracer.on();
     let mut part_rng = Rng::new(cfg.seed ^ 0x9A, 0x9A);
     // hierarchical vote merge (PS-internal): contiguous-id shards
     // pre-reduce their delivered votes to (sum, voters) pairs
@@ -261,6 +281,31 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
             };
             participants = net.admit(t, participants, up, down);
         }
+        if tracer.on() {
+            // identical payloads to the session's plan-phase events, so
+            // the cross-topology logical subset compares directly
+            tracer.push(Event::logical(Phase::Plan, t, -1, -1, participants.len() as u64, 0));
+            for a in net.take_admit_log() {
+                tracer.push(Event::logical(
+                    Phase::NetAdmit,
+                    a.round,
+                    -1,
+                    a.gating_client,
+                    a.kept as u64,
+                    a.cut as u64,
+                ));
+                if a.gating_client >= 0 {
+                    tracer.push(Event::logical(
+                        Phase::LinkGate,
+                        a.round,
+                        -1,
+                        a.gating_client,
+                        a.gating_class as u64,
+                        a.virtual_us,
+                    ));
+                }
+            }
+        }
         if participants.is_empty() {
             // zero-participant no-op round: keep round indices dense
             if cfg.catchup.is_on() {
@@ -278,6 +323,16 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
                 let records = history
                     .replay_span(span.start, span.end)
                     .expect("compaction must respect the slowest client");
+                if tracer.on() && !records.is_empty() {
+                    tracer.push(Event::logical(
+                        Phase::Catchup,
+                        t,
+                        -1,
+                        id as i64,
+                        span.end - span.start,
+                        records.len() as u64,
+                    ));
+                }
                 let msg = Message::ReplayHistory { records };
                 ledger.record(&msg);
                 ps_links[id].to_client.send(msg).expect("client alive");
@@ -312,6 +367,16 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
             };
             ledger.record(&Message::SignVote { sign });
             if let Some(sign) = net.deliver_sign(t, id, sign) {
+                if tracer.on() {
+                    tracer.push(Event::logical(
+                        Phase::Commit,
+                        t,
+                        -1,
+                        id as i64,
+                        (sign > 0) as u64,
+                        0,
+                    ));
+                }
                 signs.push(sign);
                 voters.push(id);
             }
@@ -333,12 +398,22 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
                     continue; // no planned participants in this shard
                 }
                 let acc = tally[s];
-                plane.record_merge(&Message::ShardVotes {
+                let bits = plane.record_merge(&Message::ShardVotes {
                     sum: acc.sum,
                     voters: acc.voters,
                     shard_size: r.len(),
                     dense_pairs: false,
                 });
+                if tracer.on() {
+                    tracer.push(Event::logical(
+                        Phase::ShardMerge,
+                        t,
+                        s as i32,
+                        -1,
+                        acc.voters as u64,
+                        bits,
+                    ));
+                }
                 total.merge(acc);
             }
             total
@@ -363,6 +438,16 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
             }
             None => aggregation::majority_sign(&signs),
         };
+        if tracer.on() {
+            tracer.push(Event::logical(
+                Phase::Commit,
+                t,
+                -1,
+                -1,
+                (f > 0) as u64,
+                signs.len() as u64,
+            ));
+        }
         votes_per_round.push(signs);
         for &id in &voters {
             let msg = Message::GlobalSign { sign: f };
@@ -414,6 +499,16 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
                 .replay_span(span.start, span.end)
                 .expect("compaction must respect the slowest client");
             if !records.is_empty() {
+                if tracer.on() {
+                    tracer.push(Event::logical(
+                        Phase::Catchup,
+                        cfg.rounds,
+                        -1,
+                        id as i64,
+                        span.end - span.start,
+                        records.len() as u64,
+                    ));
+                }
                 let msg = Message::ReplayHistory { records };
                 ledger.record(&msg);
                 link.to_client.send(msg).expect("client alive");
@@ -428,7 +523,7 @@ pub fn run_feedsign(clients: Vec<DistClient>, train: Dataset, cfg: DistCfg) -> D
         finals.push(h.join().expect("client thread panicked"));
     }
     let shard = shard_plane.map(|p| p.stats()).unwrap_or_default();
-    DistResult { finals, ledger, votes_per_round, net: net.stats, shard }
+    DistResult { finals, ledger, votes_per_round, net: net.stats, shard, trace: tracer }
 }
 
 #[cfg(test)]

@@ -86,6 +86,7 @@ use crate::data::{Batch, Dataset, Shard};
 use crate::engine::{probe_batch, Engine, ProbeBatchStats, ProbeJob};
 use crate::metrics::{RoundRecord, RunResult};
 use crate::net::{NetCfg, NetSim};
+use crate::obs::{Event, Phase, SpanBuf, Tracer};
 use crate::orbit::Orbit;
 use crate::simkit::prng::{self, Rng};
 use std::borrow::Cow;
@@ -319,7 +320,8 @@ fn run_worker_probes<S, F>(
     mu: f32,
     spec: &S,
     finish: &F,
-) -> (Vec<(usize, ProbeOutcome)>, ProbeBatchStats)
+    trace: bool,
+) -> (Vec<(usize, ProbeOutcome)>, ProbeBatchStats, SpanBuf)
 where
     S: Fn(&mut Client, &mut Ledger) -> (Batch, u32),
     F: Fn(&mut Client, u32, f32, &mut Ledger) -> Contribution,
@@ -350,6 +352,7 @@ where
         }
     }
     let mut stats = ProbeBatchStats::default();
+    let mut buf = SpanBuf::new(trace);
     let mut projections = vec![0.0f32; staged.len()];
     let mut slots: Vec<Option<Staged>> = staged.into_iter().map(Some).collect();
     for idxs in &groups {
@@ -364,9 +367,19 @@ where
                 seed: s.seed,
             })
             .collect();
+        let g0 = buf.clock();
         let (ps, group_stats) = probe_batch(w, mu, &mut jobs);
         drop(jobs);
         stats.merge(&group_stats);
+        buf.span(
+            Phase::ProbeBatch,
+            round,
+            -1,
+            -1,
+            group_stats.probes,
+            group_stats.canonical_passes,
+            g0,
+        );
         for ((i, s), p) in members.into_iter().zip(ps) {
             projections[i] = p;
             slots[i] = Some(s);
@@ -377,11 +390,15 @@ where
         .zip(projections)
         .map(|(slot, p)| {
             let mut s = slot.expect("every staged job returns to its slot");
+            if buf.on() {
+                let (id, seed) = (s.client.id as i64, s.seed as u64);
+                buf.push(Event::logical(Phase::Probe, round, -1, id, seed, 0));
+            }
             let contribution = finish(s.client, s.seed, p, &mut s.ledger);
             (s.rank, ProbeOutcome { client: s.client.id, contribution, ledger: s.ledger })
         })
         .collect();
-    (out, stats)
+    (out, stats, buf)
 }
 
 /// Size-aware worker assignment: LPT (longest-processing-time-first)
@@ -437,7 +454,8 @@ fn execute_probes<S, F>(
     spec: S,
     finish: F,
     id_base: usize,
-) -> (Vec<ProbeOutcome>, ProbeBatchStats)
+    trace: bool,
+) -> (Vec<ProbeOutcome>, ProbeBatchStats, SpanBuf)
 where
     S: Fn(&mut Client, &mut Ledger) -> (Batch, u32) + Sync,
     F: Fn(&mut Client, u32, f32, &mut Ledger) -> Contribution + Sync,
@@ -469,15 +487,16 @@ where
         let _serial = pin_serial.then(prng::serial_zone);
         let work: Vec<(usize, (&mut Client, &[f32]))> =
             selected.into_iter().enumerate().collect();
-        let (mut ranked, stats) = run_worker_probes(round, work, mu, &spec, &finish);
+        let (mut ranked, stats, buf) = run_worker_probes(round, work, mu, &spec, &finish, trace);
         ranked.sort_by_key(|(rank, _)| *rank);
-        return (ranked.into_iter().map(|(_, o)| o).collect(), stats);
+        return (ranked.into_iter().map(|(_, o)| o).collect(), stats, buf);
     }
     let bins = pack_bins(costs, threads);
     let mut slots: Vec<Option<(&mut Client, &[f32])>> = selected.into_iter().map(Some).collect();
     let mut out: Vec<Option<ProbeOutcome>> =
         std::iter::repeat_with(|| None).take(slots.len()).collect();
     let mut stats = ProbeBatchStats::default();
+    let mut buf = SpanBuf::new(trace);
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(bins.len());
         for bin in &bins {
@@ -493,12 +512,15 @@ where
                 // client-level parallelism is the outer fan-out; keep the
                 // per-vector noise ops sequential inside each worker
                 let _serial = prng::serial_zone();
-                run_worker_probes(round, work, mu, spec, finish)
+                run_worker_probes(round, work, mu, spec, finish, trace)
             }));
         }
         for h in handles {
-            let (ranked, worker_stats) = h.join().expect("round worker panicked");
+            let (ranked, worker_stats, worker_buf) = h.join().expect("round worker panicked");
             stats.merge(&worker_stats);
+            for ev in worker_buf.events() {
+                buf.push(*ev);
+            }
             for (rank, o) in ranked {
                 out[rank] = Some(o);
             }
@@ -506,7 +528,7 @@ where
     });
     let outcomes =
         out.into_iter().map(|o| o.expect("every participant probes exactly once")).collect();
-    (outcomes, stats)
+    (outcomes, stats, buf)
 }
 
 /// Paper-accounting payload bits one participant moves in a round — the
@@ -590,6 +612,7 @@ fn execute_sharded<S, F>(
     spec: S,
     finish: F,
     lookahead: Option<Lookahead<'_>>,
+    tracer: &mut Tracer,
 ) -> (Vec<ProbeOutcome>, ProbeBatchStats, Option<RoundPlan>)
 where
     S: Fn(&mut Client, &mut Ledger) -> (Batch, u32) + Sync,
@@ -626,11 +649,19 @@ where
         }
     }
     let shard_threads = (threads / n).max(1);
-    let mut done: Vec<Option<(Vec<ProbeOutcome>, ProbeBatchStats)>> =
+    let mut done: Vec<Option<(Vec<ProbeOutcome>, ProbeBatchStats, SpanBuf)>> =
         (0..n).map(|_| None).collect();
     let mut lookahead = lookahead;
     let mut next_plan: Option<RoundPlan> = None;
-    if threads <= 1 || n == 1 {
+    let trace = tracer.on();
+    let seq = threads <= 1 || n == 1;
+    let r0 = tracer.clock();
+    // straggler attribution (wall-clock, never read by control flow):
+    // the shard whose execute completed the round, and its end time.
+    // Sequential drain attributes the slowest shard instead of the last.
+    let mut gate: (i32, u64, u64) = (-1, 0, 0); // (shard, end_us, dur_us)
+    let mut overlap: Option<(u64, u64)> = None; // lookahead (start, end)
+    if seq {
         // sequential baseline (or a degenerate single shard): drain the
         // shards in shard order on this thread.  The overlap point is the
         // same — after the first shard completes with stragglers left —
@@ -639,7 +670,8 @@ where
         for (s, ((base, slice), (shard_plan, shard_costs))) in
             slices.into_iter().zip(&shard_work).enumerate()
         {
-            let out = execute_probes(
+            let t0 = tracer.clock();
+            let (o, st, mut sbuf) = execute_probes(
                 slice,
                 replicas,
                 shard_plan,
@@ -650,12 +682,34 @@ where
                 &spec,
                 &finish,
                 base,
+                trace,
             );
-            done[s] = Some(out);
+            if trace {
+                let t1 = crate::obs::now_us();
+                let dur = t1.saturating_sub(t0);
+                sbuf.push(Event {
+                    phase: Phase::Execute,
+                    round: shard_plan.round,
+                    shard: -1,
+                    client: -1,
+                    n1: shard_plan.participants.len() as u64,
+                    n2: 0,
+                    start_us: t0,
+                    dur_us: dur,
+                });
+                if gate.0 < 0 || dur > gate.2 {
+                    gate = (s as i32, t1, dur);
+                }
+            }
+            done[s] = Some((o, st, sbuf));
             if s == 0 && n > 1 {
                 if let Some(la) = lookahead.take() {
+                    let p0 = tracer.clock();
                     next_plan = Some(plan_round_with(la));
                     plane.note_overlap();
+                    if trace {
+                        overlap = Some((p0, crate::obs::now_us()));
+                    }
                 }
             }
         }
@@ -667,7 +721,8 @@ where
                 let (spec, finish) = (&spec, &finish);
                 let (shard_plan, shard_costs) = work;
                 scope.spawn(move || {
-                    let out = execute_probes(
+                    let b0 = if trace { crate::obs::now_us() } else { 0 };
+                    let (o, st, mut sbuf) = execute_probes(
                         slice,
                         replicas,
                         shard_plan,
@@ -678,8 +733,18 @@ where
                         spec,
                         finish,
                         base,
+                        trace,
                     );
-                    tx.send((s, out)).ok();
+                    sbuf.span(
+                        Phase::Execute,
+                        shard_plan.round,
+                        -1,
+                        -1,
+                        shard_plan.participants.len() as u64,
+                        0,
+                        b0,
+                    );
+                    tx.send((s, (o, st, sbuf))).ok();
                 });
             }
             drop(tx);
@@ -690,21 +755,47 @@ where
             while let Ok((s, out)) = rx.recv() {
                 done[s] = Some(out);
                 finished += 1;
+                if trace {
+                    gate = (s as i32, crate::obs::now_us(), 0);
+                }
                 if finished < n {
                     if let Some(la) = lookahead.take() {
+                        let p0 = tracer.clock();
                         next_plan = Some(plan_round_with(la));
                         plane.note_overlap();
+                        if trace {
+                            overlap = Some((p0, crate::obs::now_us()));
+                        }
                     }
                 }
             }
         });
     }
+    if trace && gate.0 >= 0 {
+        let mut ev = Event::logical(Phase::RoundGate, plan.round, gate.0, -1, 0, 0);
+        ev.start_us = r0;
+        ev.dur_us = gate.1.saturating_sub(r0);
+        tracer.push(ev);
+    }
+    if trace {
+        if let Some((p0, p1)) = overlap {
+            // wall-clock actually hidden: the planning window clipped to
+            // the straggler window it ran under (zero on the sequential
+            // drain, where nothing runs concurrently)
+            let saved = if seq { 0 } else { p1.min(gate.1).saturating_sub(p0) };
+            let mut ev = Event::logical(Phase::Overlap, plan.round, -1, -1, saved, 0);
+            ev.start_us = p0;
+            ev.dur_us = p1.saturating_sub(p0);
+            tracer.push(ev);
+        }
+    }
     let mut outcomes = Vec::with_capacity(plan.participants.len());
     let mut stats = ProbeBatchStats::default();
-    for slot in done {
-        let (o, st) = slot.expect("every shard reports exactly once");
+    for (s, slot) in done.into_iter().enumerate() {
+        let (o, st, sbuf) = slot.expect("every shard reports exactly once");
         outcomes.extend(o);
         stats.merge(&st);
+        tracer.absorb(sbuf, s as i32);
     }
     (outcomes, stats, next_plan)
 }
@@ -743,6 +834,12 @@ pub struct Session {
     /// delta (`sum_i scalars[i] · z_i`) the [`CatchupCfg::PoolScalars`]
     /// download ships.
     pub pool_scalars: Vec<f32>,
+    /// Deterministic event tracer ([`crate::obs`]): off unless
+    /// `FEEDSIGN_TRACE` is set at construction or
+    /// [`Session::enable_tracing`] is called.  Strictly write-only from
+    /// the engine's perspective — no round-loop branch reads it, which
+    /// is what keeps every parity suite bit-identical tracing on or off.
+    pub tracer: Tracer,
     /// Sharded coordinator plane ([`SessionCfg::shards`] >= 1): the
     /// client-id partition, the hierarchical vote-merge ledger and the
     /// event-driven overlap counter.  `None` on the legacy unsharded
@@ -833,7 +930,9 @@ impl Session {
             orbit.set_pool(p.pool_seed, p.k());
         }
         let pool_scalars = vec![0.0f32; pool.as_ref().map_or(0, |p| p.k())];
-        let net = NetSim::new(cfg.net.clone());
+        let tracer = Tracer::from_env();
+        let mut net = NetSim::new(cfg.net.clone());
+        net.log_admissions = tracer.on();
         let dp_rng = Rng::new(cfg.seed ^ 0xD9, 0xD9);
         let eval_rng = Rng::new(cfg.seed ^ 0xEE, 0xEE);
         let part_rng = Rng::new(cfg.seed ^ 0x9A, 0x9A);
@@ -851,6 +950,7 @@ impl Session {
             probe_stats: ProbeBatchStats::default(),
             pool,
             pool_scalars,
+            tracer,
             shard_plane,
             pending_plan: None,
             dp_rng,
@@ -863,6 +963,15 @@ impl Session {
     /// plane, so staleness and memory state can never disagree).
     pub fn tracker(&self) -> &CatchupTracker {
         self.replicas.tracker()
+    }
+
+    /// Turn event tracing on mid-lifetime (the CLI's `--trace-out` path)
+    /// and switch the net simulator's admission log on with it.  Purely
+    /// additive — no engine branch reads the recorded state, so the run
+    /// commits identical bits either way.
+    pub fn enable_tracing(&mut self) {
+        self.tracer.enable();
+        self.net.log_admissions = self.tracer.on();
     }
 
     /// Read client `id`'s logical replica.  Resolution order: an owned
@@ -928,9 +1037,11 @@ impl Session {
             self.step(t);
             let do_eval = self.cfg.eval_every > 0 && (t + 1) % self.cfg.eval_every == 0;
             if do_eval {
+                let e0 = self.tracer.clock();
                 let (loss, acc) = self.evaluate();
+                self.tracer.span(Phase::Eval, t + 1, -1, -1, 0, 0, e0);
                 if self.cfg.verbose {
-                    eprintln!(
+                    crate::log_info!(
                         "[{}] round {:>6}: eval loss {loss:.4} acc {:.1}% (up {} bits)",
                         self.cfg.algorithm.name(),
                         t + 1,
@@ -944,13 +1055,21 @@ impl Session {
                     eval_acc: acc,
                     uplink_bits: self.ledger.uplink_bits,
                     downlink_bits: self.ledger.downlink_bits,
+                    wall_s: start.elapsed().as_secs_f64(),
+                    canonical_commits: self.replicas.stats().canonical_commits,
+                    probe_passes_saved: self.probe_stats.passes_saved(),
+                    shard_merge_bits: self.shard_stats().merge_bits,
+                    net_dropped: self.net.stats.dropped_msgs,
+                    net_flipped: self.net.stats.flipped_bits,
                 });
             }
         }
         // run end: every straggler performs its (metered) rejoin so the
         // final model is distributed to the whole pool
         self.catch_up_all();
+        let e0 = self.tracer.clock();
         let (final_loss, final_acc) = self.evaluate();
+        self.tracer.span(Phase::Eval, self.cfg.rounds, -1, -1, 0, 0, e0);
         RunResult {
             algorithm: self.cfg.algorithm.name().to_string(),
             records,
@@ -1032,6 +1151,42 @@ impl Session {
     }
 
     fn step_planned(&mut self, plan: RoundPlan, allow_lookahead: bool) {
+        let round = plan.round;
+        if self.tracer.on() {
+            // the plan is traced where it is *consumed*, so a
+            // lookahead-drawn plan lands in its own round; the net
+            // admission summaries it drains carry their own round
+            // numbers, and the sorted logical sequence puts both where
+            // they belong regardless of when the draw happened
+            self.tracer.push(Event::logical(
+                Phase::Plan,
+                round,
+                -1,
+                -1,
+                plan.participants.len() as u64,
+                0,
+            ));
+            for a in self.net.take_admit_log() {
+                self.tracer.push(Event::logical(
+                    Phase::NetAdmit,
+                    a.round,
+                    -1,
+                    a.gating_client,
+                    a.kept as u64,
+                    a.cut as u64,
+                ));
+                if a.gating_client >= 0 {
+                    self.tracer.push(Event::logical(
+                        Phase::LinkGate,
+                        a.round,
+                        -1,
+                        a.gating_client,
+                        a.gating_class as u64,
+                        a.virtual_us,
+                    ));
+                }
+            }
+        }
         // snapshot-cache admission (PR 5 follow-up): pre-commit snapshots
         // exist to serve *stale* readers, so only admit them when this
         // round's config can actually strand a client — a participation
@@ -1044,6 +1199,12 @@ impl Session {
         let admit =
             self.cfg.participation.can_strand_clients() || self.cfg.net.can_strand_clients();
         self.replicas.set_snapshot_admission(admit);
+        let snaps0 = if self.tracer.on() {
+            let r = self.replicas.stats();
+            (r.snapshots, r.snapshots_declined)
+        } else {
+            (0, 0)
+        };
         match self.cfg.algorithm {
             Algorithm::FeedSign => self.step_feedsign(plan, None, allow_lookahead),
             Algorithm::DpFeedSign { epsilon } => {
@@ -1052,6 +1213,14 @@ impl Session {
             Algorithm::ZoFedSgd => self.step_zo_fedsgd(plan, allow_lookahead),
             Algorithm::FedSgd | Algorithm::Mezo => {
                 panic!("step_with_plan drives the synchronized seed-based algorithms only")
+            }
+        }
+        if self.tracer.on() {
+            let r = self.replicas.stats();
+            let taken = r.snapshots - snaps0.0;
+            let declined = r.snapshots_declined - snaps0.1;
+            if taken > 0 || declined > 0 {
+                self.tracer.push(Event::logical(Phase::Snapshot, round, -1, -1, taken, declined));
             }
         }
     }
@@ -1155,6 +1324,16 @@ impl Session {
                 // distributed topology's empty-replay guard)
                 self.replicas.mark_synced(id, to_round);
                 continue;
+            }
+            if self.tracer.on() {
+                self.tracer.push(Event::logical(
+                    Phase::Catchup,
+                    to_round,
+                    -1,
+                    id as i64,
+                    span.end - span.start,
+                    records.len() as u64,
+                ));
             }
             let records = match self.cfg.catchup {
                 CatchupCfg::Replay => {
@@ -1265,7 +1444,17 @@ impl Session {
                 shard_size: r.len(),
                 dense_pairs,
             };
-            plane.record_merge(&msg);
+            let bits = plane.record_merge(&msg);
+            if self.tracer.on() {
+                self.tracer.push(Event::logical(
+                    Phase::ShardMerge,
+                    plan.round,
+                    s as i32,
+                    -1,
+                    acc.voters as u64,
+                    bits,
+                ));
+            }
             total.merge(*acc);
         }
         Some(total)
@@ -1360,6 +1549,7 @@ impl Session {
                     spec,
                     finish,
                     la,
+                    &mut self.tracer,
                 );
                 if next.is_some() {
                     // a consumed RNG draw must never be dropped: only the
@@ -1368,18 +1558,33 @@ impl Session {
                 }
                 (o, st)
             }
-            None => execute_probes(
-                &mut self.clients,
-                &self.replicas,
-                &plan,
-                &costs,
-                threads,
-                pin_serial,
-                mu,
-                spec,
-                finish,
-                0,
-            ),
+            None => {
+                let e0 = self.tracer.clock();
+                let (o, st, buf) = execute_probes(
+                    &mut self.clients,
+                    &self.replicas,
+                    &plan,
+                    &costs,
+                    threads,
+                    pin_serial,
+                    mu,
+                    spec,
+                    finish,
+                    0,
+                    self.tracer.on(),
+                );
+                self.tracer.span(
+                    Phase::Execute,
+                    t,
+                    -1,
+                    -1,
+                    plan.participants.len() as u64,
+                    0,
+                    e0,
+                );
+                self.tracer.absorb(buf, -1);
+                (o, st)
+            }
         };
         self.probe_stats.merge(&probe_stats);
         // commit: votes and sub-ledgers in client-id order; each vote
@@ -1403,6 +1608,16 @@ impl Session {
             if let Some(s) = self.net.deliver_sign(t, id, s) {
                 if let Some(p) = &self.shard_plane {
                     tally[p.map().shard_of(id)].push(s);
+                }
+                if self.tracer.on() {
+                    self.tracer.push(Event::logical(
+                        Phase::Commit,
+                        t,
+                        -1,
+                        id as i64,
+                        (s > 0) as u64,
+                        0,
+                    ));
                 }
                 signs.push(s);
                 voters.push(id);
@@ -1436,6 +1651,16 @@ impl Session {
             (None, None) => aggregation::majority_sign(&signs),
             (None, Some(eps)) => aggregation::dp_vote(&signs, eps, &mut self.dp_rng),
         };
+        if self.tracer.on() {
+            self.tracer.push(Event::logical(
+                Phase::Commit,
+                t,
+                -1,
+                -1,
+                (f > 0) as u64,
+                signs.len() as u64,
+            ));
+        }
         let step = f as f32 * self.cfg.eta;
         let msg = Message::GlobalSign { sign: f };
         // pool mode: the broadcast also names the round's direction —
@@ -1556,24 +1781,40 @@ impl Session {
                     spec,
                     finish,
                     la,
+                    &mut self.tracer,
                 );
                 if next.is_some() {
                     self.pending_plan = next;
                 }
                 (o, st)
             }
-            None => execute_probes(
-                &mut self.clients,
-                &self.replicas,
-                &plan,
-                &costs,
-                threads,
-                pin_serial,
-                mu,
-                spec,
-                finish,
-                0,
-            ),
+            None => {
+                let e0 = self.tracer.clock();
+                let (o, st, buf) = execute_probes(
+                    &mut self.clients,
+                    &self.replicas,
+                    &plan,
+                    &costs,
+                    threads,
+                    pin_serial,
+                    mu,
+                    spec,
+                    finish,
+                    0,
+                    self.tracer.on(),
+                );
+                self.tracer.span(
+                    Phase::Execute,
+                    t,
+                    -1,
+                    -1,
+                    plan.participants.len() as u64,
+                    0,
+                    e0,
+                );
+                self.tracer.absorb(buf, -1);
+                (o, st)
+            }
         };
         self.probe_stats.merge(&probe_stats);
         // commit in client-id order; each 64-bit pair crosses the uplink
@@ -1601,6 +1842,16 @@ impl Session {
                     // delivered count matters for the merge pricing
                     tally[pl.map().shard_of(id)].voters += 1;
                 }
+                if self.tracer.on() {
+                    self.tracer.push(Event::logical(
+                        Phase::Commit,
+                        t,
+                        -1,
+                        id as i64,
+                        seed as u64,
+                        p.to_bits() as u64,
+                    ));
+                }
                 pairs.push((seed, p));
                 voters.push(id);
             }
@@ -1619,6 +1870,11 @@ impl Session {
             return;
         }
         let k = pairs.len();
+        if self.tracer.on() {
+            // no global sign in the pair-bundle aggregation: n1 = 0,
+            // n2 = the delivered pair count the mean divides by
+            self.tracer.push(Event::logical(Phase::Commit, t, -1, -1, 0, k as u64));
+        }
         let eta = self.cfg.eta;
         let msg = Message::GlobalProjections { pairs: pairs.clone() };
         let pool = self.clients.len();
@@ -1671,6 +1927,28 @@ impl Session {
             let (up, down) = self.round_payload_bits(self.clients.len());
             let everyone: Vec<usize> = (0..self.clients.len()).collect();
             let _ = self.net.admit(t, everyone, up, down);
+            if self.tracer.on() {
+                for a in self.net.take_admit_log() {
+                    self.tracer.push(Event::logical(
+                        Phase::NetAdmit,
+                        a.round,
+                        -1,
+                        a.gating_client,
+                        a.kept as u64,
+                        a.cut as u64,
+                    ));
+                    if a.gating_client >= 0 {
+                        self.tracer.push(Event::logical(
+                            Phase::LinkGate,
+                            a.round,
+                            -1,
+                            a.gating_client,
+                            a.gating_class as u64,
+                            a.virtual_us,
+                        ));
+                    }
+                }
+            }
         }
         let mut acc = vec![0.0f32; d];
         let mut g = vec![0.0f32; d];

@@ -182,10 +182,13 @@ impl ShardPlane {
     }
 
     /// Meter one shard -> merger message into the (coordinator-internal)
-    /// merge ledger.
-    pub fn record_merge(&mut self, msg: &Message) {
+    /// merge ledger; returns the metered payload bits so callers can
+    /// attach them to a trace event without re-deriving the encoding.
+    pub fn record_merge(&mut self, msg: &Message) -> u64 {
         debug_assert!(matches!(msg, Message::ShardVotes { .. }));
+        let before = self.merge_ledger.uplink_bits;
         self.merge_ledger.record(msg);
+        self.merge_ledger.uplink_bits - before
     }
 
     /// A shard finished executing while stragglers were still draining
@@ -294,8 +297,12 @@ mod tests {
     #[test]
     fn merge_ledger_meters_shard_votes_separately() {
         let mut p = ShardPlane::new(100, 4);
-        p.record_merge(&Message::ShardVotes { sum: 3, voters: 20, shard_size: 25, dense_pairs: false });
-        p.record_merge(&Message::ShardVotes { sum: -5, voters: 25, shard_size: 25, dense_pairs: false });
+        let b0 = p
+            .record_merge(&Message::ShardVotes { sum: 3, voters: 20, shard_size: 25, dense_pairs: false });
+        let b1 = p
+            .record_merge(&Message::ShardVotes { sum: -5, voters: 25, shard_size: 25, dense_pairs: false });
+        assert_eq!(b0, 6 + 5, "record_merge reports the metered bits");
+        assert_eq!(b1, 6 + 5);
         let s = p.stats();
         assert_eq!(s.shards, 4);
         assert_eq!(s.merges, 2);

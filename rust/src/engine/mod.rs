@@ -198,6 +198,13 @@ impl ProbeBatchStats {
     pub fn unbatched_passes(&self) -> u64 {
         2 * self.probes
     }
+
+    /// Streaming passes the batcher saved vs the unbatched baseline —
+    /// the headline figure `RunResult::to_csv` and the metric registry
+    /// report.
+    pub fn passes_saved(&self) -> u64 {
+        self.unbatched_passes().saturating_sub(self.canonical_passes)
+    }
 }
 
 /// Serve a worker's probe jobs against the shared canonical buffer `w`,

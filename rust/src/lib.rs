@@ -68,6 +68,7 @@ pub mod dp;
 pub mod engine;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod orbit;
 pub mod runtime;
 pub mod simkit;

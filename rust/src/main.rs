@@ -18,7 +18,7 @@ use feedsign::config::{self, ExperimentConfig};
 use feedsign::coordinator::Algorithm;
 use feedsign::data::tasks;
 use feedsign::{dp, metrics, orbit, runtime, theory};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 const USAGE: &str = "\
 feedsign — FeedSign federated fine-tuning runtime
@@ -32,12 +32,14 @@ COMMANDS:
                [--seed-pool K] [--channel ideal|ber:P|drop:P]
                [--link mobile|wifi|iot|mixed]
                [--deadline T] [--channel-seed S] [--replica-cache N]
-               [--shards N]
+               [--shards N] [--trace-out trace.json|trace.jsonl]
+               [--metrics-out metrics.prom] [--quiet]
   quickstart   [--rounds 2000] [--threads N] [--participation SPEC]
                [--catchup SPEC] [--seed-pool K] [--channel SPEC]
                [--link SPEC]
                [--deadline T] [--channel-seed S] [--replica-cache N]
-               [--shards N]
+               [--shards N] [--trace-out PATH] [--metrics-out PATH]
+               [--quiet]
   init-config
   theory       [--eta 1e-3] [--p-max 0.1]
   replay       --input run.orbit --n-params D
@@ -49,6 +51,7 @@ COMMANDS:
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv)?;
+    init_logging(&args);
     match args.command.as_str() {
         "run" => cmd_run(&args),
         "quickstart" => cmd_quickstart(&args),
@@ -70,6 +73,54 @@ fn main() -> Result<()> {
             std::process::exit(2);
         }
     }
+}
+
+/// Resolve the CLI logging policy: `--quiet` pins errors-only; otherwise
+/// an explicit `FEEDSIGN_LOG` wins, and the interactive default is `info`
+/// so progress lines stay visible.
+fn init_logging(args: &Args) {
+    use feedsign::obs::log::{set_level, Level};
+    if args.has_flag("quiet") {
+        set_level(Level::Error);
+    } else if std::env::var("FEEDSIGN_LOG")
+        .ok()
+        .and_then(|v| Level::parse(&v))
+        .is_none()
+    {
+        set_level(Level::Info);
+    }
+}
+
+/// Whether any `--trace-out` / `--metrics-out` observability export was
+/// requested (both require tracing enabled before the run starts).
+fn wants_observability(args: &Args) -> bool {
+    args.str("trace-out").is_some() || args.str("metrics-out").is_some()
+}
+
+/// Write the requested observability artifacts for a finished run: the
+/// Chrome-trace/JSONL span file and/or the Prometheus text metrics built
+/// from the run result plus the trace-derived rollups.
+fn write_observability(
+    args: &Args,
+    session: &feedsign::coordinator::Session,
+    result: &metrics::RunResult,
+) -> Result<()> {
+    if let Some(path) = args.str("trace-out") {
+        feedsign::obs::export::write_trace(Path::new(path), session.tracer.events())
+            .with_context(|| format!("writing {path}"))?;
+        feedsign::log_info!(
+            "trace written to {path} ({} events)",
+            session.tracer.events().len()
+        );
+    }
+    if let Some(path) = args.str("metrics-out") {
+        let mut reg = feedsign::obs::Registry::default();
+        reg.absorb_result(result);
+        reg.absorb_events(session.tracer.events());
+        std::fs::write(path, reg.to_prometheus()).with_context(|| format!("writing {path}"))?;
+        feedsign::log_info!("metrics written to {path}");
+    }
+    Ok(())
 }
 
 /// Apply the round-engine CLI overrides (`--threads`, `--participation`,
@@ -113,19 +164,27 @@ fn apply_engine_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()>
 fn cmd_run(args: &Args) -> Result<()> {
     let mut cfg = ExperimentConfig::load(&PathBuf::from(args.req("config")?))?;
     apply_engine_overrides(&mut cfg, args)?;
-    println!("experiment: {}", cfg.name);
+    feedsign::log_info!("experiment: {}", cfg.name);
     let mut session = cfg.build_session()?;
+    if wants_observability(args) {
+        session.enable_tracing();
+    }
     let result = session.run();
     print_result(&result);
     if let Some(path) = args.str("csv") {
         std::fs::write(path, result.to_csv()).with_context(|| format!("writing {path}"))?;
-        println!("curve written to {path}");
+        feedsign::log_info!("curve written to {path}");
     }
     if let Some(path) = args.str("orbit") {
         let bytes = orbit::encode(&session.orbit);
         std::fs::write(path, &bytes).with_context(|| format!("writing {path}"))?;
-        println!("orbit written to {path} ({} bytes for {} steps)", bytes.len(), session.orbit.len());
+        feedsign::log_info!(
+            "orbit written to {path} ({} bytes for {} steps)",
+            bytes.len(),
+            session.orbit.len()
+        );
     }
+    write_observability(args, &session, &result)?;
     Ok(())
 }
 
@@ -134,8 +193,12 @@ fn cmd_quickstart(args: &Args) -> Result<()> {
     cfg.rounds = args.u64_or("rounds", 2000)?;
     apply_engine_overrides(&mut cfg, args)?;
     let mut session = cfg.build_session()?;
+    if wants_observability(args) {
+        session.enable_tracing();
+    }
     let result = session.run();
     print_result(&result);
+    write_observability(args, &session, &result)?;
     Ok(())
 }
 
@@ -212,7 +275,7 @@ fn cmd_dp_tradeoff(args: &Args) -> Result<()> {
 fn cmd_pjrt_info(args: &Args) -> Result<()> {
     let variant = args.str("variant").unwrap_or("tiny");
     let dir = runtime::artifacts_dir();
-    println!("loading variant {variant:?} from {}", dir.display());
+    feedsign::log_info!("loading variant {variant:?} from {}", dir.display());
     let model = runtime::PjrtModel::load(&dir, variant)?;
     println!(
         "platform: {} | params: {} (padded {})",
@@ -232,21 +295,26 @@ fn cmd_pjrt_info(args: &Args) -> Result<()> {
 }
 
 fn print_result(result: &metrics::RunResult) {
-    println!("\n{}: {} rounds in {:.1}s", result.algorithm, result.rounds, result.wall_s);
-    println!(
+    feedsign::log_info!(
+        "\n{}: {} rounds in {:.1}s",
+        result.algorithm,
+        result.rounds,
+        result.wall_s
+    );
+    feedsign::log_info!(
         "final: loss {:.4}, accuracy {:.1}% (best {:.1}%)",
         result.final_loss,
         result.final_acc * 100.0,
         result.best_acc() * 100.0
     );
-    println!(
+    feedsign::log_info!(
         "communication: {} bits up, {} bits down ({} msgs)",
         result.ledger.uplink_bits,
         result.ledger.downlink_bits,
         result.ledger.uplink_msgs + result.ledger.downlink_msgs
     );
     if result.replica.clients > 0 {
-        println!(
+        feedsign::log_info!(
             "replica plane: peak {} B for K={} (dense layout: {} B), \
              {} owned, {} canonical commits",
             result.replica.peak_bytes,
@@ -257,7 +325,7 @@ fn print_result(result: &metrics::RunResult) {
         );
     }
     if result.probe.probes > 0 {
-        println!(
+        feedsign::log_info!(
             "probe batching: {} probes in {} canonical passes \
              (unbatched: {}; {} engine fallbacks)",
             result.probe.probes,
@@ -267,7 +335,7 @@ fn print_result(result: &metrics::RunResult) {
         );
     }
     if result.shard.shards > 0 {
-        println!(
+        feedsign::log_info!(
             "sharded coordinator: {} shards, {} vote merges ({} bits, \
              coordinator-internal), {} rounds planned ahead of stragglers",
             result.shard.shards,
@@ -277,7 +345,7 @@ fn print_result(result: &metrics::RunResult) {
         );
     }
     if result.net != feedsign::net::NetStats::default() {
-        println!(
+        feedsign::log_info!(
             "channel: {} dropped, {} corrupted ({} bits flipped), \
              {} straggler exclusions, {:.1}s virtual wall-clock",
             result.net.dropped_msgs,
@@ -290,7 +358,7 @@ fn print_result(result: &metrics::RunResult) {
     let algo = Algorithm::parse(&result.algorithm);
     if matches!(algo, Some(Algorithm::FeedSign | Algorithm::DpFeedSign { .. })) {
         let lm = feedsign::comm::LinkModel::mobile();
-        println!(
+        feedsign::log_info!(
             "projected comm time on a mobile link: {:.3}s total",
             lm.seconds(&result.ledger)
         );

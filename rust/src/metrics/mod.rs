@@ -3,7 +3,9 @@
 
 use crate::comm::Ledger;
 
-/// One evaluation point along a run.
+/// One evaluation point along a run.  Ledger/engine counters are
+/// cumulative snapshots at the eval round, so the CSV reads as a time
+/// series of everything the run pays, not just what it scores.
 #[derive(Debug, Clone)]
 pub struct RoundRecord {
     pub round: u64,
@@ -11,6 +13,18 @@ pub struct RoundRecord {
     pub eval_acc: f32,
     pub uplink_bits: u64,
     pub downlink_bits: u64,
+    /// wall-clock seconds elapsed since the run started
+    pub wall_s: f64,
+    /// canonical replica commits so far ([`crate::coordinator::ReplicaStats`])
+    pub canonical_commits: u64,
+    /// canonical-buffer passes the probe batcher saved so far
+    pub probe_passes_saved: u64,
+    /// coordinator-internal shard vote-merge traffic so far, bits
+    pub shard_merge_bits: u64,
+    /// uplink messages the impaired channel dropped so far
+    pub net_dropped: u64,
+    /// payload bits the impaired channel flipped so far
+    pub net_flipped: u64,
 }
 
 /// The outcome of one federated run.
@@ -55,13 +69,27 @@ impl RunResult {
         self.records.iter().map(|r| r.eval_loss).fold(self.final_loss, f32::min)
     }
 
-    /// CSV dump: `round,eval_loss,eval_acc,uplink_bits,downlink_bits`.
+    /// CSV dump, one row per eval point; every counter column is the
+    /// cumulative value at that round.
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("round,eval_loss,eval_acc,uplink_bits,downlink_bits\n");
+        let mut s = String::from(
+            "round,eval_loss,eval_acc,uplink_bits,downlink_bits,wall_s,\
+             canonical_commits,probe_passes_saved,shard_merge_bits,net_dropped,net_flipped\n",
+        );
         for r in &self.records {
             s.push_str(&format!(
-                "{},{},{},{},{}\n",
-                r.round, r.eval_loss, r.eval_acc, r.uplink_bits, r.downlink_bits
+                "{},{},{},{},{},{:.3},{},{},{},{},{}\n",
+                r.round,
+                r.eval_loss,
+                r.eval_acc,
+                r.uplink_bits,
+                r.downlink_bits,
+                r.wall_s,
+                r.canonical_commits,
+                r.probe_passes_saved,
+                r.shard_merge_bits,
+                r.net_dropped,
+                r.net_flipped
             ));
         }
         s
@@ -132,6 +160,12 @@ mod tests {
                     eval_acc: a,
                     uplink_bits: i as u64,
                     downlink_bits: i as u64,
+                    wall_s: i as f64 * 0.5,
+                    canonical_commits: i as u64,
+                    probe_passes_saved: 2 * i as u64,
+                    shard_merge_bits: 0,
+                    net_dropped: 0,
+                    net_flipped: 0,
                 })
                 .collect(),
             ledger: Ledger::default(),
@@ -171,6 +205,15 @@ mod tests {
         let csv = run(&[0.1, 0.2]).to_csv();
         assert!(csv.starts_with("round,"));
         assert_eq!(csv.lines().count(), 3);
+        let header = csv.lines().next().unwrap();
+        for col in
+            ["wall_s", "canonical_commits", "probe_passes_saved", "shard_merge_bits", "net_dropped", "net_flipped"]
+        {
+            assert!(header.contains(col), "missing column {col}");
+        }
+        let row = csv.lines().nth(2).unwrap();
+        assert_eq!(row.split(',').count(), header.split(',').count());
+        assert!(row.contains("0.500"), "wall_s snapshot rendered: {row}");
     }
 
     #[test]

@@ -66,6 +66,11 @@ pub const DIR_LATENCY: u32 = 2;
 /// it the serial loop always wins.
 pub const PAR_MIN_LINKS: usize = 64;
 
+/// Display names of the three link archetypes, indexed by
+/// [`LinkProfile::class_index`] — the straggler-attribution label space
+/// the observability plane ([`crate::obs`]) rolls round-gating up by.
+pub const LINK_CLASS_NAMES: [&str; 3] = ["mobile", "wifi", "iot"];
+
 /// How the channel treats payload bits in flight.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ChannelModel {
@@ -161,6 +166,30 @@ impl LinkProfile {
             + jitter_s
             + crate::comm::transfer_seconds(up_bits, self.up_bps)
             + crate::comm::transfer_seconds(down_bits, self.down_bps)
+    }
+
+    /// Which [`LINK_CLASS_NAMES`] archetype this profile belongs to —
+    /// exact matches on the canonical constructors first, then a
+    /// bandwidth-tier fallback for hand-built profiles (sub-Mbps uplinks
+    /// read as iot-class, sub-50-Mbps as mobile, the rest as wifi).
+    /// Attribution metadata only: no engine branch reads it.
+    pub fn class_index(&self) -> usize {
+        if *self == LinkProfile::mobile() {
+            return 0;
+        }
+        if *self == LinkProfile::wifi() {
+            return 1;
+        }
+        if *self == LinkProfile::iot() {
+            return 2;
+        }
+        if !(self.up_bps >= 1e6) {
+            2
+        } else if self.up_bps < 50e6 {
+            0
+        } else {
+            1
+        }
     }
 
     /// Relative *compute*-cost weight of the device class behind this
@@ -302,6 +331,32 @@ pub struct NetStats {
     pub flipped_bits: u64,
 }
 
+/// One [`NetSim::admit`] call's attribution record — who gated the
+/// round, on what link class, and what it cost the virtual clock.  Pure
+/// bookkeeping for the observability plane ([`crate::obs`]): the engine
+/// never reads it back, and it lives outside the [`NetStats`] struct the
+/// parity suites compare.  Every field is a deterministic function of
+/// `(channel_seed, round, plan)`, so the log itself is identical across
+/// worker-thread counts and topologies.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmitSummary {
+    /// round the admission gated
+    pub round: u64,
+    /// planned participants entering the deadline check
+    pub planned: u32,
+    /// participants admitted on time
+    pub kept: u32,
+    /// participants cut as stragglers
+    pub cut: u32,
+    /// slowest *admitted* client — the one whose link the round waited
+    /// for (`-1` when the deadline cut everyone)
+    pub gating_client: i64,
+    /// [`LINK_CLASS_NAMES`] index of the gating client's link class
+    pub gating_class: u32,
+    /// the round's virtual duration, microseconds
+    pub virtual_us: u64,
+}
+
 /// The simulator: configuration + accumulated stats.  One lives in the
 /// synchronous [`crate::coordinator::session::Session`] and one on the
 /// PS side of the threaded [`crate::coordinator::distributed`] topology;
@@ -309,6 +364,11 @@ pub struct NetStats {
 pub struct NetSim {
     pub cfg: NetCfg,
     pub stats: NetStats,
+    /// Whether [`NetSim::admit`] records [`AdmitSummary`] rows (the
+    /// session flips this on when tracing is enabled; off by default so
+    /// untraced runs allocate nothing).
+    pub log_admissions: bool,
+    admit_log: Vec<AdmitSummary>,
 }
 
 /// Positions of Bernoulli(`ber`) successes over `n_bits` trials, via
@@ -368,7 +428,15 @@ fn corrupt_pair(seed: u32, p: f32, flips: &[u64], base: u64) -> (u32, f32) {
 
 impl NetSim {
     pub fn new(cfg: NetCfg) -> Self {
-        NetSim { cfg, stats: NetStats::default() }
+        NetSim { cfg, stats: NetStats::default(), log_admissions: false, admit_log: Vec::new() }
+    }
+
+    /// Drain the accumulated [`AdmitSummary`] rows (empty unless
+    /// [`NetSim::log_admissions`] is set).  The session drains this after
+    /// every plan so lookahead admissions for round `t+1` drawn during
+    /// round `t` still land on their own round number.
+    pub fn take_admit_log(&mut self) -> Vec<AdmitSummary> {
+        std::mem::take(&mut self.admit_log)
     }
 
     /// See [`NetCfg::is_active`].
@@ -598,20 +666,42 @@ impl NetSim {
         let deadline = self.cfg.deadline_s;
         let mut kept = Vec::with_capacity(participants.len());
         let mut round_s = 0.0f64;
-        let mut cut = false;
+        let mut cut = 0u32;
+        let mut gating: i64 = -1;
         for (&id, &lat) in participants.iter().zip(&latencies) {
             if deadline > 0.0 && lat > deadline {
-                cut = true;
+                cut += 1;
                 self.stats.stragglers += 1;
             } else {
-                round_s = round_s.max(lat);
+                // strict `>` keeps the first argmax — a deterministic
+                // tie-break in participant (client-id) order
+                if lat > round_s || gating < 0 {
+                    round_s = round_s.max(lat);
+                    gating = id as i64;
+                }
                 kept.push(id);
             }
         }
-        if cut {
+        if cut > 0 {
             round_s = deadline;
         }
         self.stats.virtual_s += round_s;
+        if self.log_admissions {
+            let gating_class = if gating < 0 {
+                0
+            } else {
+                self.cfg.links.profile(gating as usize).class_index() as u32
+            };
+            self.admit_log.push(AdmitSummary {
+                round,
+                planned: participants.len() as u32,
+                kept: kept.len() as u32,
+                cut,
+                gating_client: gating,
+                gating_class,
+                virtual_us: (round_s * 1e6) as u64,
+            });
+        }
         kept
     }
 }

@@ -1,0 +1,142 @@
+//! Trace exporters: Chrome `trace_event` JSON and JSONL.
+//!
+//! Built on the repo's offline [`crate::util::json::Json`] writer, so
+//! the output is valid by construction (the tests parse it back).
+
+use super::trace::{Event, Phase};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+fn event_args(ev: &Event) -> Json {
+    let mut args = BTreeMap::new();
+    args.insert("round".to_string(), Json::Num(ev.round as f64));
+    args.insert("shard".to_string(), Json::Num(ev.shard as f64));
+    args.insert("client".to_string(), Json::Num(ev.client as f64));
+    args.insert("n1".to_string(), Json::Num(ev.n1 as f64));
+    args.insert("n2".to_string(), Json::Num(ev.n2 as f64));
+    Json::Obj(args)
+}
+
+fn event_name(ev: &Event) -> String {
+    match ev.phase {
+        Phase::RoundGate => format!("round_gate shard={}", ev.shard),
+        Phase::LinkGate => format!(
+            "link_gate class={}",
+            crate::net::LINK_CLASS_NAMES.get(ev.n1 as usize).copied().unwrap_or("unknown")
+        ),
+        p => p.name().to_string(),
+    }
+}
+
+/// Chrome `trace_event` JSON (the object form: `{"traceEvents": [...]}`;
+/// load via `chrome://tracing` or Perfetto).  Complete events
+/// (`"ph": "X"`), timestamps in microseconds since the trace epoch.
+/// Tracks: `pid` 0, `tid` = shard + 1 (0 = coordinator-level events).
+pub fn chrome_trace(events: &[Event]) -> String {
+    let rows: Vec<Json> = events
+        .iter()
+        .map(|ev| {
+            let mut row = BTreeMap::new();
+            row.insert("name".to_string(), Json::Str(event_name(ev)));
+            row.insert("cat".to_string(), Json::Str("feedsign".to_string()));
+            row.insert("ph".to_string(), Json::Str("X".to_string()));
+            row.insert("ts".to_string(), Json::Num(ev.start_us as f64));
+            row.insert("dur".to_string(), Json::Num(ev.dur_us.max(1) as f64));
+            row.insert("pid".to_string(), Json::Num(0.0));
+            row.insert("tid".to_string(), Json::Num((ev.shard + 1) as f64));
+            row.insert("args".to_string(), event_args(ev));
+            Json::Obj(row)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(rows));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(top).to_string_compact()
+}
+
+/// JSONL: one compact object per event, in recording order — the
+/// tooling-friendly form (`--trace-out trace.jsonl`).
+pub fn jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        let mut row = BTreeMap::new();
+        row.insert("phase".to_string(), Json::Str(ev.phase.name().to_string()));
+        row.insert("round".to_string(), Json::Num(ev.round as f64));
+        row.insert("shard".to_string(), Json::Num(ev.shard as f64));
+        row.insert("client".to_string(), Json::Num(ev.client as f64));
+        row.insert("n1".to_string(), Json::Num(ev.n1 as f64));
+        row.insert("n2".to_string(), Json::Num(ev.n2 as f64));
+        row.insert("ts_us".to_string(), Json::Num(ev.start_us as f64));
+        row.insert("dur_us".to_string(), Json::Num(ev.dur_us as f64));
+        out.push_str(&Json::Obj(row).to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a trace to `path`; a `.jsonl` extension selects JSONL,
+/// anything else the Chrome `trace_event` form.
+pub fn write_trace(path: &std::path::Path, events: &[Event]) -> std::io::Result<()> {
+    let text = if path.extension().is_some_and(|e| e == "jsonl") {
+        jsonl(events)
+    } else {
+        chrome_trace(events)
+    };
+    std::fs::write(path, text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Event> {
+        let mut gate = Event::logical(Phase::RoundGate, 1, 2, -1, 0, 0);
+        gate.dur_us = 1234;
+        vec![
+            Event::logical(Phase::Plan, 0, -1, -1, 4, 0),
+            Event::logical(Phase::Commit, 0, -1, 3, 1, 0),
+            gate,
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_named_gate() {
+        let text = chrome_trace(&sample());
+        let v = Json::parse(&text).expect("chrome trace must parse");
+        let rows = v.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+        assert_eq!(rows.len(), 3);
+        let gate = rows
+            .iter()
+            .find(|r| r.get("name").and_then(Json::as_str) == Some("round_gate shard=2"))
+            .expect("gating shard named");
+        assert_eq!(gate.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(gate.get("args").and_then(|a| a.get("shard")).and_then(Json::as_f64), Some(2.0));
+        assert!(gate.get("dur").and_then(Json::as_f64).unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn jsonl_emits_one_parseable_object_per_event() {
+        let text = jsonl(&sample());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in lines {
+            let v = Json::parse(line).expect("each line parses");
+            assert!(v.get("phase").is_some());
+        }
+    }
+
+    #[test]
+    fn write_trace_picks_format_by_extension() {
+        let dir = std::env::temp_dir();
+        let p1 = dir.join("feedsign_obs_test_trace.json");
+        let p2 = dir.join("feedsign_obs_test_trace.jsonl");
+        write_trace(&p1, &sample()).unwrap();
+        write_trace(&p2, &sample()).unwrap();
+        let a = std::fs::read_to_string(&p1).unwrap();
+        let b = std::fs::read_to_string(&p2).unwrap();
+        assert!(a.starts_with('{'));
+        assert_eq!(b.lines().count(), 3);
+        let _ = std::fs::remove_file(p1);
+        let _ = std::fs::remove_file(p2);
+    }
+}

@@ -1,0 +1,109 @@
+//! Leveled logger: the one gate every diagnostic print in library code
+//! goes through, so no library path writes to stdout/stderr
+//! unconditionally.
+//!
+//! Level resolution: an explicit [`set_level`] (the CLI: `info` by
+//! default, `error` under `--quiet`) wins; otherwise `FEEDSIGN_LOG`
+//! (`error | warn | info | debug`); otherwise [`Level::Warn`] — library
+//! consumers see warnings and errors only.
+//!
+//! Routing: `info`/`debug` → stdout (progress), `warn`/`error` → stderr
+//! (diagnostics).  Use the [`crate::log_error!`], [`crate::log_warn!`],
+//! [`crate::log_info!`], [`crate::log_debug!`] macros.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            _ => Level::Debug,
+        }
+    }
+}
+
+const UNSET: u8 = u8::MAX;
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+/// Pin the process log level (the CLI entry point calls this; it
+/// overrides `FEEDSIGN_LOG`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// The active level: explicit > `FEEDSIGN_LOG` > `warn`.
+pub fn level() -> Level {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != UNSET {
+        return Level::from_u8(v);
+    }
+    let resolved = std::env::var("FEEDSIGN_LOG")
+        .ok()
+        .and_then(|v| Level::parse(&v))
+        .unwrap_or(Level::Warn);
+    // cache the env read; a later set_level still wins by overwriting
+    LEVEL.store(resolved as u8, Ordering::Relaxed);
+    resolved
+}
+
+#[inline]
+pub fn enabled(at: Level) -> bool {
+    at <= level()
+}
+
+/// Emit one record (used by the macros; not intended for direct calls).
+pub fn emit(at: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(at) {
+        return;
+    }
+    match at {
+        Level::Error | Level::Warn => eprintln!("{args}"),
+        Level::Info | Level::Debug => println!("{args}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_levels_and_orders_them() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse(" WARN "), Some(Level::Warn));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(Level::Error < Level::Warn && Level::Warn < Level::Info);
+    }
+
+    #[test]
+    fn set_level_gates_enabled() {
+        // the level is process-global; restore what other tests expect
+        let before = level();
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Warn));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Info));
+        set_level(before);
+    }
+}

@@ -1,0 +1,221 @@
+//! Counter / histogram registry with Prometheus text exposition.
+//!
+//! One naming scheme over the stats the run engine already keeps in
+//! ad-hoc structs (`comm::Ledger`, `net::NetStats`,
+//! `coordinator::replica::ReplicaStats`, `engine::ProbeBatchStats`,
+//! `coordinator::shard::ShardStats`) plus rollups derived from the
+//! trace ([`crate::obs::trace`]): phase-duration histograms, per-shard
+//! round-gating counts, per-link-class virtual latency.  The registry
+//! is a *sink* — nothing in the engine reads it back.
+
+use super::trace::{Event, Phase};
+use crate::metrics::RunResult;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Fixed exponential latency buckets (microseconds): 64 µs … ~67 s.
+const BUCKETS_US: [u64; 11] =
+    [64, 256, 1_024, 4_096, 16_384, 65_536, 262_144, 1_048_576, 4_194_304, 16_777_216, 67_108_864];
+
+/// A fixed-bucket histogram (cumulative counts are computed at render).
+#[derive(Debug, Clone, Default)]
+pub struct Hist {
+    counts: [u64; BUCKETS_US.len()],
+    overflow: u64,
+    sum_us: u64,
+    total: u64,
+}
+
+impl Hist {
+    pub fn observe_us(&mut self, us: u64) {
+        match BUCKETS_US.iter().position(|&b| us <= b) {
+            Some(i) => self.counts[i] += 1,
+            None => self.overflow += 1,
+        }
+        self.sum_us += us;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+}
+
+/// The metric sink.  Counter and histogram names may carry inline
+/// Prometheus labels (`name{key="v"}`); families group by the part
+/// before the brace for `# TYPE` lines.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+impl Registry {
+    pub fn inc(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn set(&mut self, name: &str, v: u64) {
+        self.counters.insert(name.to_string(), v);
+    }
+
+    pub fn observe_us(&mut self, name: &str, us: u64) {
+        self.hists.entry(name.to_string()).or_default().observe_us(us);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Absorb a finished run's stats structs — the unified form of the
+    /// reporting path that used to live in five structs and one
+    /// `print_result`.
+    pub fn absorb_result(&mut self, r: &RunResult) {
+        self.set("feedsign_rounds_total", r.rounds);
+        self.set("feedsign_uplink_bits_total", r.ledger.uplink_bits);
+        self.set("feedsign_downlink_bits_total", r.ledger.downlink_bits);
+        self.set("feedsign_uplink_msgs_total", r.ledger.uplink_msgs);
+        self.set("feedsign_downlink_msgs_total", r.ledger.downlink_msgs);
+        self.set("feedsign_wall_ms", (r.wall_s * 1e3) as u64);
+        // net impairment
+        self.set("feedsign_net_flipped_bits_total", r.net.flipped_bits);
+        self.set("feedsign_net_dropped_msgs_total", r.net.dropped_msgs);
+        self.set("feedsign_net_stragglers_total", r.net.stragglers);
+        self.set("feedsign_net_virtual_ms", (r.net.virtual_s * 1e3) as u64);
+        // replica plane
+        self.set("feedsign_replica_canonical_commits_total", r.replica.canonical_commits);
+        self.set("feedsign_replica_snapshots_total", r.replica.snapshots);
+        self.set("feedsign_replica_snapshots_declined_total", r.replica.snapshots_declined);
+        self.set("feedsign_replica_peak_bytes", r.replica.peak_bytes as u64);
+        self.set("feedsign_replica_owned_clients", r.replica.owned_clients as u64);
+        // probe batching
+        self.set("feedsign_probe_probes_total", r.probe.probes);
+        self.set("feedsign_probe_canonical_passes_total", r.probe.canonical_passes);
+        self.set("feedsign_probe_passes_saved_total", r.probe.passes_saved());
+        // sharded plane
+        self.set("feedsign_shards", r.shard.shards as u64);
+        self.set("feedsign_shard_merges_total", r.shard.merges);
+        self.set("feedsign_shard_merge_bits_total", r.shard.merge_bits);
+        self.set("feedsign_shard_rounds_overlapped_total", r.shard.rounds_overlapped);
+    }
+
+    /// Derive duration histograms and straggler-attribution rollups from
+    /// a recorded trace.
+    pub fn absorb_events(&mut self, events: &[Event]) {
+        for ev in events {
+            match ev.phase {
+                Phase::Execute => {
+                    self.observe_us("feedsign_execute_duration_us", ev.dur_us);
+                }
+                Phase::ProbeBatch => {
+                    self.observe_us("feedsign_probe_batch_duration_us", ev.dur_us);
+                }
+                Phase::Eval => {
+                    self.observe_us("feedsign_eval_duration_us", ev.dur_us);
+                }
+                Phase::RoundGate => {
+                    self.inc(&format!("feedsign_round_gated_total{{shard=\"{}\"}}", ev.shard), 1);
+                }
+                Phase::Overlap => {
+                    self.inc("feedsign_overlap_rounds_total", 1);
+                    self.inc("feedsign_overlap_saved_us_total", ev.n1);
+                }
+                Phase::LinkGate => {
+                    self.inc(
+                        &format!(
+                            "feedsign_round_gated_by_link_total{{class=\"{}\"}}",
+                            crate::net::LINK_CLASS_NAMES
+                                .get(ev.n1 as usize)
+                                .copied()
+                                .unwrap_or("unknown")
+                        ),
+                        1,
+                    );
+                    self.observe_us("feedsign_net_round_virtual_us", ev.n2);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Prometheus text exposition (one `# TYPE` per family; histograms
+    /// render cumulative `_bucket` series plus `_sum` / `_count`).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_family = String::new();
+        for (name, v) in &self.counters {
+            let family = name.split('{').next().unwrap_or(name);
+            if family != last_family {
+                let _ = writeln!(out, "# TYPE {family} counter");
+                last_family = family.to_string();
+            }
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, h) in &self.hists {
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            let mut cum = 0u64;
+            for (i, &b) in BUCKETS_US.iter().enumerate() {
+                cum += h.counts[i];
+                let _ = writeln!(out, "{name}_bucket{{le=\"{b}\"}} {cum}");
+            }
+            cum += h.overflow;
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+            let _ = writeln!(out, "{name}_sum {}", h.sum_us);
+            let _ = writeln!(out, "{name}_count {}", h.total);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Event;
+
+    #[test]
+    fn counters_accumulate_and_expose() {
+        let mut r = Registry::default();
+        r.inc("feedsign_probe_probes_total", 2);
+        r.inc("feedsign_probe_probes_total", 3);
+        assert_eq!(r.counter("feedsign_probe_probes_total"), 5);
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE feedsign_probe_probes_total counter"));
+        assert!(text.contains("feedsign_probe_probes_total 5"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let mut r = Registry::default();
+        r.observe_us("x_us", 10); // <= 64
+        r.observe_us("x_us", 1000); // <= 1024
+        r.observe_us("x_us", u64::MAX / 2); // overflow
+        let text = r.to_prometheus();
+        assert!(text.contains("x_us_bucket{le=\"64\"} 1"));
+        assert!(text.contains("x_us_bucket{le=\"1024\"} 2"));
+        assert!(text.contains("x_us_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("x_us_count 3"));
+    }
+
+    #[test]
+    fn labeled_counters_share_one_family_type_line() {
+        let mut r = Registry::default();
+        r.inc("g_total{shard=\"0\"}", 1);
+        r.inc("g_total{shard=\"1\"}", 2);
+        let text = r.to_prometheus();
+        assert_eq!(text.matches("# TYPE g_total counter").count(), 1);
+        assert!(text.contains("g_total{shard=\"1\"} 2"));
+    }
+
+    #[test]
+    fn event_rollups_attribute_gating() {
+        let mut r = Registry::default();
+        let mut gate = Event::logical(Phase::RoundGate, 0, 2, -1, 0, 0);
+        gate.dur_us = 500;
+        let link = Event::logical(Phase::LinkGate, 0, -1, 3, 2, 900);
+        r.absorb_events(&[gate, link]);
+        let text = r.to_prometheus();
+        assert!(text.contains("feedsign_round_gated_total{shard=\"2\"} 1"));
+        assert!(text.contains("feedsign_round_gated_by_link_total{class=\"iot\"} 1"));
+        assert!(text.contains("feedsign_net_round_virtual_us_count 1"));
+    }
+}

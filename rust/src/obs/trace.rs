@@ -1,0 +1,383 @@
+//! Span/event tracer for the round pipeline.
+//!
+//! The recording topology mirrors the engine's ownership: the session
+//! holds one [`Tracer`]; each execute-phase worker records into a
+//! private [`SpanBuf`] it returns with its outcomes (the same pattern
+//! as the uplink sub-ledgers), and the session absorbs the buffers in
+//! shard/bin order.  No locks, no shared mutable state, and — the
+//! determinism contract — no engine branch ever reads what was
+//! recorded.
+
+use super::now_us;
+
+/// Pipeline phase taxonomy.  The discriminant order is the logical sort
+/// rank inside a round: plan before admission before catch-up before
+/// execute before commit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Round plan fixed (participation draw + admission consumed).
+    /// `n1` = planned participants.
+    Plan,
+    /// One `NetSim::admit` deadline pass.  `n1` = kept, `n2` = cut.
+    NetAdmit,
+    /// Virtual-clock straggler attribution for an admitted round:
+    /// `client` = the link that gated it, `n1` = link-class index,
+    /// `n2` = the round's virtual microseconds.  Deterministic (the
+    /// virtual clock is keyed, not wall).
+    LinkGate,
+    /// One stale client's catch-up replay. `n1` = missed rounds,
+    /// `n2` = records applied.
+    Catchup,
+    /// One shard's execute fan-out (`shard` = -1 on the flat path).
+    /// `n1` = shard participants.
+    Execute,
+    /// One worker's grouped probe-batch pass — schedule-dependent
+    /// (worker binning varies with thread count), so excluded from the
+    /// logical sequence.  `n1` = probes served, `n2` = canonical passes.
+    ProbeBatch,
+    /// One client's probe served. `n1` = direction seed.
+    Probe,
+    /// One delivered contribution committed (`client` >= 0; FeedSign:
+    /// `n1` = sign bit; ZO-FedSGD: `n1` = seed, `n2` = projection
+    /// bits), or the round's canonical commit (`client` = -1; FeedSign:
+    /// `n1` = global sign bit, `n2` = voters; ZO-FedSGD: `n2` =
+    /// delivered pairs).
+    Commit,
+    /// One shard's pre-reduced vote merge. `n1` = voters, `n2` = bits.
+    ShardMerge,
+    /// Snapshot-cache admissions observed this round (`n1` = taken,
+    /// `n2` = declined).
+    Snapshot,
+    /// A round-boundary evaluation pass.
+    Eval,
+    /// Wall-clock straggler attribution: `shard` = the shard whose
+    /// execute gated the round.  Timing-derived — excluded from the
+    /// logical sequence.
+    RoundGate,
+    /// Lookahead overlap measurement: `n1` = wall microseconds of round
+    /// t+1 planning hidden under round t's stragglers.  Timing-derived.
+    Overlap,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Plan => "plan",
+            Phase::NetAdmit => "net_admit",
+            Phase::LinkGate => "link_gate",
+            Phase::Catchup => "catchup",
+            Phase::Execute => "execute",
+            Phase::ProbeBatch => "probe_batch",
+            Phase::Probe => "probe",
+            Phase::Commit => "commit",
+            Phase::ShardMerge => "shard_merge",
+            Phase::Snapshot => "snapshot",
+            Phase::Eval => "eval",
+            Phase::RoundGate => "round_gate",
+            Phase::Overlap => "overlap",
+        }
+    }
+
+    /// Phases whose events are pure functions of the run's deterministic
+    /// state — identical across thread counts and topologies.  Worker
+    /// scheduling ([`Phase::ProbeBatch`]) and wall-clock attribution
+    /// ([`Phase::RoundGate`], [`Phase::Overlap`]) are observational only.
+    pub fn is_logical(self) -> bool {
+        !matches!(self, Phase::ProbeBatch | Phase::RoundGate | Phase::Overlap)
+    }
+}
+
+/// One recorded event.  `shard` / `client` use -1 for "not applicable";
+/// `n1` / `n2` are per-phase details (see [`Phase`]); `start_us` /
+/// `dur_us` are wall-clock and never enter the logical sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub phase: Phase,
+    pub round: u64,
+    pub shard: i32,
+    pub client: i64,
+    pub n1: u64,
+    pub n2: u64,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl Event {
+    /// A zero-duration logical event stamped at the current trace clock.
+    pub fn logical(phase: Phase, round: u64, shard: i32, client: i64, n1: u64, n2: u64) -> Event {
+        Event { phase, round, shard, client, n1, n2, start_us: now_us(), dur_us: 0 }
+    }
+
+    /// The total-order key the logical sequence sorts by — everything
+    /// except the wall-clock fields.
+    fn logical_key(&self) -> (u64, Phase, i32, i64, u64, u64) {
+        (self.round, self.phase, self.shard, self.client, self.n1, self.n2)
+    }
+
+    /// Render the timestamp-free form used in sequence comparisons.
+    pub fn logical_repr(&self) -> String {
+        format!(
+            "r{} {} s{} c{} n1={} n2={}",
+            self.round,
+            self.phase.name(),
+            self.shard,
+            self.client,
+            self.n1,
+            self.n2
+        )
+    }
+}
+
+/// A worker-private event buffer: created at fan-out, filled lock-free,
+/// returned with the worker's outcomes and absorbed by the session's
+/// [`Tracer`].  `on = false` (or the `obs` feature off) makes every
+/// `push` a no-op.
+#[derive(Debug, Default)]
+pub struct SpanBuf {
+    on: bool,
+    events: Vec<Event>,
+}
+
+impl SpanBuf {
+    pub fn new(on: bool) -> SpanBuf {
+        SpanBuf { on: cfg!(feature = "obs") && on, events: Vec::new() }
+    }
+
+    #[inline]
+    pub fn on(&self) -> bool {
+        cfg!(feature = "obs") && self.on
+    }
+
+    /// The trace clock, or 0 when recording is off (spares the syscall).
+    #[inline]
+    pub fn clock(&self) -> u64 {
+        if self.on() {
+            now_us()
+        } else {
+            0
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, ev: Event) {
+        if self.on() {
+            self.events.push(ev);
+        }
+    }
+
+    /// Record a completed span that began at `start_us` (from
+    /// [`SpanBuf::clock`]).
+    pub fn span(
+        &mut self,
+        phase: Phase,
+        round: u64,
+        shard: i32,
+        client: i64,
+        n1: u64,
+        n2: u64,
+        start_us: u64,
+    ) {
+        if self.on() {
+            let end = now_us();
+            self.events.push(Event {
+                phase,
+                round,
+                shard,
+                client,
+                n1,
+                n2,
+                start_us,
+                dur_us: end.saturating_sub(start_us),
+            });
+        }
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+}
+
+/// The session-resident trace sink.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    enabled: bool,
+    events: Vec<Event>,
+}
+
+impl Tracer {
+    pub fn new(enabled: bool) -> Tracer {
+        Tracer { enabled, events: Vec::new() }
+    }
+
+    /// Construct from the `FEEDSIGN_TRACE` environment toggle.
+    pub fn from_env() -> Tracer {
+        Tracer::new(super::trace_env())
+    }
+
+    /// Turn recording on mid-lifetime (the CLI's `--trace-out` path).
+    /// Never changes engine behavior — only whether events are kept.
+    pub fn enable(&mut self) {
+        self.enabled = true;
+    }
+
+    /// Whether events are recorded.  A compile-time `false` without the
+    /// `obs` feature: every `if tracer.on()` branch folds away.
+    #[inline]
+    pub fn on(&self) -> bool {
+        cfg!(feature = "obs") && self.enabled
+    }
+
+    /// The trace clock, or 0 when recording is off.
+    #[inline]
+    pub fn clock(&self) -> u64 {
+        if self.on() {
+            now_us()
+        } else {
+            0
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, ev: Event) {
+        if self.on() {
+            self.events.push(ev);
+        }
+    }
+
+    /// Record a completed span that began at `start_us`.
+    pub fn span(
+        &mut self,
+        phase: Phase,
+        round: u64,
+        shard: i32,
+        client: i64,
+        n1: u64,
+        n2: u64,
+        start_us: u64,
+    ) {
+        if self.on() {
+            let end = now_us();
+            self.events.push(Event {
+                phase,
+                round,
+                shard,
+                client,
+                n1,
+                n2,
+                start_us,
+                dur_us: end.saturating_sub(start_us),
+            });
+        }
+    }
+
+    /// Fold a worker buffer in, stamping events that carry no shard with
+    /// the worker's shard (-1 keeps them unstamped).  Absorb order is
+    /// shard/bin order — deterministic for a fixed schedule, and
+    /// irrelevant to the (sorted) logical sequence.
+    pub fn absorb(&mut self, buf: SpanBuf, shard: i32) {
+        if !self.on() {
+            return;
+        }
+        for mut ev in buf.events {
+            if ev.shard < 0 {
+                ev.shard = shard;
+            }
+            self.events.push(ev);
+        }
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The deterministic logical event sequence: every
+    /// [`Phase::is_logical`] event, sorted by its timestamp-free key and
+    /// rendered without wall-clock fields.  Identical across thread
+    /// counts and topologies for the same configured run — the invariant
+    /// `rust/tests/trace_parity.rs` pins.
+    pub fn logical_sequence(&self) -> Vec<String> {
+        self.logical_sequence_of(|_| true)
+    }
+
+    /// [`Tracer::logical_sequence`] restricted to a phase subset (e.g.
+    /// the round-level phases both topologies emit).
+    pub fn logical_sequence_of<F: Fn(Phase) -> bool>(&self, keep: F) -> Vec<String> {
+        let mut evs: Vec<&Event> = self
+            .events
+            .iter()
+            .filter(|e| e.phase.is_logical() && keep(e.phase))
+            .collect();
+        evs.sort_by_key(|e| e.logical_key());
+        evs.into_iter().map(Event::logical_repr).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::new(false);
+        assert!(!t.on());
+        t.push(Event::logical(Phase::Plan, 0, -1, -1, 1, 0));
+        t.span(Phase::Execute, 0, 0, -1, 1, 0, t.clock());
+        assert!(t.is_empty());
+        assert_eq!(t.clock(), 0, "no syscall when off");
+    }
+
+    #[test]
+    #[cfg(feature = "obs")]
+    fn spans_measure_and_absorb_stamps_shards() {
+        let mut t = Tracer::new(true);
+        let t0 = t.clock();
+        t.span(Phase::Execute, 2, 1, -1, 4, 0, t0);
+        assert_eq!(t.events().len(), 1);
+        assert!(t.events()[0].start_us >= t0);
+
+        let mut buf = SpanBuf::new(true);
+        buf.push(Event::logical(Phase::Probe, 2, -1, 7, 11, 0));
+        buf.push(Event { shard: 3, ..Event::logical(Phase::Probe, 2, 3, 8, 12, 0) });
+        t.absorb(buf, 1);
+        assert_eq!(t.events()[1].shard, 1, "unstamped events take the absorb shard");
+        assert_eq!(t.events()[2].shard, 3, "explicit shards are preserved");
+    }
+
+    #[test]
+    #[cfg(feature = "obs")]
+    fn logical_sequence_sorts_and_drops_timing_phases() {
+        let mut t = Tracer::new(true);
+        // recorded out of order, with timing-derived noise interleaved
+        t.push(Event::logical(Phase::Commit, 1, -1, 4, 1, 0));
+        t.push(Event::logical(Phase::RoundGate, 0, 2, -1, 0, 0));
+        t.push(Event::logical(Phase::Plan, 1, -1, -1, 3, 0));
+        t.push(Event::logical(Phase::ProbeBatch, 0, 0, -1, 9, 9));
+        t.push(Event::logical(Phase::Plan, 0, -1, -1, 2, 0));
+        t.push(Event::logical(Phase::Overlap, 1, -1, -1, 55, 0));
+        let seq = t.logical_sequence();
+        assert_eq!(
+            seq,
+            vec![
+                "r0 plan s-1 c-1 n1=2 n2=0",
+                "r1 plan s-1 c-1 n1=3 n2=0",
+                "r1 commit s-1 c4 n1=1 n2=0",
+            ]
+        );
+        let plans_only = t.logical_sequence_of(|p| p == Phase::Plan);
+        assert_eq!(plans_only.len(), 2);
+    }
+
+    #[test]
+    fn phase_sort_rank_follows_pipeline_order() {
+        assert!(Phase::Plan < Phase::NetAdmit);
+        assert!(Phase::NetAdmit < Phase::Catchup);
+        assert!(Phase::Catchup < Phase::Execute);
+        assert!(Phase::Execute < Phase::Probe);
+        assert!(Phase::Probe < Phase::Commit);
+        assert!(Phase::Commit < Phase::ShardMerge);
+    }
+}

@@ -228,7 +228,7 @@ mod tests {
     #[test]
     fn real_manifest_philox_parity() {
         if !artifacts_available() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return;
         }
         let m = Manifest::load(&artifacts_dir().join("manifest.json")).unwrap();
@@ -239,7 +239,7 @@ mod tests {
     #[test]
     fn real_manifest_segments_match_simkit_layout() {
         if !artifacts_available() {
-            eprintln!("skipping: artifacts not built");
+            crate::log_warn!("skipping: artifacts not built");
             return;
         }
         let m = Manifest::load(&artifacts_dir().join("manifest.json")).unwrap();

@@ -13,6 +13,52 @@
 //! Keeping the predicate here makes the uncalibrated path unit-testable.
 
 use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Run-attribution metadata stamped into every `BENCH_<name>.json`: the
+/// git revision the numbers were measured at, the host's thread count,
+/// the effective SIMD dispatch width, and the coordinator shard count in
+/// force.  Keys are stable (`git_rev`, `threads`, `simd_lanes`,
+/// `shards`) so the bench trajectory stays attributable across PRs even
+/// when the writing host changes.
+pub fn run_metadata() -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("git_rev".to_string(), Json::Str(git_rev()));
+    m.insert(
+        "threads".to_string(),
+        Json::Num(std::thread::available_parallelism().map_or(1, |p| p.get()) as f64),
+    );
+    m.insert(
+        "simd_lanes".to_string(),
+        Json::Num(crate::simkit::prng::simd_width().lanes() as f64),
+    );
+    m.insert("shards".to_string(), Json::Num(env_shards() as f64));
+    m
+}
+
+/// The coordinator shard count the environment pins (`FEEDSIGN_SHARDS`),
+/// defaulting to 1 — the same resolution the session/distributed configs
+/// use when TOML/CLI leave shards unset.
+fn env_shards() -> u64 {
+    std::env::var("FEEDSIGN_SHARDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Short git revision of the working tree, `"unknown"` when git (or the
+/// repo) is unavailable — bench artifacts must still write offline.
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
 
 /// Whether a committed baseline's numbers came from a full-scale run.
 /// A missing or non-boolean `calibrated` key means the file predates the
@@ -31,7 +77,6 @@ pub fn regression_gate_armed(base: &Json, scale: f64) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::collections::BTreeMap;
 
     fn baseline(calibrated: Option<Json>) -> Json {
         let mut m = BTreeMap::new();
@@ -69,5 +114,26 @@ mod tests {
         assert!(!regression_gate_armed(&cal, 0.1));
         assert!(!regression_gate_armed(&cal, 0.999));
         assert!(!regression_gate_armed(&cal, f64::NAN));
+    }
+
+    #[test]
+    fn run_metadata_has_stable_keys_and_types() {
+        let m = run_metadata();
+        for key in ["git_rev", "threads", "simd_lanes", "shards"] {
+            assert!(m.contains_key(key), "missing {key}");
+        }
+        assert!(matches!(m["git_rev"], Json::Str(_)));
+        let threads = m["threads"].as_f64().unwrap();
+        assert!(threads >= 1.0);
+        let lanes = m["simd_lanes"].as_f64().unwrap();
+        assert!([1.0, 4.0, 8.0, 16.0].contains(&lanes), "lanes {lanes}");
+        assert!(m["shards"].as_f64().unwrap() >= 1.0);
+        // git_rev is a short hex hash or the offline fallback
+        if let Json::Str(rev) = &m["git_rev"] {
+            assert!(
+                rev == "unknown" || rev.chars().all(|c| c.is_ascii_hexdigit()),
+                "unexpected rev {rev:?}"
+            );
+        }
     }
 }

@@ -60,7 +60,7 @@ pub fn check(name: &str, mut property: impl FnMut(&mut Gen)) {
             property(&mut g);
         }));
         if let Err(payload) = result {
-            eprintln!("property {name:?} failed at case {case} (Gen seed {seed:#x})");
+            crate::log_warn!("property {name:?} failed at case {case} (Gen seed {seed:#x})");
             std::panic::resume_unwind(payload);
         }
     }

@@ -1,0 +1,265 @@
+//! Deterministic-tracing parity: the observability plane must observe,
+//! never steer.
+//!
+//! The contracts, per `obs::trace`'s determinism rules:
+//!
+//! 1. **Logical-sequence invariance** — the timestamp-free logical event
+//!    sequence (every [`Phase::is_logical`] phase, sorted) is identical
+//!    across worker thread counts {1, 3, 8}, for both the flat and the
+//!    sharded engine, under partial participation, a bit-flip channel
+//!    and deadline stragglers all at once.  Wall-clock attribution
+//!    (`RoundGate` / `Overlap`) and worker binning (`ProbeBatch`) are
+//!    excluded by construction.
+//! 2. **Zero observer effect** — a traced run is bit-identical to an
+//!    untraced run: replicas, ledger, impairment trace, orbit, votes.
+//!    Timing is recorded but never fed back into control flow.
+//! 3. **Cross-topology agreement** — the synchronous session and the
+//!    threaded distributed topology emit the same round-level sequence
+//!    (`Plan` / `NetAdmit` / `Commit`) for the same configured run.
+//! 4. **Straggler attribution** — a sharded impaired run names the
+//!    gating shard and link class, measures lookahead overlap, exports
+//!    a parseable Chrome trace, and rolls up into the registry.
+
+use feedsign::coordinator::catchup::CatchupCfg;
+use feedsign::coordinator::distributed::{run_feedsign_with, DistClient, DistCfg};
+use feedsign::coordinator::participation::ParticipationCfg;
+use feedsign::coordinator::{Algorithm, Attack, Client, Session, SessionCfg};
+use feedsign::data::partition::{split, Partition};
+use feedsign::data::vision::{generate, SYNTH_CIFAR10};
+use feedsign::data::Dataset;
+use feedsign::engine::NativeEngine;
+use feedsign::net::{ChannelModel, LinkAssignment, NetCfg};
+use feedsign::simkit::nn::LinearProbe;
+use feedsign::simkit::prng::Rng;
+#[cfg(feature = "obs")]
+use feedsign::obs::{Phase, Registry};
+#[cfg(feature = "obs")]
+use feedsign::util::json::Json;
+
+const ROUNDS: u64 = 30;
+const K: usize = 7;
+
+fn bits(w: &[f32]) -> Vec<u32> {
+    w.iter().map(|v| v.to_bits()).collect()
+}
+
+/// The impaired regime every case runs under: partial participation, a
+/// bit-flip channel over heterogeneous links, and a round deadline that
+/// cuts stragglers at plan time — the setting where tracing has the
+/// most state to observe and the most ways to perturb it.
+fn impaired_net() -> NetCfg {
+    NetCfg {
+        channel: ChannelModel::BitFlip { ber: 0.05 },
+        links: LinkAssignment::parse("mixed").unwrap(),
+        deadline_s: 0.1,
+        channel_seed: 5,
+    }
+}
+
+/// Session with `shards` and `threads` pinned at construction — explicit
+/// values are env-proof, so the `FEEDSIGN_SHARDS` CI leg cannot change
+/// what these tests compare.
+fn build(algo: Algorithm, shards: usize, threads: usize) -> Session {
+    let train: Dataset = generate(&SYNTH_CIFAR10, 400, 0);
+    let test: Dataset = generate(&SYNTH_CIFAR10, 150, 1);
+    let data_shards = split(&train, K, Partition::Iid, 0);
+    let clients: Vec<Client> = data_shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            Client::new(id, Box::new(NativeEngine::new(LinearProbe::new(128, 10))), shard, 11)
+        })
+        .collect();
+    let cfg = SessionCfg {
+        algorithm: algo,
+        rounds: ROUNDS,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 16,
+        eval_every: 0,
+        participation: ParticipationCfg::Fraction(0.6),
+        catchup: CatchupCfg::Replay,
+        net: impaired_net(),
+        threads,
+        shards,
+        seed: 11,
+        ..Default::default()
+    };
+    Session::new(cfg, clients, train, test)
+}
+
+/// Enable tracing (before the first round — admission logging follows
+/// the tracer), run to completion, rejoin stragglers.
+fn traced(mut s: Session) -> Session {
+    s.enable_tracing();
+    run_to_end(s)
+}
+
+fn run_to_end(mut s: Session) -> Session {
+    for t in 0..ROUNDS {
+        s.step(t);
+    }
+    s.catch_up_all();
+    s
+}
+
+fn dist_clients(train: &Dataset) -> Vec<DistClient> {
+    let shards = split(train, K, Partition::Iid, 0);
+    shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            let engine: Box<dyn feedsign::engine::Engine> =
+                Box::new(NativeEngine::new(LinearProbe::new(128, 10)));
+            let w = engine.init_params(11);
+            DistClient {
+                engine,
+                w,
+                shard,
+                attack: Attack::None,
+                rng: Rng::new(11 ^ 0xC11E_17, id as u32 + 1),
+            }
+        })
+        .collect()
+}
+
+fn dist_cfg(shards: usize) -> DistCfg {
+    DistCfg {
+        rounds: ROUNDS,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 16,
+        participation: ParticipationCfg::Fraction(0.6),
+        catchup: CatchupCfg::Replay,
+        net: impaired_net(),
+        seed: 11,
+        seed_pool: 0,
+        shards,
+    }
+}
+
+#[test]
+#[cfg(feature = "obs")]
+fn logical_sequence_is_thread_count_invariant() {
+    for algo in [Algorithm::FeedSign, Algorithm::ZoFedSgd] {
+        for shards in [0usize, 4] {
+            let base = traced(build(algo, shards, 1));
+            let base_seq = base.tracer.logical_sequence();
+            assert!(!base_seq.is_empty(), "{algo:?}/shards={shards}: no logical events");
+            // spot-check the taxonomy the sequence must carry
+            assert!(base_seq.iter().any(|l| l.contains(" plan ")), "plans traced");
+            assert!(base_seq.iter().any(|l| l.contains(" probe ")), "probes traced");
+            assert!(base_seq.iter().any(|l| l.contains(" commit ")), "commits traced");
+            assert!(base_seq.iter().any(|l| l.contains(" net_admit ")), "admissions traced");
+            if shards > 0 {
+                assert!(base_seq.iter().any(|l| l.contains(" shard_merge ")), "merges traced");
+            }
+            for threads in [3usize, 8] {
+                let s = traced(build(algo, shards, threads));
+                assert_eq!(
+                    base_seq,
+                    s.tracer.logical_sequence(),
+                    "{algo:?}/shards={shards}/threads={threads}: logical sequence diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tracing_never_changes_the_bits() {
+    // sync topology: a traced session vs an untraced session of the same
+    // impaired sharded run — the engine must not read what was recorded
+    let plain = run_to_end(build(Algorithm::FeedSign, 4, 3));
+    let tr = traced(build(Algorithm::FeedSign, 4, 3));
+    if !feedsign::obs::trace_env() {
+        // (under the FEEDSIGN_TRACE=1 CI leg both sessions trace)
+        assert!(plain.tracer.is_empty(), "untraced session must record nothing");
+    }
+    #[cfg(feature = "obs")]
+    assert!(!tr.tracer.is_empty(), "traced session must record");
+    for id in 0..K {
+        assert_eq!(
+            bits(&plain.replica(id)),
+            bits(&tr.replica(id)),
+            "client {id}: replica diverged under tracing"
+        );
+    }
+    assert_eq!(plain.ledger.uplink_bits, tr.ledger.uplink_bits, "uplink bits");
+    assert_eq!(plain.ledger.downlink_bits, tr.ledger.downlink_bits, "downlink bits");
+    assert_eq!(plain.net.stats, tr.net.stats, "impairment trace diverged under tracing");
+    assert_eq!(
+        feedsign::orbit::encode(&plain.orbit),
+        feedsign::orbit::encode(&tr.orbit),
+        "orbit bytes diverged under tracing"
+    );
+
+    // distributed topology: tracing chosen by parameter, same contract
+    let train: Dataset = generate(&SYNTH_CIFAR10, 400, 0);
+    let off = run_feedsign_with(dist_clients(&train), train.clone(), dist_cfg(4), false);
+    let on = run_feedsign_with(dist_clients(&train), train.clone(), dist_cfg(4), true);
+    assert!(off.trace.is_empty(), "trace=false must record nothing");
+    for (id, w) in off.finals.iter().enumerate() {
+        assert_eq!(bits(w), bits(&on.finals[id]), "dist client {id}: tracing drifted");
+    }
+    assert_eq!(off.ledger.uplink_bits, on.ledger.uplink_bits);
+    assert_eq!(off.ledger.downlink_bits, on.ledger.downlink_bits);
+    assert_eq!(off.net, on.net, "dist impairment trace diverged under tracing");
+    assert_eq!(off.votes_per_round, on.votes_per_round, "delivered votes diverged");
+}
+
+#[test]
+#[cfg(feature = "obs")]
+fn both_topologies_emit_identical_round_level_sequences() {
+    // the phases both topologies define identically: the plan fixed, the
+    // deadline admission, the delivered per-voter commits and the
+    // round's canonical commit
+    let round_level = |p: Phase| matches!(p, Phase::Plan | Phase::NetAdmit | Phase::Commit);
+    let train: Dataset = generate(&SYNTH_CIFAR10, 400, 0);
+    for shards in [0usize, 4] {
+        let threads = if shards == 0 { 1 } else { 4 };
+        let sync = traced(build(Algorithm::FeedSign, shards, threads));
+        let dist = run_feedsign_with(dist_clients(&train), train.clone(), dist_cfg(shards), true);
+        let a = sync.tracer.logical_sequence_of(round_level);
+        let b = dist.trace.logical_sequence_of(round_level);
+        assert!(!a.is_empty(), "shards={shards}: no round-level events");
+        assert_eq!(a, b, "shards={shards}: topologies disagree on round-level phases");
+    }
+}
+
+#[test]
+#[cfg(feature = "obs")]
+fn trace_export_and_registry_attribute_stragglers() {
+    let s = traced(build(Algorithm::FeedSign, 4, 4));
+    let events = s.tracer.events();
+    let gate = events
+        .iter()
+        .find(|e| e.phase == Phase::RoundGate)
+        .expect("sharded run records round gates");
+    assert!(gate.shard >= 0, "the gating shard is named");
+    assert!(events.iter().any(|e| e.phase == Phase::Overlap), "lookahead overlap is measured");
+    assert!(events.iter().any(|e| e.phase == Phase::LinkGate), "link-class attribution recorded");
+
+    // chrome trace parses back and carries the named gate
+    let text = feedsign::obs::export::chrome_trace(events);
+    let v = Json::parse(&text).expect("chrome trace parses");
+    let rows = v.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert_eq!(rows.len(), events.len());
+    let name = format!("round_gate shard={}", gate.shard);
+    assert!(
+        rows.iter().any(|r| r.get("name").and_then(Json::as_str) == Some(name.as_str())),
+        "gate track present in the chrome trace"
+    );
+
+    // registry rollups: per-shard gating and per-link-class counters
+    let mut reg = Registry::default();
+    reg.absorb_events(events);
+    let prom = reg.to_prometheus();
+    assert!(prom.contains("feedsign_round_gated_total{shard=\""), "per-shard gating rollup");
+    assert!(
+        prom.contains("feedsign_round_gated_by_link_total{class=\""),
+        "per-link-class gating rollup"
+    );
+    assert!(prom.contains("feedsign_net_round_virtual_us_count"), "virtual latency histogram");
+    assert!(prom.contains("feedsign_execute_duration_us_count"), "execute duration histogram");
+}
