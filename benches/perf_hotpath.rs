@@ -334,6 +334,72 @@ fn main() {
     bj.metric("probe_unbatched_passes", ps.unbatched_passes() as f64);
     bj.metric("probe_pass_reduction", reduction);
 
+    // fused commit+probe sweep (the tiled parameter plane): one
+    // read-modify-write walk of the canonical applies the round-t commit
+    // AND renders both round-t+1 probe views, where the flat engine paid
+    // 1 + views separate full-buffer passes.  Noise work is identical on
+    // both sides (same Philox streams); the win is memory traffic — the
+    // canonical tile stays cache-resident across all three applications.
+    println!("\n== fused commit+probe sweep (1 pass vs 1+views passes) ==");
+    let serial3 = prng::serial_zone();
+    let tile = prng::tile_elems();
+    let mut sweep_speedup_full = 0.0f64;
+    for (dn, name, iters) in [(1usize << 20, "1m", 10u32), (1 << 24, "16m", 3)] {
+        let mut canon_fused = prng::normals_vec(11, dn);
+        let mut canon_multi = canon_fused.clone();
+        let (mut plus, mut minus) = (vec![0.0f32; dn], vec![0.0f32; dn]);
+        let (mut plus2, mut minus2) = (vec![0.0f32; dn], vec![0.0f32; dn]);
+        let fused_t = bench(&format!("fused sweep {name} (commit + 2 views, 1 pass)"), iters, || {
+            let mut outs = [plus.as_mut_slice(), minus.as_mut_slice()];
+            zo::fused_commit_probe_threads(
+                &mut canon_fused,
+                &[(9, 1e-3)],
+                &[(10, 1e-3), (10, -1e-3)],
+                &mut outs,
+                tile,
+                1,
+            );
+        });
+        let multi_t = bench(&format!("multipass {name} (commit, +view, -view)"), iters, || {
+            zo::perturb_in_place_threads(&mut canon_multi, 9, -1e-3, 1);
+            zo::axpy_into_threads(&canon_multi, &mut plus2, 10, 1e-3, 1);
+            zo::axpy_into_threads(&canon_multi, &mut minus2, 10, -1e-3, 1);
+        });
+        assert!(
+            canon_fused.iter().zip(&canon_multi).all(|(a, b)| a.to_bits() == b.to_bits())
+                && plus.iter().zip(&plus2).all(|(a, b)| a.to_bits() == b.to_bits())
+                && minus.iter().zip(&minus2).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "fused sweep must be bit-identical to the multipass reference"
+        );
+        let speedup = multi_t / fused_t;
+        println!("  -> fused vs multipass at {name}: {speedup:.2}x (tile {tile})");
+        bj.section(&format!("fused_sweep_{name}"), fused_t * 1e3, Some(dn as f64 / fused_t / 1e6));
+        bj.section(
+            &format!("multipass_sweep_{name}"),
+            multi_t * 1e3,
+            Some(dn as f64 / multi_t / 1e6),
+        );
+        bj.metric(&format!("fused_sweep_speedup_{name}"), speedup);
+        if dn == 1 << 24 {
+            sweep_speedup_full = speedup;
+        }
+    }
+    drop(serial3);
+    // the acceptance target: a full-scale sweep at 16M params (past any
+    // cache) must beat the 3-pass flat path by >=1.3x; smoke runs soft-log
+    if scale() >= 1.0 {
+        v.check(
+            "fused-sweep-1p3x-over-multipass",
+            sweep_speedup_full >= 1.3,
+            format!("{sweep_speedup_full:.2}x at 16M params, tile {tile}"),
+        );
+    } else {
+        println!(
+            "(fused-sweep >=1.3x gate runs at FEEDSIGN_BENCH_SCALE >= 1; \
+             smoke factor: {sweep_speedup_full:.2}x)"
+        );
+    }
+
     // PJRT request path
     if std::env::var("FEEDSIGN_PERF_PJRT").as_deref() != Ok("0")
         && feedsign::runtime::artifacts_available()

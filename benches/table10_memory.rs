@@ -85,8 +85,12 @@ fn main() {
     // canonical d-float buffer, flat in K.
     let mut coord = Table::new(
         "Coordinator replica memory (FeedSign, 10 rounds, measured bytes)",
-        &["dense K*d", "cow peak", "ratio"],
+        &["dense K*d", "cow peak", "ratio", "spill resident"],
     );
+    // tiered canonical store: a 4-page window of 64-float tiles (1 KiB)
+    // forces the 1290-float quickstart canonical out of core every round
+    let spill_tile = 64usize;
+    let spill_budget = 4 * spill_tile * 4;
     for k in [5usize, 25, 200] {
         let mut cfg = feedsign::config::quickstart();
         cfg.clients = k;
@@ -98,12 +102,30 @@ fn main() {
             s.step(t);
         }
         let st = s.replica_stats();
+        // the same run with the canonical store spilling to disk: the
+        // resident window must hold to the byte budget (flat in d) while
+        // the model stream stays bit-identical to the in-RAM run
+        let mut scfg = cfg.clone();
+        scfg.tile = spill_tile;
+        scfg.tile_budget = spill_budget;
+        let mut sp = scfg.build_session().expect("config builds");
+        for t in 0..10 {
+            sp.step(t);
+        }
+        let ts = sp.replica_stats().tile;
+        let bits_match = sp
+            .replicas
+            .canonical()
+            .iter()
+            .zip(s.replicas.canonical())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
         coord.row(
             &format!("K={k}"),
             vec![
                 format!("{}", st.dense_bytes),
                 format!("{}", st.peak_bytes),
                 format!("{:.0}x", st.dense_bytes as f64 / st.peak_bytes.max(1) as f64),
+                format!("{} (<= {})", ts.peak_resident_bytes, spill_budget),
             ],
         );
         v.check(
@@ -114,6 +136,15 @@ fn main() {
                 st.peak_bytes,
                 2 * 4 * st.d,
                 st.dense_bytes
+            ),
+        );
+        v.check(
+            &format!("coordinator-k{k}-spill-flat-memory"),
+            ts.peak_resident_bytes <= spill_budget && ts.spills > 0 && bits_match,
+            format!(
+                "peak resident {} B <= budget {spill_budget} B ({} spills, {} fetches), \
+                 bitwise match with in-RAM run: {bits_match}",
+                ts.peak_resident_bytes, ts.spills, ts.fetches
             ),
         );
     }

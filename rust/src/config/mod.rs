@@ -123,6 +123,19 @@ pub struct ExperimentConfig {
     /// the unsharded engine by construction.  0 keeps the flat path
     /// (synchronized ZO algorithms only).
     pub shards: usize,
+    /// fused-sweep tile in f32 elements (`--tile N`; see
+    /// `coordinator::tile` and `simkit::zo::fused_commit_probe_span`):
+    /// the canonical walk granularity of the single-sweep commit+probe
+    /// kernel.  0 = auto (the `FEEDSIGN_TILE` env override or the
+    /// L2-sized default).  Never affects the computed bits — counter-mode
+    /// noise makes every tiling bit-identical by construction.
+    pub tile: usize,
+    /// tiered canonical store budget in **bytes** (`--tile-budget N`):
+    /// `> 0` caps the resident tile window of the canonical buffer and
+    /// spills cold tiles to an unlinked temp file, so `d` larger than
+    /// the budget runs with flat peak memory; 0 keeps the canonical
+    /// fully in RAM.  Never affects the computed bits.
+    pub tile_budget: usize,
     /// Central FO pretraining steps on a *format-matched but
     /// label-uninformative* dataset before federation begins.  This
     /// manufactures the "pretrained checkpoint" the paper's fine-tuning
@@ -191,6 +204,8 @@ impl ExperimentConfig {
             threads: doc.int("", "threads").unwrap_or(0) as usize,
             replica_cache: doc.int("", "replica_cache").unwrap_or(4) as usize,
             shards: doc.int("", "shards").unwrap_or(0) as usize,
+            tile: doc.int("", "tile").unwrap_or(0) as usize,
+            tile_budget: doc.int("", "tile_budget").unwrap_or(0) as usize,
             seed: doc.int("", "seed").unwrap_or(0) as u32,
             verbose: doc.bool("", "verbose").unwrap_or(false),
         };
@@ -235,6 +250,8 @@ impl ExperimentConfig {
         d.set("", "threads", Value::Int(self.threads as i64));
         d.set("", "replica_cache", Value::Int(self.replica_cache as i64));
         d.set("", "shards", Value::Int(self.shards as i64));
+        d.set("", "tile", Value::Int(self.tile as i64));
+        d.set("", "tile_budget", Value::Int(self.tile_budget as i64));
         d.set("", "pretrain_rounds", Value::Int(self.pretrain_rounds as i64));
         d.set("", "seed", Value::Int(self.seed as i64));
         d.set("", "verbose", Value::Bool(self.verbose));
@@ -492,6 +509,15 @@ impl ExperimentConfig {
             net: self.net_cfg(),
             replica_cache: self.replica_cache,
             shards: self.shards,
+            tile: self.tile,
+            // config 0 = "unset": fall through to the SessionCfg default,
+            // which honours the FEEDSIGN_TILE_BUDGET env override (the CI
+            // spill leg reroutes every session through the tiered store)
+            tile_budget: match self.tile_budget {
+                0 => SessionCfg::default().tile_budget,
+                b => b,
+            },
+            fuse_commits: true,
             seed: self.seed,
             verbose: self.verbose,
         };
@@ -563,6 +589,8 @@ pub fn quickstart() -> ExperimentConfig {
         threads: 0,
         replica_cache: 4,
         shards: 0,
+        tile: 0,
+        tile_budget: 0,
         pretrain_rounds: 0,
         seed: 0,
         verbose: true,
@@ -650,6 +678,8 @@ mod tests {
             threads: 0,
             replica_cache: 4,
             shards: 0,
+            tile: 0,
+            tile_budget: 0,
             pretrain_rounds: 0,
             seed: 1,
             verbose: false,
@@ -844,6 +874,40 @@ mod tests {
         // gating: FO/MeZO have no vote to shard
         cfg.algorithm = "fedsgd".into();
         assert!(cfg.validate().is_err(), "shards are a sign-vote feature");
+    }
+
+    #[test]
+    fn tile_knobs_roundtrip_and_reach_the_session() {
+        let mut cfg = quickstart();
+        cfg.tile = 64;
+        // 2-page resident window: d = 1290 floats needs ~21 tiles of 64,
+        // so a full round must spill
+        cfg.tile_budget = 4 * 64 * 2;
+        cfg.validate().unwrap();
+        let back = ExperimentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.tile, 64);
+        assert_eq!(back.tile_budget, 4 * 64 * 2);
+        // omitted keys default to auto tiling with the in-RAM store
+        let text: String = cfg
+            .to_toml()
+            .lines()
+            .filter(|l| !l.starts_with("tile"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let plain = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(plain.tile, 0);
+        assert_eq!(plain.tile_budget, 0);
+        // the knobs reach the session: a spill-mode round stays
+        // synchronized and holds the resident window to the budget
+        cfg.rounds = 3;
+        let mut s = cfg.build_session().unwrap();
+        assert_eq!(s.cfg.tile, 64);
+        assert_eq!(s.cfg.tile_budget, 4 * 64 * 2);
+        s.step(0);
+        assert!(s.replicas_synchronized());
+        let ts = s.replica_stats().tile;
+        assert!(ts.spills > 0, "d exceeds the window: the sweep must spill");
+        assert!(ts.peak_resident_bytes <= 4 * 64 * 2);
     }
 
     #[test]

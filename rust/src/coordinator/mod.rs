@@ -17,6 +17,10 @@
 //!   client-id shards that own their probe fan-out and pre-reduce sign
 //!   votes to associative `(sum, voters)` pairs, merged hierarchically
 //!   and bit-identical to the barriered engine;
+//! * [`tile`] — the tiered canonical store behind the replica plane's
+//!   spill mode: a file-backed tile pager whose FIFO resident window is
+//!   budget-bounded, driven page-by-page by the fused commit+probe
+//!   sweep so `d` past the budget runs with flat canonical memory;
 //! * [`distributed`] — the threaded leader/worker topology (same protocol,
 //!   real message passing), pinned to the sync session by test.
 //!
@@ -33,6 +37,7 @@ pub mod participation;
 pub mod replica;
 pub mod session;
 pub mod shard;
+pub mod tile;
 
 pub use aggregation::Algorithm;
 pub use byzantine::Attack;
@@ -41,3 +46,4 @@ pub use participation::ParticipationCfg;
 pub use replica::{ReplicaStats, ReplicaStore};
 pub use session::{Client, Session, SessionCfg};
 pub use shard::{ShardMap, ShardPlane, ShardStats};
+pub use tile::{TileStats, TileStore};

@@ -52,6 +52,8 @@
 //! coordinator memory flat in the shard count *and* in `K`.
 
 use crate::coordinator::catchup::CatchupTracker;
+use crate::coordinator::tile::{TileStats, TileStore};
+use crate::simkit::zo;
 
 /// Memory state of one logical client replica.
 #[derive(Debug, Clone, PartialEq)]
@@ -92,6 +94,14 @@ pub struct ReplicaStats {
     pub snapshots_declined: u64,
     /// What `K` dense replicas would cost: `4·K·d` bytes.
     pub dense_bytes: usize,
+    /// Tiered-store (spill-mode) accounting — all zeros when spill is
+    /// off.  In spill mode the authoritative canonical bits live in the
+    /// file-backed [`TileStore`] and `tile.peak_resident_bytes` (≤ the
+    /// configured budget for any `d`) is the canonical-store memory
+    /// claim; [`Self::current_bytes`]/[`Self::peak_bytes`] keep counting
+    /// the transient working surfaces (read mirror, owned, cache) the
+    /// flat engine also pays.
+    pub tile: TileStats,
 }
 
 /// The copy-on-write shared parameter store.  See the module docs for
@@ -121,6 +131,14 @@ pub struct ReplicaStore {
     canonical_commits: u64,
     snapshots: u64,
     snapshots_declined: u64,
+    /// Spill mode: the authoritative canonical bits live in this
+    /// file-backed tile pager, and `canonical` doubles as the
+    /// always-fresh read mirror (every commit verb refreshes it — the
+    /// fused sweep mirrors each committed tile in the same pass, the
+    /// closure verbs write the mirror back through
+    /// [`TileStore::write_from`]), so every `&self` read path is
+    /// untouched by the mode.
+    tiled: Option<TileStore>,
 }
 
 impl ReplicaStore {
@@ -144,9 +162,27 @@ impl ReplicaStore {
             canonical_commits: 0,
             snapshots: 0,
             snapshots_declined: 0,
+            tiled: None,
         };
         store.account();
         store
+    }
+
+    /// Switch the canonical store to spill mode: the current canonical
+    /// bits seed a file-backed [`TileStore`] paged in `tile`-element
+    /// tiles with at most `budget_bytes` of resident pages, and the
+    /// in-RAM buffer becomes the read mirror.  Purely a memory policy —
+    /// every commit verb and read path produces the same bits either
+    /// way (pinned by `tile_parity.rs` and the `table10_memory` spill
+    /// column).
+    pub fn enable_spill(&mut self, tile: usize, budget_bytes: usize) {
+        assert!(self.tiled.is_none(), "spill mode already enabled");
+        self.tiled = Some(TileStore::new(&self.canonical, tile, budget_bytes));
+    }
+
+    /// Whether the canonical store is in spill mode.
+    pub fn is_spill(&self) -> bool {
+        self.tiled.is_some()
     }
 
     pub fn d(&self) -> usize {
@@ -283,6 +319,9 @@ impl ReplicaStore {
     pub fn advance_all(&mut self, round: u64, mut apply: impl FnMut(&mut [f32])) {
         assert!(round >= self.head, "rounds must commit in order");
         apply(&mut self.canonical);
+        if let Some(store) = &mut self.tiled {
+            store.write_from(&self.canonical);
+        }
         self.canonical_commits += 1;
         for state in &mut self.states {
             if let ReplicaState::Owned(w) = state {
@@ -324,6 +363,9 @@ impl ReplicaStore {
             }
         }
         apply(&mut self.canonical);
+        if let Some(store) = &mut self.tiled {
+            store.write_from(&self.canonical);
+        }
         self.canonical_commits += 1;
         self.head = round + 1;
         for &id in recipients {
@@ -331,6 +373,102 @@ impl ReplicaStore {
                 apply(w);
             }
             self.tracker.mark_synced(id, self.head);
+        }
+    }
+
+    /// The fused commit verb: apply round `round`'s aggregated
+    /// update(s) `commits = [(seed, step)]` ([`zo::apply_update`]
+    /// semantics) **and** materialise the next round's staged probe
+    /// views `views = [(seed, ±mu)]` into `outs` in one tiled
+    /// read-modify-write sweep over the canonical store
+    /// ([`zo::fused_commit_probe_threads`]) — replacing the
+    /// `1 + views` full-buffer passes the closure verbs plus a probe-
+    /// time [`zo::axpy_many`] pass would make.  `recipients = None` is
+    /// the [`Self::advance_all`] delivery contract, `Some` the
+    /// [`Self::advance`] one (same snapshot/watermark behaviour,
+    /// including for `step == 0.0` commits).  Owned replicas take plain
+    /// [`zo::apply_update`] per commit — bit-identical to routing
+    /// through `Engine::update`, which is the
+    /// `Engine::fused_commit_exact` gate the session checks before
+    /// calling this.  In spill mode the sweep drives the tile pager
+    /// page by page and mirrors each committed tile into the read
+    /// surface within the same pass.
+    #[allow(clippy::too_many_arguments)]
+    pub fn advance_fused(
+        &mut self,
+        round: u64,
+        recipients: Option<&[usize]>,
+        commits: &[(u32, f32)],
+        views: &[(u32, f32)],
+        outs: &mut [&mut [f32]],
+        tile: usize,
+        threads: usize,
+    ) {
+        assert!(round >= self.head, "rounds must commit in order");
+        if let Some(recipients) = recipients {
+            debug_assert!(recipients.windows(2).all(|p| p[0] < p[1]), "recipients must be sorted");
+            if self.cache_cap > 0 {
+                let mut rec = recipients.iter().copied().peekable();
+                let left_behind = (0..self.states.len()).any(|id| {
+                    while rec.peek().is_some_and(|&r| r < id) {
+                        rec.next();
+                    }
+                    let hears = rec.peek() == Some(&id);
+                    !hears && matches!(self.states[id], ReplicaState::Shared) && self.is_current(id)
+                });
+                if left_behind {
+                    if self.admit_snapshots {
+                        self.snapshot(round);
+                    } else {
+                        self.snapshots_declined += 1;
+                    }
+                }
+            }
+        }
+        match &mut self.tiled {
+            Some(store) => {
+                let canonical = &mut self.canonical;
+                store.sweep_mut(|at, page| {
+                    let mut outs_t: Vec<&mut [f32]> =
+                        outs.iter_mut().map(|o| &mut o[at..at + page.len()]).collect();
+                    zo::fused_commit_probe_span(page, commits, views, &mut outs_t, at, tile);
+                    canonical[at..at + page.len()].copy_from_slice(page);
+                });
+            }
+            None => zo::fused_commit_probe_threads(
+                &mut self.canonical,
+                commits,
+                views,
+                outs,
+                tile,
+                threads,
+            ),
+        }
+        self.canonical_commits += 1;
+        self.head = round + 1;
+        match recipients {
+            Some(recipients) => {
+                for &id in recipients {
+                    if let ReplicaState::Owned(w) = &mut self.states[id] {
+                        for &(seed, step) in commits {
+                            zo::apply_update(w, seed, step);
+                        }
+                    }
+                    self.tracker.mark_synced(id, self.head);
+                }
+            }
+            None => {
+                for state in &mut self.states {
+                    if let ReplicaState::Owned(w) = state {
+                        for &(seed, step) in commits {
+                            zo::apply_update(w, seed, step);
+                        }
+                    }
+                }
+                for id in 0..self.states.len() {
+                    self.tracker.mark_synced(id, self.head);
+                }
+            }
         }
     }
 
@@ -398,6 +536,7 @@ impl ReplicaStore {
             snapshots: self.snapshots,
             snapshots_declined: self.snapshots_declined,
             dense_bytes: 4 * self.d * self.states.len(),
+            tile: self.tiled.as_ref().map(|t| t.stats()).unwrap_or_default(),
         }
     }
 
@@ -568,6 +707,97 @@ mod tests {
         assert_eq!(s.head(), 2);
         assert!(!s.is_current(0), "catch-up-on no-ops move only the head");
         assert_eq!(s.stats().canonical_commits, 0);
+    }
+
+    #[test]
+    fn advance_fused_matches_closure_verbs_bitwise() {
+        // fused commit (flat mode) vs the classic closure verbs: same
+        // canonical bits, same owned bits, same watermarks/counters —
+        // and the staged views equal a probe-time axpy pass
+        let d = 1037;
+        let init = crate::simkit::prng::normals_vec(4, d);
+        let mut classic = ReplicaStore::new(init.clone(), 3, 4);
+        let mut fused = ReplicaStore::new(init, 3, 4);
+        classic.set_owned(2, vec![0.5; d]);
+        fused.set_owned(2, vec![0.5; d]);
+        let mu = 1e-3f32;
+        for t in 0..6u64 {
+            let seed = crate::simkit::prng::round_direction_seed(t);
+            let next = crate::simkit::prng::round_direction_seed(t + 1);
+            let step = if t == 3 { 0.0 } else { 2e-3 };
+            let recipients: &[usize] = if t % 2 == 0 { &[0, 1, 2] } else { &[0, 2] };
+            classic.advance(t, recipients, |w| zo::apply_update(w, seed, step));
+            let mut plus = vec![0.0f32; d];
+            let mut minus = vec![0.0f32; d];
+            {
+                let mut outs: Vec<&mut [f32]> = vec![&mut plus, &mut minus];
+                fused.advance_fused(
+                    t,
+                    Some(recipients),
+                    &[(seed, step)],
+                    &[(next, mu), (next, -mu)],
+                    &mut outs,
+                    64,
+                    2,
+                );
+            }
+            assert_eq!(classic.canonical(), fused.canonical(), "round {t}");
+            assert_eq!(classic.eval_view(2), fused.eval_view(2), "owned, round {t}");
+            // the staged views are exactly what a probe-time pass makes
+            let mut expect = vec![0.0f32; d];
+            zo::axpy_into(fused.canonical(), &mut expect, next, mu);
+            assert_eq!(plus, expect, "staged +mu view, round {t}");
+            zo::axpy_into(fused.canonical(), &mut expect, next, -mu);
+            assert_eq!(minus, expect, "staged -mu view, round {t}");
+        }
+        assert_eq!(classic.head(), fused.head());
+        for id in 0..3 {
+            assert_eq!(classic.watermark(id), fused.watermark(id), "client {id}");
+        }
+        let (cs, fs) = (classic.stats(), fused.stats());
+        assert_eq!(cs.canonical_commits, fs.canonical_commits);
+        assert_eq!(cs.snapshots, fs.snapshots);
+    }
+
+    #[test]
+    fn spill_mode_advances_match_flat_mode_bitwise_under_budget() {
+        let d = 2051;
+        let tile = 128;
+        let init = crate::simkit::prng::normals_vec(9, d);
+        let mut flat = ReplicaStore::new(init.clone(), 2, 0);
+        let mut spill = ReplicaStore::new(init, 2, 0);
+        spill.enable_spill(tile, 4 * tile * 2); // 2 resident pages of 17
+        assert!(spill.is_spill());
+        for t in 0..5u64 {
+            let seed = crate::simkit::prng::round_direction_seed(t);
+            let mut fp = vec![0.0f32; d];
+            let mut fm = vec![0.0f32; d];
+            let mut sp = vec![0.0f32; d];
+            let mut sm = vec![0.0f32; d];
+            let views = [(seed + 1, 1e-3f32), (seed + 1, -1e-3f32)];
+            let mut fouts: Vec<&mut [f32]> = vec![&mut fp, &mut fm];
+            flat.advance_fused(t, None, &[(seed, 2e-3)], &views, &mut fouts, tile, 1);
+            let mut souts: Vec<&mut [f32]> = vec![&mut sp, &mut sm];
+            spill.advance_fused(t, None, &[(seed, 2e-3)], &views, &mut souts, tile, 1);
+            assert_eq!(flat.canonical(), spill.canonical(), "round {t}");
+            assert_eq!(fp, sp, "+mu views, round {t}");
+            assert_eq!(fm, sm, "-mu views, round {t}");
+        }
+        // the closure verb also keeps the pager coherent
+        flat.advance_all(5, |w| w[17] += 1.0);
+        spill.advance_all(5, |w| w[17] += 1.0);
+        let mut p = vec![0.0f32; d];
+        let mut o: Vec<&mut [f32]> = vec![&mut p];
+        spill.advance_fused(6, None, &[(3, 1e-3)], &[(4, 1e-3)], &mut o, tile, 1);
+        let mut q = vec![0.0f32; d];
+        let mut o2: Vec<&mut [f32]> = vec![&mut q];
+        flat.advance_fused(6, None, &[(3, 1e-3)], &[(4, 1e-3)], &mut o2, tile, 1);
+        assert_eq!(flat.canonical(), spill.canonical());
+        assert_eq!(p, q);
+        let st = spill.stats().tile;
+        assert!(st.peak_resident_bytes <= 4 * tile * 2, "window must honour the budget");
+        assert!(st.spills > 0, "a 17-page store under a 2-page window must spill");
+        assert_eq!(flat.stats().tile, super::TileStats::default(), "flat mode reports zeros");
     }
 
     #[test]

@@ -83,7 +83,7 @@ use crate::coordinator::participation::ParticipationCfg;
 use crate::coordinator::replica::{ReplicaState, ReplicaStats, ReplicaStore};
 use crate::coordinator::shard::{ShardPlane, ShardStats, VoteAcc};
 use crate::data::{Batch, Dataset, Shard};
-use crate::engine::{probe_batch, Engine, ProbeBatchStats, ProbeJob};
+use crate::engine::{probe_batch_staged, Engine, ProbeBatchStats, ProbeJob, StagedViews};
 use crate::metrics::{RoundRecord, RunResult};
 use crate::net::{NetCfg, NetSim};
 use crate::obs::{Event, Phase, SpanBuf, Tracer};
@@ -231,6 +231,28 @@ pub struct SessionCfg {
     /// 0 keeps the legacy unsharded path.  Read at [`Session::new`], not
     /// live: the partition is construction-time state.
     pub shards: usize,
+    /// fused-sweep tile size in f32 elements (`--tile` /
+    /// `FEEDSIGN_TILE`): the commit phase walks the canonical store in
+    /// tiles of this many elements, applying the round's update *and*
+    /// materialising the next round's staged `±mu` probe views in one
+    /// read-modify-write pass ([`crate::simkit::zo::fused_commit_probe_threads`]).
+    /// 0 = auto (the L2-sized [`prng::DEFAULT_TILE_ELEMS`], or the
+    /// `FEEDSIGN_TILE` override).  Never affects the computed bits —
+    /// pinned across tile sizes by `rust/tests/tile_parity.rs`.
+    pub tile: usize,
+    /// tiered canonical store budget in **bytes** (`--tile-budget` /
+    /// `FEEDSIGN_TILE_BUDGET`): > 0 spills the canonical parameter
+    /// store to a file-backed tile pager
+    /// ([`crate::coordinator::tile::TileStore`]) whose resident window
+    /// never exceeds this budget, so `d` past the budget runs with flat
+    /// canonical memory.  0 keeps the store fully in RAM.  Bit-identical
+    /// either way (same fused sweep drives both).
+    pub tile_budget: usize,
+    /// single-sweep fused commit (the tiled parameter plane's hot
+    /// path): `false` forces the legacy closure-verb commit plus
+    /// probe-time view passes — the parity reference the tile suites
+    /// compare against.  Same bits either way, by construction.
+    pub fuse_commits: bool,
     pub seed: u32,
     /// print progress to stderr
     pub verbose: bool,
@@ -262,6 +284,17 @@ impl Default for SessionCfg {
                 .ok()
                 .and_then(|v| v.trim().parse().ok())
                 .unwrap_or(0),
+            // 0 = auto: the commit sweep resolves the tile through
+            // `prng::tile_elems()`, which already honours FEEDSIGN_TILE
+            tile: 0,
+            // the env override reroutes every default-constructed
+            // session (the whole test suite) through the file-backed
+            // tile pager — the CI spill-mode leg
+            tile_budget: std::env::var("FEEDSIGN_TILE_BUDGET")
+                .ok()
+                .and_then(|v| v.trim().parse().ok())
+                .unwrap_or(0),
+            fuse_commits: true,
             seed: 0,
             verbose: false,
         }
@@ -295,7 +328,7 @@ struct ProbeOutcome {
 /// and direction seed, plus the ledger its messages meter into.  The
 /// replica view `w` is the grouping key — participants staged against
 /// the *same* buffer (the shared canonical case) are served by one
-/// [`probe_batch`] call.
+/// [`probe_batch_staged`] call.
 struct Staged<'a> {
     rank: usize,
     client: &'a mut Client,
@@ -307,19 +340,28 @@ struct Staged<'a> {
 
 /// Run one worker's probe jobs: stage every client (spec draws —
 /// per-client RNG order is preserved exactly), group staged jobs by
-/// replica-view identity, serve each group through [`probe_batch`]
+/// replica-view identity, serve each group through [`probe_batch_staged`]
 /// (streaming the shared buffer once per view group instead of twice
-/// per client), then finish every client in rank order (noise / attack
-/// draws + uplink metering).  Bit-exact vs the per-client loop: each
-/// client's own RNG stream sees the identical draw sequence
-/// (spec draws, then its finish draws), `Engine::loss` is pure, and the
-/// batched views carry the bits of the unbatched fused AXPYs.
+/// per client — or with **zero** passes when the previous round's fused
+/// commit sweep pre-staged this group's `±mu` views), then finish every
+/// client in rank order (noise / attack draws + uplink metering).
+/// Bit-exact vs the per-client loop: each client's own RNG stream sees
+/// the identical draw sequence (spec draws, then its finish draws),
+/// `Engine::loss` is pure, and the batched views carry the bits of the
+/// unbatched fused AXPYs.
+///
+/// `staged` carries the sweep-staged views keyed by the canonical
+/// buffer's address (as `usize`, so it crosses the worker spawn): only
+/// the group actually probing the canonical buffer may be served from
+/// them — an owned (diverged) replica's views differ from canonical's
+/// even at the same seed, so it always takes the pass path.
 fn run_worker_probes<S, F>(
     round: u64,
     work: Vec<(usize, (&mut Client, &[f32]))>,
     mu: f32,
     spec: &S,
     finish: &F,
+    staged: Option<(usize, &StagedViews)>,
     trace: bool,
 ) -> (Vec<(usize, ProbeOutcome)>, ProbeBatchStats, SpanBuf)
 where
@@ -368,7 +410,8 @@ where
             })
             .collect();
         let g0 = buf.clock();
-        let (ps, group_stats) = probe_batch(w, mu, &mut jobs);
+        let sv = staged.and_then(|(canon, sv)| (w.as_ptr() as usize == canon).then_some(sv));
+        let (ps, group_stats) = probe_batch_staged(w, mu, &mut jobs, sv);
         drop(jobs);
         stats.merge(&group_stats);
         buf.span(
@@ -432,8 +475,10 @@ fn pack_bins(costs: &[u64], bins: usize) -> Vec<Vec<usize>> {
 /// participant order).  Every synced participant's replica view resolves
 /// to the one shared canonical buffer, so workers share it by reference
 /// — no per-client copies — and each worker's clients are served by
-/// grouped [`probe_batch`] calls that stream that buffer once per view
-/// group instead of twice per client ([`run_worker_probes`]).  Outcomes
+/// grouped [`probe_batch_staged`] calls that stream that buffer once per
+/// view group instead of twice per client ([`run_worker_probes`]), or
+/// from the previous commit sweep's pre-staged views at zero passes.
+/// Outcomes
 /// return in client-id order regardless of worker interleaving or
 /// assignment, which is what makes the commit phase bit-identical to the
 /// sequential baseline; the returned [`ProbeBatchStats`] (summed over
@@ -453,6 +498,7 @@ fn execute_probes<S, F>(
     mu: f32,
     spec: S,
     finish: F,
+    staged: Option<&StagedViews>,
     id_base: usize,
     trace: bool,
 ) -> (Vec<ProbeOutcome>, ProbeBatchStats, SpanBuf)
@@ -461,6 +507,9 @@ where
     F: Fn(&mut Client, u32, f32, &mut Ledger) -> Contribution + Sync,
 {
     debug_assert_eq!(costs.len(), plan.participants.len());
+    // key the staged views by the canonical buffer's address so workers
+    // can tell the canonical view group from an owned replica's
+    let staged = staged.map(|s| (replicas.canonical().as_ptr() as usize, s));
     let mut selected: Vec<(&mut Client, &[f32])> = Vec::with_capacity(plan.participants.len());
     {
         let mut want = plan.participants.iter().copied().peekable();
@@ -487,7 +536,8 @@ where
         let _serial = pin_serial.then(prng::serial_zone);
         let work: Vec<(usize, (&mut Client, &[f32]))> =
             selected.into_iter().enumerate().collect();
-        let (mut ranked, stats, buf) = run_worker_probes(round, work, mu, &spec, &finish, trace);
+        let (mut ranked, stats, buf) =
+            run_worker_probes(round, work, mu, &spec, &finish, staged, trace);
         ranked.sort_by_key(|(rank, _)| *rank);
         return (ranked.into_iter().map(|(_, o)| o).collect(), stats, buf);
     }
@@ -512,7 +562,7 @@ where
                 // client-level parallelism is the outer fan-out; keep the
                 // per-vector noise ops sequential inside each worker
                 let _serial = prng::serial_zone();
-                run_worker_probes(round, work, mu, spec, finish, trace)
+                run_worker_probes(round, work, mu, spec, finish, staged, trace)
             }));
         }
         for h in handles {
@@ -611,6 +661,7 @@ fn execute_sharded<S, F>(
     mu: f32,
     spec: S,
     finish: F,
+    staged: Option<&StagedViews>,
     lookahead: Option<Lookahead<'_>>,
     tracer: &mut Tracer,
 ) -> (Vec<ProbeOutcome>, ProbeBatchStats, Option<RoundPlan>)
@@ -681,6 +732,7 @@ where
                 mu,
                 &spec,
                 &finish,
+                staged,
                 base,
                 trace,
             );
@@ -732,6 +784,7 @@ where
                         mu,
                         spec,
                         finish,
+                        staged,
                         base,
                         trace,
                     );
@@ -849,6 +902,15 @@ pub struct Session {
     /// execute (round `t+1`, planned while round `t`'s stragglers
     /// drained); consumed by the next in-order [`Session::step`].
     pending_plan: Option<RoundPlan>,
+    /// `±mu` probe views staged by the previous round's fused commit
+    /// sweep for the *next* round's announced direction
+    /// ([`StagedViews`]) — session-owned scratch, deliberately outside
+    /// the replica plane's byte accounting (it is a transient working
+    /// surface like the probe views themselves, not canonical state).
+    /// Consumed (and revalidated against the round/seed/mu actually
+    /// planned) at the next execute; a mismatch falls back to the
+    /// classic probe-time pass.
+    staged: Option<StagedViews>,
     dp_rng: Rng,
     eval_rng: Rng,
     part_rng: Rng,
@@ -924,6 +986,14 @@ impl Session {
                 replicas.set_owned(id, w);
             }
         }
+        if cfg.tile_budget > 0 {
+            // tiered canonical store: the authoritative parameter bits
+            // move to the file-backed tile pager; every commit keeps the
+            // in-RAM read mirror coherent, so the probe/eval read paths
+            // are unchanged
+            let tile = if cfg.tile == 0 { prng::tile_elems() } else { cfg.tile };
+            replicas.enable_spill(tile, cfg.tile_budget);
+        }
         let mut orbit = Orbit::new(cfg.algorithm.name(), cfg.seed, cfg.eta);
         let pool = (cfg.seed_pool >= 2).then(|| SeedPool::derive(cfg.seed, cfg.seed_pool));
         if let Some(p) = &pool {
@@ -953,6 +1023,7 @@ impl Session {
             tracer,
             shard_plane,
             pending_plan: None,
+            staged: None,
             dp_rng,
             eval_rng,
             part_rng,
@@ -1505,6 +1576,16 @@ impl Session {
         let pool_size = self.clients.len();
         let d = self.replicas.d();
         let pool_index_bits = self.pool.as_ref().map(SeedPool::index_bits);
+        // views pre-staged by the previous round's fused commit sweep
+        // serve this round's canonical-buffer probe group with zero
+        // passes — but only if they were staged for exactly this
+        // (round, seed, mu); anything stale (a no-op round intervened,
+        // mu was mutated mid-run) is dropped and the group takes the
+        // classic probe-time pass
+        let staged_now = self
+            .staged
+            .take()
+            .filter(|s| s.round == t && s.seed == seed && s.mu == mu && s.plus.len() == d);
         let train = &self.train;
         // execute: fan the probes out; each worker meters its own uplink
         // and serves its clients through grouped batched probes (the
@@ -1548,6 +1629,7 @@ impl Session {
                     mu,
                     spec,
                     finish,
+                    staged_now.as_ref(),
                     la,
                     &mut self.tracer,
                 );
@@ -1570,6 +1652,7 @@ impl Session {
                     mu,
                     spec,
                     finish,
+                    staged_now.as_ref(),
                     0,
                     self.tracer.on(),
                 );
@@ -1668,11 +1751,7 @@ impl Session {
         // each billed client's downlink prices at index_bits + 1
         let idx_msg = pool_idx
             .map(|(index, index_bits)| Message::PoolIndex { round: t, index, index_bits });
-        // one canonical AXPY commits the round for the whole pool; with
-        // an explicit sequential baseline the inner chunk-parallel noise
-        // walk is pinned to one thread (same bits either way)
-        let _serial = pin_serial.then(prng::serial_zone);
-        let engine = &mut self.clients[0].engine;
+        // downlink billing (pure accounting — never reads the model)
         if self.cfg.catchup.is_on() {
             // only the clients the PS heard from are billed the
             // downlink; everyone else (sampled out, deadline-cut, or
@@ -1684,7 +1763,6 @@ impl Session {
                     self.ledger.record(m);
                 }
             }
-            self.replicas.advance(t, &voters, |w| engine.update(w, seed, step));
         } else {
             // every client is billed the broadcast (non-participants too:
             // the downlink is what keeps all replicas synchronized)
@@ -1694,14 +1772,70 @@ impl Session {
                     self.ledger.record(m);
                 }
             }
+        }
+        // FedKSeed-Pro state: accumulate this direction's step scalar
+        // (the sampler's bias signal, and the PoolScalars download's
+        // payload) — *before* the commit, so the fused sweep can name
+        // round t+1's direction through the post-round sampler state
+        // (the sampler is a pure function of `(scalars, t)`, so the
+        // pre-draw below returns exactly the index round t+1 will draw)
+        if let Some((idx, _)) = pool_idx {
+            self.pool_scalars[idx as usize] += step;
+        }
+        // one canonical sweep commits the round for the whole pool; with
+        // an explicit sequential baseline the inner chunk-parallel noise
+        // walk is pinned to one thread (same bits either way)
+        let _serial = pin_serial.then(prng::serial_zone);
+        let (fuse, batched) = {
+            let e = &self.clients[0].engine;
+            (self.cfg.fuse_commits && e.fused_commit_exact(), e.supports_batched_probe())
+        };
+        if fuse {
+            // the tiled parameter plane's hot path: round t's commit
+            // AXPY *and* round t+1's ±mu probe views in one fused
+            // read-modify-write sweep — the staged views replace the
+            // probe-time axpy pass next round (zero canonical passes),
+            // so the steady state streams the store once per round
+            // instead of 1 + views times
+            let next_seed = (batched && t + 1 < self.cfg.rounds).then(|| match &self.pool {
+                Some(pool) => pool.seed_at(pool.sample_index(&self.pool_scalars, t + 1)),
+                None => prng::round_direction_seed(t + 1),
+            });
+            let tile = if self.cfg.tile == 0 { prng::tile_elems() } else { self.cfg.tile };
+            let nthreads = prng::noise_threads(d);
+            let commits = [(seed, step)];
+            let mut sv = next_seed.map(|ns| StagedViews {
+                round: t + 1,
+                seed: ns,
+                mu,
+                plus: vec![0.0f32; d],
+                minus: vec![0.0f32; d],
+            });
+            let views: Vec<(u32, f32)> = match &sv {
+                Some(s) => vec![(s.seed, mu), (s.seed, -mu)],
+                None => Vec::new(),
+            };
+            let ts0 = self.tracer.clock();
+            {
+                let mut outs: Vec<&mut [f32]> = match &mut sv {
+                    Some(s) => vec![&mut s.plus, &mut s.minus],
+                    None => Vec::new(),
+                };
+                let recipients = self.cfg.catchup.is_on().then(|| voters.as_slice());
+                self.replicas
+                    .advance_fused(t, recipients, &commits, &views, &mut outs, tile, nthreads);
+            }
+            self.tracer.span(Phase::TileSweep, t, -1, -1, 1 + views.len() as u64, tile as u64, ts0);
+            self.staged = sv;
+        } else if self.cfg.catchup.is_on() {
+            let engine = &mut self.clients[0].engine;
+            self.replicas.advance(t, &voters, |w| engine.update(w, seed, step));
+        } else {
+            let engine = &mut self.clients[0].engine;
             self.replicas.advance_all(t, |w| engine.update(w, seed, step));
         }
         match pool_idx {
             Some((idx, bits)) => {
-                // FedKSeed-Pro state: accumulate this direction's step
-                // scalar (the sampler's bias signal, and the PoolScalars
-                // download's payload), identically in both topologies
-                self.pool_scalars[idx as usize] += step;
                 self.orbit.push_index(idx, f);
                 self.commit_history(
                     t,
@@ -1780,6 +1914,9 @@ impl Session {
                     mu,
                     spec,
                     finish,
+                    // per-client private direction seeds are drawn inside
+                    // the execute phase, so no views can be staged ahead
+                    None,
                     la,
                     &mut self.tracer,
                 );
@@ -1800,6 +1937,7 @@ impl Session {
                     mu,
                     spec,
                     finish,
+                    None,
                     0,
                     self.tracer.on(),
                 );
@@ -1878,24 +2016,43 @@ impl Session {
         let eta = self.cfg.eta;
         let msg = Message::GlobalProjections { pairs: pairs.clone() };
         let pool = self.clients.len();
-        let _serial = pin_serial.then(prng::serial_zone);
-        let engine = &mut self.clients[0].engine;
-        let pairs_ref = &pairs;
-        let apply = |w: &mut [f32]| {
-            for &(seed, p) in pairs_ref {
-                engine.update(w, seed, eta * p / k as f32);
-            }
-        };
         if self.cfg.catchup.is_on() {
             for _ in &voters {
                 self.ledger.record(&msg);
             }
-            self.replicas.advance(t, &voters, apply);
         } else {
             for _ in 0..pool {
                 self.ledger.record(&msg);
             }
-            self.replicas.advance_all(t, apply);
+        }
+        let _serial = pin_serial.then(prng::serial_zone);
+        let fuse = self.cfg.fuse_commits && self.clients[0].engine.fused_commit_exact();
+        let recipients = self.cfg.catchup.is_on().then(|| voters.as_slice());
+        if fuse {
+            // k delivered pairs fused into ONE tiled sweep over the
+            // canonical store — the closure verb streamed it k times
+            // (once per `engine.update`).  Next round's directions are
+            // private per-client draws, so nothing can be staged.
+            let commits: Vec<(u32, f32)> =
+                pairs.iter().map(|&(seed, p)| (seed, eta * p / k as f32)).collect();
+            let tile = if self.cfg.tile == 0 { prng::tile_elems() } else { self.cfg.tile };
+            let nthreads = prng::noise_threads(self.replicas.d());
+            let ts0 = self.tracer.clock();
+            let mut outs: Vec<&mut [f32]> = Vec::new();
+            self.replicas.advance_fused(t, recipients, &commits, &[], &mut outs, tile, nthreads);
+            self.tracer.span(Phase::TileSweep, t, -1, -1, commits.len() as u64, tile as u64, ts0);
+        } else {
+            let engine = &mut self.clients[0].engine;
+            let pairs_ref = &pairs;
+            let apply = |w: &mut [f32]| {
+                for &(seed, p) in pairs_ref {
+                    engine.update(w, seed, eta * p / k as f32);
+                }
+            };
+            match recipients {
+                Some(r) => self.replicas.advance(t, r, apply),
+                None => self.replicas.advance_all(t, apply),
+            }
         }
         // history: one record per pair, the mean-projection coefficient
         // folded into (sign, lr_scale) so replay applies `sign·lr_scale`
@@ -2504,12 +2661,14 @@ mod tests {
 
     #[test]
     fn probe_batching_reduces_canonical_passes() {
-        // FeedSign: every participant shares seed = t, so a sequential
-        // worker serves all K clients from ONE canonical pass per round
-        // (the unbatched engine paid two per probe).  Pinned unsharded:
-        // a sharded run batch-groups per shard (N passes per round), so
-        // the exact pass counts below assume one global group — the
-        // FEEDSIGN_SHARDS env leg must not reroute this test.
+        // FeedSign: every participant shares seed = t, and the fused
+        // commit sweep stages round t+1's ±mu views while committing
+        // round t — so only round 0 (nothing staged yet) pays a probe-
+        // time canonical pass; every later round is served from the
+        // staged buffers at zero passes.  Pinned unsharded: a sharded
+        // run batch-groups per shard, so the exact counts below assume
+        // one global group — the FEEDSIGN_SHARDS env leg must not
+        // reroute this test.
         let mut s = make_session(Algorithm::FeedSign, 5, 0);
         s.cfg.shards = 0;
         s.shard_plane = None;
@@ -2519,8 +2678,22 @@ mod tests {
         }
         assert_eq!(s.probe_stats.probes, 20 * 5);
         assert_eq!(s.probe_stats.fallback_probes, 0);
-        assert_eq!(s.probe_stats.canonical_passes, 20, "one shared-seed pass per round");
+        assert_eq!(s.probe_stats.canonical_passes, 1, "only round 0 pays a probe-time pass");
+        assert_eq!(s.probe_stats.staged_probes, 19 * 5, "rounds 1.. serve from staged views");
         assert_eq!(s.probe_stats.unbatched_passes(), 20 * 5 * 2);
+
+        // fusion kill-switch: the legacy engine pays one shared-seed
+        // pass per round and never stages
+        let mut u = make_session(Algorithm::FeedSign, 5, 0);
+        u.cfg.shards = 0;
+        u.shard_plane = None;
+        u.cfg.threads = 1;
+        u.cfg.fuse_commits = false;
+        for t in 0..20 {
+            u.step(t);
+        }
+        assert_eq!(u.probe_stats.canonical_passes, 20, "one shared-seed pass per round");
+        assert_eq!(u.probe_stats.staged_probes, 0);
 
         // ZO-FedSGD: distinct per-client seeds still pack several ±mu
         // view pairs into each blocked pass over the shared buffer

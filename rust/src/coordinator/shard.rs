@@ -99,6 +99,30 @@ impl ShardMap {
         self.bounds.partition_point(|&b| b <= id) - 1
     }
 
+    /// Tile ownership for a physically sharded parameter plane: the
+    /// half-open range of fused-sweep tiles (tile indices, elements
+    /// `[i·tile, min((i+1)·tile, d))`) shard `s` of [`Self::shards`]
+    /// would walk when the canonical store of `d` elements is
+    /// partitioned in contiguous tile-aligned spans.  Pure bookkeeping —
+    /// today's coordinator shards share one canonical buffer and the
+    /// whole sweep runs on the replica plane — but the split is the
+    /// contract a multi-node deployment (and its spill files) would
+    /// partition the [`crate::coordinator::tile::TileStore`] by, and it
+    /// is total: concatenated in shard order the ranges cover every
+    /// tile exactly once, for any `(d, tile)`.
+    pub fn tile_range(&self, s: usize, d: usize, tile: usize) -> std::ops::Range<usize> {
+        let tile = tile.max(1);
+        let n_tiles = d.div_ceil(tile);
+        let n = self.shards();
+        // same contiguous balanced split rule as the client partition:
+        // the first (n_tiles % n) shards take one extra tile
+        let base = n_tiles / n;
+        let extra = n_tiles % n;
+        let start = s * base + s.min(extra);
+        let len = base + usize::from(s < extra);
+        start..(start + len).min(n_tiles)
+    }
+
     /// Split a sorted participant list along shard boundaries.  Returns
     /// one (possibly empty) slice per shard; concatenated in shard order
     /// they reproduce the input exactly — the global draw is partitioned,
@@ -225,6 +249,34 @@ impl ShardPlane {
 mod tests {
     use super::*;
     use crate::comm::{SeedHistory, SeedPool, SeedRecord};
+
+    #[test]
+    fn tile_ranges_cover_every_tile_exactly_once() {
+        for (k, n) in [(8usize, 1usize), (8, 3), (16, 4), (5, 5)] {
+            let m = ShardMap::new(k, n);
+            for d in [1usize, 63, 64, 4099, 1 << 16] {
+                for tile in [1usize, 61, 4096, d, d + 7] {
+                    let n_tiles = d.div_ceil(tile);
+                    let mut next = 0usize;
+                    for s in 0..m.shards() {
+                        let r = m.tile_range(s, d, tile);
+                        assert_eq!(r.start, next, "contiguous at shard {s} (d={d} tile={tile})");
+                        next = r.end;
+                    }
+                    assert_eq!(next, n_tiles, "exhaustive (d={d} tile={tile} shards={n})");
+                    // balanced: no shard owns 2+ more tiles than another
+                    let lens: Vec<usize> =
+                        (0..m.shards()).map(|s| m.tile_range(s, d, tile).len()).collect();
+                    let (lo, hi) =
+                        (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                    assert!(hi - lo <= 1, "balanced split: {lens:?}");
+                }
+            }
+        }
+        // tile = 0 degenerates to 1-element tiles instead of dividing by 0
+        let m = ShardMap::new(4, 2);
+        assert_eq!(m.tile_range(0, 10, 0).end, 5);
+    }
 
     #[test]
     fn shard_map_is_contiguous_balanced_and_exhaustive() {

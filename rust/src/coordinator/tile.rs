@@ -1,0 +1,328 @@
+//! Tiered canonical store: a file-backed tile pager behind the replica
+//! plane's canonical buffer.
+//!
+//! ROADMAP item 1 left open "shard or memory-map the canonical buffer
+//! once single-host `d` exceeds RAM — the replica plane remains the seam
+//! for a tiered store".  [`TileStore`] is that store: the authoritative
+//! parameter bits live in an **unlinked temp file** (a plain pager, no
+//! new dependencies; the file vanishes with the process on any exit
+//! path), and a FIFO **resident window** of tile-sized pages — capped at
+//! a configurable byte budget — is all the canonical storage the
+//! coordinator ever holds.  The fused commit+probe sweep
+//! ([`crate::simkit::zo::fused_commit_probe_span`]) walks the store one
+//! page at a time, so the tile doubles as the prefetch unit: fetch,
+//! commit, stage the next round's probe views, evict with write-back.
+//!
+//! Spill is a *memory policy, not a numerics policy*: pages round-trip
+//! through the file as raw little-endian f32 bits, so a spill-mode run
+//! is bit-identical to the in-RAM run (pinned by `tile_parity.rs` and
+//! the `table10_memory` spill column).  What the budget bounds is the
+//! canonical **store**; transient working views (probe scratch, staged
+//! ±mu views, the evaluation mirror) remain `O(d)` exactly as in the
+//! flat engine — out-of-core *loss* is future work, see the "Parameter
+//! plane" section of `docs/ARCHITECTURE.md`.
+//!
+//! Spill/evict/fetch events go through the leveled [`crate::obs::log`]
+//! plane (`FEEDSIGN_LOG=debug` shows them; never raw `eprintln!`), and
+//! the counters surface as `feedsign_tile_resident_bytes` /
+//! `feedsign_tile_spills_total` in the Prometheus registry.
+
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Tiered-store accounting, folded into
+/// [`crate::coordinator::replica::ReplicaStats`] and exported as
+/// Prometheus gauges/counters by the metrics registry.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TileStats {
+    /// Tile length in elements (the page size).
+    pub tile: usize,
+    /// Resident-window byte budget the store was built with.
+    pub budget_bytes: usize,
+    /// Bytes currently held by resident pages.
+    pub resident_bytes: usize,
+    /// High-water mark of [`Self::resident_bytes`] — the spill-mode
+    /// memory claim: stays ≤ the budget for any `d`.
+    pub peak_resident_bytes: usize,
+    /// Dirty pages written back to the file on eviction.
+    pub spills: u64,
+    /// Pages read (faulted) in from the file.
+    pub fetches: u64,
+}
+
+/// One resident page of the store.
+#[derive(Debug)]
+struct Page {
+    idx: usize,
+    data: Vec<f32>,
+    dirty: bool,
+}
+
+/// File-backed canonical tile pager; see the module docs.
+#[derive(Debug)]
+pub struct TileStore {
+    d: usize,
+    tile: usize,
+    file: File,
+    /// FIFO resident window, oldest first.
+    window: VecDeque<Page>,
+    cap_tiles: usize,
+    budget_bytes: usize,
+    resident_bytes: usize,
+    peak_resident_bytes: usize,
+    spills: u64,
+    fetches: u64,
+}
+
+/// Distinguishes concurrently created stores within one process.
+static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn open_backing_file() -> File {
+    let seq = STORE_SEQ.fetch_add(1, Ordering::Relaxed);
+    let path = std::env::temp_dir()
+        .join(format!("feedsign-tilestore-{}-{seq}.bin", std::process::id()));
+    let file = OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create_new(true)
+        .open(&path)
+        .unwrap_or_else(|e| panic!("tile store: create {}: {e}", path.display()));
+    // unlink immediately: the open handle keeps the pages alive, the
+    // name is gone, and the kernel reclaims the space on any process
+    // exit — no cleanup path to forget
+    let _ = std::fs::remove_file(&path);
+    file
+}
+
+fn write_page_at(file: &File, offset: usize, data: &[f32]) {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    file.write_all_at(&bytes, (offset * 4) as u64).expect("tile store: page write-back");
+}
+
+fn read_page_at(file: &File, offset: usize, out: &mut [f32]) {
+    let mut bytes = vec![0u8; out.len() * 4];
+    file.read_exact_at(&mut bytes, (offset * 4) as u64).expect("tile store: page fetch");
+    for (v, b) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *v = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    }
+}
+
+impl TileStore {
+    /// Build a spill store over `init`, paged in `tile`-element tiles
+    /// with at most `budget_bytes` of resident pages (always at least
+    /// one page — a budget below one tile degenerates to a one-page
+    /// window, which is still flat in `d`).
+    pub fn new(init: &[f32], tile: usize, budget_bytes: usize) -> TileStore {
+        assert!(tile >= 1, "tile must be at least one element");
+        let file = open_backing_file();
+        write_page_at(&file, 0, init);
+        let cap_tiles = (budget_bytes / (4 * tile)).max(1);
+        crate::log_info!(
+            "tile store: d={} tile={tile} budget={budget_bytes}B window={cap_tiles} pages",
+            init.len()
+        );
+        TileStore {
+            d: init.len(),
+            tile,
+            file,
+            window: VecDeque::new(),
+            cap_tiles,
+            budget_bytes,
+            resident_bytes: 0,
+            peak_resident_bytes: 0,
+            spills: 0,
+            fetches: 0,
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Tile length in elements (the page size).
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.d.div_ceil(self.tile)
+    }
+
+    fn page_len(&self, idx: usize) -> usize {
+        (self.d - idx * self.tile).min(self.tile)
+    }
+
+    /// Fault page `idx` into the window (evicting the oldest resident
+    /// page first if the window is at capacity) and return it.
+    fn fetch(&mut self, idx: usize) -> &mut Page {
+        if let Some(pos) = self.window.iter().position(|p| p.idx == idx) {
+            return &mut self.window[pos];
+        }
+        while self.window.len() >= self.cap_tiles {
+            let old = self.window.pop_front().expect("window non-empty at cap");
+            self.resident_bytes -= 4 * old.data.len();
+            if old.dirty {
+                write_page_at(&self.file, old.idx * self.tile, &old.data);
+                self.spills += 1;
+                crate::log_debug!("tile store: spill page {} ({}B)", old.idx, 4 * old.data.len());
+            } else {
+                crate::log_debug!("tile store: evict clean page {}", old.idx);
+            }
+        }
+        let mut data = vec![0.0f32; self.page_len(idx)];
+        read_page_at(&self.file, idx * self.tile, &mut data);
+        self.fetches += 1;
+        self.resident_bytes += 4 * data.len();
+        self.peak_resident_bytes = self.peak_resident_bytes.max(self.resident_bytes);
+        self.window.push_back(Page { idx, data, dirty: false });
+        self.window.back_mut().expect("just pushed")
+    }
+
+    /// Walk every tile in order through the resident window, calling
+    /// `f(offset, tile)` with the absolute element offset and the
+    /// mutable page — the fused commit+probe sweep's drive loop.  Every
+    /// visited page is marked dirty (commits touch all of canonical).
+    pub fn sweep_mut(&mut self, mut f: impl FnMut(usize, &mut [f32])) {
+        for idx in 0..self.n_tiles() {
+            let tile = self.tile;
+            let page = self.fetch(idx);
+            page.dirty = true;
+            f(idx * tile, &mut page.data);
+        }
+    }
+
+    /// Copy the whole store into `dst`, reading dirty resident pages
+    /// from the window and everything else from the file, without
+    /// disturbing the window.
+    pub fn read_into(&self, dst: &mut [f32]) {
+        assert_eq!(dst.len(), self.d);
+        for idx in 0..self.n_tiles() {
+            let at = idx * self.tile;
+            let out = &mut dst[at..at + self.page_len(idx)];
+            if let Some(p) = self.window.iter().find(|p| p.idx == idx) {
+                out.copy_from_slice(&p.data);
+            } else {
+                read_page_at(&self.file, at, out);
+            }
+        }
+    }
+
+    /// Overwrite the whole store from `src` (the non-fused commit path:
+    /// the session applies its closure to the materialized mirror and
+    /// writes the result back through here).  Resident pages are
+    /// dropped without write-back — `src` supersedes them.
+    pub fn write_from(&mut self, src: &[f32]) {
+        assert_eq!(src.len(), self.d);
+        self.window.clear();
+        self.resident_bytes = 0;
+        write_page_at(&self.file, 0, src);
+    }
+
+    pub fn stats(&self) -> TileStats {
+        TileStats {
+            tile: self.tile,
+            budget_bytes: self.budget_bytes,
+            resident_bytes: self.resident_bytes,
+            peak_resident_bytes: self.peak_resident_bytes,
+            spills: self.spills,
+            fetches: self.fetches,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simkit::{prng, zo};
+
+    #[test]
+    fn roundtrips_bits_through_the_pager() {
+        // non-trivial bit patterns (negative zero, denormal-ish values)
+        // must survive the file round trip exactly
+        let mut init = prng::normals_vec(3, 1037);
+        init[0] = -0.0;
+        init[1] = f32::MIN_POSITIVE / 4.0;
+        let mut s = TileStore::new(&init, 64, 4 * 64 * 2);
+        let mut out = vec![0.0f32; init.len()];
+        s.read_into(&mut out);
+        let same = out.iter().zip(&init).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "cold read must reproduce the init bits");
+        // mutate through a sweep, read back through a dirty window
+        s.sweep_mut(|at, tile| {
+            for (j, v) in tile.iter_mut().enumerate() {
+                *v = (at + j) as f32;
+            }
+        });
+        s.read_into(&mut out);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn window_respects_the_budget_and_spills_dirty_pages() {
+        let d = 1000usize;
+        let tile = 64usize;
+        let budget = 4 * tile * 3; // 3 resident pages of 16 tiles
+        let init = prng::normals_vec(7, d);
+        let mut s = TileStore::new(&init, tile, budget);
+        s.sweep_mut(|_, t| t[0] += 1.0);
+        s.sweep_mut(|_, t| t[0] += 1.0);
+        let st = s.stats();
+        assert!(st.resident_bytes <= budget, "window over budget: {}", st.resident_bytes);
+        assert!(st.peak_resident_bytes <= budget);
+        assert!(st.spills > 0, "two sweeps over a 16-page store must evict dirty pages");
+        assert!(st.fetches >= s.n_tiles() as u64);
+        // both increments landed despite the spills
+        let mut out = vec![0.0f32; d];
+        s.read_into(&mut out);
+        for idx in 0..s.n_tiles() {
+            assert_eq!(out[idx * tile], init[idx * tile] + 2.0, "tile {idx}");
+        }
+    }
+
+    #[test]
+    fn sub_tile_budget_degenerates_to_one_page() {
+        let init = vec![1.0f32; 100];
+        let mut s = TileStore::new(&init, 64, 1); // budget below one page
+        s.sweep_mut(|_, t| t[0] *= 2.0);
+        let st = s.stats();
+        assert_eq!(st.resident_bytes, 4 * 36, "only the ragged tail page resident");
+        assert!(st.peak_resident_bytes <= 4 * 64);
+    }
+
+    #[test]
+    fn spill_sweep_matches_in_ram_fused_sweep_bitwise() {
+        // the end-to-end exactness claim at the store level: the fused
+        // commit+probe sweep driven tile-by-tile through the pager
+        // produces the same canonical bits and staged views as the
+        // in-RAM sweep
+        let d = 4099usize;
+        let tile = 128usize;
+        let w0 = prng::normals_vec(11, d);
+        let commits = [(5u32, 2e-3f32)];
+        let views = [(6u32, 1e-3f32), (6, -1e-3)];
+        let mut flat_w = w0.clone();
+        let mut flat_outs = vec![vec![0.0f32; d]; views.len()];
+        let mut outs: Vec<&mut [f32]> = flat_outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        zo::fused_commit_probe_threads(&mut flat_w, &commits, &views, &mut outs, tile, 1);
+
+        let mut s = TileStore::new(&w0, tile, 4 * tile * 2);
+        let mut spill_outs = vec![vec![0.0f32; d]; views.len()];
+        s.sweep_mut(|at, t| {
+            let mut outs: Vec<&mut [f32]> =
+                spill_outs.iter_mut().map(|v| &mut v[at..at + t.len()]).collect();
+            zo::fused_commit_probe_span(t, &commits, &views, &mut outs, at, tile);
+        });
+        let mut spill_w = vec![0.0f32; d];
+        s.read_into(&mut spill_w);
+        assert_eq!(spill_w, flat_w, "canonical bits must survive the pager");
+        assert_eq!(spill_outs, flat_outs, "staged views must match the in-RAM sweep");
+        assert!(s.stats().peak_resident_bytes <= 4 * tile * 2);
+    }
+}

@@ -58,6 +58,19 @@ pub trait Engine: Send {
     /// `Session::replica` for the operational consequence).
     fn update(&mut self, w: &mut [f32], seed: u32, step: f32);
 
+    /// Whether [`Engine::update`] IS [`crate::simkit::zo::apply_update`]
+    /// bit-for-bit — the gate on the fused commit+probe sweep: the
+    /// session may then route commits through
+    /// [`crate::simkit::zo::fused_commit_probe`] (tiled, with the next
+    /// round's ±mu views staged in the same pass) instead of this
+    /// method, without changing a single parameter bit.  Engines whose
+    /// update kernel is only *approximately* the native one (the PJRT
+    /// path is pinned to 1e-6, not bitwise) must keep the `false`
+    /// default and take the classic one-pass-per-view commit.
+    fn fused_commit_exact(&self) -> bool {
+        false
+    }
+
     /// `(mean loss, #correct)` on an eval batch.  Takes `w` by shared
     /// reference — evaluation never mutates the replica, and with the
     /// copy-on-write replica plane many clients evaluate against the
@@ -127,6 +140,12 @@ impl<M: Model> Engine for NativeEngine<M> {
         zo::apply_update(w, seed, step);
     }
 
+    fn fused_commit_exact(&self) -> bool {
+        // update IS zo::apply_update — fusing it into the tiled sweep
+        // is the same per-element float expression in the same order
+        true
+    }
+
     fn eval(&mut self, w: &[f32], batch: &Batch) -> (f32, u32) {
         self.model.eval(w, batch)
     }
@@ -184,6 +203,10 @@ pub struct ProbeBatchStats {
     /// Probes served through [`Engine::probe`] because the engine opted
     /// out of batching (each costs two canonical passes).
     pub fallback_probes: u64,
+    /// Probes served from views staged by the previous round's fused
+    /// commit+probe sweep ([`StagedViews`]) — zero canonical passes at
+    /// probe time; the sweep already paid them inside the commit pass.
+    pub staged_probes: u64,
 }
 
 impl ProbeBatchStats {
@@ -192,6 +215,7 @@ impl ProbeBatchStats {
         self.probes += other.probes;
         self.canonical_passes += other.canonical_passes;
         self.fallback_probes += other.fallback_probes;
+        self.staged_probes += other.staged_probes;
     }
 
     /// Canonical passes the unbatched per-client probe would have made.
@@ -205,6 +229,35 @@ impl ProbeBatchStats {
     pub fn passes_saved(&self) -> u64 {
         self.unbatched_passes().saturating_sub(self.canonical_passes)
     }
+}
+
+/// A `±mu` view pair staged ahead of time by the fused commit+probe
+/// sweep ([`crate::simkit::zo::fused_commit_probe`]): at commit of
+/// round `t` the sweep materialises `plus = w_head + mu·z(seed)` and
+/// `minus = w_head - mu·z(seed)` for round `round = t + 1`'s announced
+/// direction in the *same* pass that applies round `t`'s update.  A
+/// probe group whose `(seed, mu)` matches is then served from these
+/// buffers with **zero** canonical passes
+/// ([`probe_batch_staged`]); a mismatch (stale staging after a no-op
+/// round, a different direction) falls back to the normal
+/// [`zo::axpy_many`] pass — exactly what the unstaged engine pays.
+///
+/// The buffers carry exactly the bits [`zo::axpy_into`] would produce
+/// against the committed canonical (`fused_commit_probe` is pinned to
+/// the multi-pass path bitwise), so staged service is bit-identical to
+/// unstaged service by construction.
+#[derive(Debug, Clone, Default)]
+pub struct StagedViews {
+    /// The round these views serve (staging round + 1).
+    pub round: u64,
+    /// The direction they were staged for.
+    pub seed: u32,
+    /// The probe radius they were staged at.
+    pub mu: f32,
+    /// `w_head + mu·z(seed)`.
+    pub plus: Vec<f32>,
+    /// `w_head - mu·z(seed)`.
+    pub minus: Vec<f32>,
 }
 
 /// Serve a worker's probe jobs against the shared canonical buffer `w`,
@@ -225,6 +278,22 @@ impl ProbeBatchStats {
 /// bit-for-bit, for any grouping (pinned by the tests below and by the
 /// four parity suites).
 pub fn probe_batch(w: &[f32], mu: f32, jobs: &mut [ProbeJob]) -> (Vec<f32>, ProbeBatchStats) {
+    probe_batch_staged(w, mu, jobs, None)
+}
+
+/// [`probe_batch`] with an optional [`StagedViews`] pair from the
+/// previous round's fused commit sweep: a batchable seed group matching
+/// `(staged.seed, mu)` is served straight from the staged buffers (its
+/// loss calls see the same bits an [`zo::axpy_many`] pass would have
+/// produced; `loss` is pure, so serving it first changes nothing),
+/// counting zero canonical passes here.  All other groups, and engines
+/// that opted out of batching, take the classic path untouched.
+pub fn probe_batch_staged(
+    w: &[f32],
+    mu: f32,
+    jobs: &mut [ProbeJob],
+    staged: Option<&StagedViews>,
+) -> (Vec<f32>, ProbeBatchStats) {
     let mut stats = ProbeBatchStats { probes: jobs.len() as u64, ..Default::default() };
     let mut out = vec![0.0f32; jobs.len()];
     let mut batchable: Vec<usize> = Vec::new();
@@ -248,6 +317,22 @@ pub fn probe_batch(w: &[f32], mu: f32, jobs: &mut [ProbeJob]) -> (Vec<f32>, Prob
         match groups.iter_mut().find(|(s, _)| *s == seed) {
             Some((_, idxs)) => idxs.push(i),
             None => groups.push((seed, vec![i])),
+        }
+    }
+    // staged service: the matching group's views were materialised by
+    // the commit sweep against this exact buffer — no pass needed
+    if let Some(sv) = staged {
+        if sv.mu == mu && sv.plus.len() == w.len() && sv.minus.len() == w.len() {
+            if let Some(pos) = groups.iter().position(|(s, _)| *s == sv.seed) {
+                let (_, idxs) = groups.remove(pos);
+                for i in idxs {
+                    let job = &mut jobs[i];
+                    let lp = job.engine.loss(&sv.plus, job.batch);
+                    let lm = job.engine.loss(&sv.minus, job.batch);
+                    out[i] = (lp - lm) / (2.0 * mu);
+                    stats.staged_probes += 1;
+                }
+            }
         }
     }
     let seeds_per_pass = (MAX_GROUP_VIEWS / 2).max(1);
@@ -453,5 +538,83 @@ mod tests {
         assert_eq!(expect[1].to_bits(), got[1].to_bits());
         assert_eq!(stats.fallback_probes, 1);
         assert_eq!(stats.canonical_passes, 3, "2 for the fallback + 1 for the group");
+    }
+
+    #[test]
+    fn staged_views_serve_matching_group_bitwise_with_zero_passes() {
+        use crate::simkit::zo;
+        let mut engines: Vec<NativeEngine<LinearProbe>> = (0..5).map(|_| engine()).collect();
+        let w = engines[0].init_params(0);
+        let batches: Vec<Batch> = (0..5).map(|i| batch(i as u32)).collect();
+        let mu = 1e-3f32;
+        let expect: Vec<f32> = engines
+            .iter_mut()
+            .zip(&batches)
+            .map(|(e, b)| e.probe(&w, b, 42, mu))
+            .collect();
+        // stage the views exactly as the fused commit sweep would
+        let mut sv = StagedViews { round: 1, seed: 42, mu, ..Default::default() };
+        sv.plus = vec![0.0; w.len()];
+        sv.minus = vec![0.0; w.len()];
+        zo::axpy_into(&w, &mut sv.plus, 42, mu);
+        zo::axpy_into(&w, &mut sv.minus, 42, -mu);
+        let mut jobs: Vec<ProbeJob> = engines
+            .iter_mut()
+            .zip(&batches)
+            .map(|(e, b)| ProbeJob { engine: e, batch: b, seed: 42 })
+            .collect();
+        let (got, stats) = probe_batch_staged(&w, mu, &mut jobs, Some(&sv));
+        for (i, (a, b)) in expect.iter().zip(&got).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "client {i}");
+        }
+        assert_eq!(stats.staged_probes, 5);
+        assert_eq!(stats.canonical_passes, 0, "staged service pays no pass at probe time");
+        assert_eq!(stats.passes_saved(), 10);
+    }
+
+    #[test]
+    fn staged_views_with_wrong_seed_or_mu_fall_back_to_the_pass_path() {
+        let mut engines: Vec<NativeEngine<LinearProbe>> = (0..3).map(|_| engine()).collect();
+        let w = engines[0].init_params(0);
+        let batches: Vec<Batch> = (0..3).map(|i| batch(i as u32)).collect();
+        let expect: Vec<f32> = engines
+            .iter_mut()
+            .zip(&batches)
+            .map(|(e, b)| e.probe(&w, b, 42, 1e-3))
+            .collect();
+        for sv in [
+            StagedViews {
+                round: 1,
+                seed: 7, // wrong direction
+                mu: 1e-3,
+                plus: vec![0.0; w.len()],
+                minus: vec![0.0; w.len()],
+            },
+            StagedViews {
+                round: 1,
+                seed: 42,
+                mu: 2e-3, // wrong radius
+                plus: vec![0.0; w.len()],
+                minus: vec![0.0; w.len()],
+            },
+        ] {
+            let mut jobs: Vec<ProbeJob> = engines
+                .iter_mut()
+                .zip(&batches)
+                .map(|(e, b)| ProbeJob { engine: e, batch: b, seed: 42 })
+                .collect();
+            let (got, stats) = probe_batch_staged(&w, 1e-3, &mut jobs, Some(&sv));
+            for (i, (a, b)) in expect.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "client {i}");
+            }
+            assert_eq!(stats.staged_probes, 0, "mismatched staging must not serve");
+            assert_eq!(stats.canonical_passes, 1, "the miss costs the normal single pass");
+        }
+    }
+
+    #[test]
+    fn fused_commit_exact_gates_native_only() {
+        assert!(engine().fused_commit_exact());
+        assert!(!OptOut(engine()).fused_commit_exact(), "trait default must stay false");
     }
 }

@@ -32,13 +32,15 @@ COMMANDS:
                [--seed-pool K] [--channel ideal|ber:P|drop:P]
                [--link mobile|wifi|iot|mixed]
                [--deadline T] [--channel-seed S] [--replica-cache N]
-               [--shards N] [--trace-out trace.json|trace.jsonl]
+               [--shards N] [--tile ELEMS] [--tile-budget BYTES]
+               [--trace-out trace.json|trace.jsonl]
                [--metrics-out metrics.prom] [--quiet]
   quickstart   [--rounds 2000] [--threads N] [--participation SPEC]
                [--catchup SPEC] [--seed-pool K] [--channel SPEC]
                [--link SPEC]
                [--deadline T] [--channel-seed S] [--replica-cache N]
-               [--shards N] [--trace-out PATH] [--metrics-out PATH]
+               [--shards N] [--tile ELEMS] [--tile-budget BYTES]
+               [--trace-out PATH] [--metrics-out PATH]
                [--quiet]
   init-config
   theory       [--eta 1e-3] [--p-max 0.1]
@@ -125,8 +127,8 @@ fn write_observability(
 
 /// Apply the round-engine CLI overrides (`--threads`, `--participation`,
 /// `--catchup`, `--seed-pool`, `--channel`, `--link`, `--deadline`,
-/// `--channel-seed`, `--replica-cache`, `--shards`) on top of a loaded
-/// config, re-validating afterwards.
+/// `--channel-seed`, `--replica-cache`, `--shards`, `--tile`,
+/// `--tile-budget`) on top of a loaded config, re-validating afterwards.
 fn apply_engine_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     if let Some(t) = args.str("threads") {
         cfg.threads = t.parse().context("parsing --threads")?;
@@ -157,6 +159,12 @@ fn apply_engine_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()>
     }
     if let Some(n) = args.str("shards") {
         cfg.shards = n.parse().context("parsing --shards")?;
+    }
+    if let Some(t) = args.str("tile") {
+        cfg.tile = t.parse().context("parsing --tile")?;
+    }
+    if let Some(b) = args.str("tile-budget") {
+        cfg.tile_budget = b.parse().context("parsing --tile-budget")?;
     }
     cfg.validate()
 }

@@ -88,9 +88,15 @@ impl Registry {
         self.set("feedsign_replica_snapshots_declined_total", r.replica.snapshots_declined);
         self.set("feedsign_replica_peak_bytes", r.replica.peak_bytes as u64);
         self.set("feedsign_replica_owned_clients", r.replica.owned_clients as u64);
+        // tiered canonical store (all zeros when spill mode is off)
+        self.set("feedsign_tile_resident_bytes", r.replica.tile.resident_bytes as u64);
+        self.set("feedsign_tile_peak_resident_bytes", r.replica.tile.peak_resident_bytes as u64);
+        self.set("feedsign_tile_spills_total", r.replica.tile.spills);
+        self.set("feedsign_tile_fetches_total", r.replica.tile.fetches);
         // probe batching
         self.set("feedsign_probe_probes_total", r.probe.probes);
         self.set("feedsign_probe_canonical_passes_total", r.probe.canonical_passes);
+        self.set("feedsign_probe_staged_total", r.probe.staged_probes);
         self.set("feedsign_probe_passes_saved_total", r.probe.passes_saved());
         // sharded plane
         self.set("feedsign_shards", r.shard.shards as u64);
@@ -109,6 +115,9 @@ impl Registry {
                 }
                 Phase::ProbeBatch => {
                     self.observe_us("feedsign_probe_batch_duration_us", ev.dur_us);
+                }
+                Phase::TileSweep => {
+                    self.observe_us("feedsign_tile_sweep_duration_us", ev.dur_us);
                 }
                 Phase::Eval => {
                     self.observe_us("feedsign_eval_duration_us", ev.dur_us);
@@ -204,6 +213,16 @@ mod tests {
         let text = r.to_prometheus();
         assert_eq!(text.matches("# TYPE g_total counter").count(), 1);
         assert!(text.contains("g_total{shard=\"1\"} 2"));
+    }
+
+    #[test]
+    fn tile_sweep_spans_feed_their_own_histogram() {
+        let mut r = Registry::default();
+        let mut sweep = Event::logical(Phase::TileSweep, 3, -1, -1, 3, 4096);
+        sweep.dur_us = 120;
+        r.absorb_events(&[sweep]);
+        let text = r.to_prometheus();
+        assert!(text.contains("feedsign_tile_sweep_duration_us_count 1"));
     }
 
     #[test]

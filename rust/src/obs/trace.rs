@@ -57,6 +57,16 @@ pub enum Phase {
     /// Lookahead overlap measurement: `n1` = wall microseconds of round
     /// t+1 planning hidden under round t's stragglers.  Timing-derived.
     Overlap,
+    /// One fused commit+probe sweep over the canonical store
+    /// ([`crate::coordinator::replica::ReplicaStore::advance_fused`]).
+    /// `n1` = commits + staged views fused into the pass, `n2` = tile
+    /// size in elements.  Wall-duration is the sweep's cost; the tile
+    /// size is a schedule/layout knob (never changes the bits), so the
+    /// span is excluded from the logical sequence like
+    /// [`Phase::ProbeBatch`].  Appended at the enum's end: the
+    /// discriminant order of the phases *before* it is the logical sort
+    /// rank, which must stay frozen.
+    TileSweep,
 }
 
 impl Phase {
@@ -75,15 +85,21 @@ impl Phase {
             Phase::Eval => "eval",
             Phase::RoundGate => "round_gate",
             Phase::Overlap => "overlap",
+            Phase::TileSweep => "tile_sweep",
         }
     }
 
     /// Phases whose events are pure functions of the run's deterministic
     /// state — identical across thread counts and topologies.  Worker
-    /// scheduling ([`Phase::ProbeBatch`]) and wall-clock attribution
-    /// ([`Phase::RoundGate`], [`Phase::Overlap`]) are observational only.
+    /// scheduling ([`Phase::ProbeBatch`]), wall-clock attribution
+    /// ([`Phase::RoundGate`], [`Phase::Overlap`]) and the commit sweep's
+    /// layout span ([`Phase::TileSweep`], whose tile size is an
+    /// environment knob) are observational only.
     pub fn is_logical(self) -> bool {
-        !matches!(self, Phase::ProbeBatch | Phase::RoundGate | Phase::Overlap)
+        !matches!(
+            self,
+            Phase::ProbeBatch | Phase::RoundGate | Phase::Overlap | Phase::TileSweep
+        )
     }
 }
 
@@ -379,5 +395,11 @@ mod tests {
         assert!(Phase::Execute < Phase::Probe);
         assert!(Phase::Probe < Phase::Commit);
         assert!(Phase::Commit < Phase::ShardMerge);
+        // observational phases ride after the logical pipeline; the
+        // newest (TileSweep) must stay appended at the end so the frozen
+        // ranks above never shift
+        assert!(Phase::Overlap < Phase::TileSweep);
+        assert!(!Phase::TileSweep.is_logical());
+        assert_eq!(Phase::TileSweep.name(), "tile_sweep");
     }
 }

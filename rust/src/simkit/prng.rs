@@ -275,6 +275,39 @@ pub fn simd_width() -> SimdWidth {
     })
 }
 
+/// Default tile length (elements) for the fused commit+probe sweep in
+/// [`crate::simkit::zo::fused_commit_probe`]: 32768 f32 elements =
+/// 128 KiB — the canonical tile plus a couple of staged view tiles stay
+/// resident in a typical 512 KiB–1 MiB L2 while every pass consumes
+/// them.
+pub const DEFAULT_TILE_ELEMS: usize = 1 << 15;
+
+/// Parse a `FEEDSIGN_TILE` value: a positive element count picks that
+/// tile length, `0`/`auto`/`default` (and unset/invalid) mean
+/// [`DEFAULT_TILE_ELEMS`].
+pub fn parse_tile(s: &str) -> Option<usize> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "0" | "auto" | "default" => Some(DEFAULT_TILE_ELEMS),
+        v => v.parse::<usize>().ok().filter(|&t| t >= 1),
+    }
+}
+
+/// The process-wide tile length for the fused sweep: `FEEDSIGN_TILE` if
+/// set and valid (see [`parse_tile`]), else [`DEFAULT_TILE_ELEMS`].
+/// Read once and cached, like [`simd_width`] — the hot loops must not
+/// re-parse an env var per sweep.  Tiling is bit-invisible (counter-
+/// space purity: any tile of `z(seed)` regenerates identically), so
+/// this knob trades nothing but locality.
+pub fn tile_elems() -> usize {
+    static TILE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *TILE.get_or_init(|| {
+        std::env::var("FEEDSIGN_TILE")
+            .ok()
+            .and_then(|v| parse_tile(&v))
+            .unwrap_or(DEFAULT_TILE_ELEMS)
+    })
+}
+
 /// [`for_each_span_lane`] with `W`-lane wide blocks: scalar head up to
 /// the next lane boundary, [`normals_soa`] body, scalar ragged tail.
 /// Spans shorter than one wide block take the scalar walker whole.
@@ -617,6 +650,17 @@ mod tests {
     #[test]
     fn philox_deterministic() {
         assert_eq!(philox4x32(42, 7), philox4x32(42, 7));
+    }
+
+    #[test]
+    fn tile_parse_accepts_counts_and_aliases() {
+        assert_eq!(parse_tile("4096"), Some(4096));
+        assert_eq!(parse_tile(" 1 "), Some(1));
+        assert_eq!(parse_tile("0"), Some(DEFAULT_TILE_ELEMS));
+        assert_eq!(parse_tile("auto"), Some(DEFAULT_TILE_ELEMS));
+        assert_eq!(parse_tile("default"), Some(DEFAULT_TILE_ELEMS));
+        assert_eq!(parse_tile("nope"), None);
+        assert_eq!(parse_tile("-3"), None);
     }
 
     #[test]

@@ -99,6 +99,113 @@ pub fn axpy_many(w: &[f32], views: &[(u32, f32)], outs: &mut [&mut [f32]]) {
     }
 }
 
+/// Tiled fused commit+probe sweep over a span of the canonical buffer:
+/// walk `w` in `tile`-element tiles and, within each tile, apply every
+/// commit `w -= step_c * z(seed_c)` ([`apply_update`] semantics —
+/// `±0.0` steps are skipped so no-op rounds stay bit-exact) and then
+/// materialise every staged view `outs[v] = w' + scale_v * z(seed_v)`
+/// from the *committed* tile, in ONE read-modify-write pass instead of
+/// `commits + views` full-buffer passes.  `start` is the absolute
+/// element offset of `w[0]` in the direction streams, so the chunk-
+/// parallel driver can cut the sweep anywhere; `outs[v]` spans the same
+/// elements as `w`.
+///
+/// Bit-identical to the multi-pass flat engine by construction: the
+/// per-element float expression and its evaluation order (commits in
+/// order, then views) are exactly those of sequential [`apply_update`]
+/// passes followed by [`axpy_span`] passes — tiling only reorders
+/// *which elements* are touched when, and counter-space purity makes
+/// element `i` of every `z` a pure function of `(seed, i)`.  Pinned by
+/// `fused_sweep_matches_multipass_bitwise` here and the
+/// `rust/tests/tile_parity.rs` suite end to end.
+pub fn fused_commit_probe_span_w(
+    w: &mut [f32],
+    commits: &[(u32, f32)],
+    views: &[(u32, f32)],
+    outs: &mut [&mut [f32]],
+    start: usize,
+    tile: usize,
+    width: prng::SimdWidth,
+) {
+    assert_eq!(views.len(), outs.len());
+    for out in outs.iter() {
+        debug_assert_eq!(w.len(), out.len());
+    }
+    let tile = tile.max(1);
+    let mut at = 0usize;
+    while at < w.len() {
+        let end = (at + tile).min(w.len());
+        let wt = &mut w[at..end];
+        for &(seed, step) in commits {
+            if step != 0.0 {
+                perturb_span_w(wt, seed, -step, start + at, width);
+            }
+        }
+        let wt = &w[at..end];
+        for ((seed, scale), out) in views.iter().zip(outs.iter_mut()) {
+            axpy_span_w(wt, &mut out[at..end], *seed, *scale, start + at, width);
+        }
+        at = end;
+    }
+}
+
+/// [`fused_commit_probe_span_w`] at the process-wide dispatch width.
+pub fn fused_commit_probe_span(
+    w: &mut [f32],
+    commits: &[(u32, f32)],
+    views: &[(u32, f32)],
+    outs: &mut [&mut [f32]],
+    start: usize,
+    tile: usize,
+) {
+    fused_commit_probe_span_w(w, commits, views, outs, start, tile, prng::simd_width());
+}
+
+/// Chunk-parallel fused commit+probe sweep with an explicit worker
+/// count: the counter space is cut into lane-aligned chunks
+/// ([`prng::chunk_size`]) and each worker runs the tiled span sweep over
+/// its chunk — bit-identical to the sequential sweep for every thread
+/// count *and* every tile length (both only re-tile the counter space).
+pub fn fused_commit_probe_threads(
+    w: &mut [f32],
+    commits: &[(u32, f32)],
+    views: &[(u32, f32)],
+    outs: &mut [&mut [f32]],
+    tile: usize,
+    threads: usize,
+) {
+    assert_eq!(views.len(), outs.len());
+    if threads <= 1 || w.len() <= 4 {
+        fused_commit_probe_span(w, commits, views, outs, 0, tile);
+        return;
+    }
+    let chunk = prng::chunk_size(w.len(), threads);
+    let mut out_chunks: Vec<std::slice::ChunksMut<'_, f32>> =
+        outs.iter_mut().map(|o| o.chunks_mut(chunk)).collect();
+    let items: Vec<(&mut [f32], Vec<&mut [f32]>)> = w
+        .chunks_mut(chunk)
+        .map(|wc| (wc, out_chunks.iter_mut().map(|it| it.next().unwrap()).collect()))
+        .collect();
+    prng::scoped_spawn(items, |i, (wc, ocs)| {
+        let mut ocs = ocs;
+        fused_commit_probe_span(wc, commits, views, &mut ocs, i * chunk, tile);
+    });
+}
+
+/// The fused round kernel at the auto thread policy
+/// ([`prng::noise_threads`]) and the process-wide tile length
+/// ([`prng::tile_elems`]) — one sweep over canonical applies the
+/// committed round-t update(s) and stages the round-t+1 probe views.
+pub fn fused_commit_probe(
+    w: &mut [f32],
+    commits: &[(u32, f32)],
+    views: &[(u32, f32)],
+    outs: &mut [&mut [f32]],
+) {
+    let threads = prng::noise_threads(w.len());
+    fused_commit_probe_threads(w, commits, views, outs, prng::tile_elems(), threads);
+}
+
 /// In-place `w += scale * z(seed)` with streaming noise regeneration,
 /// chunk-parallel over [`prng::noise_threads`] workers (bit-identical to
 /// the sequential walk for every thread count).
@@ -294,6 +401,71 @@ mod tests {
                 let same = e.iter().zip(m).all(|(a, b)| a.to_bits() == b.to_bits());
                 assert!(same, "view {v} diverged (n={n})");
             }
+        }
+    }
+
+    #[test]
+    fn fused_sweep_matches_multipass_bitwise() {
+        // the tentpole invariant: ONE tiled commit+probe sweep must
+        // reproduce the multi-pass flat engine (sequential apply_update
+        // per commit, then one axpy pass per view) bit-for-bit, for
+        // every tile length — including 1, d, d+1 and non-divisors of
+        // the SIMD lane block — and every thread count.
+        let n = 4099; // ragged: not a lane multiple, not a tile multiple
+        let w0 = prng::normals_vec(6, n);
+        let commits = [(21u32, 2e-3f32), (22, 0.0), (23, -1e-3)];
+        let views = [(31u32, 1e-3f32), (31, -1e-3), (77, 0.25)];
+        let mut expect_w = w0.clone();
+        for &(seed, step) in &commits {
+            apply_update(&mut expect_w, seed, step);
+        }
+        let mut expect_outs = vec![vec![0.0f32; n]; views.len()];
+        for ((seed, scale), out) in views.iter().zip(expect_outs.iter_mut()) {
+            axpy_span(&expect_w, out, *seed, *scale, 0);
+        }
+        for tile in [1usize, 3, 61, 4096, n, n + 1, 2 * n] {
+            for threads in [1usize, 2, 3, 8] {
+                let mut w = w0.clone();
+                let mut outs_v = vec![vec![0.0f32; n]; views.len()];
+                let mut outs: Vec<&mut [f32]> =
+                    outs_v.iter_mut().map(|v| v.as_mut_slice()).collect();
+                fused_commit_probe_threads(&mut w, &commits, &views, &mut outs, tile, threads);
+                let same_w = w.iter().zip(&expect_w).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same_w, "canonical diverged (tile={tile}, threads={threads})");
+                for (v, (e, m)) in expect_outs.iter().zip(&outs_v).enumerate() {
+                    let same = e.iter().zip(m).all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same, "view {v} diverged (tile={tile}, threads={threads})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_sweep_handles_empty_stages_and_noop_commits() {
+        // views-only (a no-op round still stages t+1), commits-only
+        // (no staged probes), and fully empty sweeps must all be exact
+        let n = 517;
+        let w0 = prng::normals_vec(8, n);
+        // views only: canonical untouched, views == axpy from w0
+        let mut w = w0.clone();
+        let mut out = vec![0.0f32; n];
+        let mut outs: Vec<&mut [f32]> = vec![out.as_mut_slice()];
+        fused_commit_probe_threads(&mut w, &[], &[(9, 1e-3)], &mut outs, 64, 2);
+        assert_eq!(w, w0, "views-only sweep must leave canonical bit-identical");
+        let mut expect = vec![0.0f32; n];
+        axpy_span(&w0, &mut expect, 9, 1e-3, 0);
+        assert_eq!(out, expect);
+        // commits only: canonical == apply_update
+        let mut w = w0.clone();
+        fused_commit_probe_threads(&mut w, &[(5, 0.125)], &[], &mut [], 64, 2);
+        let mut expect_w = w0.clone();
+        apply_update(&mut expect_w, 5, 0.125);
+        assert_eq!(w, expect_w);
+        // all-zero steps: a pure no-op, -0.0 sign bits preserved
+        let mut w = vec![-0.0f32; 8];
+        fused_commit_probe_threads(&mut w, &[(5, 0.0)], &[], &mut [], 4, 1);
+        for v in &w {
+            assert_eq!(v.to_bits(), (-0.0f32).to_bits(), "no-op must not touch sign bits");
         }
     }
 

@@ -67,11 +67,37 @@ pub fn baseline_calibrated(base: &Json) -> bool {
     matches!(base.get("calibrated"), Some(Json::Bool(true)))
 }
 
+/// Whether the committed baseline was measured in the same environment
+/// this run executes in: the `meta` object's `threads`, `simd_lanes`
+/// and `shards` must all equal the current [`run_metadata`] values.
+/// `git_rev` is deliberately excluded — a committed baseline *should*
+/// predate the PR measured against it.  A baseline with no `meta`
+/// object (a pre-metadata file) or with any of the three keys missing
+/// never matches: numbers measured under an unknown SIMD width or
+/// thread count cannot back a hard gate (a W16 baseline would fail
+/// every honest W4 run, and vice versa).
+pub fn baseline_environment_matches(base: &Json) -> bool {
+    let Some(meta) = base.get("meta") else {
+        return false;
+    };
+    let current = run_metadata();
+    ["threads", "simd_lanes", "shards"].iter().all(|&k| {
+        match (meta.get(k).and_then(Json::as_f64), current.get(k).and_then(Json::as_f64)) {
+            (Some(b), Some(c)) => b == c,
+            _ => false,
+        }
+    })
+}
+
 /// Whether the hard regression gate should arm for this run: the
 /// baseline is calibrated AND the current run's round-budget scale is
-/// full (`>= 1.0`).  NaN or sub-unit scales (smoke runs) never arm.
+/// full (`>= 1.0`) AND the baseline's recorded environment (threads /
+/// SIMD lanes / shards — never `git_rev`) matches the current one
+/// ([`baseline_environment_matches`]).  NaN or sub-unit scales (smoke
+/// runs) and cross-environment comparisons soft-log, never fail the
+/// build.
 pub fn regression_gate_armed(base: &Json, scale: f64) -> bool {
-    baseline_calibrated(base) && scale >= 1.0
+    baseline_calibrated(base) && scale >= 1.0 && baseline_environment_matches(base)
 }
 
 #[cfg(test)]
@@ -84,6 +110,12 @@ mod tests {
         if let Some(c) = calibrated {
             m.insert("calibrated".to_string(), c);
         }
+        // stamp the current environment (with a divergent git_rev, which
+        // must never matter) so environment matching is not the variable
+        // under test here
+        let mut meta = run_metadata();
+        meta.insert("git_rev".to_string(), Json::Str("baseline-rev".to_string()));
+        m.insert("meta".to_string(), Json::Obj(meta));
         Json::Obj(m)
     }
 
@@ -114,6 +146,35 @@ mod tests {
         assert!(!regression_gate_armed(&cal, 0.1));
         assert!(!regression_gate_armed(&cal, 0.999));
         assert!(!regression_gate_armed(&cal, f64::NAN));
+    }
+
+    #[test]
+    fn cross_environment_baseline_never_arms_the_gate() {
+        // a calibrated baseline from a *different* environment must
+        // soft-log, never gate: perturb each matched key in turn
+        for key in ["threads", "simd_lanes", "shards"] {
+            let mut base = baseline(Some(Json::Bool(true)));
+            if let Json::Obj(m) = &mut base {
+                if let Some(Json::Obj(meta)) = m.get_mut("meta") {
+                    let cur = meta[key].as_f64().unwrap();
+                    meta.insert(key.to_string(), Json::Num(cur + 1.0));
+                }
+            }
+            assert!(!baseline_environment_matches(&base), "perturbed {key} matched");
+            assert!(!regression_gate_armed(&base, 1.0), "perturbed {key} armed");
+        }
+        // a pre-metadata baseline (no `meta` object) never matches
+        let mut legacy = baseline(Some(Json::Bool(true)));
+        if let Json::Obj(m) = &mut legacy {
+            m.remove("meta");
+        }
+        assert!(!baseline_environment_matches(&legacy));
+        assert!(!regression_gate_armed(&legacy, 1.0));
+        // but a divergent git_rev alone still arms — baselines are
+        // supposed to predate the PR measured against them
+        let cal = baseline(Some(Json::Bool(true)));
+        assert!(baseline_environment_matches(&cal));
+        assert!(regression_gate_armed(&cal, 1.0));
     }
 
     #[test]

@@ -450,6 +450,131 @@ fn prop_sharded_session_parity_under_random_schedules() {
 }
 
 #[test]
+fn prop_fused_tile_sweep_parity_under_random_schedules() {
+    // tiled-parameter-plane fuzzer: random (algorithm, participation,
+    // channel, deadline, catch-up, seed pool, shard count, thread count)
+    // configurations plus a random fused-sweep tile size — including 1,
+    // d, d+1 and odd non-divisors of the SIMD lane block — and an
+    // optional spill budget.  The fused single-sweep engine must
+    // reproduce the legacy multi-pass closure-verb engine's f32 stream
+    // bitwise: replicas, ledger, impairment trace and orbit.
+    let train = generate(&SYNTH_CIFAR10, 64, 0);
+    let test = generate(&SYNTH_CIFAR10, 32, 1);
+    const D: usize = 128 * 10 + 10; // LinearProbe(128, 10)
+    check("fused tile sweep parity", |g: &mut Gen| {
+        let k = g.usize_in(3, 7);
+        let rounds = g.usize_in(4, 9) as u64;
+        let algo = match g.usize_in(0, 3) {
+            0 => Algorithm::FeedSign,
+            1 => Algorithm::DpFeedSign { epsilon: g.f32_in(0.5, 8.0) },
+            _ => Algorithm::ZoFedSgd,
+        };
+        let seed_pool = if matches!(algo, Algorithm::ZoFedSgd) || g.bool() {
+            0
+        } else {
+            g.usize_in(2, 9)
+        };
+        let participation = match g.usize_in(0, 3) {
+            0 => ParticipationCfg::Full,
+            1 => ParticipationCfg::Fraction(g.f32_in(0.3, 0.9)),
+            _ => ParticipationCfg::Bernoulli(g.f32_in(0.4, 0.9)),
+        };
+        let catchup = match g.usize_in(0, 3) {
+            0 => CatchupCfg::Off,
+            1 => CatchupCfg::Replay,
+            _ if seed_pool >= 2 => CatchupCfg::PoolScalars,
+            _ => CatchupCfg::Rebroadcast,
+        };
+        let net = NetCfg {
+            channel: match g.usize_in(0, 3) {
+                0 => ChannelModel::Ideal,
+                1 => ChannelModel::BitFlip { ber: g.f32_in(0.001, 0.1) as f64 },
+                _ => ChannelModel::Erasure { p: g.f32_in(0.01, 0.3) as f64 },
+            },
+            links: LinkAssignment::parse(if g.bool() { "mixed" } else { "mobile" }).unwrap(),
+            deadline_s: if g.bool() { 0.0 } else { g.f32_in(0.05, 0.3) as f64 },
+            channel_seed: g.u32(),
+        };
+        let tile = match g.usize_in(0, 5) {
+            0 => 1,
+            1 => D,
+            2 => D + 1,
+            // odd tiles never divide the 4-lane SIMD block
+            3 => g.usize_in(1, 64) * 2 + 1,
+            _ => g.usize_in(1, 2 * D + 2),
+        };
+        // pages >= 1 keeps peak_resident <= budget well-defined; budget 0
+        // exercises the in-RAM store
+        let tile_budget = if g.bool() { 0 } else { 4 * tile * g.usize_in(1, 4) };
+        let shards = g.usize_in(0, 4);
+        let threads = g.usize_in(1, 5);
+        let seed = g.u32();
+        let run = |fuse: bool, tile: usize, budget: usize, shards: usize, threads: usize| {
+            let data_shards = split(&train, k, Partition::Iid, 0);
+            let clients: Vec<Client> = data_shards
+                .into_iter()
+                .enumerate()
+                .map(|(id, shard)| {
+                    Client::new(
+                        id,
+                        Box::new(NativeEngine::new(LinearProbe::new(128, 10))),
+                        shard,
+                        seed,
+                    )
+                })
+                .collect();
+            let cfg = SessionCfg {
+                algorithm: algo,
+                rounds,
+                eta: 2e-3,
+                mu: 1e-3,
+                batch_size: 8,
+                eval_every: 0,
+                participation,
+                catchup,
+                seed_pool,
+                net: net.clone(),
+                threads,
+                shards,
+                tile,
+                tile_budget: budget,
+                fuse_commits: fuse,
+                seed,
+                ..Default::default()
+            };
+            let mut s = Session::new(cfg, clients, train.clone(), test.clone());
+            for t in 0..rounds {
+                s.step(t);
+            }
+            s.catch_up_all();
+            s
+        };
+        let legacy = run(false, 0, 0, 0, 1);
+        let fused = run(true, tile, tile_budget, shards, threads);
+        for id in 0..k {
+            assert_eq!(
+                legacy.replica(id).iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+                fused.replica(id).iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+                "client {id} replica diverged (tile={tile}, budget={tile_budget}, \
+                 shards={shards}, threads={threads})"
+            );
+        }
+        assert_eq!(legacy.ledger, fused.ledger, "ledger diverged under fused sweep");
+        assert_eq!(legacy.net.stats, fused.net.stats, "impairment trace diverged");
+        assert_eq!(encode(&legacy.orbit), encode(&fused.orbit), "orbit diverged");
+        assert_eq!(legacy.probe_stats.staged_probes, 0, "legacy engine must not stage");
+        if tile_budget > 0 {
+            let ts = fused.replica_stats().tile;
+            assert!(
+                ts.peak_resident_bytes <= tile_budget,
+                "peak resident {} B broke the {tile_budget} B budget (tile={tile})",
+                ts.peak_resident_bytes
+            );
+        }
+    });
+}
+
+#[test]
 fn prop_probe_never_mutates_params() {
     check("probe purity", |g: &mut Gen| {
         use feedsign::data::Batch;

@@ -1,0 +1,294 @@
+//! Tiled-parameter-plane parity: the fused commit+probe sweep and the
+//! tiered canonical store must be pure execution strategies — never a
+//! protocol change.
+//!
+//! The contracts, per `coordinator::tile` / `simkit::zo`'s fused kernel:
+//!
+//! 1. **Tile parity** — for every engine (FeedSign, DP-FeedSign,
+//!    ZO-FedSGD), every tile size in {1, 61, 4096, d, d+1} (including
+//!    non-divisors of the SIMD lane block), every worker/shard count, a
+//!    fused-sweep session is **bit-identical** to the legacy multi-pass
+//!    closure-verb engine (`fuse_commits: false`) — under partial
+//!    participation, a `ber:P` bit-flip channel, and deadline stragglers
+//!    all at once.
+//! 2. **Spill parity** — a session whose canonical store pages through a
+//!    resident window smaller than `d` lands on the in-RAM bits, while
+//!    its peak resident bytes hold to the byte budget (flat memory).
+//! 3. **Cross-topology parity** — the threaded distributed topology and
+//!    the tiled synchronous session agree bit-for-bit, whatever the tile.
+//! 4. **Staging parity** — the restricted seed space (FedKSeed) pre-draws
+//!    round t+1's pool index at commit time; the staged probe views must
+//!    not change the stream.
+//!
+//! Replicas are compared as `u32` bit patterns (flips can push weights
+//! non-finite; NaN-blind f32 equality must not hide a divergence).
+
+use feedsign::coordinator::catchup::CatchupCfg;
+use feedsign::coordinator::distributed::{run_feedsign, DistClient, DistCfg};
+use feedsign::coordinator::participation::ParticipationCfg;
+use feedsign::coordinator::{Algorithm, Attack, Client, Session, SessionCfg};
+use feedsign::data::partition::{split, Partition};
+use feedsign::data::vision::{generate, SYNTH_CIFAR10};
+use feedsign::data::Dataset;
+use feedsign::engine::NativeEngine;
+use feedsign::net::{ChannelModel, LinkAssignment, NetCfg};
+use feedsign::simkit::nn::LinearProbe;
+use feedsign::simkit::prng::Rng;
+
+const ROUNDS: u64 = 30;
+/// LinearProbe(128, 10) parameter count — the `d` the tile sizes bracket.
+const D: usize = 128 * 10 + 10;
+
+fn bits(w: &[f32]) -> Vec<u32> {
+    w.iter().map(|v| v.to_bits()).collect()
+}
+
+/// The impaired regime every parity case below runs under: partial
+/// participation, a bit-flip channel over heterogeneous links, and a
+/// round deadline that cuts iot-class stragglers at plan time.
+fn impaired_net() -> NetCfg {
+    NetCfg {
+        channel: ChannelModel::BitFlip { ber: 0.05 },
+        links: LinkAssignment::parse("mixed").unwrap(),
+        deadline_s: 0.1,
+        channel_seed: 5,
+    }
+}
+
+/// Execution-strategy knobs under test; everything protocol-level is
+/// held fixed across a comparison.
+#[derive(Clone, Copy)]
+struct Knobs {
+    shards: usize,
+    threads: usize,
+    tile: usize,
+    tile_budget: usize,
+    fuse: bool,
+}
+
+impl Knobs {
+    /// The legacy multi-pass closure-verb engine: the parity reference.
+    fn legacy() -> Self {
+        Knobs { shards: 0, threads: 1, tile: 0, tile_budget: 0, fuse: false }
+    }
+
+    fn fused(tile: usize, threads: usize, shards: usize) -> Self {
+        Knobs { shards, threads, tile, tile_budget: 0, fuse: true }
+    }
+}
+
+/// Session with every tiling knob pinned at construction — explicit
+/// values are env-proof, so the `FEEDSIGN_TILE` / `FEEDSIGN_TILE_BUDGET`
+/// CI legs cannot change what these tests compare.
+fn build(algo: Algorithm, k: usize, knobs: Knobs) -> Session {
+    let train: Dataset = generate(&SYNTH_CIFAR10, 400, 0);
+    let test: Dataset = generate(&SYNTH_CIFAR10, 150, 1);
+    let data_shards = split(&train, k, Partition::Iid, 0);
+    let clients: Vec<Client> = data_shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            Client::new(id, Box::new(NativeEngine::new(LinearProbe::new(128, 10))), shard, 11)
+        })
+        .collect();
+    let cfg = SessionCfg {
+        algorithm: algo,
+        rounds: ROUNDS,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 16,
+        eval_every: 0,
+        participation: ParticipationCfg::Fraction(0.6),
+        catchup: CatchupCfg::Replay,
+        net: impaired_net(),
+        threads: knobs.threads,
+        shards: knobs.shards,
+        tile: knobs.tile,
+        tile_budget: knobs.tile_budget,
+        fuse_commits: knobs.fuse,
+        seed: 11,
+        ..Default::default()
+    };
+    Session::new(cfg, clients, train, test)
+}
+
+fn run_to_end(mut s: Session) -> Session {
+    for t in 0..ROUNDS {
+        s.step(t);
+    }
+    s.catch_up_all();
+    s
+}
+
+fn assert_session_parity(label: &str, base: &Session, s: &Session) {
+    for id in 0..base.clients.len() {
+        assert_eq!(
+            bits(&base.replica(id)),
+            bits(&s.replica(id)),
+            "{label}: client {id} replica diverged"
+        );
+    }
+    assert_eq!(base.ledger.uplink_bits, s.ledger.uplink_bits, "{label}: uplink bits");
+    assert_eq!(base.ledger.downlink_bits, s.ledger.downlink_bits, "{label}: downlink bits");
+    assert_eq!(base.net.stats, s.net.stats, "{label}: impairment trace diverged");
+    assert_eq!(
+        feedsign::orbit::encode(&base.orbit),
+        feedsign::orbit::encode(&s.orbit),
+        "{label}: orbit bytes diverged"
+    );
+}
+
+#[test]
+fn fused_sweep_is_bit_identical_for_every_tile_thread_and_shard_count() {
+    for algo in [
+        Algorithm::FeedSign,
+        Algorithm::DpFeedSign { epsilon: 2.0 },
+        Algorithm::ZoFedSgd,
+    ] {
+        // legacy multi-pass closure-verb baseline (fuse_commits: false)
+        let base = run_to_end(build(algo, 5, Knobs::legacy()));
+        assert_eq!(base.probe_stats.staged_probes, 0, "legacy engine must not stage");
+        // tile sizes bracket d and include 1 and a SIMD-lane non-divisor
+        for tile in [1usize, 61, 4096, D, D + 1] {
+            for threads in [1usize, 8] {
+                for shards in [0usize, 3] {
+                    let s = run_to_end(build(algo, 5, Knobs::fused(tile, threads, shards)));
+                    let label = format!("{algo:?}/tile={tile}/threads={threads}/shards={shards}");
+                    assert_session_parity(&label, &base, &s);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_feedsign_serves_staged_probe_views() {
+    // the fused sweep renders round t+1's probe views during the commit
+    // of round t; after round 0 every canonical probe must be served
+    // from the staged buffers on the batched-probe engine
+    let s = run_to_end(build(Algorithm::FeedSign, 5, Knobs::fused(0, 1, 0)));
+    assert!(s.probe_stats.staged_probes > 0, "no probe was served from staging");
+    // stragglers own replicas and fall back to classic probes, so only
+    // canonical passes — not per-probe counts — have a hard bound: at
+    // most one pass for round 0 plus one per post-straggler round
+    assert!(
+        s.probe_stats.canonical_passes < s.probe_stats.unbatched_passes(),
+        "staging saved no canonical passes"
+    );
+}
+
+#[test]
+fn spill_mode_lands_on_the_in_ram_bits_with_flat_memory() {
+    let base = run_to_end(build(Algorithm::FeedSign, 5, Knobs::fused(0, 2, 0)));
+    assert_eq!(base.replica_stats().tile.spills, 0, "in-RAM run must not spill");
+    // resident windows of 2-3 pages, all far below d = 1290 floats
+    for (tile, pages) in [(64usize, 2usize), (61, 3), (256, 1)] {
+        let budget = 4 * tile * pages;
+        let knobs = Knobs { shards: 0, threads: 2, tile, tile_budget: budget, fuse: true };
+        let s = run_to_end(build(Algorithm::FeedSign, 5, knobs));
+        let label = format!("spill tile={tile} budget={budget}");
+        assert_session_parity(&label, &base, &s);
+        let ts = s.replica_stats().tile;
+        assert!(ts.spills > 0, "{label}: d exceeds the window, the sweep must spill");
+        assert!(
+            ts.peak_resident_bytes <= budget,
+            "{label}: peak resident {} B broke the budget",
+            ts.peak_resident_bytes
+        );
+    }
+}
+
+#[test]
+fn restricted_seed_pool_staging_stays_bit_identical() {
+    // FedKSeed staging pre-draws round t+1's pool index at commit time —
+    // legal only because the draw is a pure function of the accumulated
+    // scalars; this pins that purity end to end, with pool catch-up on
+    let build_pool = |knobs: Knobs| {
+        let train: Dataset = generate(&SYNTH_CIFAR10, 400, 0);
+        let test: Dataset = generate(&SYNTH_CIFAR10, 150, 1);
+        let data_shards = split(&train, 5, Partition::Iid, 0);
+        let clients: Vec<Client> = data_shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| {
+                Client::new(id, Box::new(NativeEngine::new(LinearProbe::new(128, 10))), shard, 11)
+            })
+            .collect();
+        let cfg = SessionCfg {
+            algorithm: Algorithm::FeedSign,
+            rounds: ROUNDS,
+            eta: 2e-3,
+            mu: 1e-3,
+            batch_size: 16,
+            eval_every: 0,
+            participation: ParticipationCfg::Fraction(0.6),
+            catchup: CatchupCfg::PoolScalars,
+            seed_pool: 16,
+            net: impaired_net(),
+            threads: knobs.threads,
+            shards: knobs.shards,
+            tile: knobs.tile,
+            tile_budget: knobs.tile_budget,
+            fuse_commits: knobs.fuse,
+            seed: 11,
+            ..Default::default()
+        };
+        Session::new(cfg, clients, train, test)
+    };
+    let base = run_to_end(build_pool(Knobs::legacy()));
+    for tile in [1usize, 61, D + 1] {
+        let s = run_to_end(build_pool(Knobs::fused(tile, 2, 0)));
+        assert_session_parity(&format!("pool/tile={tile}"), &base, &s);
+    }
+    let fused = run_to_end(build_pool(Knobs::fused(0, 1, 0)));
+    assert!(fused.probe_stats.staged_probes > 0, "pool staging never engaged");
+    assert_session_parity("pool/auto-tile", &base, &fused);
+}
+
+fn dist_clients(k: usize, train: &Dataset) -> Vec<DistClient> {
+    let shards = split(train, k, Partition::Iid, 0);
+    shards
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            let engine: Box<dyn feedsign::engine::Engine> =
+                Box::new(NativeEngine::new(LinearProbe::new(128, 10)));
+            let w = engine.init_params(11);
+            DistClient {
+                engine,
+                w,
+                shard,
+                attack: Attack::None,
+                rng: Rng::new(11 ^ 0xC11E_17, id as u32 + 1),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn both_topologies_agree_under_tiling() {
+    // threaded distributed topology vs fused tiled sync sessions vs the
+    // legacy engine: one impaired configuration, one set of bits
+    let train: Dataset = generate(&SYNTH_CIFAR10, 400, 0);
+    let dcfg = DistCfg {
+        rounds: ROUNDS,
+        eta: 2e-3,
+        mu: 1e-3,
+        batch_size: 16,
+        participation: ParticipationCfg::Fraction(0.6),
+        catchup: CatchupCfg::Replay,
+        net: impaired_net(),
+        seed: 11,
+        seed_pool: 0,
+        shards: 0,
+    };
+    let dist = run_feedsign(dist_clients(5, &train), train.clone(), dcfg);
+    let legacy = run_to_end(build(Algorithm::FeedSign, 5, Knobs::legacy()));
+    for tile in [1usize, D + 1] {
+        let s = run_to_end(build(Algorithm::FeedSign, 5, Knobs::fused(tile, 2, 3)));
+        for (id, w) in dist.finals.iter().enumerate() {
+            assert_eq!(bits(w), bits(&s.replica(id)), "tile={tile} client {id}: topologies diverged");
+            assert_eq!(bits(w), bits(&legacy.replica(id)), "client {id}: legacy engine drifted");
+        }
+    }
+}
